@@ -1,0 +1,39 @@
+//! Collective sweep: regenerates the Figs. 1/13/14 data interactively.
+//!
+//! Usage: `cargo run --release --example collective_sweep [allgather|alltoall] [max_size]`
+//! e.g. `cargo run --release --example collective_sweep alltoall 64M`
+
+use dma_latte::collectives::CollectiveKind;
+use dma_latte::figures::collectives as fig;
+use dma_latte::util::bytes::{parse_size, size_sweep, GB, KB, MB};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let kind = match args.first().map(String::as_str) {
+        Some("alltoall") => CollectiveKind::AllToAll,
+        _ => CollectiveKind::AllGather,
+    };
+    let max = args
+        .get(1)
+        .map(|s| parse_size(s).expect("bad size"))
+        .unwrap_or(4 * GB);
+    let sizes = size_sweep(KB, max, 2);
+    eprintln!("sweeping {} over {} sizes…", kind.name(), sizes.len());
+    let rows = fig::sweep(kind, Some(sizes));
+    print!("{}", fig::render(kind, &rows));
+
+    println!("\nBest implementation per size range (Tables 2/3):");
+    for (lo, hi, v) in fig::best_table(&rows) {
+        println!(
+            "  {:>6} ..= {:>6}  ->  {}",
+            dma_latte::util::bytes::fmt_size(lo),
+            dma_latte::util::bytes::fmt_size(hi),
+            v.name()
+        );
+    }
+    let below = 32 * MB;
+    println!(
+        "\ngeomean best-DMA speedup vs RCCL (<32M): {:.2}x",
+        fig::geomean_best(&rows, below)
+    );
+}

@@ -1,0 +1,132 @@
+//! Fine-grained compute/communication overlap (paper §2.3 and [29]):
+//! tiles of a producer GEMM are communicated as soon as they are ready,
+//! instead of waiting for the whole kernel — expressed with *prelaunched*
+//! poll-gated DMA chains (§4.5), one per tile.
+//!
+//! The GEMM is modeled as a host program that completes tiles at a fixed
+//! cadence and bumps a progress signal; each tile's broadcast to two
+//! consumer GPUs was pre-scheduled with a `Poll(progress >= tile+1)` gate,
+//! so no launch work sits on the critical path when a tile finishes.
+//!
+//! Run: cargo run --release --example fine_grained_overlap
+
+use dma_latte::sim::command::{Addr, AtomicOp, Command, PollCond};
+use dma_latte::sim::host::{ApiKind, HostOp};
+use dma_latte::sim::topology::NodeId;
+use dma_latte::sim::{EngineId, Sim, SimConfig};
+use dma_latte::util::bytes::{fmt_ns, KB};
+
+const TILES: u64 = 16;
+const TILE_BYTES: u64 = 256 * KB;
+const TILE_COMPUTE_NS: u64 = 18_000; // producer cadence per tile
+
+/// Build and run the pipeline; `prelaunch` toggles poll-gated chains vs
+/// launching each tile's transfer after it completes.
+fn run(prelaunch: bool) -> (u64, u64) {
+    let mut sim = Sim::new(SimConfig::mi300x().functional());
+    let progress = sim.alloc_signal(0);
+    let done = sim.alloc_signal(0);
+    let engine = EngineId { gpu: 0, idx: 0 };
+
+    // Tile t lives at t*TILE_BYTES on gpu0, mirrored to gpu1 & gpu2.
+    for t in 0..TILES {
+        sim.memory.poke(
+            NodeId::Gpu(0),
+            t * TILE_BYTES,
+            &vec![(t as u8) + 1; TILE_BYTES as usize],
+        );
+    }
+    let tile_cmds = |t: u64| Command::Bcst {
+        src: Addr::new(NodeId::Gpu(0), t * TILE_BYTES),
+        dst0: Addr::new(NodeId::Gpu(1), t * TILE_BYTES),
+        dst1: Addr::new(NodeId::Gpu(2), t * TILE_BYTES),
+        len: TILE_BYTES,
+    };
+
+    let mut script = Vec::new();
+    if prelaunch {
+        // Pre-schedule ONE b2b chain: each tile's transfer gated on the
+        // producer's progress signal reaching it.
+        let mut cmds = Vec::new();
+        for t in 0..TILES {
+            cmds.push(Command::Poll {
+                signal: progress,
+                cond: PollCond::Gte((t + 1) as i64),
+            });
+            cmds.push(tile_cmds(t));
+        }
+        cmds.push(Command::Atomic {
+            signal: done,
+            op: AtomicOp::Add(1),
+        });
+        script.push(HostOp::CreateCommands {
+            engine,
+            cmds,
+            api: ApiKind::RawBatched,
+        });
+        script.push(HostOp::RingDoorbell { engine });
+        script.push(HostOp::Delay { ns: 10_000 });
+    }
+    script.push(HostOp::Mark { name: "gemm_start" });
+    for t in 0..TILES {
+        // Producer computes tile t…
+        script.push(HostOp::Delay {
+            ns: TILE_COMPUTE_NS,
+        });
+        if prelaunch {
+            // …and only flips the progress signal (off critical path).
+            script.push(HostOp::SetSignal {
+                signal: progress,
+                value: (t + 1) as i64,
+            });
+        } else {
+            // …then must create + launch the transfer on the spot.
+            let mut cmds = vec![tile_cmds(t)];
+            if t == TILES - 1 {
+                cmds.push(Command::Atomic {
+                    signal: done,
+                    op: AtomicOp::Add(1),
+                });
+            }
+            script.push(HostOp::CreateCommands {
+                engine,
+                cmds,
+                api: ApiKind::Raw,
+            });
+            script.push(HostOp::RingDoorbell { engine });
+        }
+    }
+    script.push(HostOp::WaitSignal {
+        signal: done,
+        at_least: 1,
+    });
+    script.push(HostOp::Mark { name: "all_done" });
+    sim.add_host(script, 0);
+    let out = sim.run();
+    assert!(out.deadlocked.is_empty());
+    // Verify all tiles arrived at both consumers.
+    for t in 0..TILES {
+        for g in [1u8, 2] {
+            let got = sim.memory.peek(NodeId::Gpu(g), t * TILE_BYTES, TILE_BYTES);
+            assert!(got.iter().all(|&b| b == (t as u8) + 1), "tile {t} gpu{g}");
+        }
+    }
+    let h = sim.host(dma_latte::sim::HostId(0));
+    let total = h.mark("all_done").unwrap() - h.mark("gemm_start").unwrap();
+    let compute = TILES * TILE_COMPUTE_NS;
+    (total, total - compute)
+}
+
+fn main() {
+    println!("Fine-grained GEMM-tile broadcast: {TILES} tiles × 256KiB");
+    println!("producer compute: {} total\n", fmt_ns((TILES * TILE_COMPUTE_NS) as f64));
+    let (t_direct, exp_direct) = run(false);
+    let (t_pre, exp_pre) = run(true);
+    println!("launch-per-tile : total {:>10}  exposed comm {:>10}", fmt_ns(t_direct as f64), fmt_ns(exp_direct as f64));
+    println!("prelaunched     : total {:>10}  exposed comm {:>10}", fmt_ns(t_pre as f64), fmt_ns(exp_pre as f64));
+    println!(
+        "\nprelaunch hides {:.0}% of the exposed communication time",
+        (1.0 - exp_pre as f64 / exp_direct as f64) * 100.0
+    );
+    println!("(per-tile launch overheads are off the producer's critical path — §4.5)");
+}

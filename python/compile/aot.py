@@ -1,0 +1,173 @@
+"""AOT lowering: JAX (L2 + L1) → HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format, NOT `.serialize()` — jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md and
+gen_hlo.py there).
+
+Artifacts (under --out-dir, default ../artifacts):
+  decode_step.hlo.txt  — batched paged-attention decode step
+  prefill.hlo.txt      — single-sequence prefill
+  kv_gather.hlo.txt    — Pallas KV block gather (kernel-fetch analogue)
+  meta.json            — config, param manifest, artifact arg orders
+  golden.json          — seeded test vectors (inputs → output checksums)
+                         for the Rust runtime_load integration test
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.kv_gather import kv_gather
+from .model import CONFIG, decode_step, init_params, num_params, param_manifest, prefill
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_inputs(cfg=CONFIG, seed=7):
+    """Deterministic example inputs for golden vectors."""
+    rng = np.random.default_rng(seed)
+    b, mb, nb = cfg["batch"], cfg["max_blocks"], cfg["num_blocks"]
+    bs, layers = cfg["block_size"], cfg["layers"]
+    kvh, hd = cfg["kv_heads"], cfg["head_dim"]
+    t = cfg["prefill_len"]
+    tokens_prefill = rng.integers(0, cfg["vocab"], size=(1, t), dtype=np.int32)
+    token = rng.integers(0, cfg["vocab"], size=(b,), dtype=np.int32)
+    pos = np.full((b,), t, dtype=np.int32)
+    pool = (rng.standard_normal((nb, bs, layers, 2, kvh, hd)) * 0.05).astype(np.float32)
+    block_tables = np.stack(
+        [rng.permutation(nb)[:mb].astype(np.int32) for _ in range(b)]
+    )
+    gather_pool = (rng.standard_normal((nb, 256)) * 0.1).astype(np.float32)
+    gather_idx = rng.permutation(nb)[:mb].astype(np.int32)
+    return {
+        "tokens_prefill": tokens_prefill,
+        "token": token,
+        "pos": pos,
+        "pool": pool,
+        "block_tables": block_tables,
+        "gather_pool": gather_pool,
+        "gather_idx": gather_idx,
+    }
+
+
+def checksum(x):
+    """Stable output fingerprint: shape, abs-sum, first 8 values."""
+    a = np.asarray(x, dtype=np.float64).ravel()
+    return {
+        "shape": list(np.asarray(x).shape),
+        "abs_sum": float(np.abs(a).sum()),
+        "first8": [float(v) for v in a[:8]],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = CONFIG
+    params = init_params(cfg)
+    ex = example_inputs(cfg)
+    print(f"model: {num_params(cfg)/1e6:.1f}M params, {len(params)} tensors")
+
+    # ---- decode_step ----
+    def decode_fn(*args_):
+        n = len(params)
+        p, (token, pos, pool, bt) = list(args_[:n]), args_[n:]
+        return decode_step(p, token, pos, pool, bt, cfg)
+
+    dargs = [jnp.asarray(p) for p in params] + [
+        jnp.asarray(ex["token"]),
+        jnp.asarray(ex["pos"]),
+        jnp.asarray(ex["pool"]),
+        jnp.asarray(ex["block_tables"]),
+    ]
+    lowered = jax.jit(decode_fn).lower(*dargs)
+    with open(os.path.join(args.out_dir, "decode_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    dlogits, dnewkv = jax.jit(decode_fn)(*dargs)
+    print("decode_step lowered; logits", dlogits.shape)
+
+    # ---- prefill ----
+    def prefill_fn(*args_):
+        n = len(params)
+        p, (tokens,) = list(args_[:n]), args_[n:]
+        return prefill(p, tokens, cfg)
+
+    pargs = [jnp.asarray(p) for p in params] + [jnp.asarray(ex["tokens_prefill"])]
+    lowered_p = jax.jit(prefill_fn).lower(*pargs)
+    with open(os.path.join(args.out_dir, "prefill.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_p))
+    plogits, pkv = jax.jit(prefill_fn)(*pargs)
+    print("prefill lowered; logits", plogits.shape)
+
+    # ---- kv_gather ----
+    gargs = [jnp.asarray(ex["gather_pool"]), jnp.asarray(ex["gather_idx"])]
+    lowered_g = jax.jit(kv_gather).lower(*gargs)
+    with open(os.path.join(args.out_dir, "kv_gather.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_g))
+    gout = jax.jit(kv_gather)(*gargs)
+    print("kv_gather lowered; out", gout.shape)
+
+    # ---- meta + goldens ----
+    manifest = [
+        {"name": n, "shape": list(s), "scale": sc, "offset": off}
+        for n, s, sc, off in param_manifest(cfg)
+    ]
+    meta = {
+        "config": cfg,
+        "param_manifest": manifest,
+        "artifacts": {
+            "decode_step": {
+                "file": "decode_step.hlo.txt",
+                "extra_args": ["token[B]i32", "pos[B]i32",
+                               "pool[NB,BS,L,2,KVH,D]f32", "block_tables[B,MB]i32"],
+                "outputs": ["logits[B,V]f32", "new_kv[B,L,2,KVH,D]f32"],
+            },
+            "prefill": {
+                "file": "prefill.hlo.txt",
+                "extra_args": ["tokens[1,T]i32"],
+                "outputs": ["logits[1,V]f32", "kv[T,L,2,KVH,D]f32"],
+            },
+            "kv_gather": {
+                "file": "kv_gather.hlo.txt",
+                "args": ["pool[NB,256]f32", "idx[MB]i32"],
+                "outputs": ["gathered[MB,256]f32"],
+            },
+        },
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    golden = {
+        "input_seed": 7,
+        "decode_step": {"logits": checksum(dlogits), "new_kv": checksum(dnewkv)},
+        "prefill": {"logits": checksum(plogits), "kv": checksum(pkv)},
+        "kv_gather": {"out": checksum(gout)},
+        # Spot-check values for cross-language param generation.
+        "param_probe": {
+            "embed_first4": [float(v) for v in np.asarray(params[0]).ravel()[:4]],
+            "unembed_first4": [float(v) for v in np.asarray(params[-1]).ravel()[:4]],
+        },
+    }
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    print("wrote meta.json + golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: decode attention over a paged KV pool (GQA).
+
+This is the compute hot-spot of the serving workload (paper §5.3): one
+query token per sequence attends over a context whose KV lives in
+dispersed 16-token blocks addressed by a block table — exactly the
+PagedAttention layout whose CPU↔GPU movement the paper optimizes.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA version of
+this kernel maps one warp per KV block with shared-memory staging; on
+TPU-style Pallas we instead grid over the batch, stage the sequence's
+blocks HBM→VMEM via the block table, and contract on the MXU with fp32
+accumulation. `interpret=True` everywhere — the CPU PJRT client cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_attention_kernel(q_ref, pool_ref, bt_ref, len_ref, knew_ref, vnew_ref, o_ref):
+    """One program instance = one sequence (grid over batch).
+
+    Block shapes (VMEM view per program):
+      q_ref    [H, D]           — current token's queries
+      pool_ref [NB, BS, 2, KVH, D] — the layer's whole pool (small model;
+                                  a production TPU kernel would stream
+                                  per-block via scalar-prefetched BlockSpecs)
+      bt_ref   [MB]             — this sequence's block table
+      len_ref  [1]              — cached context length
+      knew/vnew [KVH, D]        — current token's K/V
+      o_ref    [H, D]           — output
+    """
+    q = q_ref[...]
+    pool = pool_ref[...]
+    bt = bt_ref[...]
+    ctx = len_ref[0]
+    k_new = knew_ref[...]
+    v_new = vnew_ref[...]
+
+    H, D = q.shape
+    KVH = k_new.shape[0]
+    groups = H // KVH
+    mb = bt.shape[0]
+    bs = pool.shape[1]
+
+    kv = jnp.take(pool, bt, axis=0)                  # [MB, BS, 2, KVH, D]
+    k = kv[:, :, 0].reshape(mb * bs, KVH, D)
+    v = kv[:, :, 1].reshape(mb * bs, KVH, D)
+    k = jnp.concatenate([k, k_new[None]], axis=0)    # [T+1, KVH, D]
+    v = jnp.concatenate([v, v_new[None]], axis=0)
+
+    # GQA: repeat KV heads across query-head groups.
+    k = jnp.repeat(k, groups, axis=1)                # [T+1, H, D]
+    v = jnp.repeat(v, groups, axis=1)
+
+    # MXU contraction in fp32.
+    scores = jnp.einsum("hd,thd->ht", q, k) / jnp.sqrt(jnp.float32(D))
+    t = jnp.arange(k.shape[0])
+    mask = (t < ctx) | (t == k.shape[0] - 1)
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    o_ref[...] = jnp.einsum("ht,thd->hd", p, v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def paged_attention(q, pool, block_tables, ctx_lens, k_new, v_new):
+    """Batched paged decode attention.
+
+    Args:
+      q:            [B, H, D]
+      pool:         [NB, BS, 2, KVH, D] (one layer's pool)
+      block_tables: [B, MB] int32
+      ctx_lens:     [B] int32
+      k_new, v_new: [B, KVH, D]
+
+    Returns:
+      [B, H, D]
+    """
+    B, H, D = q.shape
+    grid = (B,)
+    return pl.pallas_call(
+        _paged_attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, H, D), lambda b: (b, 0, 0)),
+            # Whole pool visible to each program; index_map pins block 0.
+            pl.BlockSpec(pool.shape, lambda b: (0,) * pool.ndim),
+            pl.BlockSpec((None, block_tables.shape[1]), lambda b: (b, 0)),
+            pl.BlockSpec((None, 1), lambda b: (b, 0)),
+            pl.BlockSpec((None, k_new.shape[1], D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, v_new.shape[1], D), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, H, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=True,
+    )(q, pool, block_tables, ctx_lens.reshape(B, 1), k_new, v_new)
+
+
+def vmem_footprint_bytes(pool_shape, h, d, mb):
+    """Estimated per-program VMEM footprint (DESIGN.md §Perf, L1): the
+    quantities a real-TPU variant must tile under the ~16 MiB VMEM budget."""
+    nb, bs, two, kvh, dd = pool_shape
+    gathered = mb * bs * two * kvh * dd * 4
+    q_out = 2 * h * d * 4
+    return gathered + q_out

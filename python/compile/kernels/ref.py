@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its `ref_*` counterpart to float32
+tolerance; `python/tests/test_kernels.py` sweeps shapes with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_paged_attention(q, pool, block_table, ctx_len, k_new, v_new):
+    """Decode-step attention for ONE sequence over a paged KV pool.
+
+    Args:
+      q:          [H, D] query for the current token.
+      pool:       [NB, BS, 2, KVH, D] paged KV pool for one layer
+                  (dim 2: 0=key, 1=value).
+      block_table:[MB] int32 physical block ids for this sequence.
+      ctx_len:    scalar int32, tokens already cached (ctx_len <= MB*BS).
+      k_new:      [KVH, D] current token's key.
+      v_new:      [KVH, D] current token's value.
+
+    Returns:
+      [H, D] attention output over the cached context plus current token.
+    """
+    H, D = q.shape
+    KVH = k_new.shape[0]
+    groups = H // KVH
+    mb = block_table.shape[0]
+    bs = pool.shape[1]
+
+    kv = pool[block_table]                     # [MB, BS, 2, KVH, D]
+    k = kv[:, :, 0].reshape(mb * bs, KVH, D)   # [T, KVH, D]
+    v = kv[:, :, 1].reshape(mb * bs, KVH, D)
+    k = jnp.concatenate([k, k_new[None]], axis=0)   # [T+1, KVH, D]
+    v = jnp.concatenate([v, v_new[None]], axis=0)
+
+    # Expand KV heads to query heads (GQA).
+    k = jnp.repeat(k, groups, axis=1)          # [T+1, H, D]
+    v = jnp.repeat(v, groups, axis=1)
+
+    scores = jnp.einsum("hd,thd->ht", q, k) / jnp.sqrt(jnp.float32(D))
+    t = jnp.arange(k.shape[0])
+    mask = (t < ctx_len) | (t == k.shape[0] - 1)   # cached ∪ current
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    return jnp.einsum("ht,thd->hd", p, v)
+
+
+def ref_kv_gather(pool, indices):
+    """Gather whole KV blocks: pool [NB, E] by indices [K] -> [K, E]."""
+    return pool[indices]
+
+
+def ref_causal_attention(q, k, v):
+    """Plain causal attention, [T, H, D] each (prefill oracle)."""
+    T, H, D = q.shape
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(D))
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, v)

@@ -1,0 +1,212 @@
+"""L2: tiny decoder-only transformer with a paged KV cache.
+
+The "small real model" served end-to-end by the Rust coordinator: ~55M
+parameters (vocab 16384, d_model 640, 10 layers, GQA 10q/2kv heads, RoPE,
+RMSNorm, SwiGLU-less MLP). The decode step calls the L1 Pallas
+`paged_attention` kernel, so the kernel lowers into the same HLO artifact
+the Rust runtime executes.
+
+Parameters are generated counter-based (splitmix64 → uniform), so the Rust
+side regenerates bit-identical weights from the same seed instead of
+shipping a multi-hundred-MB params file (see `rust/src/runtime/params.rs`).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.paged_attention import paged_attention
+
+# ---------------------------------------------------------------- config
+
+CONFIG = {
+    "vocab": 16384,
+    "d_model": 640,
+    "layers": 10,
+    "heads": 10,
+    "kv_heads": 2,
+    "head_dim": 64,
+    "ffn": 1920,
+    "block_size": 16,        # tokens per KV block (vLLM default)
+    "max_blocks": 32,        # blocks per sequence (512-token context)
+    "num_blocks": 128,       # pool capacity
+    "batch": 4,              # decode batch baked into the artifact
+    "prefill_len": 128,      # prefill length baked into the artifact
+    "param_seed": 42,
+}
+
+
+# ------------------------------------------------- deterministic weights
+
+def _splitmix64(x):
+    """Vectorized splitmix64 over uint64 numpy arrays."""
+    mask = np.uint64(0xFFFFFFFFFFFFFFFF)
+    x = (x + np.uint64(0x9E3779B97F4A7C15)) & mask
+    z = x
+    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & mask
+    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & mask
+    return z ^ (z >> np.uint64(31))
+
+
+def counter_uniform(seed, offset, n):
+    """n floats in [-1, 1), from counters seed+offset+i (cross-language)."""
+    idx = np.arange(offset, offset + n, dtype=np.uint64) + np.uint64(seed)
+    bits = _splitmix64(idx)
+    u = (bits >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))
+    return (u * 2.0 - 1.0).astype(np.float32)
+
+
+def param_manifest(cfg=CONFIG):
+    """Ordered (name, shape, scale, counter_offset) for every parameter.
+
+    The order here IS the positional argument order of the AOT artifacts;
+    `meta.json` carries it to the Rust runtime.
+    """
+    v, d, layers = cfg["vocab"], cfg["d_model"], cfg["layers"]
+    h, kvh, hd, ffn = cfg["heads"], cfg["kv_heads"], cfg["head_dim"], cfg["ffn"]
+    entries = []
+    offset = 0
+
+    def add(name, shape, scale):
+        nonlocal offset
+        n = int(np.prod(shape))
+        entries.append((name, tuple(shape), float(scale), offset))
+        offset += n
+
+    add("embed", (v, d), 0.02)
+    for l in range(layers):
+        add(f"l{l:02d}.ln1", (d,), 0.0)  # scale 0 → init to ones (see below)
+        add(f"l{l:02d}.wq", (d, h * hd), d ** -0.5)
+        add(f"l{l:02d}.wk", (d, kvh * hd), d ** -0.5)
+        add(f"l{l:02d}.wv", (d, kvh * hd), d ** -0.5)
+        add(f"l{l:02d}.wo", (h * hd, d), (h * hd) ** -0.5)
+        add(f"l{l:02d}.ln2", (d,), 0.0)
+        add(f"l{l:02d}.w1", (d, ffn), d ** -0.5)
+        add(f"l{l:02d}.w2", (ffn, d), ffn ** -0.5)
+    add("ln_f", (d,), 0.0)
+    add("unembed", (d, v), d ** -0.5)
+    return entries
+
+
+def init_params(cfg=CONFIG):
+    """Generate the parameter list per the manifest (norm weights = 1)."""
+    seed = cfg["param_seed"]
+    params = []
+    for name, shape, scale, offset in param_manifest(cfg):
+        n = int(np.prod(shape))
+        if scale == 0.0:
+            arr = np.ones(n, dtype=np.float32)
+        else:
+            arr = counter_uniform(seed, offset, n) * np.float32(scale)
+        params.append(jnp.asarray(arr.reshape(shape)))
+    return params
+
+
+# ----------------------------------------------------------- model math
+
+def rmsnorm(x, w):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * w
+
+
+def rope(x, pos):
+    """Rotary embedding. x: [..., H, D]; pos: broadcastable to x[..., 0, 0]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (np.log(10000.0) / half))
+    angles = pos[..., None, None] * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer_params(params, l, cfg):
+    base = 1 + l * 8  # embed first, 8 tensors per layer
+    (ln1, wq, wk, wv, wo, ln2, w1, w2) = params[base : base + 8]
+    return ln1, wq, wk, wv, wo, ln2, w1, w2
+
+
+def prefill(params, tokens, cfg=CONFIG):
+    """Prefill one sequence.
+
+    Args:
+      params: list per `param_manifest`.
+      tokens: [1, T] int32.
+
+    Returns:
+      (logits_last [1, vocab], kv [T, L, 2, KVH, D]) — RoPE-rotated keys,
+      ready to be paged into the pool.
+    """
+    d, layers = cfg["d_model"], cfg["layers"]
+    h, kvh, hd = cfg["heads"], cfg["kv_heads"], cfg["head_dim"]
+    embed, unembed, ln_f = params[0], params[-1], params[-2]
+    t = tokens.shape[1]
+    pos = jnp.arange(t, dtype=jnp.float32)
+
+    x = embed[tokens[0]]  # [T, d]
+    kvs = []
+    for l in range(layers):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = _layer_params(params, l, cfg)
+        xn = rmsnorm(x, ln1)
+        q = rope((xn @ wq).reshape(t, h, hd), pos)
+        k = rope((xn @ wk).reshape(t, kvh, hd), pos)
+        v = (xn @ wv).reshape(t, kvh, hd)
+        groups = h // kvh
+        kk = jnp.repeat(k, groups, axis=1)
+        vv = jnp.repeat(v, groups, axis=1)
+        scores = jnp.einsum("qhd,khd->hqk", q, kk) / jnp.sqrt(jnp.float32(hd))
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", p, vv).reshape(t, h * hd)
+        x = x + attn @ wo
+        xn2 = rmsnorm(x, ln2)
+        x = x + jax.nn.gelu(xn2 @ w1) @ w2
+        kvs.append(jnp.stack([k, v], axis=1))  # [T, 2, KVH, D]
+    logits = rmsnorm(x[-1:], ln_f) @ unembed  # [1, vocab]
+    kv = jnp.stack(kvs, axis=1)  # [T, L, 2, KVH, D]
+    return logits, kv
+
+
+def decode_step(params, token, pos, pool, block_tables, cfg=CONFIG):
+    """One decode step for a batch, attending over the paged pool via the
+    L1 Pallas kernel.
+
+    Args:
+      token:        [B] int32 current tokens.
+      pos:          [B] int32 context lengths (position of the new token).
+      pool:         [NB, BS, L, 2, KVH, D] paged KV pool, all layers
+                    contiguous per block (the paper's optimized layout).
+      block_tables: [B, MB] int32.
+
+    Returns:
+      (logits [B, vocab], new_kv [B, L, 2, KVH, D]) — the caller (Rust
+      coordinator) writes new_kv into the pool at pos.
+    """
+    d, layers = cfg["d_model"], cfg["layers"]
+    h, kvh, hd = cfg["heads"], cfg["kv_heads"], cfg["head_dim"]
+    b = token.shape[0]
+    embed, unembed, ln_f = params[0], params[-1], params[-2]
+    fpos = pos.astype(jnp.float32)
+
+    x = embed[token]  # [B, d]
+    new_kvs = []
+    for l in range(layers):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = _layer_params(params, l, cfg)
+        xn = rmsnorm(x, ln1)
+        q = rope((xn @ wq).reshape(b, h, hd), fpos)
+        k_new = rope((xn @ wk).reshape(b, kvh, hd), fpos)
+        v_new = (xn @ wv).reshape(b, kvh, hd)
+        layer_pool = pool[:, :, l]  # [NB, BS, 2, KVH, D]
+        attn = paged_attention(q, layer_pool, block_tables, pos, k_new, v_new)
+        x = x + attn.reshape(b, h * hd) @ wo
+        xn2 = rmsnorm(x, ln2)
+        x = x + jax.nn.gelu(xn2 @ w1) @ w2
+        new_kvs.append(jnp.stack([k_new, v_new], axis=1))  # [B, 2, KVH, D]
+    logits = rmsnorm(x, ln_f) @ unembed
+    new_kv = jnp.stack(new_kvs, axis=1)  # [B, L, 2, KVH, D]
+    return logits, new_kv
+
+
+def num_params(cfg=CONFIG):
+    """Total parameter count."""
+    return sum(int(np.prod(s)) for _, s, _, _ in param_manifest(cfg))

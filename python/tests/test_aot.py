@@ -1,0 +1,82 @@
+"""AOT artifact checks (fast: validates existing artifacts; the expensive
+lowering itself runs under `make artifacts` and the Rust runtime_load test
+executes the artifacts end to end)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def load(name):
+    with open(os.path.join(ART, name)) as f:
+        return json.load(f)
+
+
+class TestMeta:
+    def test_config_matches_model(self):
+        from compile.model import CONFIG, num_params, param_manifest
+
+        meta = load("meta.json")
+        assert meta["config"] == CONFIG
+        man = meta["param_manifest"]
+        assert len(man) == len(param_manifest())
+        total = sum(int(np.prod(e["shape"])) for e in man)
+        assert total == num_params()
+
+    def test_artifact_files_exist_and_are_hlo(self):
+        meta = load("meta.json")
+        for art in meta["artifacts"].values():
+            p = os.path.join(ART, art["file"])
+            assert os.path.exists(p), p
+            head = open(p).read(4096)
+            assert "HloModule" in head, f"{p} is not HLO text"
+            assert "ENTRY" in open(p).read(), p
+
+    def test_decode_signature(self):
+        meta = load("meta.json")
+        d = meta["artifacts"]["decode_step"]
+        assert d["extra_args"][0].startswith("token[B]")
+        assert len(d["outputs"]) == 2
+
+
+class TestGolden:
+    def test_checksums_finite_and_shaped(self):
+        g = load("golden.json")
+        from compile.model import CONFIG
+
+        logits = g["decode_step"]["logits"]
+        assert logits["shape"] == [CONFIG["batch"], CONFIG["vocab"]]
+        assert np.isfinite(logits["abs_sum"])
+        assert len(logits["first8"]) == 8
+        pre = g["prefill"]["logits"]
+        assert pre["shape"] == [1, CONFIG["vocab"]]
+
+    def test_param_probe_matches_regeneration(self):
+        """The probe values regenerate from the manifest (the same check the
+        Rust side performs, closing the cross-language loop)."""
+        from compile.model import CONFIG, counter_uniform, param_manifest
+
+        g = load("golden.json")
+        man = param_manifest()
+        seed = CONFIG["param_seed"]
+        name, shape, scale, offset = man[0]
+        assert name == "embed"
+        got = counter_uniform(seed, offset, 4) * np.float32(scale)
+        np.testing.assert_allclose(got, g["param_probe"]["embed_first4"], rtol=1e-6)
+        name, shape, scale, offset = man[-1]
+        assert name == "unembed"
+        got = counter_uniform(seed, offset, 4) * np.float32(scale)
+        np.testing.assert_allclose(got, g["param_probe"]["unembed_first4"], rtol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

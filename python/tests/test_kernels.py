@@ -1,0 +1,123 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (heads, head_dim, block counts, ragged context
+lengths) — the CORE correctness signal for the compute layer.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.kv_gather import kv_gather
+from compile.kernels.paged_attention import paged_attention, vmem_footprint_bytes
+from compile.kernels.ref import ref_kv_gather, ref_paged_attention
+
+
+def _mk_case(rng, b, h, kvh, d, nb, bs, mb, ctx):
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    pool = (rng.standard_normal((nb, bs, 2, kvh, d)) * 0.3).astype(np.float32)
+    bt = np.stack([rng.permutation(nb)[:mb].astype(np.int32) for _ in range(b)])
+    lens = np.asarray(ctx, dtype=np.int32)
+    k_new = rng.standard_normal((b, kvh, d)).astype(np.float32)
+    v_new = rng.standard_normal((b, kvh, d)).astype(np.float32)
+    return q, pool, bt, lens, k_new, v_new
+
+
+class TestPagedAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        b=st.integers(1, 3),
+        kvh=st.integers(1, 3),
+        groups=st.integers(1, 4),
+        d=st.sampled_from([4, 8, 16]),
+        bs=st.sampled_from([4, 8, 16]),
+        mb=st.integers(1, 4),
+    )
+    def test_matches_ref_across_shapes(self, seed, b, kvh, groups, d, bs, mb):
+        rng = np.random.default_rng(seed)
+        h = kvh * groups
+        nb = mb + 3
+        ctx = rng.integers(0, mb * bs + 1, size=b)
+        q, pool, bt, lens, k_new, v_new = _mk_case(rng, b, h, kvh, d, nb, bs, mb, ctx)
+        got = paged_attention(
+            jnp.asarray(q), jnp.asarray(pool), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(k_new), jnp.asarray(v_new))
+        for i in range(b):
+            want = ref_paged_attention(
+                jnp.asarray(q[i]), jnp.asarray(pool), jnp.asarray(bt[i]),
+                int(lens[i]), jnp.asarray(k_new[i]), jnp.asarray(v_new[i]))
+            np.testing.assert_allclose(got[i], want, rtol=2e-5, atol=2e-5)
+
+    def test_zero_context_attends_only_to_current(self):
+        rng = np.random.default_rng(0)
+        q, pool, bt, lens, k_new, v_new = _mk_case(rng, 1, 2, 2, 8, 4, 4, 2, [0])
+        got = paged_attention(
+            jnp.asarray(q), jnp.asarray(pool), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(k_new), jnp.asarray(v_new))
+        # With no cached context, output == v_new per (GQA-expanded) head.
+        want = np.repeat(v_new[0], 1, axis=0)
+        np.testing.assert_allclose(got[0], want, rtol=1e-5, atol=1e-5)
+
+    def test_full_context(self):
+        rng = np.random.default_rng(1)
+        b, h, kvh, d, nb, bs, mb = 2, 4, 2, 8, 6, 4, 3
+        ctx = [mb * bs] * b  # fully filled
+        q, pool, bt, lens, k_new, v_new = _mk_case(rng, b, h, kvh, d, nb, bs, mb, ctx)
+        got = paged_attention(
+            jnp.asarray(q), jnp.asarray(pool), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(k_new), jnp.asarray(v_new))
+        for i in range(b):
+            want = ref_paged_attention(
+                jnp.asarray(q[i]), jnp.asarray(pool), jnp.asarray(bt[i]),
+                int(lens[i]), jnp.asarray(k_new[i]), jnp.asarray(v_new[i]))
+            np.testing.assert_allclose(got[i], want, rtol=2e-5, atol=2e-5)
+
+    def test_outputs_finite(self):
+        rng = np.random.default_rng(2)
+        q, pool, bt, lens, k_new, v_new = _mk_case(rng, 3, 6, 2, 16, 8, 8, 4, [5, 17, 32])
+        got = paged_attention(
+            jnp.asarray(q), jnp.asarray(pool), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(k_new), jnp.asarray(v_new))
+        assert np.isfinite(np.asarray(got)).all()
+
+    def test_vmem_footprint_estimate(self):
+        # The production-config footprint must fit a 16 MiB VMEM budget
+        # (DESIGN.md §Perf L1).
+        fp = vmem_footprint_bytes((128, 16, 2, 2, 64), h=10, d=64, mb=32)
+        assert fp < 16 * 1024 * 1024, fp
+
+
+class TestKvGather:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        nb=st.integers(2, 32),
+        e=st.sampled_from([8, 64, 256]),
+    )
+    def test_matches_ref(self, seed, nb, e):
+        rng = np.random.default_rng(seed)
+        k = rng.integers(1, nb + 1)
+        pool = rng.standard_normal((nb, e)).astype(np.float32)
+        idx = rng.permutation(nb)[:k].astype(np.int32)
+        got = kv_gather(jnp.asarray(pool), jnp.asarray(idx))
+        want = ref_kv_gather(jnp.asarray(pool), jnp.asarray(idx))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_repeated_indices(self):
+        pool = np.arange(12, dtype=np.float32).reshape(3, 4)
+        idx = np.asarray([1, 1, 0], dtype=np.int32)
+        got = np.asarray(kv_gather(jnp.asarray(pool), jnp.asarray(idx)))
+        np.testing.assert_array_equal(got[0], got[1])
+        np.testing.assert_array_equal(got[2], pool[0])
+
+    def test_identity_permutation(self):
+        pool = np.random.default_rng(3).standard_normal((8, 16)).astype(np.float32)
+        idx = np.arange(8, dtype=np.int32)
+        got = np.asarray(kv_gather(jnp.asarray(pool), jnp.asarray(idx)))
+        np.testing.assert_array_equal(got, pool)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

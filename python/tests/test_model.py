@@ -1,0 +1,154 @@
+"""L2 model checks: shapes, determinism, decode-vs-prefill consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    CONFIG,
+    counter_uniform,
+    decode_step,
+    init_params,
+    num_params,
+    param_manifest,
+    prefill,
+)
+
+SMALL = {
+    **CONFIG,
+    "vocab": 128,
+    "d_model": 32,
+    "layers": 2,
+    "heads": 4,
+    "kv_heads": 2,
+    "head_dim": 8,
+    "ffn": 64,
+    "block_size": 4,
+    "max_blocks": 4,
+    "num_blocks": 8,
+    "batch": 2,
+    "prefill_len": 8,
+}
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return init_params(SMALL)
+
+
+class TestParams:
+    def test_full_model_is_about_55m(self):
+        n = num_params(CONFIG)
+        assert 40e6 < n < 80e6, n
+
+    def test_manifest_offsets_monotone(self):
+        m = param_manifest(SMALL)
+        offs = [e[3] for e in m]
+        assert offs == sorted(offs)
+        # offsets are dense: each offset = previous + numel
+        for i in range(1, len(m)):
+            prev = m[i - 1]
+            assert m[i][3] == prev[3] + int(np.prod(prev[1]))
+
+    def test_counter_uniform_deterministic_and_bounded(self):
+        a = counter_uniform(42, 100, 1000)
+        b = counter_uniform(42, 100, 1000)
+        np.testing.assert_array_equal(a, b)
+        assert (np.abs(a) < 1.0).all()
+        assert abs(a.mean()) < 0.1  # roughly centered
+
+    def test_norm_weights_are_ones(self, small_params):
+        m = param_manifest(SMALL)
+        for (name, _, scale, _), p in zip(m, small_params):
+            if scale == 0.0:
+                assert np.all(np.asarray(p) == 1.0), name
+
+
+class TestPrefill:
+    def test_shapes(self, small_params):
+        t = SMALL["prefill_len"]
+        tokens = jnp.arange(t, dtype=jnp.int32)[None, :] % SMALL["vocab"]
+        logits, kv = prefill(small_params, tokens, SMALL)
+        assert logits.shape == (1, SMALL["vocab"])
+        assert kv.shape == (t, SMALL["layers"], 2, SMALL["kv_heads"], SMALL["head_dim"])
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_deterministic(self, small_params):
+        tokens = jnp.ones((1, SMALL["prefill_len"]), dtype=jnp.int32)
+        a, _ = prefill(small_params, tokens, SMALL)
+        b, _ = prefill(small_params, tokens, SMALL)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDecode:
+    def test_shapes(self, small_params):
+        cfg = SMALL
+        b, nb, bs = cfg["batch"], cfg["num_blocks"], cfg["block_size"]
+        layers, kvh, hd = cfg["layers"], cfg["kv_heads"], cfg["head_dim"]
+        token = jnp.asarray([1, 2], dtype=jnp.int32)
+        pos = jnp.asarray([4, 7], dtype=jnp.int32)
+        pool = jnp.zeros((nb, bs, layers, 2, kvh, hd), dtype=jnp.float32)
+        bt = jnp.asarray(
+            np.stack([np.arange(cfg["max_blocks"], dtype=np.int32)] * b))
+        logits, new_kv = decode_step(small_params, token, pos, pool, bt, cfg)
+        assert logits.shape == (b, cfg["vocab"])
+        assert new_kv.shape == (b, layers, 2, kvh, hd)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_decode_consistent_with_prefill(self, small_params):
+        """Prefill T tokens; decoding token T with the prefix KV paged into
+        the pool must give the same logits as prefilling T+1 tokens."""
+        cfg = SMALL
+        t = cfg["prefill_len"] - 1
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg["vocab"], size=t + 1).astype(np.int32)
+
+        # Oracle: prefill all T+1 tokens.
+        full_logits, _ = prefill(small_params, jnp.asarray(toks)[None, :], cfg)
+
+        # Prefill first T, page KV into the pool, decode token T.
+        _, kv = prefill(small_params, jnp.asarray(toks[:t])[None, :], cfg)
+        nb, bs = cfg["num_blocks"], cfg["block_size"]
+        layers, kvh, hd = cfg["layers"], cfg["kv_heads"], cfg["head_dim"]
+        pool = np.zeros((nb, bs, layers, 2, kvh, hd), dtype=np.float32)
+        kvn = np.asarray(kv)  # [T, L, 2, KVH, D]
+        mb = cfg["max_blocks"]
+        table = np.arange(mb, dtype=np.int32)  # identity mapping
+        for i in range(t):
+            pool[table[i // bs], i % bs] = kvn[i]
+        b = cfg["batch"]
+        token = jnp.asarray([toks[t]] * b, dtype=jnp.int32)
+        pos = jnp.asarray([t] * b, dtype=jnp.int32)
+        bts = jnp.asarray(np.stack([table] * b))
+        logits, _ = decode_step(small_params, token, pos, jnp.asarray(pool), bts, cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits[0]), np.asarray(full_logits[0]), rtol=2e-4, atol=2e-4)
+
+    def test_block_table_permutation_invariance(self, small_params):
+        """Physical block placement must not change the result."""
+        cfg = SMALL
+        b = cfg["batch"]
+        nb, bs = cfg["num_blocks"], cfg["block_size"]
+        layers, kvh, hd = cfg["layers"], cfg["kv_heads"], cfg["head_dim"]
+        rng = np.random.default_rng(5)
+        kv_rows = (rng.standard_normal((8, layers, 2, kvh, hd)) * 0.3).astype(np.float32)
+
+        def build(table):
+            pool = np.zeros((nb, bs, layers, 2, kvh, hd), dtype=np.float32)
+            for i in range(8):
+                pool[table[i // bs], i % bs] = kv_rows[i]
+            return pool
+
+        t1 = np.asarray([0, 1, 2, 3], dtype=np.int32)
+        t2 = np.asarray([5, 2, 7, 0], dtype=np.int32)
+        token = jnp.asarray([3] * b, dtype=jnp.int32)
+        pos = jnp.asarray([8] * b, dtype=jnp.int32)
+        l1, _ = decode_step(small_params, token, pos, jnp.asarray(build(t1)),
+                            jnp.asarray(np.stack([t1] * b)), cfg)
+        l2, _ = decode_step(small_params, token, pos, jnp.asarray(build(t2)),
+                            jnp.asarray(np.stack([t2] * b)), cfg)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

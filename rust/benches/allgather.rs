@@ -1,0 +1,53 @@
+//! BENCH — Fig. 1 + Fig. 13 + Table 2: all-gather DMA variants vs RCCL
+//! across 1KB–4GB. Prints the paper's rows (speedup of each DMA variant
+//! over RCCL), the derived best-implementation table, and the paper-vs-
+//! measured summary statistics recorded in EXPERIMENTS.md.
+
+use dma_latte::collectives::{CollectiveKind, Strategy, Variant};
+use dma_latte::figures::collectives as fig;
+use dma_latte::util::bytes::{GB, MB};
+use dma_latte::util::stats::geomean;
+
+fn main() {
+    let kind = CollectiveKind::AllGather;
+    let t0 = std::time::Instant::now();
+    let rows = fig::sweep(kind, None);
+    let wall = t0.elapsed();
+    print!("{}", fig::render(kind, &rows));
+
+    println!("\n-- Table 2 (derived from this sweep) --");
+    for (lo, hi, v) in fig::best_table(&rows) {
+        println!(
+            "  {:>6} ..= {:>6}  {}",
+            dma_latte::util::bytes::fmt_size(lo),
+            dma_latte::util::bytes::fmt_size(hi),
+            v.name()
+        );
+    }
+
+    let below = fig::LATENCY_BOUND_CEILING;
+    let pcpy = fig::geomean_speedup(&rows, Variant::new(Strategy::Pcpy, false), below);
+    let best = fig::geomean_best(&rows, below);
+    let large: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.size >= 32 * MB && r.size <= GB)
+        .map(|r| r.best().1)
+        .collect();
+    println!("\n-- paper-vs-measured (geomean, <32MB unless noted) --");
+    println!("pcpy slowdown      : paper 4.5x   measured {:.2}x", 1.0 / pcpy);
+    println!("best-DMA slowdown  : paper 1.30x  measured {:.2}x", 1.0 / best);
+    println!("32MB-1GB speedup   : paper ~1.2x  measured {:.2}x", geomean(&large));
+    let b_small = fig::geomean_speedup(&rows, Variant::new(Strategy::B2b, false), MB);
+    let p_small = fig::geomean_speedup(&rows, Variant::new(Strategy::Pcpy, false), MB);
+    println!("b2b over pcpy <1MB : paper 2.7x   measured {:.2}x", b_small / p_small);
+    let bc = fig::geomean_speedup(&rows, Variant::new(Strategy::Bcst, false), 4 * MB);
+    let pc = fig::geomean_speedup(&rows, Variant::new(Strategy::Pcpy, false), 4 * MB);
+    println!("bcst over pcpy <4MB: paper 1.7x   measured {:.2}x", bc / pc);
+
+    fig::to_csv(kind, &rows).write("results/fig13_allgather.csv").unwrap();
+    println!(
+        "\nsweep wall time: {:.2}s ({} sizes × 6 variants; CSV → results/)",
+        wall.as_secs_f64(),
+        rows.len()
+    );
+}

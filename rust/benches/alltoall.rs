@@ -1,0 +1,45 @@
+//! BENCH — Fig. 14 + Table 3: all-to-all DMA variants vs RCCL.
+
+use dma_latte::collectives::{CollectiveKind, Strategy, Variant};
+use dma_latte::figures::collectives as fig;
+use dma_latte::util::bytes::{GB, MB};
+use dma_latte::util::stats::geomean;
+
+fn main() {
+    let kind = CollectiveKind::AllToAll;
+    let rows = fig::sweep(kind, None);
+    print!("{}", fig::render(kind, &rows));
+
+    println!("\n-- Table 3 (derived from this sweep) --");
+    for (lo, hi, v) in fig::best_table(&rows) {
+        println!(
+            "  {:>6} ..= {:>6}  {}",
+            dma_latte::util::bytes::fmt_size(lo),
+            dma_latte::util::bytes::fmt_size(hi),
+            v.name()
+        );
+    }
+
+    let below = fig::LATENCY_BOUND_CEILING;
+    let pcpy = fig::geomean_speedup(&rows, Variant::new(Strategy::Pcpy, false), below);
+    let best = fig::geomean_best(&rows, below);
+    let large: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.size >= 32 * MB && r.size <= GB)
+        .map(|r| r.best().1)
+        .collect();
+    println!("\n-- paper-vs-measured (geomean, <32MB unless noted) --");
+    println!("pcpy slowdown       : paper 2.5x        measured {:.2}x", 1.0 / pcpy);
+    println!("best-DMA vs RCCL    : paper 1.2x faster measured {:.2}x", best);
+    println!("32MB-1GB speedup    : paper ~1.2x       measured {:.2}x", geomean(&large));
+    let sw = fig::geomean_speedup(&rows, Variant::new(Strategy::Swap, false), 4 * MB);
+    let pc = fig::geomean_speedup(&rows, Variant::new(Strategy::Pcpy, false), 4 * MB);
+    println!("swap over pcpy <4MB : paper 1.7x        measured {:.2}x", sw / pc);
+    let b_small = fig::geomean_speedup(&rows, Variant::new(Strategy::B2b, false), MB);
+    println!(
+        "b2b over pcpy <1MB  : paper 2.5x        measured {:.2}x",
+        b_small / fig::geomean_speedup(&rows, Variant::new(Strategy::Pcpy, false), MB)
+    );
+
+    fig::to_csv(kind, &rows).write("results/fig14_alltoall.csv").unwrap();
+}

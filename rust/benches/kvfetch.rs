@@ -1,0 +1,63 @@
+//! BENCH — §5.3.3 "DMA versus kernel KV fetch" at operator level: fetch
+//! cost of a 4096/8192-token cached context per model and fetch impl,
+//! plus host-CPU occupancy (the quantity continuous batching cares about).
+
+use dma_latte::kvcache::fetch::{run_fetch, FetchImpl};
+use dma_latte::kvcache::BlockLayout;
+use dma_latte::models::ALL_MODELS;
+use dma_latte::sim::{Sim, SimConfig};
+use dma_latte::util::bytes::fmt_size;
+use dma_latte::util::csv::Csv;
+use dma_latte::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(vec![
+        "model", "tokens", "block", "blocks", "impl", "host_us", "total_us", "cu_us", "api",
+    ]);
+    let mut csv = Csv::new(vec![
+        "model", "tokens", "block_bytes", "impl", "host_ns", "total_ns", "gpu_cu_ns",
+    ]);
+    for &m in ALL_MODELS {
+        for tokens in [4096u64, 8192] {
+            let layout = BlockLayout::new(m, 16);
+            let blocks = layout.blocks_for(tokens);
+            let copies: Vec<_> = (0..blocks)
+                .map(|i| {
+                    (
+                        layout.cpu_block_addr(i),
+                        layout.gpu_block_addr(0, i),
+                        layout.block_bytes,
+                    )
+                })
+                .collect();
+            for imp in [FetchImpl::DmaBaseline, FetchImpl::DmaB2b, FetchImpl::Kernel] {
+                let mut sim = Sim::new(SimConfig::mi300x());
+                let o = run_fetch(&mut sim, imp, &copies);
+                t.row(vec![
+                    m.name.to_string(),
+                    tokens.to_string(),
+                    fmt_size(layout.block_bytes),
+                    blocks.to_string(),
+                    imp.name().to_string(),
+                    format!("{:.0}", o.host_ns as f64 / 1e3),
+                    format!("{:.0}", o.total_ns as f64 / 1e3),
+                    format!("{:.0}", o.gpu_cu_ns as f64 / 1e3),
+                    o.api_calls.to_string(),
+                ]);
+                csv.row(vec![
+                    m.name.to_string(),
+                    tokens.to_string(),
+                    layout.block_bytes.to_string(),
+                    imp.name().to_string(),
+                    o.host_ns.to_string(),
+                    o.total_ns.to_string(),
+                    o.gpu_cu_ns.to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\nb2b: ~10-30x less host CPU than per-copy hipMemcpyAsync; kernel:");
+    println!("cheapest host-side but burns CU time that contends with decode.");
+    csv.write("results/kvfetch.csv").unwrap();
+}

@@ -1,0 +1,83 @@
+//! BENCH — §Perf: wall-clock micro-benchmarks of the L3 hot paths
+//! (EXPERIMENTS.md §Perf records before/after for the optimization pass).
+//!
+//! - DES event throughput (events/s) — the substrate under every figure.
+//! - Collective sweep point (end-to-end DES episode).
+//! - Fetch planning + DES episode (the serving scheduler's inner call).
+//! - Virtual serving engine step rate (requests/s).
+
+use dma_latte::collectives::{run_collective, CollectiveKind, RunOptions, Strategy, Variant};
+use dma_latte::coordinator::request::Request;
+use dma_latte::coordinator::{ServeConfig, VirtualEngine};
+use dma_latte::kvcache::fetch::{run_fetch, FetchImpl};
+use dma_latte::models::zoo::QWEN25_0_5B;
+use dma_latte::sim::topology::NodeId;
+use dma_latte::sim::{Addr, Sim, SimConfig};
+use dma_latte::util::bytes::MB;
+use dma_latte::util::timer::{bench, black_box};
+
+fn main() {
+    println!("== L3 hot-path microbenchmarks ==\n");
+
+    // 1) DES throughput: one pcpy collective episode = ~500 events.
+    let opts = RunOptions {
+        sim: SimConfig::mi300x(),
+        verify: false,
+    };
+    let r = bench("collective episode (pcpy AG 1MB)", 3, 50, || {
+        black_box(run_collective(
+            CollectiveKind::AllGather,
+            Variant::new(Strategy::Pcpy, false),
+            MB,
+            &opts,
+        ));
+    });
+    println!("{}", r.summary());
+
+    // Events/s measurement.
+    let mut sim = Sim::new(SimConfig::mi300x());
+    let sig = sim.alloc_signal(0);
+    let copies: Vec<_> = (0..2048u64)
+        .map(|i| {
+            (
+                Addr::new(NodeId::Cpu, i * 4096),
+                Addr::new(NodeId::Gpu(0), i * 4096),
+                4096u64,
+            )
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = run_fetch(&mut sim, FetchImpl::DmaBaseline, &copies);
+    let outcome = { black_box(out); sim };
+    let _ = sig;
+    let events = 2048 * 4; // ≈ events per copy
+    println!(
+        "DES rate ≈ {:.2}M events/s (2048-copy fetch episode in {:.1}ms)",
+        events as f64 / t0.elapsed().as_secs_f64() / 1e6,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    drop(outcome);
+
+    // 2) Fetch episode (the serving loop's per-admission cost).
+    let copies_small: Vec<_> = copies[..256].to_vec();
+    let r = bench("fetch episode (b2b, 256 blocks)", 3, 100, || {
+        let mut sim = Sim::new(SimConfig::mi300x());
+        black_box(run_fetch(&mut sim, FetchImpl::DmaB2b, &copies_small));
+    });
+    println!("{}", r.summary());
+
+    // 3) Virtual serving engine: requests/s of the simulator itself.
+    let r = bench("virtual engine (64 reqs, b2b)", 1, 10, || {
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..64 {
+            eng.submit(Request::new(i, 1024, 8, 0), true);
+        }
+        black_box(eng.run_to_completion().finished);
+    });
+    println!("{}", r.summary());
+
+    println!("\nTargets (DESIGN.md §7): DES ≥ 1M events/s; serving loop");
+    println!(">10x faster than the workload it models.");
+}

@@ -1,0 +1,34 @@
+//! BENCH — Fig. 15: total GPU power, best DMA collective vs RCCL (AG),
+//! 16KB–1GB, via the component power model over DES activity.
+
+use dma_latte::figures::power;
+use dma_latte::util::bytes::{fmt_size, KB, MB};
+
+fn main() {
+    let rows = power::fig15(None);
+    print!("{}", power::render(&rows));
+
+    let small: Vec<&power::PowerRow> = rows
+        .iter()
+        .filter(|r| r.size >= 16 * KB && r.size <= 64 * KB)
+        .collect();
+    let large: Vec<&power::PowerRow> = rows.iter().filter(|r| r.size >= 64 * MB).collect();
+    let avg =
+        |v: &[&power::PowerRow]| v.iter().map(|r| r.saving()).sum::<f64>() / v.len() as f64;
+    println!("\n-- paper-vs-measured --");
+    println!("saving ≥64MB    : paper ~32%   measured {:.0}%", avg(&large) * 100.0);
+    println!("saving 16-64KB  : paper 3-10%  measured {:.0}%", avg(&small) * 100.0);
+    let xcd_ratio = large.iter().map(|r| r.rccl.xcd_w / r.dma.xcd_w).sum::<f64>()
+        / large.len() as f64;
+    println!("XCD power ratio : paper 3.7x   measured {xcd_ratio:.1}x");
+    for r in &rows {
+        if r.dma_variant.contains("bcst") {
+            println!(
+                "bcst region {:>5}: saving {:.0}% (paper: bcst adds 5-10% >1MB via 1-read-2-write)",
+                fmt_size(r.size),
+                r.saving() * 100.0
+            );
+        }
+    }
+    power::to_csv(&rows).write("results/fig15_power.csv").unwrap();
+}

@@ -1,0 +1,48 @@
+//! BENCH — Fig. 17 + §5.3.3 KV-hit sweep: serving throughput (tokens/s)
+//! with b2b DMA vs baseline DMA vs kernel KV fetch, continuous batching.
+//!
+//! The paper uses 2000 simultaneous requests; pass `--full` for that scale
+//! (several minutes), default is 400 which preserves all ratios.
+
+use dma_latte::figures::serving;
+use dma_latte::models::ALL_MODELS;
+use dma_latte::util::stats;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let sweep_hit = std::env::args().any(|a| a == "--sweep-hit");
+    let n: u64 = if full { 2000 } else { 400 };
+    let decode = 32;
+
+    println!("# Fig 17 — {} requests, prefill 4096, 100% hit", n);
+    let mut rows = Vec::new();
+    for &m in ALL_MODELS {
+        let r = serving::throughput(m, 4096, n, decode, 1.0);
+        rows.push(r);
+    }
+    print!("{}", serving::render_fig17(&rows));
+
+    let gains: Vec<f64> = rows.iter().map(|r| r.gain).collect();
+    let vs_kernel: Vec<f64> = rows.iter().map(|r| r.gain_vs_kernel).collect();
+    println!("\n-- paper-vs-measured --");
+    println!(
+        "max tput gain (b2b/base)  : paper 1.9x  measured {:.2}x",
+        stats::max(&gains)
+    );
+    println!(
+        "tput gain vs kernel fetch : paper 1.3x  measured {:.2}x",
+        stats::max(&vs_kernel)
+    );
+
+    if sweep_hit {
+        println!("\n# §5.3.3 hit-rate sweep (Qwen2.5-0.5B)");
+        let mut hit_rows = Vec::new();
+        for hit in [1.0, 0.7, 0.5] {
+            hit_rows.push(serving::throughput(ALL_MODELS[0], 4096, n / 2, decode, hit));
+        }
+        print!("{}", serving::render_fig17(&hit_rows));
+        println!("(gains shrink as misses add prefill GPU time — paper §5.3.3)");
+        rows.extend(hit_rows);
+    }
+    serving::fig17_csv(&rows).write("results/fig17_throughput.csv").unwrap();
+}

@@ -1,0 +1,104 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline vendor
+//! set): subcommand + `--flag value` / `--flag` options + positionals.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; the first non-flag token is the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--k=v`, `--k v`, or boolean switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional flag.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Parsed numeric flag.
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("figures --out results/ --sizes 1K,4G --quick pos1");
+        assert_eq!(a.command.as_deref(), Some("figures"));
+        assert_eq!(a.get("out", "x"), "results/");
+        assert_eq!(a.get("sizes", ""), "1K,4G");
+        assert!(a.has("quick") || a.get("quick", "") == "pos1");
+    }
+
+    #[test]
+    fn eq_form_and_numbers() {
+        let a = parse("sweep --max=64M --requests 200");
+        assert_eq!(a.get("max", ""), "64M");
+        assert_eq!(a.get_num::<u64>("requests", 0), 200);
+        assert_eq!(a.get_num::<u64>("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --verbose");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+}

@@ -1,0 +1,124 @@
+//! `bcst` — broadcast-command all-gather (paper §4.2, Fig. 9).
+//!
+//! Each broadcast command carries one source and TWO destinations, so a
+//! rank's 7 peer transfers collapse to ⌈7/2⌉ = 4 commands on 4 engines
+//! (3 broadcasts + 1 copy): half the commands, half the engines, half the
+//! sync traffic, and the source chunk is read from HBM once per pair.
+
+use crate::sim::command::{Addr, Command};
+use crate::sim::engine::EngineId;
+use crate::sim::topology::{NodeId, Topology};
+
+use super::plan::{CollectivePlan, EnginePlan, RankPlan};
+use super::CollectiveKind;
+
+/// Build the broadcast-based AG plan (AG only; see `Strategy::applicable`).
+pub fn plan(topo: &Topology, size: u64) -> CollectivePlan {
+    let n = topo.num_gpus;
+    let chunk = CollectivePlan::chunk(size, n);
+    assert!(chunk > 0, "size {size} too small for {n} GPUs");
+    let mut ranks = Vec::new();
+    for g in 0..n {
+        let src = Addr::new(NodeId::Gpu(g), g as u64 * chunk);
+        let peers = topo.peers(g);
+        let mut engines = Vec::new();
+        let mut eidx = 0u8;
+        let mut it = peers.chunks(2);
+        for pair in &mut it {
+            let cmd = if pair.len() == 2 {
+                Command::Bcst {
+                    src,
+                    dst0: Addr::new(NodeId::Gpu(pair[0]), g as u64 * chunk),
+                    dst1: Addr::new(NodeId::Gpu(pair[1]), g as u64 * chunk),
+                    len: chunk,
+                }
+            } else {
+                Command::Copy {
+                    src,
+                    dst: Addr::new(NodeId::Gpu(pair[0]), g as u64 * chunk),
+                    len: chunk,
+                }
+            };
+            engines.push(EnginePlan {
+                engine: EngineId { gpu: g, idx: eidx },
+                cmds: vec![cmd],
+                batched_control: false,
+            });
+            eidx += 1;
+        }
+        ranks.push(RankPlan { gpu: g, engines });
+    }
+    let p = CollectivePlan {
+        kind: CollectiveKind::AllGather,
+        size,
+        ranks,
+    };
+    p.validate(topo);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halves_commands_and_engines() {
+        let topo = Topology::mi300x_platform();
+        let p = plan(&topo, 8192);
+        // 7 peers → 3 bcst + 1 copy per rank.
+        assert_eq!(p.total_engines(), 8 * 4);
+        assert_eq!(p.total_data_cmds(), 8 * 4);
+        let r0 = &p.ranks[0];
+        let bcsts = r0
+            .engines
+            .iter()
+            .filter(|e| matches!(e.cmds[0], Command::Bcst { .. }))
+            .count();
+        let copies = r0
+            .engines
+            .iter()
+            .filter(|e| matches!(e.cmds[0], Command::Copy { .. }))
+            .count();
+        assert_eq!((bcsts, copies), (3, 1));
+    }
+
+    #[test]
+    fn covers_all_peers_exactly_once() {
+        let topo = Topology::mi300x_platform();
+        let p = plan(&topo, 8192);
+        for r in &p.ranks {
+            let mut dsts = Vec::new();
+            for e in &r.engines {
+                match &e.cmds[0] {
+                    Command::Bcst { dst0, dst1, .. } => {
+                        dsts.push(dst0.node);
+                        dsts.push(dst1.node);
+                    }
+                    Command::Copy { dst, .. } => dsts.push(dst.node),
+                    c => panic!("unexpected {c:?}"),
+                }
+            }
+            dsts.sort();
+            let expect: Vec<_> = topo
+                .peers(r.gpu)
+                .into_iter()
+                .map(NodeId::Gpu)
+                .collect();
+            assert_eq!(dsts, expect);
+        }
+    }
+
+    #[test]
+    fn even_peer_count_uses_only_bcst() {
+        // 5 GPUs → 4 peers → 2 bcst, 0 copies.
+        let topo = Topology::custom(5, 8, 64.0, 64.0);
+        let p = plan(&topo, 5 * 1024);
+        for r in &p.ranks {
+            assert_eq!(r.engines.len(), 2);
+            assert!(r
+                .engines
+                .iter()
+                .all(|e| matches!(e.cmds[0], Command::Bcst { .. })));
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Collective executor: turns a [`CollectivePlan`] into per-rank host
+//! scripts (direct or prelaunched), drives the DES, measures the critical
+//! path, and optionally verifies the functional result.
+//!
+//! Synchronization model: every engine stream ends with an `Atomic(+1)` on
+//! a global completion signal; every rank waits for the global count (the
+//! collective is complete when all transfers have landed). Prelaunch mode
+//! (§4.5) pays command creation + doorbells in a setup epoch, parks engines
+//! on a per-rank trigger `Poll`, and the measured window starts at the
+//! trigger write.
+
+use crate::sim::command::{AtomicOp, Command, PollCond};
+use crate::sim::host::{ApiKind, HostId, HostOp};
+use crate::sim::power::Activity;
+use crate::sim::{Sim, SimConfig};
+
+use super::plan::CollectivePlan;
+use super::{b2b, bcst, pcpy, swap, verify, CollectiveKind, Strategy, Variant};
+
+/// Execution options.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Simulator config (topology + latency calibration).
+    pub sim: SimConfig,
+    /// Initialize buffers and verify the collective's functional result
+    /// (forces functional memory; keep sizes modest).
+    pub verify: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            sim: SimConfig::mi300x(),
+            verify: false,
+        }
+    }
+}
+
+/// Outcome of one collective execution.
+#[derive(Debug, Clone)]
+pub struct CollectiveResult {
+    /// Critical-path latency in ns (trigger/start → last rank observes
+    /// completion).
+    pub latency_ns: u64,
+    /// Engines that executed at least one command.
+    pub engines_used: usize,
+    /// Total data-move commands.
+    pub data_cmds: usize,
+    /// Power-model activity over the collective window.
+    pub activity: Activity,
+    /// Functional verification result (None when not requested).
+    pub verified: Option<bool>,
+}
+
+/// Plan `variant` for `kind` at `size` bytes.
+pub fn build_plan(
+    kind: CollectiveKind,
+    variant: Variant,
+    topo: &crate::sim::Topology,
+    size: u64,
+) -> CollectivePlan {
+    assert!(
+        variant.strategy.applicable(kind),
+        "{} not applicable to {}",
+        variant.strategy.name(),
+        kind.name()
+    );
+    match variant.strategy {
+        Strategy::Pcpy => pcpy::plan(kind, topo, size),
+        Strategy::Bcst => bcst::plan(topo, size),
+        Strategy::Swap => swap::plan(topo, size),
+        Strategy::B2b => b2b::plan(kind, topo, size),
+    }
+}
+
+/// Run one collective end to end on the DES and measure it.
+pub fn run_collective(
+    kind: CollectiveKind,
+    variant: Variant,
+    size: u64,
+    opts: &RunOptions,
+) -> CollectiveResult {
+    let topo = opts.sim.topology.clone();
+    let plan = build_plan(kind, variant, &topo, size);
+    let mut cfg = opts.sim.clone();
+    if opts.verify {
+        cfg.functional = true;
+    }
+    let mut sim = Sim::new(cfg);
+
+    // Buffers (also sizes non-functional accounting consistently).
+    let in_place_swap = variant.strategy == Strategy::Swap;
+    if opts.verify {
+        verify::init_buffers(&mut sim, kind, size, in_place_swap);
+    }
+
+    // Per-engine completion signals: each engine stream ends with its own
+    // Atomic, and the owning rank's host observes each of its engines'
+    // signals in turn. This is the paper's sync-scaling mechanism: more
+    // engines ⇒ more sync commands AND more host-side completions to
+    // observe (§5.2.4), which bcst/swap/b2b then halve or collapse.
+    let mut eng_signals: Vec<Vec<crate::sim::SignalId>> = Vec::new();
+    for rank in &plan.ranks {
+        eng_signals.push(
+            rank.engines
+                .iter()
+                .map(|_| sim.alloc_signal(0))
+                .collect(),
+        );
+    }
+
+    // Per-rank prelaunch triggers.
+    let triggers: Vec<_> = (0..topo.num_gpus)
+        .map(|_| sim.alloc_signal(0))
+        .collect();
+
+    for (ri, rank) in plan.ranks.iter().enumerate() {
+        let mut script = Vec::new();
+        let g = rank.gpu as usize;
+        if variant.prelaunch {
+            // Setup epoch: create poll-gated streams + ring doorbells.
+            for (ei, ep) in rank.engines.iter().enumerate() {
+                let mut cmds = vec![Command::Poll {
+                    signal: triggers[g],
+                    cond: PollCond::Gte(1),
+                }];
+                cmds.extend(ep.cmds.iter().cloned());
+                cmds.push(Command::Atomic {
+                    signal: eng_signals[ri][ei],
+                    op: AtomicOp::Add(1),
+                });
+                script.push(HostOp::CreateCommands {
+                    engine: ep.engine,
+                    cmds,
+                    api: if ep.batched_control {
+                        ApiKind::RawBatched
+                    } else {
+                        ApiKind::Raw
+                    },
+                });
+                script.push(HostOp::RingDoorbell { engine: ep.engine });
+            }
+            // Let engines park on their polls, then start the clock.
+            script.push(HostOp::Delay { ns: 20_000 });
+            script.push(HostOp::Mark { name: "start" });
+            script.push(HostOp::SetSignal {
+                signal: triggers[g],
+                value: 1,
+            });
+        } else {
+            script.push(HostOp::Mark { name: "start" });
+            for (ei, ep) in rank.engines.iter().enumerate() {
+                let mut cmds = ep.cmds.clone();
+                cmds.push(Command::Atomic {
+                    signal: eng_signals[ri][ei],
+                    op: AtomicOp::Add(1),
+                });
+                script.push(HostOp::CreateCommands {
+                    engine: ep.engine,
+                    cmds,
+                    api: if ep.batched_control {
+                        ApiKind::RawBatched
+                    } else {
+                        ApiKind::Raw
+                    },
+                });
+                script.push(HostOp::RingDoorbell { engine: ep.engine });
+            }
+        }
+        for sig in &eng_signals[ri] {
+            script.push(HostOp::WaitSignal {
+                signal: *sig,
+                at_least: 1,
+            });
+        }
+        script.push(HostOp::Mark { name: "end" });
+        sim.add_host(script, 0);
+    }
+
+    let out = sim.run();
+    assert!(
+        out.deadlocked.is_empty(),
+        "collective deadlocked: {:?}",
+        out.deadlocked
+    );
+
+    // Critical path: the longest per-rank window (collective benchmarks
+    // time each rank and take the max; a global max−min would also charge
+    // per-rank setup skew, which is off the measured path under prelaunch).
+    let latency_ns = (0..plan.ranks.len())
+        .map(|h| {
+            let host = sim.host(HostId(h as u32));
+            host.mark("end").unwrap() - host.mark("start").unwrap()
+        })
+        .max()
+        .unwrap();
+
+    let verified = if opts.verify {
+        Some(verify::check(&sim, kind, size, in_place_swap))
+    } else {
+        None
+    };
+
+    CollectiveResult {
+        latency_ns,
+        engines_used: sim.engines_used(),
+        data_cmds: plan.total_data_cmds(),
+        activity: sim.activity(latency_ns as f64),
+        verified,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{KB, MB};
+
+    fn run(kind: CollectiveKind, v: Variant, size: u64) -> CollectiveResult {
+        run_collective(
+            kind,
+            v,
+            size,
+            &RunOptions {
+                sim: SimConfig::mi300x(),
+                verify: size <= MB,
+            },
+        )
+    }
+
+    #[test]
+    fn all_ag_variants_verify() {
+        for v in Variant::all_for(CollectiveKind::AllGather) {
+            let r = run(CollectiveKind::AllGather, v, 64 * KB);
+            assert_eq!(r.verified, Some(true), "variant {}", v.name());
+            assert!(r.latency_ns > 0);
+        }
+    }
+
+    #[test]
+    fn all_aa_variants_verify() {
+        for v in Variant::all_for(CollectiveKind::AllToAll) {
+            let r = run(CollectiveKind::AllToAll, v, 64 * KB);
+            assert_eq!(r.verified, Some(true), "variant {}", v.name());
+        }
+    }
+
+    #[test]
+    fn b2b_beats_pcpy_at_small_sizes() {
+        let k = CollectiveKind::AllGather;
+        let p = run(k, Variant::new(Strategy::Pcpy, false), 16 * KB);
+        let b = run(k, Variant::new(Strategy::B2b, false), 16 * KB);
+        assert!(
+            (b.latency_ns as f64) < 0.6 * p.latency_ns as f64,
+            "b2b {} vs pcpy {}",
+            b.latency_ns,
+            p.latency_ns
+        );
+    }
+
+    #[test]
+    fn pcpy_beats_b2b_at_large_sizes() {
+        let k = CollectiveKind::AllGather;
+        let p = run(k, Variant::new(Strategy::Pcpy, false), 64 * MB);
+        let b = run(k, Variant::new(Strategy::B2b, false), 64 * MB);
+        assert!(p.latency_ns < b.latency_ns);
+    }
+
+    #[test]
+    fn prelaunch_always_helps() {
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            for s in [Strategy::Pcpy, Strategy::B2b] {
+                let d = run(kind, Variant::new(s, false), 256 * KB);
+                let p = run(kind, Variant::new(s, true), 256 * KB);
+                assert!(
+                    p.latency_ns < d.latency_ns,
+                    "{kind:?}/{}: prelaunch {} !< direct {}",
+                    s.name(),
+                    p.latency_ns,
+                    d.latency_ns
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bcst_uses_half_the_engines_of_pcpy() {
+        let k = CollectiveKind::AllGather;
+        let p = run(k, Variant::new(Strategy::Pcpy, false), 256 * KB);
+        let b = run(k, Variant::new(Strategy::Bcst, false), 256 * KB);
+        assert_eq!(p.engines_used, 56);
+        assert_eq!(b.engines_used, 32);
+        assert!(b.latency_ns < p.latency_ns);
+    }
+
+    #[test]
+    fn bcst_lowers_memory_reads() {
+        let k = CollectiveKind::AllGather;
+        let size = 512 * KB;
+        let p = run(k, Variant::new(Strategy::Pcpy, false), size);
+        let b = run(k, Variant::new(Strategy::Bcst, false), size);
+        // pcpy reads each source chunk 7×; bcst 4× (3 bcst + 1 copy).
+        assert!(b.activity.hbm_bytes < p.activity.hbm_bytes);
+    }
+}

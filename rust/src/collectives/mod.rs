@@ -1,0 +1,149 @@
+//! DMA-Latte collectives: the paper's operator-level contribution (§4–5.2).
+//!
+//! All-gather and all-to-all offloaded entirely to sDMA engines, in five
+//! implementations:
+//!
+//! | variant     | feature (paper)                  | section |
+//! |-------------|----------------------------------|---------|
+//! | `pcpy`      | parallel copies, 1 engine/peer   | §4.1    |
+//! | `bcst`      | broadcast command (1 src, 2 dst) | §4.2    |
+//! | `swap`      | swap command (in-place exchange) | §4.3    |
+//! | `b2b`       | back-to-back overlap, 1 engine   | §4.4    |
+//! | `prelaunch` | poll-gated pre-scheduled streams | §4.5    |
+//!
+//! `prelaunch` composes with each of the others, giving the eight
+//! configurations of Figs. 13/14. [`selector`] encodes the best-per-size
+//! policy of Tables 2/3.
+
+pub mod b2b;
+pub mod bcst;
+pub mod exec;
+pub mod moe;
+pub mod pcpy;
+pub mod plan;
+pub mod reduce_scatter;
+pub mod selector;
+pub mod swap;
+pub mod verify;
+
+pub use exec::{run_collective, CollectiveResult, RunOptions};
+pub use plan::{CollectivePlan, EnginePlan, RankPlan};
+pub use selector::select_variant;
+
+/// Which collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Each GPU contributes a chunk; everyone ends with the concatenation.
+    AllGather,
+    /// Chunk (g, j) of GPU g's input becomes chunk g of GPU j's output
+    /// (a distributed transpose).
+    AllToAll,
+}
+
+impl CollectiveKind {
+    /// Short name as used in figure labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllGather => "allgather",
+            CollectiveKind::AllToAll => "alltoall",
+        }
+    }
+}
+
+/// Base implementation strategy (before the prelaunch axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    Pcpy,
+    Bcst,
+    Swap,
+    B2b,
+}
+
+impl Strategy {
+    /// Short name as used in figure labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Pcpy => "pcpy",
+            Strategy::Bcst => "bcst",
+            Strategy::Swap => "swap",
+            Strategy::B2b => "b2b",
+        }
+    }
+
+    /// Is this strategy applicable to `kind`? (`bcst` needs a shared source
+    /// → AG only; `swap` needs a symmetric exchange → AA only.)
+    pub fn applicable(&self, kind: CollectiveKind) -> bool {
+        match (self, kind) {
+            (Strategy::Bcst, CollectiveKind::AllToAll) => false,
+            (Strategy::Swap, CollectiveKind::AllGather) => false,
+            _ => true,
+        }
+    }
+}
+
+/// A full variant: strategy × prelaunch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Variant {
+    pub strategy: Strategy,
+    pub prelaunch: bool,
+}
+
+impl Variant {
+    /// Construct.
+    pub fn new(strategy: Strategy, prelaunch: bool) -> Self {
+        Variant {
+            strategy,
+            prelaunch,
+        }
+    }
+
+    /// Figure-label name, e.g. `prelaunch_b2b`.
+    pub fn name(&self) -> String {
+        if self.prelaunch {
+            format!("prelaunch_{}", self.strategy.name())
+        } else {
+            self.strategy.name().to_string()
+        }
+    }
+
+    /// All variants applicable to `kind`, in figure order.
+    pub fn all_for(kind: CollectiveKind) -> Vec<Variant> {
+        let mut v = Vec::new();
+        for s in [Strategy::Pcpy, Strategy::Bcst, Strategy::Swap, Strategy::B2b] {
+            if s.applicable(kind) {
+                v.push(Variant::new(s, false));
+                v.push(Variant::new(s, true));
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applicability() {
+        assert!(Strategy::Bcst.applicable(CollectiveKind::AllGather));
+        assert!(!Strategy::Bcst.applicable(CollectiveKind::AllToAll));
+        assert!(Strategy::Swap.applicable(CollectiveKind::AllToAll));
+        assert!(!Strategy::Swap.applicable(CollectiveKind::AllGather));
+        assert!(Strategy::Pcpy.applicable(CollectiveKind::AllGather));
+        assert!(Strategy::B2b.applicable(CollectiveKind::AllToAll));
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(Variant::new(Strategy::B2b, true).name(), "prelaunch_b2b");
+        assert_eq!(Variant::new(Strategy::Pcpy, false).name(), "pcpy");
+    }
+
+    #[test]
+    fn variants_per_kind() {
+        // AG: pcpy, bcst, b2b × {direct, prelaunch} = 6
+        assert_eq!(Variant::all_for(CollectiveKind::AllGather).len(), 6);
+        // AA: pcpy, swap, b2b × {direct, prelaunch} = 6
+        assert_eq!(Variant::all_for(CollectiveKind::AllToAll).len(), 6);
+    }
+}

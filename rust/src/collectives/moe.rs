@@ -1,0 +1,247 @@
+//! MoE token dispatch with broadcast commands (paper §4.2, last note):
+//! "mixture-of-expert models which employ all-to-all often send a given
+//! token to multiple (top-k) experts which bcst is well-suited for."
+//!
+//! Expert-parallel dispatch: each GPU holds a batch of token activations;
+//! the router assigns every token to its top-k experts, each expert living
+//! on some GPU. With k=2 (the common case), one `bcst` command replicates
+//! a token to both expert GPUs — halving commands vs copy-based dispatch.
+
+use crate::sim::command::{Addr, AtomicOp, Command};
+use crate::sim::host::{ApiKind, HostOp};
+use crate::sim::topology::{NodeId, Topology};
+use crate::sim::{EngineId, Sim};
+use crate::util::rng::Rng;
+
+/// Routing decision for one token: the GPUs hosting its top-k experts.
+#[derive(Debug, Clone)]
+pub struct TokenRoute {
+    pub token_idx: u32,
+    pub expert_gpus: Vec<u8>,
+}
+
+/// Generate a random top-k routing for `tokens` tokens on `src_gpu`
+/// (experts spread over all GPUs; a token's experts are distinct GPUs —
+/// same-GPU experts need no wire transfer).
+pub fn random_routing(rng: &mut Rng, topo: &Topology, src_gpu: u8, tokens: u32, k: usize) -> Vec<TokenRoute> {
+    let peers = topo.peers(src_gpu);
+    (0..tokens)
+        .map(|t| {
+            let mut gpus = peers.clone();
+            rng.shuffle(&mut gpus);
+            TokenRoute {
+                token_idx: t,
+                expert_gpus: gpus[..k.min(gpus.len())].to_vec(),
+            }
+        })
+        .collect()
+}
+
+/// Layout: token `t` of `src_gpu` lives at `t * token_bytes`; the expert
+/// GPU's receive buffer slot for (src, token) sits after the send region:
+/// `max_tokens*token_bytes + (src * max_tokens + t) * token_bytes`.
+pub fn rx_offset(src_gpu: u8, token_idx: u32, max_tokens: u32, token_bytes: u64) -> u64 {
+    let rx_base = max_tokens as u64 * token_bytes;
+    rx_base + (src_gpu as u64 * max_tokens as u64 + token_idx as u64) * token_bytes
+}
+
+/// Dispatch strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// One copy per (token, expert) — today's runtime behaviour.
+    CopyPerExpert,
+    /// bcst pairs for k=2 (odd remainders fall back to copy).
+    Broadcast,
+}
+
+/// Result of a dispatch episode.
+#[derive(Debug)]
+pub struct DispatchResult {
+    pub latency_ns: u64,
+    pub commands: usize,
+    pub wire_bytes: u64,
+}
+
+/// Run one GPU's token dispatch on the DES; all commands b2b on one engine
+/// with a single sync (both modes benefit equally from b2b — the ablation
+/// isolates the command-count effect of `bcst`).
+pub fn run_dispatch(
+    sim: &mut Sim,
+    src_gpu: u8,
+    routes: &[TokenRoute],
+    max_tokens: u32,
+    token_bytes: u64,
+    mode: DispatchMode,
+) -> DispatchResult {
+    let mut cmds = Vec::new();
+    for r in routes {
+        let src = Addr::new(NodeId::Gpu(src_gpu), r.token_idx as u64 * token_bytes);
+        let mk_dst = |g: u8| {
+            Addr::new(
+                NodeId::Gpu(g),
+                rx_offset(src_gpu, r.token_idx, max_tokens, token_bytes),
+            )
+        };
+        match mode {
+            DispatchMode::CopyPerExpert => {
+                for &g in &r.expert_gpus {
+                    cmds.push(Command::Copy {
+                        src,
+                        dst: mk_dst(g),
+                        len: token_bytes,
+                    });
+                }
+            }
+            DispatchMode::Broadcast => {
+                let mut it = r.expert_gpus.chunks(2);
+                for pair in &mut it {
+                    if pair.len() == 2 {
+                        cmds.push(Command::Bcst {
+                            src,
+                            dst0: mk_dst(pair[0]),
+                            dst1: mk_dst(pair[1]),
+                            len: token_bytes,
+                        });
+                    } else {
+                        cmds.push(Command::Copy {
+                            src,
+                            dst: mk_dst(pair[0]),
+                            len: token_bytes,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let n_cmds = cmds.len();
+    let wire: u64 = cmds.iter().map(|c| c.wire_bytes()).sum();
+    let sig = sim.alloc_signal(0);
+    let engine = EngineId {
+        gpu: src_gpu,
+        idx: 0,
+    };
+    cmds.push(Command::Atomic {
+        signal: sig,
+        op: AtomicOp::Add(1),
+    });
+    let start = sim.time;
+    sim.add_host(
+        vec![
+            HostOp::Mark { name: "dispatch_start" },
+            HostOp::CreateCommands {
+                engine,
+                cmds,
+                api: ApiKind::RawBatched,
+            },
+            HostOp::RingDoorbell { engine },
+            HostOp::WaitSignal {
+                signal: sig,
+                at_least: 1,
+            },
+            HostOp::Mark { name: "dispatch_end" },
+        ],
+        start,
+    );
+    let out = sim.run();
+    assert!(out.deadlocked.is_empty());
+    let hosts = out.makespan; // borrow dance: fetch marks via last host
+    let _ = hosts;
+    let hid = crate::sim::HostId(0);
+    // Find the most recent host (this episode's): scan back from the end.
+    let mut latency = 0;
+    for i in (0..=hid.0).rev() {
+        let _ = i;
+        break;
+    }
+    // The episode's host is the last added; Sim doesn't expose a count, so
+    // track via marks on the latest host id. We know it's the only host in
+    // this sim for the ablation usage; assert that.
+    let h = sim.host(hid);
+    if let (Some(s), Some(e)) = (h.mark("dispatch_start"), h.mark("dispatch_end")) {
+        latency = e - s;
+    }
+    DispatchResult {
+        latency_ns: latency,
+        commands: n_cmds,
+        wire_bytes: wire,
+    }
+}
+
+/// Functional verify: every token's bytes arrived at each of its experts.
+pub fn verify_dispatch(
+    sim: &Sim,
+    src_gpu: u8,
+    routes: &[TokenRoute],
+    max_tokens: u32,
+    token_bytes: u64,
+) -> bool {
+    for r in routes {
+        let want = sim.memory.peek(
+            NodeId::Gpu(src_gpu),
+            r.token_idx as u64 * token_bytes,
+            token_bytes,
+        );
+        for &g in &r.expert_gpus {
+            let got = sim.memory.peek(
+                NodeId::Gpu(g),
+                rx_offset(src_gpu, r.token_idx, max_tokens, token_bytes),
+                token_bytes,
+            );
+            if got != want {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+
+    fn setup(tokens: u32, token_bytes: u64, k: usize) -> (Sim, Vec<TokenRoute>) {
+        let mut sim = Sim::new(SimConfig::mi300x().functional());
+        let mut rng = Rng::new(99);
+        let routes = random_routing(&mut rng, &sim.cfg.topology, 0, tokens, k);
+        for t in 0..tokens {
+            let fill = (t as u8).wrapping_mul(73).wrapping_add(5);
+            sim.memory.poke(
+                NodeId::Gpu(0),
+                t as u64 * token_bytes,
+                &vec![fill; token_bytes as usize],
+            );
+        }
+        (sim, routes)
+    }
+
+    #[test]
+    fn both_modes_deliver_all_tokens() {
+        for mode in [DispatchMode::CopyPerExpert, DispatchMode::Broadcast] {
+            let (mut sim, routes) = setup(32, 4096, 2);
+            let r = run_dispatch(&mut sim, 0, &routes, 32, 4096, mode);
+            assert!(r.latency_ns > 0);
+            assert!(verify_dispatch(&sim, 0, &routes, 32, 4096), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn broadcast_halves_commands_for_k2() {
+        let (mut s1, routes) = setup(64, 2048, 2);
+        let copy = run_dispatch(&mut s1, 0, &routes, 64, 2048, DispatchMode::CopyPerExpert);
+        let (mut s2, _) = setup(64, 2048, 2);
+        let bcst = run_dispatch(&mut s2, 0, &routes, 64, 2048, DispatchMode::Broadcast);
+        assert_eq!(copy.commands, 128);
+        assert_eq!(bcst.commands, 64);
+        assert_eq!(copy.wire_bytes, bcst.wire_bytes); // same data delivered
+        assert!(bcst.latency_ns < copy.latency_ns, "{} vs {}", bcst.latency_ns, copy.latency_ns);
+    }
+
+    #[test]
+    fn k3_mixes_bcst_and_copy() {
+        let (mut sim, routes) = setup(10, 1024, 3);
+        let r = run_dispatch(&mut sim, 0, &routes, 10, 1024, DispatchMode::Broadcast);
+        assert_eq!(r.commands, 20); // per token: 1 bcst + 1 copy
+        assert!(verify_dispatch(&sim, 0, &routes, 10, 1024));
+    }
+}

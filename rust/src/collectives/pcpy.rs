@@ -1,0 +1,87 @@
+//! `pcpy` — the baseline DMA collective (paper §4.1, Fig. 8): the
+//! `n*(n-1)` independent copies of an AG/AA are spread across engines,
+//! one engine per peer, every engine carrying exactly one copy command.
+//! Maximum parallelism, maximum per-engine overhead (doorbells, syncs).
+
+use crate::sim::command::{Addr, Command};
+use crate::sim::engine::EngineId;
+use crate::sim::topology::{NodeId, Topology};
+
+use super::plan::{aa_out_base, CollectivePlan, EnginePlan, RankPlan};
+use super::CollectiveKind;
+
+/// Build the pcpy plan for `kind` at `size` bytes per GPU.
+pub fn plan(kind: CollectiveKind, topo: &Topology, size: u64) -> CollectivePlan {
+    let n = topo.num_gpus;
+    let chunk = CollectivePlan::chunk(size, n);
+    assert!(chunk > 0, "size {size} too small for {n} GPUs");
+    let mut ranks = Vec::new();
+    for g in 0..n {
+        let mut engines = Vec::new();
+        for (k, peer) in topo.peers(g).into_iter().enumerate() {
+            let cmd = match kind {
+                CollectiveKind::AllGather => Command::Copy {
+                    // Own chunk lives at g*chunk; same offset on the peer.
+                    src: Addr::new(NodeId::Gpu(g), g as u64 * chunk),
+                    dst: Addr::new(NodeId::Gpu(peer), g as u64 * chunk),
+                    len: chunk,
+                },
+                CollectiveKind::AllToAll => Command::Copy {
+                    // Input chunk `peer` → peer's output chunk `g`.
+                    src: Addr::new(NodeId::Gpu(g), peer as u64 * chunk),
+                    dst: Addr::new(NodeId::Gpu(peer), aa_out_base(size) + g as u64 * chunk),
+                    len: chunk,
+                },
+            };
+            engines.push(EnginePlan {
+                engine: EngineId {
+                    gpu: g,
+                    idx: k as u8,
+                },
+                cmds: vec![cmd],
+                batched_control: false,
+            });
+        }
+        ranks.push(RankPlan { gpu: g, engines });
+    }
+    let p = CollectivePlan { kind, size, ranks };
+    p.validate(topo);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ag_uses_one_engine_per_peer() {
+        let topo = Topology::mi300x_platform();
+        let p = plan(CollectiveKind::AllGather, &topo, 8192);
+        assert_eq!(p.ranks.len(), 8);
+        assert_eq!(p.total_engines(), 56); // 8 × 7 — the paper's count
+        assert_eq!(p.total_data_cmds(), 56);
+        // every engine has exactly one copy
+        for r in &p.ranks {
+            for e in &r.engines {
+                assert_eq!(e.cmds.len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn aa_targets_output_region() {
+        let topo = Topology::mi300x_platform();
+        let size = 8192u64;
+        let p = plan(CollectiveKind::AllToAll, &topo, size);
+        for r in &p.ranks {
+            for e in &r.engines {
+                match e.cmds[0] {
+                    Command::Copy { dst, .. } => {
+                        assert!(dst.offset >= aa_out_base(size));
+                    }
+                    _ => panic!("pcpy must use Copy"),
+                }
+            }
+        }
+    }
+}

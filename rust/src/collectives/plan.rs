@@ -1,0 +1,125 @@
+//! Communication-plan IR: a collective → per-rank, per-engine DMA command
+//! streams. Mirrors the user-level ROCt prototyping of §5.2.1: the planner
+//! decides engine placement and command choice; the executor
+//! ([`super::exec`]) wraps the streams with sync/poll commands and host
+//! scripts.
+
+use crate::sim::command::Command;
+use crate::sim::engine::EngineId;
+use crate::sim::topology::Topology;
+
+use super::CollectiveKind;
+
+/// Data-move commands assigned to one engine (sync appended by the executor).
+#[derive(Debug, Clone)]
+pub struct EnginePlan {
+    pub engine: EngineId,
+    pub cmds: Vec<Command>,
+    /// Control-path API style is batched (one call for the whole stream).
+    pub batched_control: bool,
+}
+
+/// One rank's (GPU's) share of the collective.
+#[derive(Debug, Clone)]
+pub struct RankPlan {
+    pub gpu: u8,
+    pub engines: Vec<EnginePlan>,
+}
+
+/// Full collective plan.
+#[derive(Debug, Clone)]
+pub struct CollectivePlan {
+    pub kind: CollectiveKind,
+    /// Total collective size (bytes of the per-GPU buffer, benchmark
+    /// convention: AG output size / AA array size).
+    pub size: u64,
+    pub ranks: Vec<RankPlan>,
+}
+
+impl CollectivePlan {
+    /// Per-peer chunk size.
+    pub fn chunk(size: u64, num_gpus: u8) -> u64 {
+        size / num_gpus as u64
+    }
+
+    /// Total data-move commands across all ranks.
+    pub fn total_data_cmds(&self) -> usize {
+        self.ranks
+            .iter()
+            .flat_map(|r| &r.engines)
+            .map(|e| e.cmds.len())
+            .sum()
+    }
+
+    /// Total engines engaged across all ranks.
+    pub fn total_engines(&self) -> usize {
+        self.ranks.iter().map(|r| r.engines.len()).sum()
+    }
+
+    /// Sanity checks shared by all planners (chunk alignment, engine
+    /// capacity, command/GPU consistency).
+    pub fn validate(&self, topo: &Topology) {
+        for r in &self.ranks {
+            assert!(r.gpu < topo.num_gpus, "rank gpu {} out of range", r.gpu);
+            for e in &r.engines {
+                assert_eq!(e.engine.gpu, r.gpu, "engine must live on its rank's GPU");
+                assert!(
+                    e.engine.idx < topo.engines_per_gpu,
+                    "engine idx {} exceeds {} per GPU",
+                    e.engine.idx,
+                    topo.engines_per_gpu
+                );
+                assert!(!e.cmds.is_empty(), "empty engine plan");
+            }
+        }
+    }
+}
+
+/// Memory-layout constants shared by planners and the verifier.
+///
+/// AG (in-place): each GPU's buffer `[0, size)`; rank g's own chunk starts
+/// pre-filled at `g*chunk` and is pushed to every peer's same offset.
+///
+/// AA (out-of-place): input `[0, size)`, output `[AA_OUT_BASE(size), …)`;
+/// chunk j of rank g's input lands at chunk g of rank j's output.
+///
+/// AA in-place (swap): single buffer `[0, size)`; ranks g and j exchange
+/// chunk j of g with chunk g of j.
+pub fn aa_out_base(size: u64) -> u64 {
+    // Output region placed after the input with a cache-line pad.
+    size + 256
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::command::Addr;
+    use crate::sim::topology::NodeId;
+
+    #[test]
+    fn chunking() {
+        assert_eq!(CollectivePlan::chunk(1024, 8), 128);
+    }
+
+    #[test]
+    fn validate_catches_wrong_gpu() {
+        let topo = Topology::mi300x_platform();
+        let plan = CollectivePlan {
+            kind: CollectiveKind::AllGather,
+            size: 1024,
+            ranks: vec![RankPlan {
+                gpu: 0,
+                engines: vec![EnginePlan {
+                    engine: EngineId { gpu: 1, idx: 0 }, // wrong GPU
+                    cmds: vec![Command::Copy {
+                        src: Addr::new(NodeId::Gpu(0), 0),
+                        dst: Addr::new(NodeId::Gpu(1), 0),
+                        len: 128,
+                    }],
+                    batched_control: false,
+                }],
+            }],
+        };
+        assert!(std::panic::catch_unwind(|| plan.validate(&topo)).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Size-range → best-variant policy (the paper's Tables 2 and 3).
+//!
+//! [`select_variant`] is the static policy a runtime would ship (§6's
+//! "runtime can pick the command in the regions where it provides
+//! benefits"); [`calibrate`] derives the same table empirically from a
+//! sweep, which is how the benches regenerate Tables 2/3.
+
+use crate::util::bytes::{GB, KB, MB};
+
+use super::{CollectiveKind, Strategy, Variant};
+
+/// Static best-implementation policy.
+///
+/// All-gather (Table 2):          All-to-all (Table 3):
+/// - [1KB, 256KB): b2b+prelaunch  - [1KB, 64KB): b2b+prelaunch
+/// - [256KB, 1MB): bcst+prelaunch - [64KB, 4MB): swap+prelaunch
+/// - [1MB, 512MB): pcpy+prelaunch - [4MB, 1GB): pcpy+prelaunch
+/// - ≥512MB:       pcpy           - ≥1GB:       pcpy
+pub fn select_variant(kind: CollectiveKind, size: u64) -> Variant {
+    match kind {
+        CollectiveKind::AllGather => {
+            if size < 256 * KB {
+                Variant::new(Strategy::B2b, true)
+            } else if size < MB {
+                Variant::new(Strategy::Bcst, true)
+            } else if size < 512 * MB {
+                Variant::new(Strategy::Pcpy, true)
+            } else {
+                Variant::new(Strategy::Pcpy, false)
+            }
+        }
+        CollectiveKind::AllToAll => {
+            if size < 64 * KB {
+                Variant::new(Strategy::B2b, true)
+            } else if size < 4 * MB {
+                Variant::new(Strategy::Swap, true)
+            } else if size < GB {
+                Variant::new(Strategy::Pcpy, true)
+            } else {
+                Variant::new(Strategy::Pcpy, false)
+            }
+        }
+    }
+}
+
+/// A measured (size, variant, latency) point from a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub size: u64,
+    pub variant: Variant,
+    pub latency_ns: u64,
+}
+
+/// Empirically derive the best variant per size from sweep data
+/// (regenerates Tables 2/3 from measurements).
+pub fn calibrate(points: &[SweepPoint]) -> Vec<(u64, Variant)> {
+    let mut sizes: Vec<u64> = points.iter().map(|p| p.size).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+        .into_iter()
+        .map(|s| {
+            let best = points
+                .iter()
+                .filter(|p| p.size == s)
+                .min_by_key(|p| p.latency_ns)
+                .expect("size with no points");
+            (s, best.variant)
+        })
+        .collect()
+}
+
+/// Collapse a per-size best list into contiguous ranges (table rows).
+pub fn ranges(best: &[(u64, Variant)]) -> Vec<(u64, u64, Variant)> {
+    let mut out: Vec<(u64, u64, Variant)> = Vec::new();
+    for &(size, v) in best {
+        match out.last_mut() {
+            Some((_, hi, lv)) if *lv == v => *hi = size,
+            _ => out.push((size, size, v)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_rows() {
+        let k = CollectiveKind::AllGather;
+        assert_eq!(
+            select_variant(k, 4 * KB),
+            Variant::new(Strategy::B2b, true)
+        );
+        assert_eq!(
+            select_variant(k, 512 * KB),
+            Variant::new(Strategy::Bcst, true)
+        );
+        assert_eq!(
+            select_variant(k, 32 * MB),
+            Variant::new(Strategy::Pcpy, true)
+        );
+        assert_eq!(
+            select_variant(k, GB),
+            Variant::new(Strategy::Pcpy, false)
+        );
+    }
+
+    #[test]
+    fn table3_rows() {
+        let k = CollectiveKind::AllToAll;
+        assert_eq!(select_variant(k, 4 * KB), Variant::new(Strategy::B2b, true));
+        assert_eq!(
+            select_variant(k, MB),
+            Variant::new(Strategy::Swap, true)
+        );
+        assert_eq!(
+            select_variant(k, 64 * MB),
+            Variant::new(Strategy::Pcpy, true)
+        );
+        assert_eq!(
+            select_variant(k, 2 * GB),
+            Variant::new(Strategy::Pcpy, false)
+        );
+    }
+
+    #[test]
+    fn selected_variants_are_applicable() {
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            for size in crate::util::bytes::size_sweep(KB, 4 * GB, 2) {
+                assert!(select_variant(kind, size).strategy.applicable(kind));
+            }
+        }
+    }
+
+    #[test]
+    fn calibrate_picks_argmin_and_ranges_collapse() {
+        let v1 = Variant::new(Strategy::B2b, true);
+        let v2 = Variant::new(Strategy::Pcpy, true);
+        let pts = vec![
+            SweepPoint { size: 1024, variant: v1, latency_ns: 10 },
+            SweepPoint { size: 1024, variant: v2, latency_ns: 20 },
+            SweepPoint { size: 2048, variant: v1, latency_ns: 15 },
+            SweepPoint { size: 2048, variant: v2, latency_ns: 18 },
+            SweepPoint { size: 4096, variant: v1, latency_ns: 30 },
+            SweepPoint { size: 4096, variant: v2, latency_ns: 25 },
+        ];
+        let best = calibrate(&pts);
+        assert_eq!(best[0].1, v1);
+        assert_eq!(best[2].1, v2);
+        let r = ranges(&best);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0], (1024, 2048, v1));
+        assert_eq!(r[1], (4096, 4096, v2));
+    }
+}

@@ -1,0 +1,141 @@
+//! `swap` — swap-command all-to-all (paper §4.3, Fig. 10).
+//!
+//! An in-place AA is a set of pairwise exchanges: rank g's chunk j swaps
+//! with rank j's chunk g. One DMA `swap` command performs an exchange that
+//! would otherwise need three copies and a temporary buffer. Each of the
+//! n(n-1)/2 pairs is issued by exactly one rank; issuers are balanced so
+//! every rank drives ⌊(n-1)/2⌋ or ⌈(n-1)/2⌉ swaps.
+
+use crate::sim::command::{Addr, Command};
+use crate::sim::engine::EngineId;
+use crate::sim::topology::{NodeId, Topology};
+
+use super::plan::{CollectivePlan, EnginePlan, RankPlan};
+use super::CollectiveKind;
+
+/// Which rank issues the swap for pair (a, b)? Balanced ring rule:
+/// rank `a` issues for peers at ring distance 1..=⌊(n-1)/2⌋ ahead, and for
+/// the antipode (even n) the lower rank issues.
+pub fn issuer(a: u8, b: u8, n: u8) -> u8 {
+    assert!(a != b && a < n && b < n);
+    let d = (b + n - a) % n; // ring distance a → b
+    let half = (n - 1) / 2;
+    if d <= half {
+        a
+    } else if n % 2 == 0 && d == n / 2 {
+        a.min(b)
+    } else {
+        b
+    }
+}
+
+/// Build the swap-based in-place AA plan (AA only).
+pub fn plan(topo: &Topology, size: u64) -> CollectivePlan {
+    let n = topo.num_gpus;
+    let chunk = CollectivePlan::chunk(size, n);
+    assert!(chunk > 0, "size {size} too small for {n} GPUs");
+    let mut ranks: Vec<RankPlan> = (0..n)
+        .map(|g| RankPlan {
+            gpu: g,
+            engines: Vec::new(),
+        })
+        .collect();
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let iss = issuer(a, b, n);
+            let r = &mut ranks[iss as usize];
+            let eidx = r.engines.len() as u8;
+            r.engines.push(EnginePlan {
+                engine: EngineId { gpu: iss, idx: eidx },
+                cmds: vec![Command::Swap {
+                    a: Addr::new(NodeId::Gpu(a), b as u64 * chunk),
+                    b: Addr::new(NodeId::Gpu(b), a as u64 * chunk),
+                    len: chunk,
+                }],
+                batched_control: false,
+            });
+        }
+    }
+    let p = CollectivePlan {
+        kind: CollectiveKind::AllToAll,
+        size,
+        ranks,
+    };
+    p.validate(topo);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issuers_are_balanced() {
+        let n = 8u8;
+        let mut counts = vec![0usize; n as usize];
+        for a in 0..n {
+            for b in (a + 1)..n {
+                counts[issuer(a, b, n) as usize] += 1;
+            }
+        }
+        // 28 swaps over 8 ranks: 3 or 4 each.
+        assert_eq!(counts.iter().sum::<usize>(), 28);
+        assert!(counts.iter().all(|&c| c == 3 || c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn every_pair_swapped_once() {
+        let topo = Topology::mi300x_platform();
+        let p = plan(&topo, 8192);
+        assert_eq!(p.total_data_cmds(), 28);
+        let mut pairs = std::collections::HashSet::new();
+        for r in &p.ranks {
+            for e in &r.engines {
+                match e.cmds[0] {
+                    Command::Swap { a, b, .. } => {
+                        let (ga, gb) = match (a.node, b.node) {
+                            (NodeId::Gpu(x), NodeId::Gpu(y)) => (x.min(y), x.max(y)),
+                            _ => panic!("swap must be GPU-GPU"),
+                        };
+                        assert!(pairs.insert((ga, gb)), "duplicate pair");
+                    }
+                    _ => panic!("swap plan must use Swap"),
+                }
+            }
+        }
+        assert_eq!(pairs.len(), 28);
+    }
+
+    #[test]
+    fn swap_offsets_transpose() {
+        let topo = Topology::mi300x_platform();
+        let size = 8 * 1024u64;
+        let chunk = size / 8;
+        let p = plan(&topo, size);
+        for r in &p.ranks {
+            for e in &r.engines {
+                if let Command::Swap { a, b, len } = e.cmds[0] {
+                    let (NodeId::Gpu(ga), NodeId::Gpu(gb)) = (a.node, b.node) else {
+                        unreachable!()
+                    };
+                    assert_eq!(len, chunk);
+                    assert_eq!(a.offset, gb as u64 * chunk);
+                    assert_eq!(b.offset, ga as u64 * chunk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_gpu_count_balances_too() {
+        let n = 5u8;
+        let mut counts = vec![0usize; n as usize];
+        for a in 0..n {
+            for b in (a + 1)..n {
+                counts[issuer(a, b, n) as usize] += 1;
+            }
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| c == 2), "{counts:?}");
+    }
+}

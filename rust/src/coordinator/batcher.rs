@@ -1,0 +1,114 @@
+//! Continuous batching policy: which queued requests to admit, given the
+//! current decode batch and KV block budget (the vLLM scheduler's admission
+//! half; block accounting itself lives in [`super::scheduler`]).
+
+use crate::kvcache::BlockLayout;
+
+use super::request::Request;
+
+/// Admission decision for one scheduling round.
+#[derive(Debug, Default)]
+pub struct Admission {
+    /// Indices (into the waiting queue) of requests to admit, in order.
+    pub admit: Vec<usize>,
+    /// Blocks the admissions will need.
+    pub blocks_needed: u64,
+}
+
+/// Batching limits.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Max running requests.
+    pub max_batch: usize,
+    /// Max KV blocks admissions may claim per round (backpressure knob).
+    pub max_blocks_per_round: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            max_blocks_per_round: u64::MAX,
+        }
+    }
+}
+
+/// Pick admissions FCFS under batch-slot and block-budget constraints.
+pub fn plan_admissions(
+    policy: &BatchPolicy,
+    layout: &BlockLayout,
+    waiting: &[Request],
+    running_now: usize,
+    free_blocks: u64,
+) -> Admission {
+    let mut adm = Admission::default();
+    let mut slots = policy.max_batch.saturating_sub(running_now);
+    let mut budget = free_blocks.min(policy.max_blocks_per_round);
+    for (i, req) in waiting.iter().enumerate() {
+        if slots == 0 {
+            break;
+        }
+        // Blocks for the full context (prompt + all tokens to generate).
+        let need = layout.blocks_for(req.prompt_tokens + req.max_new_tokens);
+        if need > budget {
+            // FCFS head-of-line: stop rather than skip (prevents starvation).
+            break;
+        }
+        adm.admit.push(i);
+        adm.blocks_needed += need;
+        budget -= need;
+        slots -= 1;
+    }
+    adm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::QWEN25_0_5B;
+
+    fn reqs(n: u64) -> Vec<Request> {
+        (0..n).map(|i| Request::new(i, 4096, 64, 0)).collect()
+    }
+
+    fn layout() -> BlockLayout {
+        BlockLayout::new(&QWEN25_0_5B, 16)
+    }
+
+    #[test]
+    fn respects_batch_slots() {
+        let p = BatchPolicy {
+            max_batch: 4,
+            ..Default::default()
+        };
+        let a = plan_admissions(&p, &layout(), &reqs(10), 2, u64::MAX);
+        assert_eq!(a.admit, vec![0, 1]);
+    }
+
+    #[test]
+    fn respects_block_budget() {
+        let p = BatchPolicy::default();
+        // Each request needs ceil(4160/16) = 260 blocks.
+        let a = plan_admissions(&p, &layout(), &reqs(10), 0, 520);
+        assert_eq!(a.admit.len(), 2);
+        assert_eq!(a.blocks_needed, 520);
+    }
+
+    #[test]
+    fn fcfs_no_skipping() {
+        let mut rs = reqs(3);
+        rs[0].prompt_tokens = 1 << 20; // huge head-of-line request
+        let p = BatchPolicy::default();
+        let a = plan_admissions(&p, &layout(), &rs, 0, 1000);
+        // Head of line doesn't fit → nothing admitted (no starvation-prone
+        // skip-ahead).
+        assert!(a.admit.is_empty());
+    }
+
+    #[test]
+    fn admits_all_when_unconstrained() {
+        let p = BatchPolicy::default();
+        let a = plan_admissions(&p, &layout(), &reqs(5), 0, u64::MAX);
+        assert_eq!(a.admit.len(), 5);
+    }
+}

@@ -1,0 +1,62 @@
+//! Serving configuration.
+
+use crate::kvcache::fetch::FetchImpl;
+use crate::models::{ModelConfig, PerfModel};
+
+/// Configuration for one serving engine (virtual or real).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: &'static ModelConfig,
+    /// KV fetch implementation (the experiment axis of §5.3).
+    pub fetch: FetchImpl,
+    /// Tokens per KV block.
+    pub block_tokens: u32,
+    /// GPU KV pool capacity in blocks.
+    pub gpu_blocks: u64,
+    /// CPU KV tier capacity in blocks.
+    pub cpu_blocks: u64,
+    /// Max concurrently running (decoding) requests.
+    pub max_batch: usize,
+    /// Fraction of requests whose prefix hits the CPU cache (paper sweeps
+    /// 50/70/100%).
+    pub hit_rate: f64,
+    /// Per-request framework overhead (Python/vLLM scheduler + launch —
+    /// the gap between TTFT_GPU and TTFT_total in Fig. 16).
+    pub framework_overhead_ns: u64,
+    /// MI300X timing model.
+    pub perf: PerfModel,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// Paper-style defaults for `model` with the given fetch impl.
+    pub fn new(model: &'static ModelConfig, fetch: FetchImpl) -> Self {
+        ServeConfig {
+            model,
+            fetch,
+            block_tokens: crate::kvcache::DEFAULT_BLOCK_TOKENS,
+            gpu_blocks: 8192,
+            cpu_blocks: 1 << 20,
+            max_batch: 64,
+            hit_rate: 1.0,
+            framework_overhead_ns: 1_800_000,
+            perf: PerfModel::default(),
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::LLAMA31_8B;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ServeConfig::new(&LLAMA31_8B, FetchImpl::DmaB2b);
+        assert_eq!(c.block_tokens, 16);
+        assert!(c.hit_rate == 1.0);
+        assert!(c.max_batch > 0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Virtual-time serving engine: drives the scheduler + fetch engines +
+//! MI300X perf model over a synthetic workload, producing the Fig. 16/17
+//! measurements.
+//!
+//! Resource model (per engine replica):
+//! - **host**: one scheduler thread; framework overhead + fetch API calls
+//!   serialize here (this is what b2b batching relieves).
+//! - **gpu**: decode/prefill steps serialize here; kernel-based fetch also
+//!   consumes GPU time (the contention DMA offload avoids, §2.4).
+//! - **pcie**: DMA fetch wire time serializes here FIFO.
+
+use crate::kvcache::fetch::{run_fetch, CopySpec, FetchImpl, FetchOutcome};
+use crate::kvcache::BlockLayout;
+use crate::sim::{Sim, SimConfig};
+
+use super::config::ServeConfig;
+use super::metrics::ServeMetrics;
+use super::request::{Request, RequestState};
+use super::scheduler::{AdmitAction, Scheduler};
+
+/// A request being fetched/prefilled, ready at `ready_ns`.
+#[derive(Debug)]
+struct Pending {
+    req: Request,
+    ready_ns: u64,
+}
+
+/// Virtual-time serving engine.
+pub struct VirtualEngine {
+    pub cfg: ServeConfig,
+    pub sched: Scheduler,
+    /// Persistent DES used to time DMA fetches (engines/queues carry over).
+    fetch_sim: Sim,
+    now: u64,
+    host_free: u64,
+    gpu_free: u64,
+    pcie_free: u64,
+    pending: Vec<Pending>,
+    running: Vec<Request>,
+    pub metrics: ServeMetrics,
+    /// Memoized fetch cost per copy-count (all blocks are equal-sized).
+    fetch_cache: std::collections::HashMap<usize, FetchOutcome>,
+}
+
+impl VirtualEngine {
+    /// Build an engine for `cfg`.
+    pub fn new(cfg: ServeConfig) -> Self {
+        let layout = BlockLayout::new(cfg.model, cfg.block_tokens);
+        let sched = Scheduler::new(
+            layout,
+            cfg.gpu_blocks,
+            cfg.cpu_blocks,
+            super::batcher::BatchPolicy {
+                max_batch: cfg.max_batch,
+                ..Default::default()
+            },
+            cfg.hit_rate,
+            cfg.seed,
+            0,
+        );
+        VirtualEngine {
+            sched,
+            fetch_sim: Sim::new(SimConfig::mi300x()),
+            now: 0,
+            host_free: 0,
+            gpu_free: 0,
+            pcie_free: 0,
+            pending: Vec::new(),
+            running: Vec::new(),
+            metrics: ServeMetrics::default(),
+            fetch_cache: std::collections::HashMap::new(),
+            cfg,
+        }
+    }
+
+    /// Submit a request (optionally pre-warming its KV in the CPU tier).
+    pub fn submit(&mut self, req: Request, warm: bool) {
+        if warm {
+            self.sched.warm_cpu_cache(&req);
+        }
+        self.sched.submit(req);
+    }
+
+    /// Measure the fetch cost of `copies` (memoized by count — every block
+    /// has identical size, so the DES outcome depends only on the count).
+    fn fetch_cost(&mut self, copies: &[CopySpec]) -> FetchOutcome {
+        if let Some(o) = self.fetch_cache.get(&copies.len()) {
+            return *o;
+        }
+        let out = run_fetch(&mut self.fetch_sim, self.cfg.fetch, copies);
+        self.fetch_cache.insert(copies.len(), out);
+        out
+    }
+
+    /// Run until all submitted requests finish; returns the metrics.
+    pub fn run_to_completion(&mut self) -> &ServeMetrics {
+        loop {
+            self.admit();
+            self.absorb_ready();
+            if self.running.is_empty() {
+                if self.pending.is_empty() {
+                    if self.sched.backlog() == 0 {
+                        break;
+                    }
+                    // Backlog exists but nothing admitted (e.g. waiting for
+                    // blocks): jump to the next release point.
+                    if let Some(t) = self.pending.iter().map(|p| p.ready_ns).min() {
+                        self.now = self.now.max(t);
+                    } else {
+                        // Nothing in flight: host-time driven admission gap.
+                        self.now = self.now.max(self.host_free).max(self.gpu_free);
+                        continue;
+                    }
+                } else {
+                    // Idle GPU: advance to the first ready request.
+                    let t = self.pending.iter().map(|p| p.ready_ns).min().unwrap();
+                    self.now = self.now.max(t);
+                    continue;
+                }
+            }
+            self.decode_step();
+        }
+        self.metrics.wall_ns = self.now;
+        self.metrics.host_busy_ns = self.host_free.min(self.now);
+        &self.metrics
+    }
+
+    /// Admit as many waiting requests as the policy allows, charging host /
+    /// pcie / gpu resources per the fetch implementation.
+    fn admit(&mut self) {
+        let in_flight = self.running.len() + self.pending.len();
+        let actions = self.sched.admit_round(in_flight);
+        for act in actions {
+            // Framework (Python/scheduler) overhead serializes on the host.
+            let issue_start = self.host_free.max(self.now);
+            self.host_free = issue_start + self.cfg.framework_overhead_ns;
+            match act {
+                AdmitAction::Fetch { mut req, copies } => {
+                    self.metrics.cache_hits += 1;
+                    self.metrics.fetch_bytes += copies.iter().map(|c| c.2).sum::<u64>();
+                    let cost = self.fetch_cost(&copies);
+                    // API calls serialize on the host thread.
+                    let api_end = self.host_free + cost.host_ns;
+                    self.host_free = api_end;
+                    let ready = match self.cfg.fetch {
+                        FetchImpl::Kernel => {
+                            // CU gather kernel contends with model compute
+                            // for CUs and memory bandwidth — partially, not
+                            // totally (it can co-schedule with decode CTAs).
+                            // The serialized share is the §2.4 contention
+                            // DMA offload avoids.
+                            const CU_CONTENTION: f64 = 0.55;
+                            let serialized =
+                                (cost.gpu_cu_ns as f64 * CU_CONTENTION) as u64;
+                            let start = self.gpu_free.max(api_end);
+                            self.gpu_free = start + serialized;
+                            self.metrics.gpu_busy_ns += serialized;
+                            start + cost.gpu_cu_ns
+                        }
+                        _ => {
+                            // DMA wire time occupies the PCIe link (FIFO).
+                            let wire = cost.total_ns.saturating_sub(cost.host_ns);
+                            let start = self.pcie_free.max(api_end);
+                            self.pcie_free = start + wire;
+                            self.pcie_free
+                        }
+                    };
+                    req.state = RequestState::Fetching;
+                    self.pending.push(Pending { req, ready_ns: ready });
+                }
+                AdmitAction::Prefill { mut req } => {
+                    self.metrics.cache_misses += 1;
+                    let t =
+                        (self.cfg.perf.prefill_s(self.cfg.model, req.prompt_tokens) * 1e9) as u64;
+                    let start = self.gpu_free.max(self.host_free);
+                    self.gpu_free = start + t;
+                    self.metrics.gpu_busy_ns += t;
+                    req.state = RequestState::Prefilling;
+                    self.pending.push(Pending {
+                        req,
+                        ready_ns: self.gpu_free,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Move ready pendings into the decode batch.
+    fn absorb_ready(&mut self) {
+        let now = self.now;
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].ready_ns <= now {
+                let mut p = self.pending.swap_remove(i);
+                p.req.state = RequestState::Decoding;
+                self.running.push(p.req);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One decode step for the whole running batch.
+    fn decode_step(&mut self) {
+        let batch = self.running.len() as u64;
+        debug_assert!(batch > 0);
+        let ctx =
+            self.running.iter().map(|r| r.context()).sum::<u64>() / batch;
+        let t = (self.cfg.perf.decode_step_s(self.cfg.model, batch, ctx) * 1e9) as u64;
+        let start = self.gpu_free.max(self.now);
+        self.gpu_free = start + t;
+        self.now = self.gpu_free;
+        self.metrics.gpu_busy_ns += t;
+        let now = self.now;
+        let mut finished = Vec::new();
+        for r in &mut self.running {
+            r.on_token(now);
+            self.metrics.tokens_out += 1;
+            if r.generated == 1 {
+                self.metrics.ttft_ns.push(r.ttft_ns().unwrap() as f64);
+            }
+            if r.state == RequestState::Finished {
+                finished.push(r.id);
+            }
+        }
+        self.running.retain(|r| r.state != RequestState::Finished);
+        for id in finished {
+            self.sched.finish(id);
+            self.metrics.finished += 1;
+        }
+    }
+
+    /// Single-request TTFT measurement per the paper's §5.3.2 latency
+    /// methodology: KV of the whole prompt resident in CPU memory; measure
+    /// fetch + one decode step. Returns (ttft_gpu_ns, ttft_total_ns).
+    pub fn measure_ttft(cfg: &ServeConfig, prompt_tokens: u64) -> (u64, u64) {
+        let mut eng = VirtualEngine::new(cfg.clone());
+        let req = Request::new(0, prompt_tokens, 1, 0);
+        eng.submit(req, true);
+        let m = eng.run_to_completion().clone();
+        assert_eq!(m.finished, 1);
+        let ttft_total = m.ttft_ns[0] as u64;
+        // GPU-side TTFT excludes the framework overhead.
+        let ttft_gpu = ttft_total.saturating_sub(cfg.framework_overhead_ns);
+        (ttft_gpu, ttft_total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{LLAMA31_8B, QWEN25_0_5B};
+
+    fn run_small(fetch: FetchImpl, n: u64, hit: f64) -> ServeMetrics {
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, fetch);
+        cfg.hit_rate = hit;
+        cfg.gpu_blocks = 1 << 18;
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..n {
+            eng.submit(Request::new(i, 1024, 8, 0), true);
+        }
+        eng.run_to_completion().clone()
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let m = run_small(FetchImpl::DmaB2b, 32, 1.0);
+        assert_eq!(m.finished, 32);
+        assert_eq!(m.tokens_out, 32 * 8);
+        assert_eq!(m.cache_hits, 32);
+        assert!(m.tps() > 0.0);
+        assert_eq!(m.ttft_ns.len(), 32);
+    }
+
+    #[test]
+    fn b2b_beats_baseline_throughput() {
+        let base = run_small(FetchImpl::DmaBaseline, 64, 1.0);
+        let b2b = run_small(FetchImpl::DmaB2b, 64, 1.0);
+        assert!(
+            b2b.tps() > 1.2 * base.tps(),
+            "b2b {:.0} vs base {:.0} tok/s",
+            b2b.tps(),
+            base.tps()
+        );
+    }
+
+    #[test]
+    fn misses_prefill_instead_of_fetch() {
+        let m = run_small(FetchImpl::DmaB2b, 16, 0.0);
+        assert_eq!(m.cache_misses, 16);
+        assert_eq!(m.fetch_bytes, 0);
+        assert_eq!(m.finished, 16);
+    }
+
+    #[test]
+    fn ttft_gpu_speedup_band() {
+        // Qwen2.5-0.5B @4096, 100% hit: the paper's headline TTFT_GPU
+        // speedup is ~2.29×; accept a generous band.
+        let base = VirtualEngine::measure_ttft(
+            &ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaBaseline),
+            4096,
+        );
+        let b2b = VirtualEngine::measure_ttft(
+            &ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b),
+            4096,
+        );
+        let sp_gpu = base.0 as f64 / b2b.0 as f64;
+        let sp_total = base.1 as f64 / b2b.1 as f64;
+        assert!((1.6..3.2).contains(&sp_gpu), "gpu speedup {sp_gpu}");
+        assert!(sp_total < sp_gpu, "framework overhead must dilute: {sp_total}");
+        assert!(sp_total > 1.2, "total speedup {sp_total}");
+    }
+
+    #[test]
+    fn big_models_gain_less() {
+        let f = |m: &'static crate::models::ModelConfig| {
+            let b = VirtualEngine::measure_ttft(&ServeConfig::new(m, FetchImpl::DmaBaseline), 4096);
+            let o = VirtualEngine::measure_ttft(&ServeConfig::new(m, FetchImpl::DmaB2b), 4096);
+            b.0 as f64 / o.0 as f64
+        };
+        let small = f(&QWEN25_0_5B);
+        let big = f(&LLAMA31_8B);
+        assert!(small > big, "small {small} vs big {big}");
+        assert!(big >= 0.95, "big model should not regress: {big}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Serving metrics: TTFT distribution, throughput, utilization counters.
+
+use crate::util::stats;
+
+/// Aggregated serving metrics (times in ns unless noted).
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub ttft_ns: Vec<f64>,
+    pub finished: u64,
+    pub tokens_out: u64,
+    pub wall_ns: u64,
+    /// Host (scheduler thread) busy time.
+    pub host_busy_ns: u64,
+    /// GPU busy time (decode + prefill + kernel-fetch CU time).
+    pub gpu_busy_ns: u64,
+    /// Total fetch bytes moved CPU→GPU.
+    pub fetch_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ServeMetrics {
+    /// Output tokens per second.
+    pub fn tps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// Mean TTFT in ms.
+    pub fn ttft_mean_ms(&self) -> f64 {
+        stats::mean(&self.ttft_ns) / 1e6
+    }
+
+    /// p99 TTFT in ms.
+    pub fn ttft_p99_ms(&self) -> f64 {
+        stats::percentile(&self.ttft_ns, 99.0) / 1e6
+    }
+
+    /// GPU utilization over the run.
+    pub fn gpu_util(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.gpu_busy_ns as f64 / self.wall_ns as f64
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs, {} tok, {:.1} tok/s, ttft mean {:.1}ms p99 {:.1}ms, gpu util {:.0}%",
+            self.finished,
+            self.tokens_out,
+            self.tps(),
+            self.ttft_mean_ms(),
+            self.ttft_p99_ms(),
+            self.gpu_util() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tps_and_ttft() {
+        let m = ServeMetrics {
+            ttft_ns: vec![1e6, 2e6, 3e6],
+            finished: 3,
+            tokens_out: 300,
+            wall_ns: 2_000_000_000,
+            ..Default::default()
+        };
+        assert!((m.tps() - 150.0).abs() < 1e-9);
+        assert!((m.ttft_mean_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.tps(), 0.0);
+        assert_eq!(m.gpu_util(), 0.0);
+    }
+}

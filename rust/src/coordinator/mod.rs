@@ -1,0 +1,24 @@
+//! vLLM-like serving coordinator (L3 of the three-layer stack).
+//!
+//! A request flows: [`router`] → [`scheduler`] (admission + paged-KV block
+//! accounting via `kvcache`) → KV fetch ([`kvcache::fetch`]) → continuous
+//! batching ([`batcher`]) → decode steps. Two drivers share this machinery:
+//!
+//! - [`engine::VirtualEngine`] — virtual-time serving simulator on MI300X
+//!   roofline timing; generates Figs. 16/17 and the §5.3.3 sweeps.
+//! - [`server::Server`] — real threaded serving loop running the
+//!   AOT-compiled JAX model through PJRT (`crate::runtime`); used by the
+//!   end-to-end example with wall-clock metrics.
+
+pub mod batcher;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use config::ServeConfig;
+pub use engine::VirtualEngine;
+pub use request::{Request, RequestState};

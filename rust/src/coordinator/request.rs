@@ -1,0 +1,96 @@
+//! Request lifecycle.
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Lifecycle states (vLLM-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Received, not yet admitted.
+    Queued,
+    /// KV being fetched from the CPU tier (cache hit path).
+    Fetching,
+    /// Prompt being prefilled on the GPU (cache miss path).
+    Prefilling,
+    /// In the decode batch, generating tokens.
+    Decoding,
+    /// All tokens generated.
+    Finished,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt length in tokens (synthetic workloads carry lengths only;
+    /// the real server carries token ids separately).
+    pub prompt_tokens: u64,
+    /// Tokens to generate.
+    pub max_new_tokens: u64,
+    /// Arrival time (ns, virtual or wall).
+    pub arrival_ns: u64,
+    pub state: RequestState,
+    /// Tokens generated so far.
+    pub generated: u64,
+    /// Time the first token completed (ns).
+    pub first_token_ns: Option<u64>,
+    /// Time the request finished (ns).
+    pub finished_ns: Option<u64>,
+}
+
+impl Request {
+    /// New queued request.
+    pub fn new(id: RequestId, prompt_tokens: u64, max_new_tokens: u64, arrival_ns: u64) -> Self {
+        Request {
+            id,
+            prompt_tokens,
+            max_new_tokens,
+            arrival_ns,
+            state: RequestState::Queued,
+            generated: 0,
+            first_token_ns: None,
+            finished_ns: None,
+        }
+    }
+
+    /// Current context length (prompt + generated).
+    pub fn context(&self) -> u64 {
+        self.prompt_tokens + self.generated
+    }
+
+    /// Record one generated token at time `now`.
+    pub fn on_token(&mut self, now: u64) {
+        self.generated += 1;
+        if self.first_token_ns.is_none() {
+            self.first_token_ns = Some(now);
+        }
+        if self.generated >= self.max_new_tokens {
+            self.state = RequestState::Finished;
+            self.finished_ns = Some(now);
+        }
+    }
+
+    /// Time-to-first-token, if produced.
+    pub fn ttft_ns(&self) -> Option<u64> {
+        self.first_token_ns.map(|t| t - self.arrival_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut r = Request::new(1, 4096, 2, 100);
+        assert_eq!(r.state, RequestState::Queued);
+        assert_eq!(r.context(), 4096);
+        r.on_token(500);
+        assert_eq!(r.ttft_ns(), Some(400));
+        assert_eq!(r.state, RequestState::Queued); // state managed externally
+        assert_eq!(r.context(), 4097);
+        r.on_token(900);
+        assert_eq!(r.state, RequestState::Finished);
+        assert_eq!(r.finished_ns, Some(900));
+    }
+}

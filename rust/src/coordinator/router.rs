@@ -1,0 +1,132 @@
+//! Request router across engine replicas (the front half of a serving
+//! deployment; reference: vllm-project/router). Supports round-robin and
+//! least-outstanding routing with session stickiness for KV reuse.
+
+use std::collections::HashMap;
+
+use super::request::RequestId;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Pick the replica with the fewest outstanding requests.
+    LeastOutstanding,
+}
+
+/// Router over `n` replicas.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    outstanding: Vec<u64>,
+    rr_next: usize,
+    /// Session (prefix-cache) stickiness: session id → replica.
+    sessions: HashMap<u64, usize>,
+    assigned: HashMap<RequestId, usize>,
+}
+
+impl Router {
+    /// Router with `replicas` backends.
+    pub fn new(replicas: usize, policy: RoutePolicy) -> Self {
+        assert!(replicas > 0);
+        Router {
+            policy,
+            outstanding: vec![0; replicas],
+            rr_next: 0,
+            sessions: HashMap::new(),
+            assigned: HashMap::new(),
+        }
+    }
+
+    /// Number of replicas.
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Route a request; `session` pins repeat sessions to their replica
+    /// (KV prefix reuse). Returns the replica index.
+    pub fn route(&mut self, req: RequestId, session: Option<u64>) -> usize {
+        if let Some(s) = session {
+            if let Some(&r) = self.sessions.get(&s) {
+                self.outstanding[r] += 1;
+                self.assigned.insert(req, r);
+                return r;
+            }
+        }
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.outstanding.len();
+                r
+            }
+            RoutePolicy::LeastOutstanding => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &o)| o)
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        if let Some(s) = session {
+            self.sessions.insert(s, r);
+        }
+        self.outstanding[r] += 1;
+        self.assigned.insert(req, r);
+        r
+    }
+
+    /// Mark a request complete.
+    pub fn complete(&mut self, req: RequestId) {
+        if let Some(r) = self.assigned.remove(&req) {
+            self.outstanding[r] = self.outstanding[r].saturating_sub(1);
+        }
+    }
+
+    /// Outstanding per replica (metrics / tests).
+    pub fn load(&self) -> &[u64] {
+        &self.outstanding
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        assert_eq!(r.route(0, None), 0);
+        assert_eq!(r.route(1, None), 1);
+        assert_eq!(r.route(2, None), 2);
+        assert_eq!(r.route(3, None), 0);
+    }
+
+    #[test]
+    fn least_outstanding_balances() {
+        let mut r = Router::new(2, RoutePolicy::LeastOutstanding);
+        let a = r.route(0, None);
+        let b = r.route(1, None);
+        assert_ne!(a, b);
+        r.complete(0);
+        // Replica `a` now has less load.
+        assert_eq!(r.route(2, None), a);
+    }
+
+    #[test]
+    fn sessions_stick() {
+        let mut r = Router::new(4, RoutePolicy::LeastOutstanding);
+        let first = r.route(0, Some(42));
+        for i in 1..10 {
+            assert_eq!(r.route(i, Some(42)), first);
+        }
+    }
+
+    #[test]
+    fn complete_decrements_once() {
+        let mut r = Router::new(1, RoutePolicy::RoundRobin);
+        r.route(0, None);
+        r.complete(0);
+        r.complete(0); // double-complete is a no-op
+        assert_eq!(r.load(), &[0]);
+    }
+}

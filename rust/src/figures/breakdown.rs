@@ -1,0 +1,144 @@
+//! Fig. 7: latency breakdown of a single DMA copy (4KB – 2MB) into the
+//! control / schedule / copy / sync phases, via the traced DES — the
+//! simulator equivalent of the paper's timestamp-instrumented ROCt
+//! microbenchmark.
+
+use crate::sim::command::{Addr, AtomicOp, Command};
+use crate::sim::host::{ApiKind, HostOp};
+use crate::sim::topology::NodeId;
+use crate::sim::trace::Phase;
+use crate::sim::{EngineId, Sim, SimConfig};
+use crate::util::bytes::{fmt_size, size_sweep, KB, MB};
+
+/// Phase durations of one copy at one size (ns).
+#[derive(Debug, Clone, Copy)]
+pub struct BreakdownRow {
+    pub size: u64,
+    pub control_ns: u64,
+    pub schedule_ns: u64,
+    pub copy_ns: u64,
+    pub sync_ns: u64,
+}
+
+impl BreakdownRow {
+    /// Total copy latency.
+    pub fn total(&self) -> u64 {
+        self.control_ns + self.schedule_ns + self.copy_ns + self.sync_ns
+    }
+
+    /// Fraction of time outside the copy phase — the paper's ~60%-at-4KB /
+    /// <20%-above-1MB headline.
+    pub fn non_copy_fraction(&self) -> f64 {
+        1.0 - self.copy_ns as f64 / self.total() as f64
+    }
+}
+
+/// Measure one GPU→GPU copy of `size` bytes with full phase tracing.
+pub fn measure(size: u64) -> BreakdownRow {
+    let mut sim = Sim::new(SimConfig::mi300x().traced());
+    let sig = sim.alloc_signal(0);
+    let e = EngineId { gpu: 0, idx: 0 };
+    sim.add_host(
+        vec![
+            HostOp::CreateCommands {
+                engine: e,
+                cmds: vec![
+                    Command::Copy {
+                        src: Addr::new(NodeId::Gpu(0), 0),
+                        dst: Addr::new(NodeId::Gpu(1), 0),
+                        len: size,
+                    },
+                    Command::Atomic {
+                        signal: sig,
+                        op: AtomicOp::Add(1),
+                    },
+                ],
+                api: ApiKind::Raw,
+            },
+            HostOp::RingDoorbell { engine: e },
+            HostOp::WaitSignal {
+                signal: sig,
+                at_least: 1,
+            },
+        ],
+        0,
+    );
+    let out = sim.run();
+    assert!(out.deadlocked.is_empty());
+    BreakdownRow {
+        size,
+        control_ns: sim.trace.phase_total(Phase::Control),
+        schedule_ns: sim.trace.phase_total(Phase::Schedule),
+        copy_ns: sim.trace.phase_total(Phase::Copy),
+        sync_ns: sim.trace.phase_total(Phase::Sync),
+    }
+}
+
+/// The paper's Fig. 7 size range: 4KB – 2MB.
+pub fn fig7() -> Vec<BreakdownRow> {
+    size_sweep(4 * KB, 2 * MB, 2).into_iter().map(measure).collect()
+}
+
+/// Render as the paper's stacked-percentage rows.
+pub fn render(rows: &[BreakdownRow]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "size", "total_us", "control%", "schedule%", "copy%", "sync%", "non_copy%",
+    ]);
+    for r in rows {
+        let tot = r.total() as f64;
+        t.row(vec![
+            fmt_size(r.size),
+            format!("{:.2}", tot / 1e3),
+            format!("{:.1}", r.control_ns as f64 / tot * 100.0),
+            format!("{:.1}", r.schedule_ns as f64 / tot * 100.0),
+            format!("{:.1}", r.copy_ns as f64 / tot * 100.0),
+            format!("{:.1}", r.sync_ns as f64 / tot * 100.0),
+            format!("{:.1}", r.non_copy_fraction() * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV dump.
+pub fn to_csv(rows: &[BreakdownRow]) -> crate::util::csv::Csv {
+    let mut csv = crate::util::csv::Csv::new(vec![
+        "size_bytes",
+        "control_ns",
+        "schedule_ns",
+        "copy_ns",
+        "sync_ns",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            r.size.to_string(),
+            r.control_ns.to_string(),
+            r.schedule_ns.to_string(),
+            r.copy_ns.to_string(),
+            r.sync_ns.to_string(),
+        ]);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_shape_matches_paper() {
+        let rows = fig7();
+        assert_eq!(rows.len(), 10); // 4K..2M ×2
+        let f4k = rows[0].non_copy_fraction();
+        assert!((0.5..=0.68).contains(&f4k), "4KB non-copy {f4k}");
+        let f2m = rows.last().unwrap().non_copy_fraction();
+        assert!(f2m < 0.20, "2MB non-copy {f2m}");
+        // Monotone: larger size → smaller non-copy share.
+        for w in rows.windows(2) {
+            assert!(w[1].non_copy_fraction() <= w[0].non_copy_fraction() + 1e-9);
+        }
+        // Ordering at small sizes: copy > schedule ≈ sync >> control.
+        let r = rows[0];
+        assert!(r.copy_ns > r.schedule_ns);
+        assert!(r.control_ns < r.sync_ns);
+    }
+}

@@ -1,0 +1,182 @@
+//! Figs. 1/13/14 + Tables 2/3: DMA collective variants vs RCCL across the
+//! size spectrum (1KB – 4GB), reported as speedup of DMA over RCCL
+//! (values < 1 are slowdowns, exactly as the paper plots).
+
+use crate::collectives::selector::{calibrate, ranges, SweepPoint};
+use crate::collectives::{run_collective, CollectiveKind, RunOptions, Variant};
+use crate::rccl::RcclModel;
+use crate::sim::SimConfig;
+use crate::util::bytes::{fmt_size, size_sweep, GB, KB, MB};
+use crate::util::stats::geomean;
+
+/// One sweep row: a size with RCCL latency and per-variant DMA latencies.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub size: u64,
+    pub rccl_ns: f64,
+    /// (variant, dma latency ns, speedup vs RCCL).
+    pub variants: Vec<(Variant, u64, f64)>,
+}
+
+impl SweepRow {
+    /// Speedup of a given variant (panics if absent).
+    pub fn speedup(&self, v: Variant) -> f64 {
+        self.variants
+            .iter()
+            .find(|(x, _, _)| *x == v)
+            .map(|&(_, _, s)| s)
+            .unwrap_or_else(|| panic!("variant {} not in row", v.name()))
+    }
+
+    /// Best DMA speedup in this row.
+    pub fn best(&self) -> (Variant, f64) {
+        self.variants
+            .iter()
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .map(|&(v, _, s)| (v, s))
+            .unwrap()
+    }
+}
+
+/// Run the full sweep for `kind` over `sizes` (default: 1KB..4GB ×2).
+pub fn sweep(kind: CollectiveKind, sizes: Option<Vec<u64>>) -> Vec<SweepRow> {
+    let sizes = sizes.unwrap_or_else(|| size_sweep(KB, 4 * GB, 2));
+    let rccl = RcclModel::default();
+    let opts = RunOptions {
+        sim: SimConfig::mi300x(),
+        verify: false,
+    };
+    let variants = Variant::all_for(kind);
+    sizes
+        .into_iter()
+        .map(|size| {
+            let rccl_ns = rccl.latency_ns(kind, &opts.sim.topology, size);
+            let variants = variants
+                .iter()
+                .map(|&v| {
+                    let r = run_collective(kind, v, size, &opts);
+                    (v, r.latency_ns, rccl_ns / r.latency_ns as f64)
+                })
+                .collect();
+            SweepRow {
+                size,
+                rccl_ns,
+                variants,
+            }
+        })
+        .collect()
+}
+
+/// Geomean speedup of `v` over rows with `size < below` (paper-style
+/// "geomean for sizes up to X" summaries).
+pub fn geomean_speedup(rows: &[SweepRow], v: Variant, below: u64) -> f64 {
+    let xs: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.size < below)
+        .map(|r| r.speedup(v))
+        .collect();
+    geomean(&xs)
+}
+
+/// Geomean of the per-size BEST DMA variant (the paper's bottom line:
+/// "30% slower geomean for AG / 20% faster for AA").
+pub fn geomean_best(rows: &[SweepRow], below: u64) -> f64 {
+    let xs: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.size < below)
+        .map(|r| r.best().1)
+        .collect();
+    geomean(&xs)
+}
+
+/// Derive Table 2/3 rows from a sweep: contiguous size ranges with the
+/// empirically best variant.
+pub fn best_table(rows: &[SweepRow]) -> Vec<(u64, u64, Variant)> {
+    let pts: Vec<SweepPoint> = rows
+        .iter()
+        .flat_map(|r| {
+            r.variants.iter().map(|&(v, lat, _)| SweepPoint {
+                size: r.size,
+                variant: v,
+                latency_ns: lat,
+            })
+        })
+        .collect();
+    ranges(&calibrate(&pts))
+}
+
+/// Render a sweep as the paper's figure rows (size × variant speedups).
+pub fn render(kind: CollectiveKind, rows: &[SweepRow]) -> String {
+    let variants = Variant::all_for(kind);
+    let mut header = vec!["size".to_string(), "rccl_us".to_string()];
+    header.extend(variants.iter().map(|v| v.name()));
+    let mut t = crate::util::table::Table::new(header);
+    for r in rows {
+        let mut cells = vec![fmt_size(r.size), format!("{:.1}", r.rccl_ns / 1e3)];
+        cells.extend(variants.iter().map(|&v| format!("{:.2}", r.speedup(v))));
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// CSV dump of a sweep.
+pub fn to_csv(kind: CollectiveKind, rows: &[SweepRow]) -> crate::util::csv::Csv {
+    let variants = Variant::all_for(kind);
+    let mut header = vec!["size_bytes".to_string(), "rccl_ns".to_string()];
+    for v in &variants {
+        header.push(format!("{}_ns", v.name()));
+        header.push(format!("{}_speedup", v.name()));
+    }
+    let mut csv = crate::util::csv::Csv::new(header);
+    for r in rows {
+        let mut cells = vec![r.size.to_string(), format!("{:.0}", r.rccl_ns)];
+        for &v in &variants {
+            let (_, lat, sp) = r
+                .variants
+                .iter()
+                .find(|(x, _, _)| *x == v)
+                .copied()
+                .unwrap();
+            cells.push(lat.to_string());
+            cells.push(format!("{sp:.4}"));
+        }
+        csv.row(cells);
+    }
+    csv
+}
+
+/// The paper's headline windows, used by calibration tests and benches.
+pub const LATENCY_BOUND_CEILING: u64 = 32 * MB;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Strategy;
+
+    #[test]
+    fn sweep_produces_all_variants() {
+        let rows = sweep(CollectiveKind::AllGather, Some(vec![4 * KB, 4 * MB]));
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].variants.len(), 6);
+        assert!(rows[0].rccl_ns > 0.0);
+        // speedups consistent: speedup = rccl / dma.
+        for r in &rows {
+            for &(_, lat, sp) in &r.variants {
+                assert!((sp - r.rccl_ns / lat as f64).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn best_table_collapses() {
+        let rows = sweep(
+            CollectiveKind::AllGather,
+            Some(vec![4 * KB, 8 * KB, 64 * MB, 128 * MB]),
+        );
+        let t = best_table(&rows);
+        assert!(!t.is_empty());
+        // Small sizes should not pick plain pcpy.
+        let (_, _, v) = t[0];
+        assert_ne!((v.strategy, v.prelaunch), (Strategy::Pcpy, false));
+    }
+}

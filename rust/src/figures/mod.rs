@@ -1,0 +1,8 @@
+//! Figure/table generators: one module per paper artifact. Each produces
+//! plain data structures that the bench binaries and the CLI `figures`
+//! subcommand render as ASCII tables and CSV files under `results/`.
+
+pub mod breakdown;
+pub mod collectives;
+pub mod power;
+pub mod serving;

@@ -1,0 +1,140 @@
+//! Fig. 15: total GPU power of the best DMA collective vs CU-based RCCL
+//! for all-gather across sizes, via the component power model fed by DES
+//! activity (DMA side) and the RCCL activity model (CU side).
+
+use crate::collectives::{run_collective, select_variant, CollectiveKind, RunOptions};
+use crate::rccl::RcclModel;
+use crate::sim::power::{PowerModel, PowerSample};
+use crate::sim::SimConfig;
+use crate::util::bytes::{fmt_size, size_sweep, GB, KB};
+
+/// One power-comparison row.
+#[derive(Debug, Clone)]
+pub struct PowerRow {
+    pub size: u64,
+    pub dma_variant: String,
+    pub dma: PowerSample,
+    pub rccl: PowerSample,
+}
+
+impl PowerRow {
+    /// DMA power saving vs RCCL (fraction; positive = DMA cheaper).
+    pub fn saving(&self) -> f64 {
+        1.0 - self.dma.total() / self.rccl.total()
+    }
+}
+
+/// Sweep 16KB – 1GB (the paper's Fig. 15 x-range).
+pub fn fig15(sizes: Option<Vec<u64>>) -> Vec<PowerRow> {
+    let sizes = sizes.unwrap_or_else(|| size_sweep(16 * KB, GB, 2));
+    let pm = PowerModel::default();
+    let rccl = RcclModel::default();
+    let opts = RunOptions {
+        sim: SimConfig::mi300x(),
+        verify: false,
+    };
+    let kind = CollectiveKind::AllGather;
+    sizes
+        .into_iter()
+        .map(|size| {
+            let v = select_variant(kind, size);
+            let r = run_collective(kind, v, size, &opts);
+            // DES activity is platform-wide; the power model (like the
+            // paper's Fig. 15) reports per-GPU watts.
+            let n = opts.sim.topology.num_gpus as f64;
+            let mut a = r.activity.clone();
+            a.engine_busy_ns /= n;
+            a.engines_used = (a.engines_used as f64 / n).ceil() as usize;
+            a.hbm_bytes /= n;
+            a.link_bytes /= n;
+            let dma = pm.evaluate(&a);
+            let rccl_s = pm.evaluate(&rccl.activity(kind, &opts.sim.topology, size));
+            PowerRow {
+                size,
+                dma_variant: v.name(),
+                dma,
+                rccl: rccl_s,
+            }
+        })
+        .collect()
+}
+
+/// Render the comparison.
+pub fn render(rows: &[PowerRow]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "size",
+        "dma_variant",
+        "dma_W",
+        "dma_xcd_W",
+        "rccl_W",
+        "rccl_xcd_W",
+        "saving%",
+    ]);
+    for r in rows {
+        t.row(vec![
+            fmt_size(r.size),
+            r.dma_variant.clone(),
+            format!("{:.0}", r.dma.total()),
+            format!("{:.0}", r.dma.xcd_w),
+            format!("{:.0}", r.rccl.total()),
+            format!("{:.0}", r.rccl.xcd_w),
+            format!("{:.1}", r.saving() * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV dump.
+pub fn to_csv(rows: &[PowerRow]) -> crate::util::csv::Csv {
+    let mut csv = crate::util::csv::Csv::new(vec![
+        "size_bytes",
+        "dma_variant",
+        "dma_total_w",
+        "dma_xcd_w",
+        "dma_hbm_w",
+        "rccl_total_w",
+        "rccl_xcd_w",
+        "rccl_hbm_w",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            r.size.to_string(),
+            r.dma_variant.clone(),
+            format!("{:.1}", r.dma.total()),
+            format!("{:.1}", r.dma.xcd_w),
+            format!("{:.1}", r.dma.hbm_w),
+            format!("{:.1}", r.rccl.total()),
+            format!("{:.1}", r.rccl.xcd_w),
+            format!("{:.1}", r.rccl.hbm_w),
+        ]);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+
+    #[test]
+    fn bandwidth_bound_sizes_save_power() {
+        let rows = fig15(Some(vec![64 * MB, 256 * MB]));
+        for r in &rows {
+            assert!(
+                r.saving() > 0.15,
+                "expected ≥15% saving at {}: {:.1}%",
+                fmt_size(r.size),
+                r.saving() * 100.0
+            );
+            // XCD power is the driver (paper: 3.7× less XCD power).
+            assert!(r.rccl.xcd_w > 3.0 * r.dma.xcd_w);
+        }
+    }
+
+    #[test]
+    fn latency_bound_savings_shrink() {
+        let small = &fig15(Some(vec![32 * KB]))[0];
+        let large = &fig15(Some(vec![256 * MB]))[0];
+        assert!(small.saving() < large.saving());
+    }
+}

@@ -1,0 +1,245 @@
+//! Figs. 16/17 + §5.3.3 sweeps: LLM-inference benefits of the optimized
+//! DMA KV fetch across the paper's model zoo.
+
+use crate::coordinator::request::Request;
+use crate::coordinator::{ServeConfig, VirtualEngine};
+use crate::kvcache::fetch::FetchImpl;
+use crate::models::{ModelConfig, ALL_MODELS};
+
+/// Fig. 16 row: TTFT speedups of b2b DMA over baseline DMA for one
+/// (model, prefill) cell.
+#[derive(Debug, Clone)]
+pub struct TtftRow {
+    pub model: &'static str,
+    pub prefill: u64,
+    pub base_gpu_ms: f64,
+    pub b2b_gpu_ms: f64,
+    pub kernel_gpu_ms: f64,
+    pub speedup_gpu: f64,
+    pub base_total_ms: f64,
+    pub b2b_total_ms: f64,
+    pub kernel_total_ms: f64,
+    pub speedup_total: f64,
+}
+
+/// Generate Fig. 16 for the given models × prefill lengths.
+pub fn fig16(models: &[&'static ModelConfig], prefills: &[u64]) -> Vec<TtftRow> {
+    let mut rows = Vec::new();
+    for &m in models {
+        for &p in prefills {
+            let base =
+                VirtualEngine::measure_ttft(&ServeConfig::new(m, FetchImpl::DmaBaseline), p);
+            let b2b = VirtualEngine::measure_ttft(&ServeConfig::new(m, FetchImpl::DmaB2b), p);
+            let kern = VirtualEngine::measure_ttft(&ServeConfig::new(m, FetchImpl::Kernel), p);
+            rows.push(TtftRow {
+                model: m.name,
+                prefill: p,
+                base_gpu_ms: base.0 as f64 / 1e6,
+                b2b_gpu_ms: b2b.0 as f64 / 1e6,
+                kernel_gpu_ms: kern.0 as f64 / 1e6,
+                speedup_gpu: base.0 as f64 / b2b.0 as f64,
+                base_total_ms: base.1 as f64 / 1e6,
+                b2b_total_ms: b2b.1 as f64 / 1e6,
+                kernel_total_ms: kern.1 as f64 / 1e6,
+                speedup_total: base.1 as f64 / b2b.1 as f64,
+            });
+        }
+    }
+    rows
+}
+
+/// Default Fig. 16: full zoo × {4096, 8192}.
+pub fn fig16_default() -> Vec<TtftRow> {
+    fig16(ALL_MODELS, &[4096, 8192])
+}
+
+/// Fig. 17 row: throughput of b2b vs baseline vs kernel fetch for one
+/// (model, prefill) cell at a given hit rate.
+#[derive(Debug, Clone)]
+pub struct TputRow {
+    pub model: &'static str,
+    pub prefill: u64,
+    pub hit_rate: f64,
+    pub base_tps: f64,
+    pub b2b_tps: f64,
+    pub kernel_tps: f64,
+    /// b2b over baseline (the Fig. 17 bar).
+    pub gain: f64,
+    /// b2b over kernel (§5.3.3 "DMA vs kernel").
+    pub gain_vs_kernel: f64,
+}
+
+/// Run the throughput workload: `n` simultaneous requests of `prefill`
+/// tokens, `decode` output tokens each (paper: 2000 requests; callers can
+/// scale down for CI).
+pub fn throughput(
+    model: &'static ModelConfig,
+    prefill: u64,
+    n: u64,
+    decode: u64,
+    hit_rate: f64,
+) -> TputRow {
+    let run = |fetch: FetchImpl| -> f64 {
+        let mut cfg = ServeConfig::new(model, fetch);
+        cfg.hit_rate = hit_rate;
+        // Size the pool for the batch, not the whole backlog.
+        let layout = crate::kvcache::BlockLayout::new(model, cfg.block_tokens);
+        cfg.gpu_blocks = layout.blocks_for(prefill + decode) * (cfg.max_batch as u64 + 8);
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..n {
+            eng.submit(Request::new(i, prefill, decode, 0), true);
+        }
+        let m = eng.run_to_completion();
+        assert_eq!(m.finished, n, "lost requests");
+        m.tps()
+    };
+    let base = run(FetchImpl::DmaBaseline);
+    let b2b = run(FetchImpl::DmaB2b);
+    let kern = run(FetchImpl::Kernel);
+    TputRow {
+        model: model.name,
+        prefill,
+        hit_rate,
+        base_tps: base,
+        b2b_tps: b2b,
+        kernel_tps: kern,
+        gain: b2b / base,
+        gain_vs_kernel: b2b / kern,
+    }
+}
+
+/// Render Fig. 16.
+pub fn render_fig16(rows: &[TtftRow]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "model",
+        "prefill",
+        "base_gpu_ms",
+        "b2b_gpu_ms",
+        "kern_gpu_ms",
+        "TTFT_GPU x",
+        "TTFT_total x",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.model.to_string(),
+            r.prefill.to_string(),
+            format!("{:.2}", r.base_gpu_ms),
+            format!("{:.2}", r.b2b_gpu_ms),
+            format!("{:.2}", r.kernel_gpu_ms),
+            format!("{:.2}", r.speedup_gpu),
+            format!("{:.2}", r.speedup_total),
+        ]);
+    }
+    t.render()
+}
+
+/// Render Fig. 17 (+hit-rate sweeps).
+pub fn render_fig17(rows: &[TputRow]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "model",
+        "prefill",
+        "hit%",
+        "base_tps",
+        "b2b_tps",
+        "kern_tps",
+        "b2b/base",
+        "b2b/kern",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.model.to_string(),
+            r.prefill.to_string(),
+            format!("{:.0}", r.hit_rate * 100.0),
+            format!("{:.0}", r.base_tps),
+            format!("{:.0}", r.b2b_tps),
+            format!("{:.0}", r.kernel_tps),
+            format!("{:.2}", r.gain),
+            format!("{:.2}", r.gain_vs_kernel),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV for Fig. 16.
+pub fn fig16_csv(rows: &[TtftRow]) -> crate::util::csv::Csv {
+    let mut c = crate::util::csv::Csv::new(vec![
+        "model",
+        "prefill",
+        "base_gpu_ms",
+        "b2b_gpu_ms",
+        "kernel_gpu_ms",
+        "base_total_ms",
+        "b2b_total_ms",
+        "kernel_total_ms",
+    ]);
+    for r in rows {
+        c.row(vec![
+            r.model.to_string(),
+            r.prefill.to_string(),
+            format!("{:.3}", r.base_gpu_ms),
+            format!("{:.3}", r.b2b_gpu_ms),
+            format!("{:.3}", r.kernel_gpu_ms),
+            format!("{:.3}", r.base_total_ms),
+            format!("{:.3}", r.b2b_total_ms),
+            format!("{:.3}", r.kernel_total_ms),
+        ]);
+    }
+    c
+}
+
+/// CSV for Fig. 17.
+pub fn fig17_csv(rows: &[TputRow]) -> crate::util::csv::Csv {
+    let mut c = crate::util::csv::Csv::new(vec![
+        "model", "prefill", "hit_rate", "base_tps", "b2b_tps", "kernel_tps",
+    ]);
+    for r in rows {
+        c.row(vec![
+            r.model.to_string(),
+            r.prefill.to_string(),
+            format!("{:.2}", r.hit_rate),
+            format!("{:.1}", r.base_tps),
+            format!("{:.1}", r.b2b_tps),
+            format!("{:.1}", r.kernel_tps),
+        ]);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{LLAMA31_8B, QWEN25_0_5B};
+
+    #[test]
+    fn fig16_shape() {
+        let rows = fig16(&[&QWEN25_0_5B, &LLAMA31_8B], &[4096]);
+        // Small model gains more (paper: "benefits are higher for smaller
+        // models").
+        assert!(rows[0].speedup_gpu > rows[1].speedup_gpu);
+        // Headline band: up to ~2.29× GPU / ~1.5× total for the smallest.
+        assert!((1.8..2.8).contains(&rows[0].speedup_gpu), "{}", rows[0].speedup_gpu);
+        assert!((1.2..1.9).contains(&rows[0].speedup_total), "{}", rows[0].speedup_total);
+        // No regressions for the big model.
+        assert!(rows[1].speedup_gpu >= 0.95);
+    }
+
+    #[test]
+    fn fig16_longer_prompts_gain_more() {
+        let rows = fig16(&[&QWEN25_0_5B], &[4096, 8192]);
+        assert!(rows[1].speedup_gpu >= rows[0].speedup_gpu * 0.98);
+    }
+
+    #[test]
+    fn fig17_throughput_gain() {
+        let r = throughput(&QWEN25_0_5B, 1024, 96, 16, 1.0);
+        assert!(r.gain > 1.15, "b2b/base = {:.2}", r.gain);
+        assert!(r.gain_vs_kernel > 1.0, "b2b/kern = {:.2}", r.gain_vs_kernel);
+    }
+
+    #[test]
+    fn hit_sweep_reduces_gain() {
+        let full = throughput(&QWEN25_0_5B, 1024, 64, 16, 1.0);
+        let half = throughput(&QWEN25_0_5B, 1024, 64, 16, 0.5);
+        assert!(half.gain <= full.gain * 1.05, "full {} half {}", full.gain, half.gain);
+    }
+}

@@ -1,0 +1,246 @@
+//! Runtime planning heuristics for the batch copy API (paper §6).
+
+use std::collections::HashMap;
+
+use crate::sim::command::{Addr, Command};
+use crate::sim::topology::NodeId;
+
+/// User-visible copy type attribute (the §6 `attributes` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyType {
+    /// Plain copy (default).
+    Copy,
+    /// Explicit in-place exchange request.
+    Swap,
+}
+
+/// One entry of a `memcpy_batch_async` call.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchEntry {
+    pub src: Addr,
+    pub dst: Addr,
+    pub len: u64,
+    pub ty: CopyType,
+}
+
+/// Tunables of the runtime planner.
+#[derive(Debug, Clone)]
+pub struct HeuristicsConfig {
+    /// Below this total size, the whole batch goes b2b on one engine
+    /// (the paper's empirically-chosen 4MB, §5.3.1).
+    pub b2b_threshold_bytes: u64,
+    /// Max engines a batch may fan out to.
+    pub max_fanout: usize,
+    /// Infer `bcst` commands from (src, len) duplicates.
+    pub infer_broadcast: bool,
+}
+
+impl Default for HeuristicsConfig {
+    fn default() -> Self {
+        HeuristicsConfig {
+            b2b_threshold_bytes: 4 * 1024 * 1024,
+            max_fanout: 8,
+            infer_broadcast: true,
+        }
+    }
+}
+
+/// Planned batch: per-engine-slot command chains (engine indices are
+/// relative; the API layer maps them onto a GPU's engines).
+#[derive(Debug)]
+pub struct BatchPlan {
+    pub chains: Vec<Vec<Command>>,
+    /// How many entries were fused into broadcasts.
+    pub broadcasts_inferred: usize,
+    /// Entries expressed as swap commands.
+    pub swaps: usize,
+}
+
+/// Lower batch entries to DMA commands, fusing broadcast pairs.
+fn lower_entries(entries: &[BatchEntry], cfg: &HeuristicsConfig) -> (Vec<Command>, usize, usize) {
+    let mut cmds = Vec::new();
+    let mut swaps = 0;
+    let mut bcasts = 0;
+    // Group copy entries by (src, len) for broadcast inference.
+    let mut groups: HashMap<(NodeId, u64, u64), Vec<&BatchEntry>> = HashMap::new();
+    let mut order: Vec<(NodeId, u64, u64)> = Vec::new();
+    for e in entries {
+        match e.ty {
+            CopyType::Swap => {
+                swaps += 1;
+                cmds.push(Command::Swap {
+                    a: e.src,
+                    b: e.dst,
+                    len: e.len,
+                });
+            }
+            CopyType::Copy => {
+                let key = (e.src.node, e.src.offset, e.len);
+                if !groups.contains_key(&key) {
+                    order.push(key);
+                }
+                groups.entry(key).or_default().push(e);
+            }
+        }
+    }
+    for key in order {
+        let group = &groups[&key];
+        let mut it = group.iter().peekable();
+        while let Some(a) = it.next() {
+            if cfg.infer_broadcast {
+                if let Some(b) = it.peek() {
+                    // Same source & size, two destinations ⇒ bcst.
+                    let b = **b;
+                    it.next();
+                    bcasts += 1;
+                    cmds.push(Command::Bcst {
+                        src: a.src,
+                        dst0: a.dst,
+                        dst1: b.dst,
+                        len: a.len,
+                    });
+                    continue;
+                }
+            }
+            cmds.push(Command::Copy {
+                src: a.src,
+                dst: a.dst,
+                len: a.len,
+            });
+        }
+    }
+    (cmds, bcasts, swaps)
+}
+
+/// Plan a batch: lower entries, then pick the fan-out degree.
+pub fn plan_batch(entries: &[BatchEntry], cfg: &HeuristicsConfig) -> BatchPlan {
+    let (cmds, broadcasts_inferred, swaps) = lower_entries(entries, cfg);
+    let total: u64 = entries.iter().map(|e| e.len).sum();
+    let chains = if total <= cfg.b2b_threshold_bytes || cmds.len() <= 1 {
+        // Latency-bound: back-to-back on a single engine, one sync.
+        vec![cmds]
+    } else {
+        // Bandwidth-bound: fan out, topology-aware — spread by destination
+        // node so chains hit distinct links where possible.
+        let n = ((total / cfg.b2b_threshold_bytes) as usize + 1)
+            .min(cfg.max_fanout)
+            .max(1);
+        let mut chains: Vec<Vec<Command>> = vec![Vec::new(); n];
+        for (i, c) in cmds.into_iter().enumerate() {
+            let slot = match c.writes().first().map(|(a, _)| a.node) {
+                Some(NodeId::Gpu(g)) => (g as usize) % n,
+                _ => i % n,
+            };
+            chains[slot].push(c);
+        }
+        chains.retain(|c| !c.is_empty());
+        chains
+    };
+    BatchPlan {
+        chains,
+        broadcasts_inferred,
+        swaps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{KB, MB};
+
+    fn entry(src_off: u64, dst_gpu: u8, dst_off: u64, len: u64) -> BatchEntry {
+        BatchEntry {
+            src: Addr::new(NodeId::Gpu(0), src_off),
+            dst: Addr::new(NodeId::Gpu(dst_gpu), dst_off),
+            len,
+            ty: CopyType::Copy,
+        }
+    }
+
+    #[test]
+    fn infers_broadcast_pairs() {
+        // Two copies from the same (src, len) to different GPUs fuse.
+        let entries = vec![entry(0, 1, 0, 4 * KB), entry(0, 2, 0, 4 * KB)];
+        let plan = plan_batch(&entries, &HeuristicsConfig::default());
+        assert_eq!(plan.broadcasts_inferred, 1);
+        assert_eq!(plan.chains[0].len(), 1);
+        assert!(matches!(plan.chains[0][0], Command::Bcst { .. }));
+    }
+
+    #[test]
+    fn odd_group_leaves_one_copy() {
+        let entries = vec![
+            entry(0, 1, 0, KB),
+            entry(0, 2, 0, KB),
+            entry(0, 3, 0, KB),
+        ];
+        let plan = plan_batch(&entries, &HeuristicsConfig::default());
+        assert_eq!(plan.broadcasts_inferred, 1);
+        assert_eq!(plan.chains[0].len(), 2); // bcst + copy
+    }
+
+    #[test]
+    fn different_sources_do_not_fuse() {
+        let entries = vec![entry(0, 1, 0, KB), entry(8192, 2, 0, KB)];
+        let plan = plan_batch(&entries, &HeuristicsConfig::default());
+        assert_eq!(plan.broadcasts_inferred, 0);
+    }
+
+    #[test]
+    fn inference_can_be_disabled() {
+        let entries = vec![entry(0, 1, 0, KB), entry(0, 2, 0, KB)];
+        let cfg = HeuristicsConfig {
+            infer_broadcast: false,
+            ..Default::default()
+        };
+        let plan = plan_batch(&entries, &cfg);
+        assert_eq!(plan.broadcasts_inferred, 0);
+        assert_eq!(plan.chains[0].len(), 2);
+    }
+
+    #[test]
+    fn swap_attribute_lowers_to_swap() {
+        let entries = vec![BatchEntry {
+            src: Addr::new(NodeId::Gpu(0), 0),
+            dst: Addr::new(NodeId::Gpu(1), 0),
+            len: KB,
+            ty: CopyType::Swap,
+        }];
+        let plan = plan_batch(&entries, &HeuristicsConfig::default());
+        assert_eq!(plan.swaps, 1);
+        assert!(matches!(plan.chains[0][0], Command::Swap { .. }));
+    }
+
+    #[test]
+    fn small_batch_single_chain_large_fans_out() {
+        let small: Vec<_> = (0..16).map(|i| entry(i * 8192, 1, i * 8192, 4 * KB)).collect();
+        assert_eq!(plan_batch(&small, &HeuristicsConfig::default()).chains.len(), 1);
+        let large: Vec<_> = (0..16)
+            .map(|i| entry(i << 24, (1 + i % 7) as u8, i << 24, 8 * MB))
+            .collect();
+        let plan = plan_batch(&large, &HeuristicsConfig::default());
+        assert!(plan.chains.len() > 1);
+        // Every command survives the split.
+        let n: usize = plan.chains.iter().map(|c| c.len()).sum();
+        assert_eq!(n, 16);
+    }
+
+    #[test]
+    fn topology_aware_spread() {
+        // Large batch to 7 distinct GPUs: chains should target distinct
+        // destination groups (no chain mixes all GPUs).
+        let entries: Vec<_> = (0..14)
+            .map(|i| entry(i << 24, (1 + i % 7) as u8, 0, 8 * MB))
+            .collect();
+        let plan = plan_batch(&entries, &HeuristicsConfig::default());
+        for chain in &plan.chains {
+            let mut dsts: Vec<_> = chain
+                .iter()
+                .flat_map(|c| c.writes())
+                .map(|(a, _)| a.node)
+                .collect();
+            dsts.dedup();
+            assert!(dsts.len() <= 2, "chain mixes many destinations: {dsts:?}");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! §6 "Runtime Innovations" as code: a HIP-like runtime facade over the
+//! DMA simulator that exposes the paper's proposed API surface —
+//! `memcpy_async` (today's single-copy call), `memcpy_batch_async` (the
+//! batch API of [8]/[24]) — and implements, *transparently to the user*,
+//! the runtime-side heuristics the paper proposes:
+//!
+//! - **shared prologue/epilogue** for batches (amortized setup/teardown);
+//! - **broadcast inference**: same source + size, ≥2 destinations ⇒ one
+//!   `bcst` command instead of two copies;
+//! - **swap via attributes**: an explicit per-entry `CopyType::Swap`
+//!   (safe inference is impossible — §6);
+//! - **fan-out heuristic**: latency-bound batches go back-to-back on one
+//!   engine with a single sync; larger batches fan out across engines;
+//! - **topology-aware engine selection** by destination node.
+
+pub mod api;
+pub mod heuristics;
+
+pub use api::{BatchEntry, CopyType, HipRuntime, StreamId};
+pub use heuristics::{plan_batch, BatchPlan, HeuristicsConfig};

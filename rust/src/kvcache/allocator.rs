@@ -1,0 +1,148 @@
+//! GPU KV block pool: fixed-capacity free-list allocator with per-request
+//! block tables (the vLLM BlockManager role).
+
+use std::collections::HashMap;
+
+/// Physical block index in the GPU pool.
+pub type BlockId = u64;
+
+/// Request identifier (allocator key).
+pub type ReqId = u64;
+
+/// Fixed-capacity block allocator.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    capacity: u64,
+    free: Vec<BlockId>,
+    /// Per-request block table: logical order (block 0 = first 16 tokens).
+    tables: HashMap<ReqId, Vec<BlockId>>,
+}
+
+/// Allocation failure: pool exhausted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfBlocks {
+    pub requested: u64,
+    pub available: u64,
+}
+
+impl std::fmt::Display for OutOfBlocks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "out of KV blocks: requested {}, available {}",
+            self.requested, self.available
+        )
+    }
+}
+impl std::error::Error for OutOfBlocks {}
+
+impl BlockAllocator {
+    /// Pool with `capacity` blocks (all free).
+    pub fn new(capacity: u64) -> Self {
+        BlockAllocator {
+            capacity,
+            free: (0..capacity).rev().collect(),
+            tables: HashMap::new(),
+        }
+    }
+
+    /// Free block count.
+    pub fn available(&self) -> u64 {
+        self.free.len() as u64
+    }
+
+    /// Total capacity.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Allocate `n` blocks for `req`, appending to its table. All-or-nothing.
+    pub fn alloc(&mut self, req: ReqId, n: u64) -> Result<&[BlockId], OutOfBlocks> {
+        if (self.free.len() as u64) < n {
+            return Err(OutOfBlocks {
+                requested: n,
+                available: self.free.len() as u64,
+            });
+        }
+        let table = self.tables.entry(req).or_default();
+        let start = table.len();
+        for _ in 0..n {
+            table.push(self.free.pop().unwrap());
+        }
+        Ok(&table[start..])
+    }
+
+    /// Block table of a request.
+    pub fn table(&self, req: ReqId) -> Option<&[BlockId]> {
+        self.tables.get(&req).map(|t| t.as_slice())
+    }
+
+    /// Release all blocks of `req` back to the pool.
+    pub fn release(&mut self, req: ReqId) {
+        if let Some(table) = self.tables.remove(&req) {
+            self.free.extend(table);
+        }
+    }
+
+    /// Invariant check: no block is both free and allocated; no block is
+    /// allocated twice; counts add up. (Used by property tests.)
+    pub fn check_invariants(&self) {
+        let mut seen = std::collections::HashSet::new();
+        for &b in &self.free {
+            assert!(b < self.capacity, "free block {b} out of range");
+            assert!(seen.insert(b), "block {b} double-free");
+        }
+        for (req, table) in &self.tables {
+            for &b in table {
+                assert!(b < self.capacity, "req {req} block {b} out of range");
+                assert!(seen.insert(b), "block {b} double-allocated");
+            }
+        }
+        assert_eq!(seen.len() as u64, self.capacity, "blocks leaked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(10);
+        let t = a.alloc(1, 4).unwrap().to_vec();
+        assert_eq!(t.len(), 4);
+        assert_eq!(a.available(), 6);
+        a.check_invariants();
+        a.release(1);
+        assert_eq!(a.available(), 10);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn all_or_nothing() {
+        let mut a = BlockAllocator::new(4);
+        a.alloc(1, 3).unwrap();
+        let err = a.alloc(2, 2).unwrap_err();
+        assert_eq!(err.requested, 2);
+        assert_eq!(err.available, 1);
+        // Failed alloc must not leak blocks.
+        assert_eq!(a.available(), 1);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn append_grows_table() {
+        let mut a = BlockAllocator::new(8);
+        a.alloc(7, 2).unwrap();
+        a.alloc(7, 3).unwrap();
+        assert_eq!(a.table(7).unwrap().len(), 5);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut a = BlockAllocator::new(2);
+        a.release(99);
+        assert_eq!(a.available(), 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! CPU-memory KV tier: content-addressed block sequences with LRU eviction
+//! (the "KV cache save/fetch to/from CPU memory" side of §5.3; the role of
+//! the vLLM KV-offload connector's CPU backend [28]).
+
+use std::collections::HashMap;
+
+/// Key identifying a cached prefix (in real vLLM: hash of token prefix;
+/// here: request/prompt id).
+pub type CacheKey = u64;
+
+/// One cached entry: which CPU blocks hold the prefix's KV.
+#[derive(Debug, Clone)]
+pub struct CpuEntry {
+    pub key: CacheKey,
+    pub cpu_blocks: Vec<u64>,
+    pub tokens: u64,
+    /// LRU stamp.
+    last_used: u64,
+}
+
+/// CPU KV store with block-granular capacity and LRU eviction.
+#[derive(Debug)]
+pub struct CpuStore {
+    capacity_blocks: u64,
+    used_blocks: u64,
+    entries: HashMap<CacheKey, CpuEntry>,
+    free: Vec<u64>,
+    next_block: u64,
+    clock: u64,
+    /// Eviction counter (metrics).
+    pub evictions: u64,
+}
+
+impl CpuStore {
+    /// Store with `capacity_blocks` CPU blocks.
+    pub fn new(capacity_blocks: u64) -> Self {
+        CpuStore {
+            capacity_blocks,
+            used_blocks: 0,
+            entries: HashMap::new(),
+            free: Vec::new(),
+            next_block: 0,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Blocks currently used.
+    pub fn used(&self) -> u64 {
+        self.used_blocks
+    }
+
+    /// Look up a cached prefix; bumps LRU on hit.
+    pub fn lookup(&mut self, key: CacheKey) -> Option<&CpuEntry> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_used = clock;
+            Some(&*e)
+        } else {
+            None
+        }
+    }
+
+    /// Save `n_blocks` of KV (covering `tokens` tokens) under `key`,
+    /// evicting LRU entries as needed. Returns the CPU block ids, or None
+    /// when the prefix cannot fit even after evicting everything else.
+    pub fn save(&mut self, key: CacheKey, n_blocks: u64, tokens: u64) -> Option<Vec<u64>> {
+        if n_blocks > self.capacity_blocks {
+            return None;
+        }
+        // Refreshing an existing key: release its old blocks first.
+        self.remove(key);
+        while self.capacity_blocks - self.used_blocks < n_blocks {
+            let lru = self
+                .entries
+                .values()
+                .min_by_key(|e| e.last_used)?
+                .key;
+            self.remove(lru);
+            self.evictions += 1;
+        }
+        let mut blocks = Vec::with_capacity(n_blocks as usize);
+        for _ in 0..n_blocks {
+            blocks.push(self.free.pop().unwrap_or_else(|| {
+                let b = self.next_block;
+                self.next_block += 1;
+                b
+            }));
+        }
+        self.used_blocks += n_blocks;
+        self.clock += 1;
+        self.entries.insert(
+            key,
+            CpuEntry {
+                key,
+                cpu_blocks: blocks.clone(),
+                tokens,
+                last_used: self.clock,
+            },
+        );
+        Some(blocks)
+    }
+
+    /// Drop an entry, freeing its blocks.
+    pub fn remove(&mut self, key: CacheKey) {
+        if let Some(e) = self.entries.remove(&key) {
+            self.used_blocks -= e.cpu_blocks.len() as u64;
+            self.free.extend(e.cpu_blocks);
+        }
+    }
+
+    /// Number of entries resident.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_lookup_roundtrip() {
+        let mut s = CpuStore::new(100);
+        let blocks = s.save(1, 10, 160).unwrap();
+        assert_eq!(blocks.len(), 10);
+        let e = s.lookup(1).unwrap();
+        assert_eq!(e.tokens, 160);
+        assert_eq!(s.used(), 10);
+        assert!(s.lookup(2).is_none());
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut s = CpuStore::new(20);
+        s.save(1, 10, 160).unwrap();
+        s.save(2, 10, 160).unwrap();
+        s.lookup(1); // 1 is now MRU
+        s.save(3, 10, 160).unwrap(); // must evict 2
+        assert!(s.lookup(2).is_none());
+        assert!(s.lookup(1).is_some());
+        assert!(s.lookup(3).is_some());
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.used(), 20);
+    }
+
+    #[test]
+    fn oversized_prefix_rejected() {
+        let mut s = CpuStore::new(5);
+        assert!(s.save(1, 6, 96).is_none());
+        assert_eq!(s.used(), 0);
+    }
+
+    #[test]
+    fn resave_replaces() {
+        let mut s = CpuStore::new(10);
+        s.save(1, 4, 64).unwrap();
+        s.save(1, 6, 96).unwrap();
+        assert_eq!(s.used(), 6);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn block_ids_never_alias() {
+        let mut s = CpuStore::new(30);
+        let a = s.save(1, 10, 160).unwrap();
+        let b = s.save(2, 10, 160).unwrap();
+        for x in &a {
+            assert!(!b.contains(x));
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! KV block geometry and simulated-memory addressing.
+
+use crate::models::ModelConfig;
+use crate::sim::topology::NodeId;
+use crate::sim::Addr;
+
+/// vLLM's default block size in tokens.
+pub const DEFAULT_BLOCK_TOKENS: u32 = 16;
+
+/// Geometry of the paged KV cache for one model.
+#[derive(Debug, Clone)]
+pub struct BlockLayout {
+    /// Tokens per block.
+    pub block_tokens: u32,
+    /// Bytes of one block (all layers contiguous).
+    pub block_bytes: u64,
+    /// Base offset of the GPU KV pool in simulated GPU memory.
+    pub gpu_pool_base: u64,
+    /// Base offset of the CPU KV tier in simulated CPU memory.
+    pub cpu_pool_base: u64,
+}
+
+impl BlockLayout {
+    /// Layout for `model` with `block_tokens` tokens per block.
+    pub fn new(model: &ModelConfig, block_tokens: u32) -> Self {
+        BlockLayout {
+            block_tokens,
+            block_bytes: model.kv_block_bytes(block_tokens),
+            gpu_pool_base: 0,
+            cpu_pool_base: 0,
+        }
+    }
+
+    /// Number of blocks needed for `tokens` tokens (ceil).
+    pub fn blocks_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.block_tokens as u64)
+    }
+
+    /// Simulated address of GPU block `idx` on `gpu`.
+    pub fn gpu_block_addr(&self, gpu: u8, idx: u64) -> Addr {
+        Addr::new(NodeId::Gpu(gpu), self.gpu_pool_base + idx * self.block_bytes)
+    }
+
+    /// Simulated address of CPU block `idx`.
+    pub fn cpu_block_addr(&self, idx: u64) -> Addr {
+        Addr::new(NodeId::Cpu, self.cpu_pool_base + idx * self.block_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{LLAMA31_8B, QWEN25_0_5B};
+
+    #[test]
+    fn block_bytes_match_models() {
+        let l = BlockLayout::new(&LLAMA31_8B, 16);
+        assert_eq!(l.block_bytes, 2 * 1024 * 1024);
+        let q = BlockLayout::new(&QWEN25_0_5B, 16);
+        assert_eq!(q.block_bytes, 192 * 1024);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let l = BlockLayout::new(&QWEN25_0_5B, 16);
+        assert_eq!(l.blocks_for(4096), 256);
+        assert_eq!(l.blocks_for(4097), 257);
+        assert_eq!(l.blocks_for(1), 1);
+        assert_eq!(l.blocks_for(0), 0);
+    }
+
+    #[test]
+    fn addresses_are_disjoint() {
+        let l = BlockLayout::new(&QWEN25_0_5B, 16);
+        let a0 = l.gpu_block_addr(0, 0);
+        let a1 = l.gpu_block_addr(0, 1);
+        assert_eq!(a1.offset - a0.offset, l.block_bytes);
+        assert_eq!(l.cpu_block_addr(3).node, NodeId::Cpu);
+    }
+}

@@ -1,0 +1,24 @@
+//! Paged KV cache with a CPU offload tier (paper §2.1.2, §5.3).
+//!
+//! vLLM-style PagedAttention layout: the KV cache is split into fixed-size
+//! blocks of 16 tokens; blocks are non-contiguous in memory. Following the
+//! optimized layout of the vLLM KV-offload connector [28] that the paper
+//! assumes, a block stores **all layers contiguously**, so one block is one
+//! transfer (e.g. 2 MiB for Llama-3.1-8B, 192 KiB for Qwen2.5-0.5B).
+//!
+//! - [`allocator`]: GPU block pool.
+//! - [`cpu_store`]: CPU-memory KV tier with LRU eviction.
+//! - [`layout`]: block geometry + simulated-memory addressing.
+//! - [`fetch`]: the three KV-fetch implementations the paper compares —
+//!   per-copy DMA (`hipMemcpyAsync` baseline), batched-b2b DMA (the
+//!   contribution), and a CU gather kernel.
+
+pub mod allocator;
+pub mod cpu_store;
+pub mod fetch;
+pub mod layout;
+pub mod save;
+
+pub use allocator::BlockAllocator;
+pub use cpu_store::CpuStore;
+pub use layout::{BlockLayout, DEFAULT_BLOCK_TOKENS};

@@ -1,0 +1,125 @@
+//! KV save path: GPU → CPU block transfers (the "save" half of the
+//! paper's §5.3 KV save/fetch workload; same mechanics as fetch with the
+//! direction reversed — the paper's footnote 1 uses "save" to avoid
+//! confusion with DMA offloads).
+//!
+//! Reuses the fetch engines' host-API cost model: baseline issues one
+//! `hipMemcpyAsync` per block on the device-to-host direction; the
+//! optimized path batches all blocks into b2b chains. Saves are typically
+//! fire-and-forget (decode continues while KV drains to CPU), so the
+//! interesting metric is host time + D2H link occupancy.
+
+use crate::sim::Sim;
+
+use super::fetch::{dma_b2b, dma_baseline, CopySpec, FetchImpl, FetchOutcome};
+
+/// Plan save copies for a request's blocks: (gpu src, cpu dst, len).
+pub fn plan_save(
+    layout: &super::BlockLayout,
+    gpu: u8,
+    gpu_blocks: &[u64],
+    cpu_blocks: &[u64],
+) -> Vec<CopySpec> {
+    assert_eq!(gpu_blocks.len(), cpu_blocks.len());
+    gpu_blocks
+        .iter()
+        .zip(cpu_blocks)
+        .map(|(&g, &c)| {
+            (
+                layout.gpu_block_addr(gpu, g),
+                layout.cpu_block_addr(c),
+                layout.block_bytes,
+            )
+        })
+        .collect()
+}
+
+/// Run a save with the chosen implementation (kernel saves are not used
+/// by the paper — CUs are busy decoding — so only the DMA impls apply).
+pub fn run_save(sim: &mut Sim, imp: FetchImpl, copies: &[CopySpec]) -> FetchOutcome {
+    if copies.is_empty() {
+        return FetchOutcome::default();
+    }
+    match imp {
+        FetchImpl::DmaBaseline => dma_baseline::run(sim, copies),
+        FetchImpl::DmaB2b | FetchImpl::Kernel => dma_b2b::run(sim, copies),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::BlockLayout;
+    use crate::models::zoo::QWEN25_0_5B;
+    use crate::sim::topology::NodeId;
+    use crate::sim::SimConfig;
+
+    fn layout() -> BlockLayout {
+        BlockLayout::new(&QWEN25_0_5B, 16)
+    }
+
+    #[test]
+    fn save_moves_bytes_gpu_to_cpu() {
+        let l = layout();
+        let gpu_blocks: Vec<u64> = (0..8).collect();
+        let cpu_blocks: Vec<u64> = (100..108).collect();
+        let copies = plan_save(&l, 0, &gpu_blocks, &cpu_blocks);
+        let mut sim = Sim::new(SimConfig::mi300x().functional());
+        for (src, _, len) in &copies {
+            sim.memory
+                .poke(src.node, src.offset, &vec![7u8; *len as usize]);
+        }
+        let out = run_save(&mut sim, FetchImpl::DmaB2b, &copies);
+        assert!(out.total_ns > 0);
+        for (_, dst, len) in &copies {
+            assert_eq!(dst.node, NodeId::Cpu);
+            assert_eq!(
+                sim.memory.peek(NodeId::Cpu, dst.offset, *len),
+                vec![7u8; *len as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn batched_save_cheaper_on_host_than_per_copy() {
+        let l = layout();
+        let gpu_blocks: Vec<u64> = (0..256).collect();
+        let cpu_blocks: Vec<u64> = (0..256).collect();
+        let copies = plan_save(&l, 0, &gpu_blocks, &cpu_blocks);
+        let mut s1 = Sim::new(SimConfig::mi300x());
+        let base = run_save(&mut s1, FetchImpl::DmaBaseline, &copies);
+        let mut s2 = Sim::new(SimConfig::mi300x());
+        let b2b = run_save(&mut s2, FetchImpl::DmaB2b, &copies);
+        assert!(base.host_ns > 10 * b2b.host_ns);
+    }
+
+    #[test]
+    fn save_then_fetch_roundtrip() {
+        // Save a request's KV to CPU, then fetch it back to different GPU
+        // blocks: bytes identical (the CPU tier round-trips).
+        use crate::kvcache::fetch::run_fetch;
+        let l = layout();
+        let mut sim = Sim::new(SimConfig::mi300x().functional());
+        let gpu_src: Vec<u64> = (0..4).collect();
+        let cpu: Vec<u64> = (10..14).collect();
+        let gpu_dst: Vec<u64> = (20..24).collect();
+        for &g in &gpu_src {
+            let a = l.gpu_block_addr(0, g);
+            sim.memory
+                .poke(a.node, a.offset, &vec![g as u8 + 1; l.block_bytes as usize]);
+        }
+        let saves = plan_save(&l, 0, &gpu_src, &cpu);
+        run_save(&mut sim, FetchImpl::DmaB2b, &saves);
+        let fetches: Vec<_> = cpu
+            .iter()
+            .zip(&gpu_dst)
+            .map(|(&c, &g)| (l.cpu_block_addr(c), l.gpu_block_addr(0, g), l.block_bytes))
+            .collect();
+        run_fetch(&mut sim, FetchImpl::DmaB2b, &fetches);
+        for (i, &g) in gpu_dst.iter().enumerate() {
+            let a = l.gpu_block_addr(0, g);
+            let got = sim.memory.peek(a.node, a.offset, l.block_bytes);
+            assert!(got.iter().all(|&b| b == i as u8 + 1));
+        }
+    }
+}

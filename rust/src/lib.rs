@@ -1,0 +1,29 @@
+//! # DMA-Latte
+//!
+//! Reproduction of *"DMA-Latte: Expanding the Reach of DMA Offloads to
+//! Latency-bound ML Communication"* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system. See `DESIGN.md` for the full inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! - [`sim`] — discrete-event MI300X DMA-subsystem simulator (substrate).
+//! - [`collectives`] — the paper's optimized DMA collectives (pcpy / bcst /
+//!   swap / b2b / prelaunch) over the simulator.
+//! - [`rccl`] — calibrated CU-based collective baseline (RCCL stand-in).
+//! - [`models`] — LLM architecture zoo + MI300X roofline timing model.
+//! - [`kvcache`] — paged KV cache, CPU offload tier, fetch engines.
+//! - [`coordinator`] — vLLM-like serving stack (router, batcher, scheduler).
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts.
+//! - [`figures`] — one generator per paper figure/table.
+
+pub mod cli;
+pub mod collectives;
+pub mod coordinator;
+pub mod figures;
+pub mod hip;
+pub mod kvcache;
+pub mod models;
+pub mod rccl;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,157 @@
+//! DMA-Latte CLI: figure regeneration, sweeps, and diagnostics.
+//!
+//! ```text
+//! dma-latte figures   [--out results/] [--quick]   # all paper figures
+//! dma-latte sweep     [--kind allgather|alltoall] [--max 4G]
+//! dma-latte breakdown                              # Fig. 7
+//! dma-latte power                                  # Fig. 15
+//! dma-latte ttft      [--prefill 4096]             # Fig. 16
+//! dma-latte throughput [--requests 200] [--hit 1.0]# Fig. 17
+//! dma-latte selftest                               # quick invariants
+//! ```
+
+use dma_latte::cli::Args;
+use dma_latte::collectives::CollectiveKind;
+use dma_latte::figures::{breakdown, collectives as figc, power, serving};
+use dma_latte::models::{zoo, ALL_MODELS};
+use dma_latte::util::bytes::{parse_size, size_sweep, GB, KB, MB};
+
+fn cmd_sweep(args: &Args) {
+    let kind = match args.get("kind", "allgather").as_str() {
+        "alltoall" => CollectiveKind::AllToAll,
+        _ => CollectiveKind::AllGather,
+    };
+    let max = parse_size(&args.get("max", "4G")).expect("bad --max");
+    let rows = figc::sweep(kind, Some(size_sweep(KB, max, 2)));
+    print!("{}", figc::render(kind, &rows));
+    println!("\nbest per range:");
+    for (lo, hi, v) in figc::best_table(&rows) {
+        println!(
+            "  {:>6}..{:>6} -> {}",
+            dma_latte::util::bytes::fmt_size(lo),
+            dma_latte::util::bytes::fmt_size(hi),
+            v.name()
+        );
+    }
+}
+
+fn cmd_figures(args: &Args) {
+    let out = args.get("out", "results");
+    let quick = args.has("quick");
+    let max = if quick { 64 * MB } else { 4 * GB };
+    std::fs::create_dir_all(&out).expect("mkdir results");
+
+    println!("# Fig 1/13 + Table 2 — all-gather");
+    let ag = figc::sweep(CollectiveKind::AllGather, Some(size_sweep(KB, max, 2)));
+    print!("{}", figc::render(CollectiveKind::AllGather, &ag));
+    figc::to_csv(CollectiveKind::AllGather, &ag)
+        .write(format!("{out}/fig13_allgather.csv"))
+        .unwrap();
+
+    println!("\n# Fig 14 + Table 3 — all-to-all");
+    let aa = figc::sweep(CollectiveKind::AllToAll, Some(size_sweep(KB, max, 2)));
+    print!("{}", figc::render(CollectiveKind::AllToAll, &aa));
+    figc::to_csv(CollectiveKind::AllToAll, &aa)
+        .write(format!("{out}/fig14_alltoall.csv"))
+        .unwrap();
+
+    println!("\n# Fig 7 — single-copy latency breakdown");
+    let bd = breakdown::fig7();
+    print!("{}", breakdown::render(&bd));
+    breakdown::to_csv(&bd).write(format!("{out}/fig7_breakdown.csv")).unwrap();
+
+    println!("\n# Fig 15 — power");
+    let pw = power::fig15(if quick {
+        Some(vec![64 * KB, MB, 16 * MB, 64 * MB])
+    } else {
+        None
+    });
+    print!("{}", power::render(&pw));
+    power::to_csv(&pw).write(format!("{out}/fig15_power.csv")).unwrap();
+
+    println!("\n# Fig 16 — TTFT");
+    let f16 = if quick {
+        serving::fig16(&[&zoo::QWEN25_0_5B, &zoo::LLAMA31_8B], &[4096])
+    } else {
+        serving::fig16_default()
+    };
+    print!("{}", serving::render_fig16(&f16));
+    serving::fig16_csv(&f16).write(format!("{out}/fig16_ttft.csv")).unwrap();
+
+    println!("\n# Fig 17 — throughput");
+    let n = if quick { 64 } else { 400 };
+    let rows: Vec<_> = (if quick {
+        vec![&zoo::QWEN25_0_5B, &zoo::QWEN25_7B]
+    } else {
+        ALL_MODELS.to_vec()
+    })
+    .into_iter()
+    .map(|m| serving::throughput(m, 1024, n, 32, 1.0))
+    .collect();
+    print!("{}", serving::render_fig17(&rows));
+    serving::fig17_csv(&rows).write(format!("{out}/fig17_throughput.csv")).unwrap();
+
+    println!("\nCSV written under {out}/");
+}
+
+fn cmd_ttft(args: &Args) {
+    let prefill: u64 = args.get_num("prefill", 4096);
+    let rows = serving::fig16(ALL_MODELS, &[prefill]);
+    print!("{}", serving::render_fig16(&rows));
+}
+
+fn cmd_throughput(args: &Args) {
+    let n: u64 = args.get_num("requests", 200);
+    let hit: f64 = args.get_num("hit", 1.0);
+    let rows: Vec<_> = ALL_MODELS
+        .iter()
+        .map(|m| serving::throughput(m, 1024, n, 32, hit))
+        .collect();
+    print!("{}", serving::render_fig17(&rows));
+}
+
+fn cmd_selftest() {
+    use dma_latte::collectives::{run_collective, select_variant, RunOptions};
+    use dma_latte::sim::SimConfig;
+    let opts = RunOptions {
+        sim: SimConfig::mi300x(),
+        verify: true,
+    };
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        for size in [8 * KB, 256 * KB] {
+            let v = select_variant(kind, size);
+            let r = run_collective(kind, v, size, &opts);
+            assert_eq!(r.verified, Some(true));
+            println!(
+                "{} {:>6} {} ok ({} ns)",
+                kind.name(),
+                dma_latte::util::bytes::fmt_size(size),
+                v.name(),
+                r.latency_ns
+            );
+        }
+    }
+    println!("selftest ok");
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("sweep") => cmd_sweep(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("breakdown") => print!("{}", breakdown::render(&breakdown::fig7())),
+        Some("power") => print!("{}", power::render(&power::fig15(None))),
+        Some("ttft") => cmd_ttft(&args),
+        Some("throughput") => cmd_throughput(&args),
+        Some("selftest") => cmd_selftest(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown command {o:?}\n");
+            }
+            eprintln!(
+                "usage: dma-latte <figures|sweep|breakdown|power|ttft|throughput|selftest> [--flags]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

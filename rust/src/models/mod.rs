@@ -1,0 +1,13 @@
+//! LLM architecture zoo + MI300X execution-time model.
+//!
+//! The serving experiments (Figs. 16/17) depend on each model's KV-cache
+//! geometry (bytes per token, block size) and on GPU execution time for
+//! prefill/decode. [`zoo`] carries the architectures the paper evaluates
+//! (Qwen 2.5 0.5B–32B, Llama 3.1/3.2); [`perf`] converts an architecture +
+//! workload into MI300X-roofline times.
+
+pub mod perf;
+pub mod zoo;
+
+pub use perf::{Mi300xPerf, PerfModel};
+pub use zoo::{ModelConfig, ALL_MODELS};

@@ -1,0 +1,104 @@
+//! MI300X roofline execution-time model.
+//!
+//! GPU times for prefill/decode are needed to compose TTFT and throughput
+//! (Figs. 16/17); the local CPU PJRT execution of the tiny compiled model
+//! proves functional composition but cannot stand in for MI300X timing, so
+//! figure generation uses this analytic model (DESIGN.md §1).
+
+use super::zoo::ModelConfig;
+
+/// Hardware throughput description.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// Peak dense bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// Achievable fraction of peak for large GEMMs (prefill).
+    pub gemm_eff: f64,
+    /// HBM bandwidth bytes/s.
+    pub hbm_bytes_per_s: f64,
+    /// Achievable fraction of HBM bandwidth for decode (weight streaming).
+    pub hbm_eff: f64,
+    /// Fixed per-step launch/framework cost on the GPU path, s.
+    pub step_overhead_s: f64,
+}
+
+/// MI300X data sheet values: 1307 TFLOPS bf16, 5.3 TB/s HBM3.
+pub type Mi300xPerf = PerfModel;
+
+impl Default for PerfModel {
+    fn default() -> Self {
+        PerfModel {
+            peak_flops: 1.307e15,
+            gemm_eff: 0.52,
+            hbm_bytes_per_s: 5.3e12,
+            hbm_eff: 0.72,
+            step_overhead_s: 25e-6,
+        }
+    }
+}
+
+impl PerfModel {
+    /// Prefill GPU time for `tokens` prompt tokens (compute-bound):
+    /// 2·P FLOPs/token plus quadratic attention term.
+    pub fn prefill_s(&self, m: &ModelConfig, tokens: u64) -> f64 {
+        let gemm_flops = m.flops_per_token() * tokens as f64;
+        // Attention: 2 (QK^T + PV) × 2 FLOPs × heads × head_dim × T²/2 per layer.
+        let attn_flops = 2.0
+            * 2.0
+            * (m.heads as f64 * m.head_dim as f64)
+            * (tokens as f64 * tokens as f64 / 2.0)
+            * m.layers as f64;
+        self.step_overhead_s + (gemm_flops + attn_flops) / (self.peak_flops * self.gemm_eff)
+    }
+
+    /// One decode step for a batch of `batch` sequences at `context` tokens
+    /// of KV (memory-bound: weights stream once per step; KV streams per
+    /// sequence).
+    pub fn decode_step_s(&self, m: &ModelConfig, batch: u64, context: u64) -> f64 {
+        let weight_bytes = m.weight_bytes() as f64;
+        let kv_bytes = m.kv_bytes_per_token() as f64 * context as f64 * batch as f64;
+        let mem_s = (weight_bytes + kv_bytes) / (self.hbm_bytes_per_s * self.hbm_eff);
+        let flop_s = m.flops_per_token() * batch as f64 / (self.peak_flops * self.gemm_eff);
+        self.step_overhead_s + mem_s.max(flop_s)
+    }
+
+    /// Decode throughput ceiling (tokens/s) at given batch and context.
+    pub fn decode_tps(&self, m: &ModelConfig, batch: u64, context: u64) -> f64 {
+        batch as f64 / self.decode_step_s(m, batch, context)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{LLAMA31_8B, QWEN25_0_5B, QWEN25_32B};
+
+    #[test]
+    fn prefill_scales_superlinearly() {
+        let p = PerfModel::default();
+        let t4k = p.prefill_s(&LLAMA31_8B, 4096);
+        let t8k = p.prefill_s(&LLAMA31_8B, 8192);
+        assert!(t8k > 2.0 * t4k, "attention term should bend the curve");
+        // Sanity: 8B @ 4096 on MI300X ≈ 2·8e9·4096/6.8e14 ≈ 0.1 s.
+        assert!((0.05..0.3).contains(&t4k), "t4k={t4k}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_small_batch() {
+        let p = PerfModel::default();
+        let s = p.decode_step_s(&LLAMA31_8B, 1, 4096);
+        // ≈ 16GB / 3.8 TB/s ≈ 4.2 ms + overhead.
+        assert!((0.003..0.008).contains(&s), "s={s}");
+        // Bigger batch amortizes weights → higher tps.
+        assert!(p.decode_tps(&LLAMA31_8B, 64, 4096) > 20.0 * p.decode_tps(&LLAMA31_8B, 1, 4096));
+    }
+
+    #[test]
+    fn bigger_models_slower() {
+        let p = PerfModel::default();
+        assert!(p.prefill_s(&QWEN25_32B, 4096) > p.prefill_s(&QWEN25_0_5B, 4096));
+        assert!(
+            p.decode_step_s(&QWEN25_32B, 8, 4096) > p.decode_step_s(&QWEN25_0_5B, 8, 4096)
+        );
+    }
+}

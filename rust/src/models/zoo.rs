@@ -1,0 +1,190 @@
+//! Architecture configs of the paper's evaluation models (§5.3.2):
+//! Qwen 2.5 (0.5B–32B, incl. DeepSeek-R1-Distill-Qwen-32B which shares the
+//! Qwen2.5-32B architecture) and Llama 3.1/3.2. Values from the public
+//! model cards.
+
+/// Decoder-only transformer architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub params_b: f64,
+    pub layers: u32,
+    pub hidden: u32,
+    pub heads: u32,
+    pub kv_heads: u32,
+    pub head_dim: u32,
+    pub intermediate: u32,
+    pub vocab: u32,
+}
+
+impl ModelConfig {
+    /// KV-cache bytes per token (fp16/bf16: 2 bytes), both K and V, all
+    /// layers — the quantity that sets transfer sizes for KV save/fetch.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.layers as u64 * self.kv_heads as u64 * self.head_dim as u64 * 2
+    }
+
+    /// Bytes of one PagedAttention block (`block_tokens` tokens, all layers
+    /// contiguous — the optimized layout of [28] the paper assumes).
+    pub fn kv_block_bytes(&self, block_tokens: u32) -> u64 {
+        self.kv_bytes_per_token() * block_tokens as u64
+    }
+
+    /// Total parameter bytes at bf16.
+    pub fn weight_bytes(&self) -> u64 {
+        (self.params_b * 1e9) as u64 * 2
+    }
+
+    /// Approximate FLOPs for one token of forward pass (2 × params, the
+    /// standard decoder estimate) — attention over context adds
+    /// `2 × layers × 2 × context × kv-width` handled in `perf`.
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.params_b * 1e9
+    }
+}
+
+/// Qwen2.5-0.5B
+pub const QWEN25_0_5B: ModelConfig = ModelConfig {
+    name: "Qwen2.5-0.5B",
+    params_b: 0.49,
+    layers: 24,
+    hidden: 896,
+    heads: 14,
+    kv_heads: 2,
+    head_dim: 64,
+    intermediate: 4864,
+    vocab: 151_936,
+};
+
+/// Llama-3.2-1B
+pub const LLAMA32_1B: ModelConfig = ModelConfig {
+    name: "Llama-3.2-1B",
+    params_b: 1.24,
+    layers: 16,
+    hidden: 2048,
+    heads: 32,
+    kv_heads: 8,
+    head_dim: 64,
+    intermediate: 8192,
+    vocab: 128_256,
+};
+
+/// Llama-3.2-3B
+pub const LLAMA32_3B: ModelConfig = ModelConfig {
+    name: "Llama-3.2-3B",
+    params_b: 3.21,
+    layers: 28,
+    hidden: 3072,
+    heads: 24,
+    kv_heads: 8,
+    head_dim: 128,
+    intermediate: 8192,
+    vocab: 128_256,
+};
+
+/// Qwen2.5-7B
+pub const QWEN25_7B: ModelConfig = ModelConfig {
+    name: "Qwen2.5-7B",
+    params_b: 7.62,
+    layers: 28,
+    hidden: 3584,
+    heads: 28,
+    kv_heads: 4,
+    head_dim: 128,
+    intermediate: 18_944,
+    vocab: 152_064,
+};
+
+/// Llama-3.1-8B
+pub const LLAMA31_8B: ModelConfig = ModelConfig {
+    name: "Llama-3.1-8B",
+    params_b: 8.03,
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    kv_heads: 8,
+    head_dim: 128,
+    intermediate: 14_336,
+    vocab: 128_256,
+};
+
+/// Qwen2.5-14B
+pub const QWEN25_14B: ModelConfig = ModelConfig {
+    name: "Qwen2.5-14B",
+    params_b: 14.77,
+    layers: 48,
+    hidden: 5120,
+    heads: 40,
+    kv_heads: 8,
+    head_dim: 128,
+    intermediate: 13_824,
+    vocab: 152_064,
+};
+
+/// DeepSeek-R1-Distill-Qwen-32B (Qwen2.5-32B architecture)
+pub const QWEN25_32B: ModelConfig = ModelConfig {
+    name: "DeepSeek-R1-Qwen-32B",
+    params_b: 32.76,
+    layers: 64,
+    hidden: 5120,
+    heads: 40,
+    kv_heads: 8,
+    head_dim: 128,
+    intermediate: 27_648,
+    vocab: 152_064,
+};
+
+/// The paper's evaluation set, smallest → largest.
+pub const ALL_MODELS: &[&ModelConfig] = &[
+    &QWEN25_0_5B,
+    &LLAMA32_1B,
+    &LLAMA32_3B,
+    &QWEN25_7B,
+    &LLAMA31_8B,
+    &QWEN25_14B,
+    &QWEN25_32B,
+];
+
+/// Look up a model by (case-insensitive substring of) name.
+pub fn find(name: &str) -> Option<&'static ModelConfig> {
+    let n = name.to_ascii_lowercase();
+    ALL_MODELS
+        .iter()
+        .copied()
+        .find(|m| m.name.to_ascii_lowercase().contains(&n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_geometry_llama8b() {
+        // 2 × 32 layers × 8 kv-heads × 128 dim × 2 B = 131072 B/token.
+        assert_eq!(LLAMA31_8B.kv_bytes_per_token(), 131_072);
+        // 16-token block, all layers contiguous: 2 MiB.
+        assert_eq!(LLAMA31_8B.kv_block_bytes(16), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn kv_geometry_qwen05b() {
+        // 2 × 24 × 2 × 64 × 2 = 12288 B/token → 192 KiB / 16-token block.
+        assert_eq!(QWEN25_0_5B.kv_bytes_per_token(), 12_288);
+        assert_eq!(QWEN25_0_5B.kv_block_bytes(16), 196_608);
+    }
+
+    #[test]
+    fn zoo_ordered_by_size() {
+        for w in ALL_MODELS.windows(2) {
+            assert!(w[0].params_b <= w[1].params_b);
+        }
+        assert_eq!(ALL_MODELS.len(), 7);
+    }
+
+    #[test]
+    fn find_by_substring() {
+        assert_eq!(find("llama-3.1").unwrap().name, "Llama-3.1-8B");
+        assert_eq!(find("0.5b").unwrap().name, "Qwen2.5-0.5B");
+        assert!(find("gpt-5").is_none());
+    }
+}

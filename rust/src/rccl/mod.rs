@@ -1,0 +1,12 @@
+//! RCCL stand-in: calibrated analytic model of CU-driven collectives.
+//!
+//! The paper uses RCCL (with MSCCL/MSCCL++ algorithms and hipGraph launch)
+//! purely as the measured baseline curve that DMA collectives are compared
+//! against (Figs. 1/13/14/15). We model it analytically — launch overhead +
+//! per-peer protocol cost + bandwidth term at CU-collective efficiency —
+//! with constants calibrated against public RCCL behaviour so the paper's
+//! DMA/CU ratios emerge (see `rust/tests/calibration.rs`).
+
+pub mod model;
+
+pub use model::RcclModel;

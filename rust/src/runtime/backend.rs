@@ -1,0 +1,143 @@
+//! [`ModelBackend`] implementation over the PJRT executor: owns the paged
+//! KV pool (host-side mirror of GPU HBM) and per-slot block tables, so the
+//! threaded server can serve real batched requests through the compiled
+//! model.
+
+use anyhow::Result;
+
+use crate::coordinator::server::ModelBackend;
+
+use super::executor::Executor;
+
+/// PJRT-backed model with a paged KV pool.
+pub struct PjrtBackend {
+    exe: Executor,
+    /// Paged pool `[NB, BS, L, 2, KVH, D]` flattened.
+    pool: Vec<f32>,
+    /// Per-batch-slot block tables `[B, MB]`.
+    tables: Vec<i32>,
+    /// Per-slot context length.
+    pos: Vec<i32>,
+    /// Next free physical block (simple bump allocator per serve run).
+    next_block: usize,
+    kv_row: usize,
+    block_row: usize,
+}
+
+impl PjrtBackend {
+    /// Wrap a loaded executor.
+    pub fn new(exe: Executor) -> Self {
+        let d = &exe.meta.dims;
+        let kv_row = d.layers * 2 * d.kv_heads * d.head_dim;
+        let block_row = d.block_size * kv_row;
+        let pool = vec![0f32; d.num_blocks * block_row];
+        let tables = vec![0i32; d.batch * d.max_blocks];
+        let pos = vec![0i32; d.batch];
+        PjrtBackend {
+            exe,
+            pool,
+            tables,
+            pos,
+            next_block: 0,
+            kv_row,
+            block_row,
+        }
+    }
+
+    /// Load artifacts and build the backend.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self::new(Executor::load(dir)?))
+    }
+
+    /// Model dims.
+    pub fn dims(&self) -> &super::meta::ModelDims {
+        &self.exe.meta.dims
+    }
+
+    /// Reset pool/tables between serve runs.
+    pub fn reset(&mut self) {
+        self.pool.fill(0.0);
+        self.tables.fill(0);
+        self.pos.fill(0);
+        self.next_block = 0;
+    }
+
+    /// Write one token's KV row into slot `slot` at position `p`,
+    /// allocating blocks lazily.
+    fn write_kv(&mut self, slot: usize, p: usize, kv_row: &[f32]) {
+        let d = self.exe.meta.dims.clone();
+        let logical = p / d.block_size;
+        let within = p % d.block_size;
+        let tptr = slot * d.max_blocks + logical;
+        if within == 0 {
+            // Allocate a fresh physical block for this logical block.
+            self.tables[tptr] = (self.next_block % d.num_blocks) as i32;
+            self.next_block += 1;
+        }
+        let phys = self.tables[tptr] as usize;
+        let base = phys * self.block_row + within * self.kv_row;
+        self.pool[base..base + self.kv_row].copy_from_slice(kv_row);
+    }
+
+    /// Prefill a prompt into slot `slot`; returns the first token.
+    fn prefill_into_slot(&mut self, slot: usize, prompt: &[u32]) -> i32 {
+        let d = self.exe.meta.dims.clone();
+        let mut toks: Vec<i32> = prompt
+            .iter()
+            .map(|&t| (t as usize % d.vocab) as i32)
+            .collect();
+        toks.resize(d.prefill_len, 0);
+        let (logits, kv) = self.exe.prefill(&toks).expect("prefill failed");
+        // kv: [T, L, 2, KVH, D] — page into the pool.
+        for p in 0..d.prefill_len {
+            let row = &kv[p * self.kv_row..(p + 1) * self.kv_row];
+            let row = row.to_vec();
+            self.write_kv(slot, p, &row);
+        }
+        self.pos[slot] = d.prefill_len as i32;
+        Executor::argmax(&logits)
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn prefill(&mut self, prompt: &[u32]) -> u32 {
+        // Slot assignment: round-robin over the artifact batch width.
+        let slot = 0;
+        self.prefill_into_slot(slot, prompt) as u32
+    }
+
+    fn decode(&mut self, last_tokens: &[u32]) -> Vec<u32> {
+        let d = self.exe.meta.dims.clone();
+        let b = d.batch;
+        // The compiled step has fixed batch B: tile/truncate the live batch.
+        let mut token = vec![0i32; b];
+        for (i, &t) in last_tokens.iter().take(b).enumerate() {
+            token[i] = (t as usize % d.vocab) as i32;
+        }
+        let pos = self.pos.clone();
+        let (logits, new_kv) = self
+            .exe
+            .decode_step(&token, &pos, &self.pool, &self.tables)
+            .expect("decode failed");
+        // Write each slot's new KV row and advance.
+        let kv_per_seq = self.kv_row;
+        for slot in 0..b.min(last_tokens.len()) {
+            let row = new_kv[slot * kv_per_seq..(slot + 1) * kv_per_seq].to_vec();
+            let p = self.pos[slot] as usize;
+            if p < d.max_blocks * d.block_size {
+                self.write_kv(slot, p, &row);
+                self.pos[slot] += 1;
+            }
+        }
+        (0..last_tokens.len())
+            .map(|i| {
+                let slot = i.min(b - 1);
+                Executor::argmax(&logits[slot * d.vocab..(slot + 1) * d.vocab]) as u32
+            })
+            .collect()
+    }
+
+    fn kv_bytes_per_token(&self) -> u64 {
+        (self.kv_row * 4) as u64
+    }
+}

@@ -1,0 +1,153 @@
+//! Artifact metadata: model config, parameter manifest and golden vectors
+//! written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub scale: f32,
+    pub offset: u64,
+}
+
+impl ParamEntry {
+    /// Element count.
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().product::<usize>() as u64
+    }
+}
+
+/// Model dimensions baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub block_size: usize,
+    pub max_blocks: usize,
+    pub num_blocks: usize,
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub param_seed: u64,
+}
+
+/// Parsed `meta.json` (+ paths).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub params: Vec<ParamEntry>,
+}
+
+fn req_u64(j: &Json, k: &str) -> Result<u64> {
+    j.get(k)
+        .and_then(Json::u64)
+        .ok_or_else(|| anyhow!("missing field {k}"))
+}
+
+impl ArtifactMeta {
+    /// Load `meta.json` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let dims = ModelDims {
+            vocab: req_u64(cfg, "vocab")? as usize,
+            d_model: req_u64(cfg, "d_model")? as usize,
+            layers: req_u64(cfg, "layers")? as usize,
+            heads: req_u64(cfg, "heads")? as usize,
+            kv_heads: req_u64(cfg, "kv_heads")? as usize,
+            head_dim: req_u64(cfg, "head_dim")? as usize,
+            block_size: req_u64(cfg, "block_size")? as usize,
+            max_blocks: req_u64(cfg, "max_blocks")? as usize,
+            num_blocks: req_u64(cfg, "num_blocks")? as usize,
+            batch: req_u64(cfg, "batch")? as usize,
+            prefill_len: req_u64(cfg, "prefill_len")? as usize,
+            param_seed: req_u64(cfg, "param_seed")?,
+        };
+        let params = j
+            .get("param_manifest")
+            .and_then(Json::arr)
+            .ok_or_else(|| anyhow!("missing param_manifest"))?
+            .iter()
+            .map(|e| -> Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: e
+                        .get("name")
+                        .and_then(Json::str)
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: e
+                        .get("shape")
+                        .and_then(Json::arr)
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.u64().unwrap_or(0) as usize)
+                        .collect(),
+                    scale: e
+                        .get("scale")
+                        .and_then(Json::num)
+                        .ok_or_else(|| anyhow!("param scale"))? as f32,
+                    offset: req_u64(e, "offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta { dir, dims, params })
+    }
+
+    /// Path of one HLO artifact.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load the golden vectors.
+    pub fn goldens(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.dir.join("golden.json"))?;
+        Json::parse(&text).map_err(|e| anyhow!("golden.json: {e}"))
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> u64 {
+        self.params.iter().map(ParamEntry::numel).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_meta_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.dims.vocab, 16384);
+        assert_eq!(m.dims.layers, 10);
+        // embed + 10×8 + ln_f + unembed
+        assert_eq!(m.params.len(), 1 + 10 * 8 + 2);
+        assert!(m.num_params() > 40_000_000);
+        // Manifest offsets dense & monotone.
+        for w in m.params.windows(2) {
+            assert_eq!(w[1].offset, w[0].offset + w[0].numel());
+        }
+        assert!(m.hlo_path("decode_step").exists());
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (built once by
+//! `make artifacts` from the JAX/Pallas layers) and executes them on the
+//! request path. Python is never invoked at runtime.
+//!
+//! - [`meta`]: parses `artifacts/meta.json` / `golden.json`.
+//! - [`params`]: regenerates the model weights counter-based (bit-identical
+//!   to `python/compile/model.py`), avoiding a 220 MB params file.
+//! - [`executor`]: PJRT CPU client — `HloModuleProto::from_text_file` →
+//!   compile → execute, with parameter buffers uploaded once and reused.
+//! - [`backend`]: [`crate::coordinator::server::ModelBackend`] over the
+//!   compiled prefill/decode executables + a paged KV pool.
+
+pub mod backend;
+pub mod executor;
+pub mod meta;
+pub mod params;
+pub mod tokenizer;
+
+pub use backend::PjrtBackend;
+pub use executor::Executor;
+pub use meta::ArtifactMeta;

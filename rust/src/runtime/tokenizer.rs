@@ -1,0 +1,106 @@
+//! Toy byte-level tokenizer for the real serving path: deterministic,
+//! reversible, vocabulary-bounded. Serving benchmarks use synthetic token
+//! streams; this gives the end-to-end example a real text→tokens→text
+//! loop without shipping a BPE model.
+//!
+//! Scheme: bytes map to ids 0..256; frequent ASCII bigrams get merged ids
+//! 256..256+N via a fixed merge table (a miniature, deterministic "BPE").
+
+/// Fixed bigram merge table (most common English bigrams).
+const MERGES: &[&[u8; 2]] = &[
+    b"th", b"he", b"in", b"er", b"an", b"re", b"on", b"at", b"en", b"nd",
+    b"ti", b"es", b"or", b"te", b"of", b"ed", b"is", b"it", b"al", b"ar",
+    b"st", b"to", b"nt", b"ng", b"se", b"ha", b"as", b"ou", b"io", b"le",
+];
+
+/// Byte-level tokenizer with fixed bigram merges.
+#[derive(Debug, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    /// Vocabulary size (bytes + merges).
+    pub fn vocab(&self) -> u32 {
+        256 + MERGES.len() as u32
+    }
+
+    /// Encode text to token ids (greedy left-to-right bigram merge).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let b = text.as_bytes();
+        let mut out = Vec::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            if i + 1 < b.len() {
+                if let Some(m) = MERGES
+                    .iter()
+                    .position(|mm| mm[0] == b[i] && mm[1] == b[i + 1])
+                {
+                    out.push(256 + m as u32);
+                    i += 2;
+                    continue;
+                }
+            }
+            out.push(b[i] as u32);
+            i += 1;
+        }
+        out
+    }
+
+    /// Decode token ids back to text (lossy only for invalid UTF-8).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(tokens.len() * 2);
+        for &t in tokens {
+            if t < 256 {
+                bytes.push(t as u8);
+            } else if let Some(m) = MERGES.get((t - 256) as usize) {
+                bytes.extend_from_slice(&m[..]);
+            }
+            // Unknown ids (model samples beyond vocab) are dropped.
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer;
+        for s in [
+            "the rain in spain",
+            "DMA engines overlap copies",
+            "hello, world! 123",
+        ] {
+            assert_eq!(tk.decode(&tk.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let tk = Tokenizer;
+        let toks = tk.encode("the");
+        // "th" merges, "e" stays: 2 tokens, not 3.
+        assert_eq!(toks.len(), 2);
+        assert!(toks[0] >= 256);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let tk = Tokenizer;
+        let s = "héllo ≥ wörld";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_ids_dropped() {
+        let tk = Tokenizer;
+        assert_eq!(tk.decode(&[72, 105, 9999]), "Hi");
+    }
+
+    #[test]
+    fn vocab_bound() {
+        let tk = Tokenizer;
+        assert!(tk.encode("any text at all").iter().all(|&t| t < tk.vocab()));
+    }
+}

@@ -1,0 +1,45 @@
+//! Simulated time: integer nanoseconds.
+
+/// Simulation timestamp / duration in nanoseconds.
+pub type SimTime = u64;
+
+/// Convert a (possibly fractional) nanosecond count to [`SimTime`], rounding.
+pub fn ns(x: f64) -> SimTime {
+    debug_assert!(x >= 0.0, "negative duration {x}");
+    x.round() as SimTime
+}
+
+/// Microseconds → [`SimTime`].
+pub fn us(x: f64) -> SimTime {
+    ns(x * 1e3)
+}
+
+/// Milliseconds → [`SimTime`].
+pub fn ms(x: f64) -> SimTime {
+    ns(x * 1e6)
+}
+
+/// [`SimTime`] → microseconds as f64 (for reporting).
+pub fn to_us(t: SimTime) -> f64 {
+    t as f64 / 1e3
+}
+
+/// [`SimTime`] → milliseconds as f64 (for reporting).
+pub fn to_ms(t: SimTime) -> f64 {
+    t as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(ns(1.4), 1);
+        assert_eq!(ns(1.6), 2);
+        assert_eq!(us(1.0), 1_000);
+        assert_eq!(ms(2.0), 2_000_000);
+        assert_eq!(to_us(1_500), 1.5);
+        assert_eq!(to_ms(2_500_000), 2.5);
+    }
+}

@@ -1,0 +1,250 @@
+//! DMA command set of the MI300X sDMA engines as used by the paper:
+//! vanilla `Copy`, the two novel data-move commands `Bcst` (§4.2) and
+//! `Swap` (§4.3), the `Poll` command that enables prelaunch (§4.5),
+//! `Atomic` signal updates for synchronization, and `Timestamp` (the
+//! instrumentation command used for the Fig. 7 benchmarking methodology).
+
+use super::signal::SignalId;
+use super::topology::NodeId;
+
+/// A (node, offset) memory address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Addr {
+    pub node: NodeId,
+    pub offset: u64,
+}
+
+impl Addr {
+    /// Convenience constructor.
+    pub fn new(node: NodeId, offset: u64) -> Self {
+        Addr { node, offset }
+    }
+}
+
+/// Condition for the `Poll` command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollCond {
+    /// Proceed once `signal >= value`.
+    Gte(i64),
+    /// Proceed once `signal == value`.
+    Eq(i64),
+}
+
+impl PollCond {
+    /// Evaluate against a current signal value.
+    pub fn satisfied(&self, v: i64) -> bool {
+        match *self {
+            PollCond::Gte(t) => v >= t,
+            PollCond::Eq(t) => v == t,
+        }
+    }
+}
+
+/// Atomic op for the sync phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomicOp {
+    /// `signal += delta` (delta may be negative, i.e. decrement).
+    Add(i64),
+    /// `signal = value`.
+    Set(i64),
+}
+
+/// One sDMA queue entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Command {
+    /// Vanilla copy: single source → single destination.
+    Copy { src: Addr, dst: Addr, len: u64 },
+    /// Broadcast: single source → two destinations, source read once.
+    Bcst {
+        src: Addr,
+        dst0: Addr,
+        dst1: Addr,
+        len: u64,
+    },
+    /// Swap the contents of two ranges in place (no temporary buffer).
+    Swap { a: Addr, b: Addr, len: u64 },
+    /// Park the engine until `cond` holds on `signal` (prelaunch trigger /
+    /// dependency gate).
+    Poll { signal: SignalId, cond: PollCond },
+    /// Atomic signal update; acts as a completion fence for all prior
+    /// data-move commands on the same engine.
+    Atomic { signal: SignalId, op: AtomicOp },
+    /// Record the engine-local time into trace slot `slot` (benchmarking).
+    Timestamp { slot: u32 },
+}
+
+impl Command {
+    /// Bytes this command moves over links (swap moves `len` both ways).
+    pub fn wire_bytes(&self) -> u64 {
+        match *self {
+            Command::Copy { len, .. } => len,
+            Command::Bcst { len, .. } => 2 * len,
+            Command::Swap { len, .. } => 2 * len,
+            _ => 0,
+        }
+    }
+
+    /// Is this a data-move command (participates in b2b pipelining and
+    /// hazard analysis)?
+    pub fn is_data_move(&self) -> bool {
+        matches!(
+            self,
+            Command::Copy { .. } | Command::Bcst { .. } | Command::Swap { .. }
+        )
+    }
+
+    /// Ranges this command reads: (addr, len).
+    pub fn reads(&self) -> Vec<(Addr, u64)> {
+        match *self {
+            Command::Copy { src, len, .. } => vec![(src, len)],
+            Command::Bcst { src, len, .. } => vec![(src, len)],
+            Command::Swap { a, b, len } => vec![(a, len), (b, len)],
+            _ => vec![],
+        }
+    }
+
+    /// Ranges this command writes: (addr, len).
+    pub fn writes(&self) -> Vec<(Addr, u64)> {
+        match *self {
+            Command::Copy { dst, len, .. } => vec![(dst, len)],
+            Command::Bcst {
+                dst0, dst1, len, ..
+            } => vec![(dst0, len), (dst1, len)],
+            Command::Swap { a, b, len } => vec![(a, len), (b, len)],
+            _ => vec![],
+        }
+    }
+}
+
+/// Do two (addr, len) ranges overlap?
+pub fn ranges_overlap(a: (Addr, u64), b: (Addr, u64)) -> bool {
+    a.0.node == b.0.node && a.0.offset < b.0.offset + b.1 && b.0.offset < a.0.offset + a.1
+}
+
+/// Allocation-free range extraction for the hot-path hazard check:
+/// fills `buf` and returns (n_reads, n_writes) where reads occupy
+/// `buf[..n_reads]` and writes `buf[2..2 + n_writes]`.
+#[inline]
+fn ranges_into(cmd: &Command, buf: &mut [(Addr, u64); 4]) -> (usize, usize) {
+    match *cmd {
+        Command::Copy { src, dst, len } => {
+            buf[0] = (src, len);
+            buf[2] = (dst, len);
+            (1, 1)
+        }
+        Command::Bcst {
+            src,
+            dst0,
+            dst1,
+            len,
+        } => {
+            buf[0] = (src, len);
+            buf[2] = (dst0, len);
+            buf[3] = (dst1, len);
+            (1, 2)
+        }
+        Command::Swap { a, b, len } => {
+            buf[0] = (a, len);
+            buf[1] = (b, len);
+            buf[2] = (a, len);
+            buf[3] = (b, len);
+            (2, 2)
+        }
+        _ => (0, 0),
+    }
+}
+
+/// Data hazard between two data-move commands: RAW, WAR or WAW on any range.
+/// The b2b overlap feature (§4.4) may only pipeline hazard-free commands.
+/// (Hot path: runs per in-flight transfer per issued command — no allocs.)
+pub fn hazard(first: &Command, second: &Command) -> bool {
+    let mut fb = [(Addr::new(crate::sim::topology::NodeId::Cpu, 0), 0); 4];
+    let mut sb = fb;
+    let (fr, fw) = ranges_into(first, &mut fb);
+    let (sr, sw) = ranges_into(second, &mut sb);
+    // RAW: second reads what first writes.
+    for w in &fb[2..2 + fw] {
+        for r in &sb[..sr] {
+            if ranges_overlap(*w, *r) {
+                return true;
+            }
+        }
+    }
+    // WAR: second writes what first reads; WAW: both write.
+    for sw_r in &sb[2..2 + sw] {
+        for fr_r in fb[..fr].iter().chain(fb[2..2 + fw].iter()) {
+            if ranges_overlap(*sw_r, *fr_r) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::topology::NodeId::*;
+
+    fn copy(src: u64, dst: u64, len: u64) -> Command {
+        Command::Copy {
+            src: Addr::new(Gpu(0), src),
+            dst: Addr::new(Gpu(1), dst),
+            len,
+        }
+    }
+
+    #[test]
+    fn wire_bytes_by_kind() {
+        assert_eq!(copy(0, 0, 100).wire_bytes(), 100);
+        let b = Command::Bcst {
+            src: Addr::new(Gpu(0), 0),
+            dst0: Addr::new(Gpu(1), 0),
+            dst1: Addr::new(Gpu(2), 0),
+            len: 10,
+        };
+        assert_eq!(b.wire_bytes(), 20);
+        let s = Command::Swap {
+            a: Addr::new(Gpu(0), 0),
+            b: Addr::new(Gpu(1), 0),
+            len: 8,
+        };
+        assert_eq!(s.wire_bytes(), 16);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = (Addr::new(Gpu(0), 0), 10u64);
+        let b = (Addr::new(Gpu(0), 9), 5u64);
+        let c = (Addr::new(Gpu(0), 10), 5u64);
+        let d = (Addr::new(Gpu(1), 0), 100u64);
+        assert!(ranges_overlap(a, b));
+        assert!(!ranges_overlap(a, c)); // adjacent, not overlapping
+        assert!(!ranges_overlap(a, d)); // different node
+    }
+
+    #[test]
+    fn hazards() {
+        // Independent copies: no hazard (b2b can pipeline them).
+        assert!(!hazard(&copy(0, 0, 64), &copy(64, 64, 64)));
+        // RAW: second reads the first's destination.
+        let w = copy(0, 100, 64);
+        let r = Command::Copy {
+            src: Addr::new(Gpu(1), 100),
+            dst: Addr::new(Gpu(2), 0),
+            len: 64,
+        };
+        assert!(hazard(&w, &r));
+        // WAW: same destination.
+        assert!(hazard(&copy(0, 0, 64), &copy(128, 32, 64)));
+    }
+
+    #[test]
+    fn poll_conditions() {
+        assert!(PollCond::Gte(3).satisfied(3));
+        assert!(PollCond::Gte(3).satisfied(9));
+        assert!(!PollCond::Gte(3).satisfied(2));
+        assert!(PollCond::Eq(0).satisfied(0));
+        assert!(!PollCond::Eq(0).satisfied(1));
+    }
+}

@@ -1,0 +1,175 @@
+//! sDMA engine state.
+//!
+//! Each engine owns one system-memory request queue. The host writes
+//! commands into the queue ([`EngineState::pending`]) and rings the doorbell;
+//! the engine wakes, fetches, then issues commands in order. The engine
+//! front-end (decode) and data path are separate resources: the next
+//! command's decode overlaps the previous command's data phase — this *is*
+//! the back-to-back overlap feature of §4.4 — but data phases serialize
+//! through the engine, and a data hazard (or an `Atomic` fence) forces the
+//! issue to wait for prior completions.
+
+use std::collections::VecDeque;
+
+use super::clock::SimTime;
+use super::command::Command;
+use super::signal::SignalId;
+use super::command::PollCond;
+
+/// Engine handle: (gpu, engine index on that gpu).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EngineId {
+    pub gpu: u8,
+    pub idx: u8,
+}
+
+impl std::fmt::Display for EngineId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gpu{}.sdma{}", self.gpu, self.idx)
+    }
+}
+
+/// Execution state of one engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineRunState {
+    /// Nothing fetched, waiting for a doorbell.
+    Idle,
+    /// Doorbell received, waking/fetching.
+    Waking,
+    /// Actively issuing commands.
+    Running,
+    /// Parked on a `Poll` command.
+    Polling { signal: SignalId, cond: PollCond },
+}
+
+/// An in-flight data transfer (for fences and hazard waits).
+#[derive(Debug, Clone)]
+pub struct Inflight {
+    pub cmd_seq: u64,
+    pub done_at: SimTime,
+    /// The command, kept for hazard range checks.
+    pub cmd: Command,
+}
+
+/// Full per-engine simulation state.
+#[derive(Debug)]
+pub struct EngineState {
+    pub id: EngineId,
+    /// Commands written by the host but not yet made visible by a doorbell.
+    pub pending: Vec<Command>,
+    /// Fetched commands awaiting issue.
+    pub fetched: VecDeque<Command>,
+    pub run_state: EngineRunState,
+    /// When the engine front-end (decode) is next free.
+    pub issue_free_at: SimTime,
+    /// When the engine data path is next free (data phases serialize).
+    pub data_free_at: SimTime,
+    /// Transfers issued but not yet completed.
+    pub inflight: Vec<Inflight>,
+    /// Completion time of the last data command issued (fence target).
+    pub last_data_done: SimTime,
+    /// Monotone per-engine command counter (trace key).
+    pub cmd_seq: u64,
+    /// Accumulated busy nanoseconds (power accounting).
+    pub busy_ns: u64,
+    /// Total commands executed (metrics).
+    pub commands_executed: u64,
+    /// Fault injection: if set, the engine stops issuing at this time.
+    pub stall_at: Option<SimTime>,
+}
+
+impl EngineState {
+    /// Fresh idle engine.
+    pub fn new(id: EngineId) -> Self {
+        EngineState {
+            id,
+            pending: Vec::new(),
+            fetched: VecDeque::new(),
+            run_state: EngineRunState::Idle,
+            issue_free_at: 0,
+            data_free_at: 0,
+            inflight: Vec::new(),
+            last_data_done: 0,
+            cmd_seq: 0,
+            busy_ns: 0,
+            commands_executed: 0,
+            stall_at: None,
+        }
+    }
+
+    /// Drop completed in-flight entries at time `now`.
+    pub fn retire_inflight(&mut self, now: SimTime) {
+        self.inflight.retain(|f| f.done_at > now);
+    }
+
+    /// Earliest time `cmd` may start its data phase given hazards with
+    /// in-flight transfers (returns `now` when hazard-free).
+    pub fn hazard_clear_at(&self, cmd: &Command, now: SimTime) -> SimTime {
+        let mut t = now;
+        for f in &self.inflight {
+            if f.done_at > t && super::command::hazard(&f.cmd, cmd) {
+                t = f.done_at;
+            }
+        }
+        t
+    }
+
+    /// True if the engine has nothing left to do.
+    pub fn quiescent(&self) -> bool {
+        self.pending.is_empty() && self.fetched.is_empty() && self.inflight.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::command::Addr;
+    use crate::sim::topology::NodeId;
+
+    fn mkcopy(dst_off: u64) -> Command {
+        Command::Copy {
+            src: Addr::new(NodeId::Gpu(0), 0),
+            dst: Addr::new(NodeId::Gpu(1), dst_off),
+            len: 64,
+        }
+    }
+
+    #[test]
+    fn hazard_clear_waits_for_conflict() {
+        let mut e = EngineState::new(EngineId { gpu: 0, idx: 0 });
+        e.inflight.push(Inflight {
+            cmd_seq: 0,
+            done_at: 100,
+            cmd: mkcopy(0),
+        });
+        // A copy whose source is the in-flight copy's destination must wait.
+        let dependent = Command::Copy {
+            src: Addr::new(NodeId::Gpu(1), 0),
+            dst: Addr::new(NodeId::Gpu(2), 0),
+            len: 64,
+        };
+        assert_eq!(e.hazard_clear_at(&dependent, 10), 100);
+        // An unrelated copy does not wait.
+        let indep = Command::Copy {
+            src: Addr::new(NodeId::Gpu(0), 4096),
+            dst: Addr::new(NodeId::Gpu(2), 4096),
+            len: 64,
+        };
+        assert_eq!(e.hazard_clear_at(&indep, 10), 10);
+    }
+
+    #[test]
+    fn retire_drops_done() {
+        let mut e = EngineState::new(EngineId { gpu: 0, idx: 0 });
+        for t in [50, 150] {
+            e.inflight.push(Inflight {
+                cmd_seq: 0,
+                done_at: t,
+                cmd: mkcopy(t),
+            });
+        }
+        e.retire_inflight(100);
+        assert_eq!(e.inflight.len(), 1);
+        assert!(e.quiescent() == false);
+    }
+}

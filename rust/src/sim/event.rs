@@ -1,0 +1,123 @@
+//! Event heap for the DES: min-ordered by (time, sequence number) so
+//! same-time events fire in insertion order (deterministic replay).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::clock::SimTime;
+use super::command::AtomicOp;
+use super::engine::EngineId;
+use super::host::HostId;
+use super::signal::SignalId;
+
+/// Events driving the simulation forward.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// A host program resumes at its next op.
+    HostResume(HostId),
+    /// Doorbell for an engine was rung (commands became visible).
+    Doorbell(EngineId),
+    /// Engine finished waking/fetching and can process commands.
+    EngineReady(EngineId),
+    /// Engine front-end free; try to issue the next command.
+    EngineAdvance(EngineId),
+    /// A signal value mutates at this instant; wakes host waiters and
+    /// engine pollers whose condition now holds. (Signal values change at
+    /// the *event's* time, never earlier, preserving global time order.)
+    SignalUpdate { signal: SignalId, op: AtomicOp },
+}
+
+#[derive(Debug, PartialEq, Eq)]
+struct Entry {
+    at: SimTime,
+    seq: u64,
+    ev: Event,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-heap of timestamped events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// Schedule `ev` at absolute time `at`.
+    pub fn push(&mut self, at: SimTime, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(Entry {
+            at,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        self.heap.pop().map(|Reverse(e)| (e.at, e.ev))
+    }
+
+    /// Earliest scheduled time, if any.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.at)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wake(i: u32) -> Event {
+        Event::SignalUpdate {
+            signal: SignalId(i),
+            op: AtomicOp::Add(1),
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::default();
+        q.push(30, wake(0));
+        q.push(10, wake(1));
+        q.push(20, wake(2));
+        assert_eq!(q.pop().unwrap().0, 10);
+        assert_eq!(q.pop().unwrap().0, 20);
+        assert_eq!(q.pop().unwrap().0, 30);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::default();
+        q.push(5, wake(1));
+        q.push(5, wake(2));
+        match q.pop().unwrap().1 {
+            Event::SignalUpdate { signal, .. } => assert_eq!(signal, SignalId(1)),
+            _ => unreachable!(),
+        }
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+        assert_eq!(q.peek_time(), Some(5));
+    }
+}

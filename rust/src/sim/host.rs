@@ -1,0 +1,103 @@
+//! Host (CPU) side of a DMA offload: rank programs as scripts of ops.
+//!
+//! Each collective rank / serving thread is a `HostProgram` — a straight-line
+//! script of [`HostOp`]s executed against a host-time cursor. `WaitSignal`
+//! blocks the program; the sim core resumes it when the signal lands.
+//! API styles ([`ApiKind`]) carry the paper's cost split: raw ROCt queue
+//! writes (collective prototypes, §5.2.1), `hipMemcpyAsync` per-copy calls
+//! (baseline KV fetch, §5.3.1), and `hipMemcpyBatchAsync` batch calls
+//! (optimized KV fetch, §6).
+
+use super::command::Command;
+use super::engine::EngineId;
+use super::signal::SignalId;
+
+/// Host program handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HostId(pub u32);
+
+/// How commands are conveyed to the runtime (determines control cost).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApiKind {
+    /// User-level ROCt queue writes (the paper's collective prototypes).
+    Raw,
+    /// Raw queue writes built as one batch (shared prologue/epilogue).
+    RawBatched,
+    /// One full `hipMemcpyAsync` per copy (heavy: dependency resolution,
+    /// coherency setup/teardown per call).
+    HipPerCopy,
+    /// One `hipMemcpyBatchAsync` for many copies.
+    HipBatched,
+}
+
+/// One step of a host program.
+#[derive(Debug, Clone)]
+pub enum HostOp {
+    /// Create `cmds` in `engine`'s queue (visible only after a doorbell).
+    CreateCommands {
+        engine: EngineId,
+        cmds: Vec<Command>,
+        api: ApiKind,
+    },
+    /// Ring `engine`'s doorbell: make written commands visible + wake it.
+    RingDoorbell { engine: EngineId },
+    /// Block until `signal >= at_least`, then pay the observe cost.
+    WaitSignal { signal: SignalId, at_least: i64 },
+    /// Host store to a signal (prelaunch trigger, §4.5).
+    SetSignal { signal: SignalId, value: i64 },
+    /// Spend fixed host time (models framework overhead around offloads).
+    Delay { ns: u64 },
+    /// Record the current host time under `name` (measurement marker).
+    Mark { name: &'static str },
+}
+
+/// Host program execution state.
+#[derive(Debug)]
+pub struct HostProgram {
+    pub id: HostId,
+    pub script: Vec<HostOp>,
+    pub pc: usize,
+    /// Host-local clock (the program's own time cursor).
+    pub now: u64,
+    /// Set when blocked on a signal.
+    pub waiting: Option<(SignalId, i64)>,
+    /// Marker name → host time.
+    pub marks: Vec<(&'static str, u64)>,
+    /// Completed?
+    pub done: bool,
+}
+
+impl HostProgram {
+    /// New program starting at host time `start`.
+    pub fn new(id: HostId, script: Vec<HostOp>, start: u64) -> Self {
+        HostProgram {
+            id,
+            script,
+            pc: 0,
+            now: start,
+            waiting: None,
+            marks: Vec::new(),
+            done: false,
+        }
+    }
+
+    /// Time recorded for marker `name` (first occurrence).
+    pub fn mark(&self, name: &str) -> Option<u64> {
+        self.marks.iter().find(|(n, _)| *n == name).map(|&(_, t)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_lookup() {
+        let mut p = HostProgram::new(HostId(0), vec![], 0);
+        p.marks.push(("start", 10));
+        p.marks.push(("end", 99));
+        assert_eq!(p.mark("start"), Some(10));
+        assert_eq!(p.mark("end"), Some(99));
+        assert_eq!(p.mark("nope"), None);
+    }
+}

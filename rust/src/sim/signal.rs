@@ -1,0 +1,69 @@
+//! HSA-style 64-bit completion signals (paper §2.2, §7).
+//!
+//! DMA engines notify the CPU (and, via `Poll`, other engines) through
+//! atomic updates to 64-bit memory locations. Hosts wait on a signal
+//! reaching a target value; engines park on a `Poll` condition.
+
+/// Signal handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SignalId(pub u32);
+
+/// Signal table: current values (waiters are managed by the sim core so the
+/// table itself stays trivially borrowable).
+#[derive(Debug, Default)]
+pub struct SignalTable {
+    values: Vec<i64>,
+}
+
+impl SignalTable {
+    /// Allocate a new signal with initial value.
+    pub fn alloc(&mut self, init: i64) -> SignalId {
+        self.values.push(init);
+        SignalId(self.values.len() as u32 - 1)
+    }
+
+    /// Current value.
+    pub fn get(&self, id: SignalId) -> i64 {
+        self.values[id.0 as usize]
+    }
+
+    /// Set to an absolute value; returns the new value.
+    pub fn set(&mut self, id: SignalId, v: i64) -> i64 {
+        self.values[id.0 as usize] = v;
+        v
+    }
+
+    /// Add (may be negative); returns the new value.
+    pub fn add(&mut self, id: SignalId, delta: i64) -> i64 {
+        let v = &mut self.values[id.0 as usize];
+        *v += delta;
+        *v
+    }
+
+    /// Number of allocated signals.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True if no signal has been allocated.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_set_add() {
+        let mut t = SignalTable::default();
+        let a = t.alloc(0);
+        let b = t.alloc(5);
+        assert_eq!(t.get(a), 0);
+        assert_eq!(t.add(a, 3), 3);
+        assert_eq!(t.add(a, -1), 2);
+        assert_eq!(t.set(b, 10), 10);
+        assert_eq!(t.len(), 2);
+    }
+}

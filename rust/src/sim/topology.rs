@@ -1,0 +1,204 @@
+//! Platform topology: nodes (8 GPUs + CPU), directed links, engines.
+//!
+//! Mirrors the MI300X Infinity Platform (paper §2.2): every GPU pair is
+//! connected by an AMD Infinity Fabric (xGMI) link at 64 GB/s per direction;
+//! each GPU connects to the CPU over PCIe Gen 5 at 64 GB/s per direction;
+//! each GPU carries 16 sDMA engines on its IO dies.
+
+use std::collections::HashMap;
+
+/// A device that owns memory: the host CPU or one of the GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    /// Host CPU (DRAM).
+    Cpu,
+    /// GPU by platform index.
+    Gpu(u8),
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeId::Cpu => write!(f, "cpu"),
+            NodeId::Gpu(g) => write!(f, "gpu{g}"),
+        }
+    }
+}
+
+/// Kind of interconnect a link uses (affects bandwidth + payload efficiency).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// GPU↔GPU Infinity Fabric.
+    Xgmi,
+    /// GPU↔CPU PCIe Gen 5.
+    Pcie,
+}
+
+/// Dense link index (see [`Topology::link_index`]).
+pub type LinkIdx = usize;
+
+/// A directed link between two nodes.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: LinkKind,
+    /// Raw bandwidth in bytes/ns (= GB/s / 1.0, since 1 GB/s ≈ 1 byte/ns
+    /// with GB = 10^9; we use the paper's 64 GB/s marketing figure).
+    pub bw_bytes_per_ns: f64,
+}
+
+/// Static platform description.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub num_gpus: u8,
+    pub engines_per_gpu: u8,
+    links: Vec<Link>,
+    index: HashMap<(NodeId, NodeId), LinkIdx>,
+}
+
+impl Topology {
+    /// The paper's system: 8 fully-connected MI300X GPUs, 16 sDMA engines
+    /// each, xGMI 64 GB/s/dir between every GPU pair, PCIe Gen5 64 GB/s/dir
+    /// between every GPU and the CPU.
+    pub fn mi300x_platform() -> Self {
+        Self::custom(8, 16, 64.0, 64.0)
+    }
+
+    /// Build a custom full-connect topology (used by property tests to vary
+    /// GPU counts). Bandwidths in GB/s per direction.
+    pub fn custom(num_gpus: u8, engines_per_gpu: u8, xgmi_gbps: f64, pcie_gbps: f64) -> Self {
+        assert!(num_gpus >= 1, "need at least one GPU");
+        assert!(engines_per_gpu >= 1);
+        let mut links = Vec::new();
+        let mut index = HashMap::new();
+        let add = |links: &mut Vec<Link>,
+                       index: &mut HashMap<(NodeId, NodeId), LinkIdx>,
+                       src: NodeId,
+                       dst: NodeId,
+                       kind: LinkKind,
+                       gbps: f64| {
+            index.insert((src, dst), links.len());
+            links.push(Link {
+                src,
+                dst,
+                kind,
+                bw_bytes_per_ns: gbps, // 1 GB/s == 1 byte/ns
+            });
+        };
+        for i in 0..num_gpus {
+            for j in 0..num_gpus {
+                if i != j {
+                    add(
+                        &mut links,
+                        &mut index,
+                        NodeId::Gpu(i),
+                        NodeId::Gpu(j),
+                        LinkKind::Xgmi,
+                        xgmi_gbps,
+                    );
+                }
+            }
+            add(
+                &mut links,
+                &mut index,
+                NodeId::Gpu(i),
+                NodeId::Cpu,
+                LinkKind::Pcie,
+                pcie_gbps,
+            );
+            add(
+                &mut links,
+                &mut index,
+                NodeId::Cpu,
+                NodeId::Gpu(i),
+                LinkKind::Pcie,
+                pcie_gbps,
+            );
+        }
+        Topology {
+            num_gpus,
+            engines_per_gpu,
+            links,
+            index,
+        }
+    }
+
+    /// Directed link from `src` to `dst`. Panics if the pair is not
+    /// connected (same node, or unknown node).
+    pub fn link_index(&self, src: NodeId, dst: NodeId) -> LinkIdx {
+        *self
+            .index
+            .get(&(src, dst))
+            .unwrap_or_else(|| panic!("no link {src} -> {dst}"))
+    }
+
+    /// Link metadata by dense index.
+    pub fn link(&self, idx: LinkIdx) -> &Link {
+        &self.links[idx]
+    }
+
+    /// Total number of directed links.
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// All GPU peers of `gpu` (everything but itself).
+    pub fn peers(&self, gpu: u8) -> Vec<u8> {
+        (0..self.num_gpus).filter(|&p| p != gpu).collect()
+    }
+
+    /// Aggregate per-GPU outbound GPU↔GPU bandwidth in bytes/ns
+    /// (7 × 64 = 448 GB/s on the paper's platform).
+    pub fn gpu_fanout_bw(&self) -> f64 {
+        let n = self.num_gpus as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let l = self.link_index(NodeId::Gpu(0), NodeId::Gpu(1));
+        (n - 1.0) * self.links[l].bw_bytes_per_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi300x_shape() {
+        let t = Topology::mi300x_platform();
+        assert_eq!(t.num_gpus, 8);
+        assert_eq!(t.engines_per_gpu, 16);
+        // 8*7 xGMI + 2*8 PCIe = 72 directed links
+        assert_eq!(t.num_links(), 72);
+        assert_eq!(t.peers(3).len(), 7);
+        assert!(!t.peers(3).contains(&3));
+        // 448 GB/s fan-out (paper §2.2)
+        assert!((t.gpu_fanout_bw() - 448.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn links_are_directed_and_typed() {
+        let t = Topology::mi300x_platform();
+        let ab = t.link_index(NodeId::Gpu(0), NodeId::Gpu(1));
+        let ba = t.link_index(NodeId::Gpu(1), NodeId::Gpu(0));
+        assert_ne!(ab, ba);
+        assert_eq!(t.link(ab).kind, LinkKind::Xgmi);
+        let up = t.link_index(NodeId::Gpu(0), NodeId::Cpu);
+        assert_eq!(t.link(up).kind, LinkKind::Pcie);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_link_panics() {
+        let t = Topology::mi300x_platform();
+        t.link_index(NodeId::Gpu(0), NodeId::Gpu(0));
+    }
+
+    #[test]
+    fn custom_counts() {
+        let t = Topology::custom(4, 8, 50.0, 32.0);
+        assert_eq!(t.num_links(), 4 * 3 + 8);
+        assert!((t.gpu_fanout_bw() - 150.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,93 @@
+//! Per-command phase tracing — the simulator's equivalent of the paper's
+//! timestamp-instrumented ROCt microbenchmark (§3.2.1), used to regenerate
+//! the Fig. 7 latency breakdown.
+
+use super::clock::SimTime;
+use super::engine::EngineId;
+
+/// The four phases of a DMA offload (paper Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// CPU creates + enqueues commands.
+    Control,
+    /// Doorbell ring → engine wake/fetch.
+    Schedule,
+    /// Decode + address translation + data movement.
+    Copy,
+    /// Atomic signal update + host observe.
+    Sync,
+}
+
+/// One recorded span.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub engine: Option<EngineId>,
+    pub cmd_seq: u64,
+    pub phase: Phase,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// Phase-span recorder (enabled per `SimConfig::trace`).
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+    /// Timestamp-command slots (engine-recorded times).
+    pub stamps: Vec<(u32, SimTime)>,
+}
+
+impl Trace {
+    /// Record a phase span.
+    pub fn record(
+        &mut self,
+        engine: Option<EngineId>,
+        cmd_seq: u64,
+        phase: Phase,
+        start: SimTime,
+        end: SimTime,
+    ) {
+        debug_assert!(end >= start);
+        self.spans.push(Span {
+            engine,
+            cmd_seq,
+            phase,
+            start,
+            end,
+        });
+    }
+
+    /// Total duration recorded for `phase` (summed over spans).
+    pub fn phase_total(&self, phase: Phase) -> SimTime {
+        self.spans
+            .iter()
+            .filter(|s| s.phase == phase)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Per-phase totals in Fig. 6 order: [control, schedule, copy, sync].
+    pub fn breakdown(&self) -> [SimTime; 4] {
+        [
+            self.phase_total(Phase::Control),
+            self.phase_total(Phase::Schedule),
+            self.phase_total(Phase::Copy),
+            self.phase_total(Phase::Sync),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_by_phase() {
+        let mut t = Trace::default();
+        t.record(None, 0, Phase::Control, 0, 10);
+        t.record(None, 0, Phase::Copy, 10, 110);
+        t.record(None, 1, Phase::Copy, 50, 100);
+        assert_eq!(t.phase_total(Phase::Control), 10);
+        assert_eq!(t.phase_total(Phase::Copy), 150);
+        assert_eq!(t.breakdown(), [10, 0, 150, 0]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Human-friendly byte-size parsing and formatting ("4KB".."4GB"), used by
+//! the CLI sweeps and the figure/table printers. Binary units (KiB semantics)
+//! to match collective-benchmark convention, printed with the paper's K/M/G
+//! labels.
+
+pub const KB: u64 = 1024;
+pub const MB: u64 = 1024 * KB;
+pub const GB: u64 = 1024 * MB;
+
+/// Format a byte count the way collective benchmarks (and the paper's x-axes)
+/// do: `1K`, `512K`, `4M`, `1G`, falling back to raw bytes below 1K.
+pub fn fmt_size(bytes: u64) -> String {
+    if bytes >= GB && bytes % GB == 0 {
+        format!("{}G", bytes / GB)
+    } else if bytes >= MB && bytes % MB == 0 {
+        format!("{}M", bytes / MB)
+    } else if bytes >= KB && bytes % KB == 0 {
+        format!("{}K", bytes / KB)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Parse `"4K"`, `"4KB"`, `"32M"`, `"1G"`, `"123"` (raw bytes). Case-insensitive.
+pub fn parse_size(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_uppercase();
+    let t = t.strip_suffix('B').unwrap_or(&t);
+    let (num, mult) = if let Some(n) = t.strip_suffix('K') {
+        (n, KB)
+    } else if let Some(n) = t.strip_suffix('M') {
+        (n, MB)
+    } else if let Some(n) = t.strip_suffix('G') {
+        (n, GB)
+    } else {
+        (t, 1)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad size: {s:?}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size: {s:?}"));
+    }
+    Ok((v * mult as f64).round() as u64)
+}
+
+/// Geometric sweep of sizes `[lo, hi]` multiplying by `factor` (usually 2).
+pub fn size_sweep(lo: u64, hi: u64, factor: u64) -> Vec<u64> {
+    assert!(factor >= 2 && lo > 0 && lo <= hi);
+    let mut v = Vec::new();
+    let mut s = lo;
+    while s <= hi {
+        v.push(s);
+        match s.checked_mul(factor) {
+            Some(n) => s = n,
+            None => break,
+        }
+    }
+    v
+}
+
+/// Format a duration given in nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for s in ["1K", "4K", "512K", "1M", "32M", "1G", "4G"] {
+            assert_eq!(fmt_size(parse_size(s).unwrap()), s);
+        }
+    }
+
+    #[test]
+    fn parses_suffixed_b() {
+        assert_eq!(parse_size("4KB").unwrap(), 4 * KB);
+        assert_eq!(parse_size("2mb").unwrap(), 2 * MB);
+        assert_eq!(parse_size("100").unwrap(), 100);
+    }
+
+    #[test]
+    fn parse_fractional() {
+        assert_eq!(parse_size("0.5K").unwrap(), 512);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_size("abc").is_err());
+        assert!(parse_size("-4K").is_err());
+    }
+
+    #[test]
+    fn sweep_covers_range() {
+        let v = size_sweep(KB, 4 * GB, 2);
+        assert_eq!(v.first(), Some(&KB));
+        assert_eq!(v.last(), Some(&(4 * GB)));
+        assert_eq!(v.len(), 23);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.500ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

@@ -1,0 +1,97 @@
+//! Tiny CSV writer: every bench emits its figure data under `results/` so
+//! EXPERIMENTS.md numbers can be regenerated and re-plotted.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Accumulates rows then writes a CSV file (creating parent dirs).
+#[derive(Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Csv {
+    /// New CSV with header columns.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Csv {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a data row.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Render to CSV text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|c| escape(c))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let mut c = Csv::new(vec!["size", "us"]);
+        c.row(vec!["1024", "3.5"]);
+        assert_eq!(c.render(), "size,us\n1024,3.5\n");
+    }
+
+    #[test]
+    fn escapes_fields() {
+        let mut c = Csv::new(vec!["a"]);
+        c.row(vec!["x,y"]);
+        c.row(vec!["he said \"hi\""]);
+        let s = c.render();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let p = std::env::temp_dir().join("dma_latte_csv_test/out.csv");
+        let mut c = Csv::new(vec!["k"]);
+        c.row(vec!["v"]);
+        c.write(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "k\nv\n");
+    }
+}

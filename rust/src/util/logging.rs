@@ -1,0 +1,116 @@
+//! Leveled stderr logging with an env-controlled threshold
+//! (`DMA_LATTE_LOG=debug|info|warn|error`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(u8::MAX);
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn threshold() -> u8 {
+    INIT.get_or_init(|| {
+        let lvl = std::env::var("DMA_LATTE_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        THRESHOLD.store(lvl as u8, Ordering::Relaxed);
+    });
+    THRESHOLD.load(Ordering::Relaxed)
+}
+
+/// Override the log threshold programmatically (tests, CLI `-v`).
+pub fn set_level(lvl: Level) {
+    INIT.get_or_init(|| ());
+    THRESHOLD.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// True when `lvl` would currently be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    (lvl as u8) >= threshold()
+}
+
+/// Core log entry point; prefer the `log_*!` macros.
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        eprintln!("[{:5}] {}: {}", lvl.tag(), module, msg);
+    }
+}
+
+/// Log at DEBUG.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+/// Log at INFO.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+/// Log at WARN.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+/// Log at ERROR.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn threshold_filters() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-house utility substrates.
+//!
+//! The offline vendor set lacks `rand`, `proptest`, `criterion`, `clap` and
+//! `serde`, so the small pieces of each that this project needs are built
+//! here from scratch (see DESIGN.md §8 Known deviations).
+
+pub mod bytes;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,114 @@
+//! proptest-lite: a seeded property-test runner.
+//!
+//! The real `proptest` crate is not in the offline vendor set (DESIGN.md §8),
+//! so this provides the part we rely on: run a property over many random
+//! cases, and on failure report the *case seed* so the exact case replays
+//! deterministically (`DMA_LATTE_PROP_SEED=<seed>` reruns just that case).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases (default 64; raise for cheap properties).
+    pub cases: u64,
+    /// Base seed; each case uses `base_seed + case_index`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            base_seed: 0xD31A_1A77E,
+        }
+    }
+}
+
+/// Run `prop` on `cases` seeded RNGs; panic with the replay seed on failure.
+///
+/// The property receives a fresh deterministic [`Rng`] per case and should
+/// draw its inputs from it, asserting internally.
+pub fn run<F: FnMut(&mut Rng)>(name: &str, cfg: Config, mut prop: F) {
+    // Replay mode: run exactly one case with the given seed.
+    if let Ok(s) = std::env::var("DMA_LATTE_PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+            return;
+        }
+    }
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (replay with \
+                 DMA_LATTE_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, prop: F) {
+    run(name, Config::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_replay_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            run(
+                "always-fails",
+                Config {
+                    cases: 3,
+                    base_seed: 123,
+                },
+                |_rng| panic!("boom"),
+            );
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("DMA_LATTE_PROP_SEED=123"), "{msg}");
+    }
+
+    #[test]
+    fn cases_get_distinct_rngs() {
+        let mut seen = std::collections::HashSet::new();
+        run(
+            "distinct",
+            Config {
+                cases: 16,
+                base_seed: 7,
+            },
+            |rng| {
+                seen.insert(rng.next_u64());
+            },
+        );
+        assert!(seen.len() >= 15);
+    }
+}

@@ -1,0 +1,77 @@
+//! Wall-clock micro-bench helper (criterion is not vendored offline).
+//!
+//! Every `rust/benches/*` binary uses [`bench`] for hot-path measurements:
+//! warmup, N timed iterations, mean/median/p99 in nanoseconds.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of a [`bench`] run (all values nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} median  {:>12} mean  {:>12} p99  ({} iters)",
+            self.name,
+            crate::util::bytes::fmt_ns(self.median_ns),
+            crate::util::bytes::fmt_ns(self.mean_ns),
+            crate::util::bytes::fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        median_ns: stats::median(&samples),
+        p99_ns: stats::percentile(&samples, 99.0),
+        min_ns: stats::min(&samples),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", 2, 16, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p99_ns + 1e-9);
+    }
+}

@@ -1,0 +1,115 @@
+//! Collectives integration: every variant × kind × a spread of sizes runs
+//! on the DES with functional memory and verifies byte-exactly.
+
+use dma_latte::collectives::{
+    run_collective, select_variant, CollectiveKind, RunOptions, Variant,
+};
+use dma_latte::sim::SimConfig;
+use dma_latte::util::bytes::KB;
+
+fn opts() -> RunOptions {
+    RunOptions {
+        sim: SimConfig::mi300x(),
+        verify: true,
+    }
+}
+
+#[test]
+fn every_variant_every_size_verifies() {
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        for v in Variant::all_for(kind) {
+            for size in [8 * KB, 64 * KB, 512 * KB] {
+                let r = run_collective(kind, v, size, &opts());
+                assert_eq!(
+                    r.verified,
+                    Some(true),
+                    "{} {} at {size}",
+                    kind.name(),
+                    v.name()
+                );
+                assert!(r.latency_ns > 0);
+                assert!(r.data_cmds > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_selected_variant_verifies_across_spectrum() {
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        for size in [KB, 16 * KB, 256 * KB, 1024 * KB] {
+            let v = select_variant(kind, size);
+            let r = run_collective(kind, v, size, &opts());
+            assert_eq!(r.verified, Some(true), "{} @{size}", v.name());
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_gpu_counts() {
+    // 3, 5, 6 GPUs: planners must still cover all peers / pairs.
+    for n in [3u8, 5, 6] {
+        let mut o = opts();
+        o.sim.topology = dma_latte::sim::Topology::custom(n, 8, 64.0, 64.0);
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            for v in Variant::all_for(kind) {
+                let size = n as u64 * 8 * KB; // divisible chunks
+                let r = run_collective(kind, v, size, &o);
+                assert_eq!(
+                    r.verified,
+                    Some(true),
+                    "{} {} n={n}",
+                    kind.name(),
+                    v.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_counts_match_paper() {
+    // pcpy: 56 engines; bcst: 32; swap: 28; b2b: 8 (8-GPU platform).
+    use dma_latte::collectives::Strategy;
+    let o = opts();
+    let r = run_collective(
+        CollectiveKind::AllGather,
+        Variant::new(Strategy::Pcpy, false),
+        64 * KB,
+        &o,
+    );
+    assert_eq!(r.engines_used, 56);
+    let r = run_collective(
+        CollectiveKind::AllGather,
+        Variant::new(Strategy::Bcst, false),
+        64 * KB,
+        &o,
+    );
+    assert_eq!(r.engines_used, 32);
+    let r = run_collective(
+        CollectiveKind::AllToAll,
+        Variant::new(Strategy::Swap, false),
+        64 * KB,
+        &o,
+    );
+    assert_eq!(r.engines_used, 28);
+    let r = run_collective(
+        CollectiveKind::AllToAll,
+        Variant::new(Strategy::B2b, false),
+        64 * KB,
+        &o,
+    );
+    assert_eq!(r.engines_used, 8);
+}
+
+#[test]
+fn reduce_scatter_transport_plus_reduce() {
+    // The §7 RS dataflow is covered in-module; here: the transport plan
+    // has AA's command pattern and one engine stream per rank (b2b style).
+    use dma_latte::collectives::reduce_scatter;
+    let topo = dma_latte::sim::Topology::mi300x_platform();
+    let plan = reduce_scatter::plan_transport(&topo, 64 * KB);
+    assert_eq!(plan.ranks.len(), 8);
+    assert_eq!(plan.total_data_cmds(), 56);
+    assert_eq!(plan.total_engines(), 8);
+}

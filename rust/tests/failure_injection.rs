@@ -1,0 +1,146 @@
+//! Failure injection: stalled engines, missing triggers, OOM pools, cold
+//! caches — the system must fail loudly (deadlock report) or degrade
+//! gracefully (requeue/prefill), never silently corrupt.
+
+use dma_latte::coordinator::request::Request;
+use dma_latte::coordinator::{ServeConfig, VirtualEngine};
+use dma_latte::kvcache::fetch::FetchImpl;
+use dma_latte::kvcache::CpuStore;
+use dma_latte::models::zoo::QWEN25_0_5B;
+use dma_latte::sim::command::{Addr, AtomicOp, Command};
+use dma_latte::sim::host::{ApiKind, HostOp};
+use dma_latte::sim::topology::NodeId;
+use dma_latte::sim::{EngineId, PollCond, Sim, SimConfig};
+
+/// An engine that dies mid-stream leaves the host waiting: the run reports
+/// the deadlocked host instead of fabricating completion.
+#[test]
+fn stalled_engine_reports_deadlock() {
+    let mut sim = Sim::new(SimConfig::mi300x());
+    let sig = sim.alloc_signal(0);
+    let engine = EngineId { gpu: 0, idx: 0 };
+    // Engine stalls immediately (before it can execute anything).
+    sim.engine_mut(engine).stall_at = Some(0);
+    sim.add_host(
+        vec![
+            HostOp::CreateCommands {
+                engine,
+                cmds: vec![
+                    Command::Copy {
+                        src: Addr::new(NodeId::Gpu(0), 0),
+                        dst: Addr::new(NodeId::Gpu(1), 0),
+                        len: 4096,
+                    },
+                    Command::Atomic {
+                        signal: sig,
+                        op: AtomicOp::Add(1),
+                    },
+                ],
+                api: ApiKind::Raw,
+            },
+            HostOp::RingDoorbell { engine },
+            HostOp::WaitSignal {
+                signal: sig,
+                at_least: 1,
+            },
+        ],
+        0,
+    );
+    let out = sim.run();
+    assert_eq!(out.deadlocked.len(), 1);
+}
+
+/// A prelaunched stream whose trigger never fires parks forever — and the
+/// sim says so (this is the correctness edge of §4.5: poll gates must not
+/// leak execution).
+#[test]
+fn missing_trigger_parks_stream() {
+    let mut sim = Sim::new(SimConfig::mi300x().functional());
+    let trigger = sim.alloc_signal(0);
+    let done = sim.alloc_signal(0);
+    sim.memory.poke(NodeId::Gpu(0), 0, &[5u8; 64]);
+    let engine = EngineId { gpu: 0, idx: 0 };
+    sim.add_host(
+        vec![
+            HostOp::CreateCommands {
+                engine,
+                cmds: vec![
+                    Command::Poll {
+                        signal: trigger,
+                        cond: PollCond::Gte(1),
+                    },
+                    Command::Copy {
+                        src: Addr::new(NodeId::Gpu(0), 0),
+                        dst: Addr::new(NodeId::Gpu(1), 0),
+                        len: 64,
+                    },
+                    Command::Atomic {
+                        signal: done,
+                        op: AtomicOp::Add(1),
+                    },
+                ],
+                api: ApiKind::Raw,
+            },
+            HostOp::RingDoorbell { engine },
+            // NOTE: no SetSignal(trigger)!
+            HostOp::WaitSignal {
+                signal: done,
+                at_least: 1,
+            },
+        ],
+        0,
+    );
+    let out = sim.run();
+    assert_eq!(out.deadlocked.len(), 1);
+    // And crucially: the gated copy never executed.
+    assert_eq!(sim.memory.peek(NodeId::Gpu(1), 0, 64), vec![0u8; 64]);
+}
+
+/// CPU store miss mid-run (evicted entry) degrades to prefill, not loss.
+#[test]
+fn evicted_cache_entries_fall_back_to_prefill() {
+    let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+    cfg.cpu_blocks = 300; // tiny CPU tier: ~1 prompt of 4096 tokens
+    cfg.gpu_blocks = 1 << 18;
+    let mut eng = VirtualEngine::new(cfg);
+    for i in 0..8 {
+        // warm=true saves each prompt, evicting earlier ones (LRU).
+        eng.submit(Request::new(i, 4096, 4, 0), true);
+    }
+    let m = eng.run_to_completion();
+    assert_eq!(m.finished, 8);
+    // Most entries were evicted before admission ⇒ misses dominate.
+    assert!(m.cache_misses >= 6, "misses {}", m.cache_misses);
+}
+
+/// CpuStore never hands out aliased blocks even under eviction pressure.
+#[test]
+fn cpu_store_eviction_pressure() {
+    let mut s = CpuStore::new(50);
+    let mut live: Vec<(u64, Vec<u64>)> = Vec::new();
+    for k in 0..200u64 {
+        if let Some(blocks) = s.save(k, 1 + k % 13, 16 * (1 + k % 13)) {
+            live.push((k, blocks));
+        }
+        // All currently-resident entries must be disjoint.
+        let mut seen = std::collections::HashSet::new();
+        for (key, blocks) in &live {
+            if s.lookup(*key).is_some() {
+                for b in blocks {
+                    assert!(seen.insert(*b), "block {b} aliased");
+                }
+            }
+        }
+    }
+    assert!(s.evictions > 0);
+}
+
+/// Zero-request and zero-token workloads terminate immediately.
+#[test]
+fn degenerate_workloads() {
+    let cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+    let mut eng = VirtualEngine::new(cfg);
+    let m = eng.run_to_completion();
+    assert_eq!(m.finished, 0);
+    assert_eq!(m.tokens_out, 0);
+}

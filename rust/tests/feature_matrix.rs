@@ -1,0 +1,79 @@
+//! Table 1 as executable properties: each DMA feature delivers exactly the
+//! benefits the paper's feature matrix lists.
+
+use dma_latte::collectives::{run_collective, CollectiveKind, RunOptions, Strategy, Variant};
+use dma_latte::sim::SimConfig;
+use dma_latte::util::bytes::KB;
+
+fn run(kind: CollectiveKind, s: Strategy, pre: bool, size: u64) -> dma_latte::collectives::CollectiveResult {
+    run_collective(
+        kind,
+        Variant::new(s, pre),
+        size,
+        &RunOptions {
+            sim: SimConfig::mi300x(),
+            verify: true,
+        },
+    )
+}
+
+/// Row "broadcast": lowers #copy commands, #engines, sync commands;
+/// improves link utilization (1 read / 2 writes); lowers memory traffic.
+#[test]
+fn broadcast_row() {
+    let size = 256 * KB;
+    let p = run(CollectiveKind::AllGather, Strategy::Pcpy, false, size);
+    let b = run(CollectiveKind::AllGather, Strategy::Bcst, false, size);
+    assert!(b.data_cmds < p.data_cmds, "fewer commands");
+    assert!(b.engines_used < p.engines_used, "fewer engines");
+    // Memory traffic: bcst reads each source once per pair (1 read, 2
+    // writes) — less HBM traffic than pcpy's per-peer reads.
+    assert!(b.activity.hbm_bytes < p.activity.hbm_bytes, "less memory traffic");
+    // Same wire bytes delivered in spite of fewer engines.
+    assert!((b.activity.link_bytes - p.activity.link_bytes).abs() < 1.0);
+    assert_eq!(b.verified, Some(true));
+}
+
+/// Row "swap": lowers #copies/#engines/syncs; in-place (no extra memory).
+#[test]
+fn swap_row() {
+    let size = 256 * KB;
+    let p = run(CollectiveKind::AllToAll, Strategy::Pcpy, false, size);
+    let s = run(CollectiveKind::AllToAll, Strategy::Swap, false, size);
+    assert!(s.data_cmds < p.data_cmds);
+    assert!(s.engines_used < p.engines_used);
+    // In-place: out-of-place AA must WRITE to a separate output region;
+    // swap writes only the input buffers. Traffic equal or lower, and the
+    // verifier checked the transpose happened in place.
+    assert!(s.activity.hbm_bytes <= p.activity.hbm_bytes + 1.0);
+    assert_eq!(s.verified, Some(true));
+}
+
+/// Row "back-to-back": lowers #engines and sync commands; improves link
+/// utilization at small sizes (copies overlap).
+#[test]
+fn b2b_row() {
+    let size = 32 * KB;
+    let p = run(CollectiveKind::AllGather, Strategy::Pcpy, false, size);
+    let b = run(CollectiveKind::AllGather, Strategy::B2b, false, size);
+    assert_eq!(b.engines_used, 8, "one engine per GPU");
+    assert!(b.engines_used < p.engines_used);
+    assert!(b.latency_ns < p.latency_ns, "latency-bound sizes improve");
+    assert_eq!(b.verified, Some(true));
+}
+
+/// Row "prelaunch": off-critical-path DMA launch via poll.
+#[test]
+fn prelaunch_row() {
+    for s in [Strategy::Pcpy, Strategy::Bcst, Strategy::B2b] {
+        let size = 128 * KB;
+        let d = run(CollectiveKind::AllGather, s, false, size);
+        let pre = run(CollectiveKind::AllGather, s, true, size);
+        assert!(
+            pre.latency_ns < d.latency_ns,
+            "{}: prelaunch must shorten the critical path",
+            s.name()
+        );
+        assert_eq!(pre.verified, Some(true));
+    }
+}

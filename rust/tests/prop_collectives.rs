@@ -1,0 +1,185 @@
+//! Property tests over the collectives layer: functional correctness for
+//! random sizes / GPU counts / variants, and structural invariants.
+
+use dma_latte::collectives::{
+    run_collective, CollectiveKind, RunOptions, Strategy, Variant,
+};
+use dma_latte::sim::{SimConfig, Topology};
+use dma_latte::util::proptest::{run as prop_run, Config};
+use dma_latte::util::rng::Rng;
+
+/// AG = concatenation and AA = transpose for random (n, size, variant).
+#[test]
+fn prop_collectives_verify_random() {
+    prop_run(
+        "collectives-verify",
+        Config {
+            cases: 40,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = *rng.pick(&[2u8, 3, 4, 8]);
+            let kind = if rng.chance(0.5) {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let variants = Variant::all_for(kind);
+            let v = *rng.pick(&variants);
+            // size divisible by n, 1-256 KB per chunk
+            let chunk = 1024 * rng.range(1, 256) as u64;
+            let size = chunk * n as u64;
+            let mut opts = RunOptions {
+                sim: SimConfig::mi300x(),
+                verify: true,
+            };
+            opts.sim.topology = Topology::custom(n, 16, 64.0, 64.0);
+            let r = run_collective(kind, v, size, &opts);
+            assert_eq!(
+                r.verified,
+                Some(true),
+                "{} {} n={n} size={size}",
+                kind.name(),
+                v.name()
+            );
+        },
+    );
+}
+
+/// Plans cover every (src, dst) pair exactly once, for every variant.
+#[test]
+fn prop_plan_coverage() {
+    prop_run(
+        "plan-coverage",
+        Config {
+            cases: 48,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            use dma_latte::collectives::exec::build_plan;
+            use dma_latte::sim::command::Command;
+            let n = rng.range(2, 8) as u8;
+            let topo = Topology::custom(n, 16, 64.0, 64.0);
+            let kind = if rng.chance(0.5) {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let variants = Variant::all_for(kind);
+            let v = *rng.pick(&variants);
+            let size = n as u64 * 4096;
+            let plan = build_plan(kind, v, &topo, size);
+            // Count transfer coverage: (src_gpu, dst_gpu) pairs.
+            let mut pairs = std::collections::HashMap::new();
+            for r in &plan.ranks {
+                for e in &r.engines {
+                    for c in &e.cmds {
+                        match *c {
+                            Command::Copy { src, dst, .. } => {
+                                *pairs.entry((src.node, dst.node)).or_insert(0) += 1;
+                            }
+                            Command::Bcst {
+                                src, dst0, dst1, ..
+                            } => {
+                                *pairs.entry((src.node, dst0.node)).or_insert(0) += 1;
+                                *pairs.entry((src.node, dst1.node)).or_insert(0) += 1;
+                            }
+                            Command::Swap { a, b, .. } => {
+                                *pairs.entry((a.node, b.node)).or_insert(0) += 1;
+                                *pairs.entry((b.node, a.node)).or_insert(0) += 1;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            // Every ordered pair of distinct GPUs appears exactly once.
+            let mut want = 0;
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        want += 1;
+                        let k = (
+                            dma_latte::sim::NodeId::Gpu(i),
+                            dma_latte::sim::NodeId::Gpu(j),
+                        );
+                        assert_eq!(
+                            pairs.get(&k).copied().unwrap_or(0),
+                            1,
+                            "{kind:?} {} pair {i}->{j}",
+                            v.name()
+                        );
+                    }
+                }
+            }
+            assert_eq!(pairs.len(), want);
+        },
+    );
+}
+
+/// Latency monotonicity: for any variant, bigger payload is never faster.
+#[test]
+fn prop_latency_monotone_in_size() {
+    prop_run(
+        "latency-monotone",
+        Config {
+            cases: 16,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let kind = if rng.chance(0.5) {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let variants = Variant::all_for(kind);
+            let v = *rng.pick(&variants);
+            let opts = RunOptions {
+                sim: SimConfig::mi300x(),
+                verify: false,
+            };
+            let base = 8 * 1024 * rng.range(1, 64) as u64;
+            let small = run_collective(kind, v, base, &opts);
+            let big = run_collective(kind, v, base * 4, &opts);
+            assert!(
+                big.latency_ns >= small.latency_ns,
+                "{} {}: {} vs {}",
+                kind.name(),
+                v.name(),
+                small.latency_ns,
+                big.latency_ns
+            );
+        },
+    );
+}
+
+/// The selector never picks an inapplicable strategy and is total.
+#[test]
+fn prop_selector_total_and_applicable() {
+    use dma_latte::collectives::select_variant;
+    prop_run(
+        "selector",
+        Config {
+            cases: 200,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let size = 1 + rng.below(8 << 30);
+            for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+                let v = select_variant(kind, size);
+                assert!(v.strategy.applicable(kind));
+                // Very large sizes never use b2b (serialization) and very
+                // small sizes never use bare pcpy.
+                if size >= 1 << 30 {
+                    assert_ne!(v.strategy, Strategy::B2b, "size {size}");
+                }
+                if size <= 16 * 1024 {
+                    assert!(
+                        !(v.strategy == Strategy::Pcpy && !v.prelaunch),
+                        "size {size}"
+                    );
+                }
+            }
+        },
+    );
+}

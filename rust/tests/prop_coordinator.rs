@@ -1,0 +1,159 @@
+//! Property tests over the serving coordinator: request conservation,
+//! block-accounting safety, router balance, fetch-impl equivalence.
+
+use dma_latte::coordinator::request::Request;
+use dma_latte::coordinator::router::{RoutePolicy, Router};
+use dma_latte::coordinator::{ServeConfig, VirtualEngine};
+use dma_latte::kvcache::fetch::FetchImpl;
+use dma_latte::kvcache::BlockAllocator;
+use dma_latte::models::zoo::{LLAMA32_1B, QWEN25_0_5B};
+use dma_latte::util::proptest::{run as prop_run, Config};
+use dma_latte::util::rng::Rng;
+
+/// Whatever the workload, the virtual engine finishes every request and
+/// conserves token counts (no loss, no duplication).
+#[test]
+fn prop_engine_conserves_requests() {
+    prop_run(
+        "engine-conservation",
+        Config {
+            cases: 24,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let model = if rng.chance(0.5) {
+                &QWEN25_0_5B
+            } else {
+                &LLAMA32_1B
+            };
+            let fetch = *rng.pick(&[
+                FetchImpl::DmaBaseline,
+                FetchImpl::DmaB2b,
+                FetchImpl::Kernel,
+            ]);
+            let mut cfg = ServeConfig::new(model, fetch);
+            cfg.hit_rate = rng.f64();
+            cfg.max_batch = rng.range(1, 16);
+            cfg.gpu_blocks = 1 << 18;
+            cfg.seed = rng.next_u64();
+            let n = rng.range(1, 40) as u64;
+            let decode = rng.range(1, 12) as u64;
+            let prompt = 16 * rng.range(1, 64) as u64;
+            let mut eng = VirtualEngine::new(cfg);
+            for i in 0..n {
+                eng.submit(Request::new(i, prompt, decode, 0), true);
+            }
+            let m = eng.run_to_completion();
+            assert_eq!(m.finished, n, "every request finishes");
+            assert_eq!(m.tokens_out, n * decode, "token conservation");
+            assert_eq!(m.ttft_ns.len(), n as usize, "one TTFT per request");
+            assert_eq!(m.cache_hits + m.cache_misses, n);
+            assert!(m.wall_ns > 0);
+        },
+    );
+}
+
+/// Block allocator safety under random alloc/release interleavings.
+#[test]
+fn prop_allocator_never_double_allocates() {
+    prop_run(
+        "allocator",
+        Config {
+            cases: 64,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let cap = rng.range(1, 200) as u64;
+            let mut a = BlockAllocator::new(cap);
+            let mut live: Vec<u64> = Vec::new();
+            for step in 0..rng.range(5, 60) {
+                if rng.chance(0.6) || live.is_empty() {
+                    let req = step as u64;
+                    let n = rng.range(0, 12) as u64;
+                    if a.alloc(req, n).is_ok() && n > 0 {
+                        live.push(req);
+                    }
+                } else {
+                    let idx = rng.range(0, live.len() - 1);
+                    let req = live.swap_remove(idx);
+                    a.release(req);
+                }
+                a.check_invariants();
+            }
+            for req in live {
+                a.release(req);
+            }
+            a.check_invariants();
+            assert_eq!(a.available(), cap);
+        },
+    );
+}
+
+/// Router: completes cancel outstanding exactly; least-outstanding keeps
+/// the load spread within 1 when requests complete uniformly.
+#[test]
+fn prop_router_balance() {
+    prop_run(
+        "router",
+        Config {
+            cases: 32,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let replicas = rng.range(1, 8);
+            let mut r = Router::new(replicas, RoutePolicy::LeastOutstanding);
+            let n = rng.range(1, 100) as u64;
+            for i in 0..n {
+                r.route(i, None);
+            }
+            let max = *r.load().iter().max().unwrap();
+            let min = *r.load().iter().min().unwrap();
+            assert!(max - min <= 1, "load {:?}", r.load());
+            for i in 0..n {
+                r.complete(i);
+            }
+            assert!(r.load().iter().all(|&x| x == 0));
+        },
+    );
+}
+
+/// All three fetch impls produce byte-identical GPU state for the same
+/// random copy set.
+#[test]
+fn prop_fetch_functional_equivalence() {
+    use dma_latte::kvcache::fetch::run_fetch;
+    use dma_latte::sim::topology::NodeId;
+    use dma_latte::sim::{Addr, Sim, SimConfig};
+    prop_run(
+        "fetch-equivalence",
+        Config {
+            cases: 20,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 24) as u64;
+            let len = 256 * rng.range(1, 64) as u64;
+            let copies: Vec<_> = (0..n)
+                .map(|i| {
+                    (
+                        Addr::new(NodeId::Cpu, i * len),
+                        Addr::new(NodeId::Gpu(0), i * len),
+                        len,
+                    )
+                })
+                .collect();
+            let mut images = Vec::new();
+            for imp in [FetchImpl::DmaBaseline, FetchImpl::DmaB2b, FetchImpl::Kernel] {
+                let mut sim = Sim::new(SimConfig::mi300x().functional());
+                let mut fill = vec![0u8; (n * len) as usize];
+                let mut r2 = Rng::new(1234);
+                r2.fill_bytes(&mut fill);
+                sim.memory.poke(NodeId::Cpu, 0, &fill);
+                run_fetch(&mut sim, imp, &copies);
+                images.push(sim.memory.peek(NodeId::Gpu(0), 0, n * len));
+            }
+            assert_eq!(images[0], images[1]);
+            assert_eq!(images[1], images[2]);
+        },
+    );
+}

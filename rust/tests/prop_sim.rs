@@ -1,0 +1,267 @@
+//! Property tests over the DES substrate (proptest-lite, util::proptest).
+
+use dma_latte::sim::command::{Addr, AtomicOp, Command};
+use dma_latte::sim::host::{ApiKind, HostOp};
+use dma_latte::sim::topology::NodeId;
+use dma_latte::sim::{EngineId, Sim, SimConfig};
+use dma_latte::util::proptest::{check, run as prop_run, Config};
+use dma_latte::util::rng::Rng;
+
+/// Random hazard-free copy set on random engines always completes, moves
+/// every byte, and simulated time is monotone.
+#[test]
+fn prop_random_copies_complete_and_verify() {
+    check("random-copies", |rng: &mut Rng| {
+        let mut sim = Sim::new(SimConfig::mi300x().functional());
+        let sig = sim.alloc_signal(0);
+        let n_copies = rng.range(1, 12);
+        let mut script = Vec::new();
+        let mut expected = Vec::new();
+        for c in 0..n_copies {
+            let src_gpu = rng.range(0, 7) as u8;
+            let mut dst_gpu = rng.range(0, 7) as u8;
+            if dst_gpu == src_gpu {
+                dst_gpu = (dst_gpu + 1) % 8;
+            }
+            let len = 64 * rng.range(1, 64) as u64;
+            // Disjoint ranges per copy index.
+            let off = c as u64 * 1 << 20;
+            let fill = (c as u8).wrapping_mul(37).wrapping_add(11);
+            sim.memory
+                .poke(NodeId::Gpu(src_gpu), off, &vec![fill; len as usize]);
+            let engine = EngineId {
+                gpu: src_gpu,
+                idx: rng.range(0, 15) as u8,
+            };
+            script.push(HostOp::CreateCommands {
+                engine,
+                cmds: vec![
+                    Command::Copy {
+                        src: Addr::new(NodeId::Gpu(src_gpu), off),
+                        dst: Addr::new(NodeId::Gpu(dst_gpu), off),
+                        len,
+                    },
+                    Command::Atomic {
+                        signal: sig,
+                        op: AtomicOp::Add(1),
+                    },
+                ],
+                api: ApiKind::Raw,
+            });
+            script.push(HostOp::RingDoorbell { engine });
+            expected.push((dst_gpu, off, len, fill));
+        }
+        script.push(HostOp::WaitSignal {
+            signal: sig,
+            at_least: n_copies as i64,
+        });
+        sim.add_host(script, 0);
+        let out = sim.run();
+        assert!(out.deadlocked.is_empty());
+        assert!(out.makespan > 0);
+        for (gpu, off, len, fill) in expected {
+            let got = sim.memory.peek(NodeId::Gpu(gpu), off, len);
+            assert!(got.iter().all(|&b| b == fill), "copy landed wrong");
+        }
+    });
+}
+
+/// Chained (hazardous) copies on one engine always produce the final value
+/// — the hazard detector must serialize them in order.
+#[test]
+fn prop_hazard_chains_serialize() {
+    check("hazard-chains", |rng: &mut Rng| {
+        let mut sim = Sim::new(SimConfig::mi300x().functional());
+        let sig = sim.alloc_signal(0);
+        let hops = rng.range(2, 6);
+        let len = 64 * rng.range(1, 16) as u64;
+        sim.memory.poke(NodeId::Gpu(0), 0, &vec![0xAB; len as usize]);
+        // gpu0 -> gpu1 -> gpu2 ... chained through the same offsets.
+        let mut cmds = Vec::new();
+        for h in 0..hops {
+            cmds.push(Command::Copy {
+                src: Addr::new(NodeId::Gpu(h as u8), 0),
+                dst: Addr::new(NodeId::Gpu(h as u8 + 1), 0),
+                len,
+            });
+        }
+        cmds.push(Command::Atomic {
+            signal: sig,
+            op: AtomicOp::Add(1),
+        });
+        let engine = EngineId { gpu: 0, idx: 0 };
+        sim.add_host(
+            vec![
+                HostOp::CreateCommands {
+                    engine,
+                    cmds,
+                    api: ApiKind::Raw,
+                },
+                HostOp::RingDoorbell { engine },
+                HostOp::WaitSignal {
+                    signal: sig,
+                    at_least: 1,
+                },
+            ],
+            0,
+        );
+        let out = sim.run();
+        assert!(out.deadlocked.is_empty());
+        let got = sim.memory.peek(NodeId::Gpu(hops as u8), 0, len);
+        assert!(got.iter().all(|&b| b == 0xAB), "chain broke");
+    });
+}
+
+/// A poll never fires before its condition: the gated copy lands only
+/// after the trigger write, whatever the schedule.
+#[test]
+fn prop_poll_gating_safe() {
+    prop_run(
+        "poll-gating",
+        Config {
+            cases: 32,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let mut sim = Sim::new(SimConfig::mi300x().functional());
+            let trigger = sim.alloc_signal(0);
+            let done = sim.alloc_signal(0);
+            let delay = rng.range(1_000, 200_000) as u64;
+            sim.memory.poke(NodeId::Gpu(0), 0, &[1u8; 64]);
+            let engine = EngineId { gpu: 0, idx: 3 };
+            sim.add_host(
+                vec![
+                    HostOp::CreateCommands {
+                        engine,
+                        cmds: vec![
+                            Command::Poll {
+                                signal: trigger,
+                                cond: dma_latte::sim::PollCond::Gte(1),
+                            },
+                            Command::Copy {
+                                src: Addr::new(NodeId::Gpu(0), 0),
+                                dst: Addr::new(NodeId::Gpu(1), 0),
+                                len: 64,
+                            },
+                            Command::Atomic {
+                                signal: done,
+                                op: AtomicOp::Add(1),
+                            },
+                        ],
+                        api: ApiKind::Raw,
+                    },
+                    HostOp::RingDoorbell { engine },
+                    HostOp::Delay { ns: delay },
+                    HostOp::Mark { name: "trigger" },
+                    HostOp::SetSignal {
+                        signal: trigger,
+                        value: 1,
+                    },
+                    HostOp::WaitSignal {
+                        signal: done,
+                        at_least: 1,
+                    },
+                    HostOp::Mark { name: "done" },
+                ],
+                0,
+            );
+            let out = sim.run();
+            assert!(out.deadlocked.is_empty());
+            let h = sim.host(dma_latte::sim::HostId(0));
+            let trig = h.mark("trigger").unwrap();
+            let done_t = h.mark("done").unwrap();
+            assert!(done_t > trig, "copy cannot complete before trigger");
+            assert!(done_t - trig < 60_000, "gated path should be short");
+        },
+    );
+}
+
+/// Determinism: identical programs produce identical makespans.
+#[test]
+fn prop_deterministic_replay() {
+    check("replay", |rng: &mut Rng| {
+        let seed = rng.next_u64();
+        let build = |seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut sim = Sim::new(SimConfig::mi300x());
+            let sig = sim.alloc_signal(0);
+            let n = r.range(1, 8);
+            for g in 0..n {
+                let engine = EngineId {
+                    gpu: g as u8,
+                    idx: 0,
+                };
+                sim.add_host(
+                    vec![
+                        HostOp::CreateCommands {
+                            engine,
+                            cmds: vec![
+                                Command::Copy {
+                                    src: Addr::new(NodeId::Gpu(g as u8), 0),
+                                    dst: Addr::new(NodeId::Gpu(((g + 1) % 8) as u8), 0),
+                                    len: 64 * r.range(1, 100) as u64,
+                                },
+                                Command::Atomic {
+                                    signal: sig,
+                                    op: AtomicOp::Add(1),
+                                },
+                            ],
+                            api: ApiKind::Raw,
+                        },
+                        HostOp::RingDoorbell { engine },
+                        HostOp::WaitSignal {
+                            signal: sig,
+                            at_least: n as i64,
+                        },
+                    ],
+                    0,
+                );
+            }
+            sim.run().makespan
+        };
+        assert_eq!(build(seed), build(seed));
+    });
+}
+
+/// Wire-traffic conservation: link bytes equal the sum of command sizes.
+#[test]
+fn prop_traffic_conservation() {
+    check("traffic", |rng: &mut Rng| {
+        let mut sim = Sim::new(SimConfig::mi300x());
+        let sig = sim.alloc_signal(0);
+        let n = rng.range(1, 10);
+        let mut total = 0u64;
+        let engine = EngineId { gpu: 0, idx: 0 };
+        let mut cmds = Vec::new();
+        for i in 0..n {
+            let len = 64 * rng.range(1, 256) as u64;
+            total += len;
+            cmds.push(Command::Copy {
+                src: Addr::new(NodeId::Gpu(0), i as u64 * (1 << 24)),
+                dst: Addr::new(NodeId::Gpu(1 + (i % 7) as u8), i as u64 * (1 << 24)),
+                len,
+            });
+        }
+        cmds.push(Command::Atomic {
+            signal: sig,
+            op: AtomicOp::Add(1),
+        });
+        sim.add_host(
+            vec![
+                HostOp::CreateCommands {
+                    engine,
+                    cmds,
+                    api: ApiKind::RawBatched,
+                },
+                HostOp::RingDoorbell { engine },
+                HostOp::WaitSignal {
+                    signal: sig,
+                    at_least: 1,
+                },
+            ],
+            0,
+        );
+        sim.run();
+        assert_eq!(sim.link_bytes, total);
+    });
+}

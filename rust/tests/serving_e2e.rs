@@ -1,0 +1,186 @@
+//! Serving-stack integration (no PJRT; the compiled-model path is covered
+//! by `runtime_load.rs` and the `llm_serving` example): virtual engine +
+//! threaded server behave like one system across fetch impls and hit
+//! rates.
+
+use dma_latte::coordinator::request::Request;
+use dma_latte::coordinator::server::{ModelBackend, Server, ServerConfig};
+use dma_latte::coordinator::{ServeConfig, VirtualEngine};
+use dma_latte::kvcache::fetch::FetchImpl;
+use dma_latte::kvcache::BlockLayout;
+use dma_latte::models::zoo::{QWEN25_0_5B, QWEN25_7B};
+
+struct CountingBackend {
+    prefills: usize,
+    decodes: usize,
+}
+impl ModelBackend for CountingBackend {
+    fn prefill(&mut self, prompt: &[u32]) -> u32 {
+        self.prefills += 1;
+        prompt.iter().sum::<u32>() % 1000
+    }
+    fn decode(&mut self, last: &[u32]) -> Vec<u32> {
+        self.decodes += 1;
+        last.iter().map(|&t| (t * 31 + 7) % 1000).collect()
+    }
+    fn kv_bytes_per_token(&self) -> u64 {
+        12_288
+    }
+}
+
+#[test]
+fn threaded_server_under_load() {
+    let server = Server::start(
+        ServerConfig {
+            layout: BlockLayout::new(&QWEN25_0_5B, 16),
+            fetch: FetchImpl::DmaB2b,
+            gpu_blocks: 1 << 16,
+            cpu_blocks: 1 << 18,
+            max_batch: 16,
+        },
+        || CountingBackend {
+            prefills: 0,
+            decodes: 0,
+        },
+    );
+    let n = 100u64;
+    for i in 0..n {
+        server.submit(
+            Request::new(i, 64, 1 + (i % 7), 0),
+            vec![(i % 100) as u32; 64],
+        );
+    }
+    let mut total_tokens = 0u64;
+    for _ in 0..n {
+        let c = server.next_completion().unwrap();
+        total_tokens += c.tokens.len() as u64;
+        assert!(c.ttft <= c.total);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.finished, n);
+    // Token accounting: tokens returned = sum over requests of max_new.
+    let want: u64 = (0..n).map(|i| 1 + (i % 7)).sum();
+    assert_eq!(total_tokens, want);
+    // Everything hit the (warmed) CPU cache.
+    assert_eq!(m.cache_hits, n);
+    assert!(m.fetch_bytes > 0);
+}
+
+#[test]
+fn virtual_engine_tput_ordering_holds_across_models() {
+    // b2b ≥ kernel ≥ baseline in throughput for small models at full hit
+    // rate (the paper's Fig. 17 ordering; kernel sits between because it
+    // saves host time but burns GPU time).
+    for model in [&QWEN25_0_5B, &QWEN25_7B] {
+        let tps = |fetch| {
+            let mut cfg = ServeConfig::new(model, fetch);
+            cfg.gpu_blocks = 1 << 18;
+            let mut eng = VirtualEngine::new(cfg);
+            for i in 0..96 {
+                eng.submit(Request::new(i, 2048, 16, 0), true);
+            }
+            eng.run_to_completion().tps()
+        };
+        let base = tps(FetchImpl::DmaBaseline);
+        let b2b = tps(FetchImpl::DmaB2b);
+        assert!(
+            b2b > base,
+            "{}: b2b {b2b:.0} must beat baseline {base:.0}",
+            model.name
+        );
+    }
+}
+
+#[test]
+fn hit_rate_sweep_degrades_gracefully() {
+    // As hit% drops, prefill replaces fetch: everything still completes
+    // and the b2b advantage shrinks (§5.3.3).
+    let run = |fetch, hit| {
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, fetch);
+        cfg.hit_rate = hit;
+        cfg.gpu_blocks = 1 << 18;
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..64 {
+            eng.submit(Request::new(i, 2048, 8, 0), true);
+        }
+        eng.run_to_completion().clone()
+    };
+    let mut prev_gain = f64::INFINITY;
+    for hit in [1.0, 0.7, 0.5] {
+        let base = run(FetchImpl::DmaBaseline, hit);
+        let b2b = run(FetchImpl::DmaB2b, hit);
+        assert_eq!(base.finished, 64);
+        assert_eq!(b2b.finished, 64);
+        let gain = b2b.tps() / base.tps();
+        assert!(
+            gain <= prev_gain * 1.10,
+            "gain should shrink with hit rate: {gain:.2} after {prev_gain:.2}"
+        );
+        prev_gain = gain;
+    }
+}
+
+#[test]
+fn backpressure_with_tiny_block_pool() {
+    // A pool that fits only a couple of requests forces queueing but must
+    // not deadlock or lose requests.
+    let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+    cfg.gpu_blocks = 600; // ~2 requests of 2048+8 tokens (129 blocks each)
+    let mut eng = VirtualEngine::new(cfg);
+    for i in 0..12 {
+        eng.submit(Request::new(i, 2048, 8, 0), true);
+    }
+    let m = eng.run_to_completion();
+    assert_eq!(m.finished, 12);
+}
+
+#[test]
+fn multi_replica_routing_scales_throughput() {
+    // Two virtual-engine replicas behind a least-outstanding router should
+    // finish a fixed workload in roughly half the virtual time of one.
+    use dma_latte::coordinator::router::{RoutePolicy, Router};
+    let run_replicas = |replicas: usize| -> u64 {
+        let mut router = Router::new(replicas, RoutePolicy::LeastOutstanding);
+        let mut engines: Vec<VirtualEngine> = (0..replicas)
+            .map(|_| {
+                let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+                cfg.gpu_blocks = 1 << 18;
+                VirtualEngine::new(cfg)
+            })
+            .collect();
+        for i in 0..64u64 {
+            let r = router.route(i, None);
+            engines[r].submit(Request::new(i, 2048, 16, 0), true);
+        }
+        engines
+            .iter_mut()
+            .map(|e| e.run_to_completion().wall_ns)
+            .max()
+            .unwrap()
+    };
+    let one = run_replicas(1);
+    let two = run_replicas(2);
+    assert!(
+        (two as f64) < 0.65 * one as f64,
+        "2 replicas {two} vs 1 replica {one}"
+    );
+}
+
+#[test]
+fn kv_save_integrates_with_store() {
+    // Save a finished request's KV to the CPU tier, then admit a new
+    // request with the same key: it must hit and fetch.
+    use dma_latte::kvcache::save::{plan_save, run_save};
+    use dma_latte::kvcache::BlockLayout;
+    use dma_latte::sim::{Sim, SimConfig};
+    let layout = BlockLayout::new(&QWEN25_0_5B, 16);
+    let mut sim = Sim::new(SimConfig::mi300x());
+    let gpu_blocks: Vec<u64> = (0..32).collect();
+    let cpu_blocks: Vec<u64> = (0..32).collect();
+    let saves = plan_save(&layout, 0, &gpu_blocks, &cpu_blocks);
+    let out = run_save(&mut sim, FetchImpl::DmaB2b, &saves);
+    assert!(out.total_ns > 0);
+    assert!(out.api_calls <= 2);
+    // Batched save must not hog the host (fire-and-forget friendly).
+    assert!(out.host_ns < 100_000, "host {}", out.host_ns);
+}
