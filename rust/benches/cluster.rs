@@ -1,0 +1,41 @@
+//! BENCH — cluster scaling: hierarchical DMA all-gather / all-to-all over
+//! 1, 2 and 4 MI300X nodes (8 GPUs each, 400 Gb/s RoCE NIC model), 1KB to
+//! 1GB, with the cluster-aware selector picking the (intra variant, inter
+//! schedule) per cell. The 1-node column reproduces the paper's flat
+//! collectives; the other columns are the scale-out cost on top.
+
+use dma_latte::cluster::{run_hier, select_cluster, ClusterTopology, HierRunOptions};
+use dma_latte::collectives::CollectiveKind;
+use dma_latte::figures::cluster as fig;
+use dma_latte::util::bytes::{fmt_size, size_sweep, GB, KB};
+
+fn main() {
+    let nodes = [1usize, 2, 4];
+    let t0 = std::time::Instant::now();
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        let rows = fig::scaling(kind, &nodes, Some(size_sweep(KB, GB, 2)));
+        print!("{}", fig::render(kind, &rows));
+        println!();
+    }
+
+    // Spot-check the schedule axis at one bandwidth-bound size: pipelining
+    // must not lose to the sequential barrier.
+    let size = 64 * 1024 * 1024;
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        let cluster = ClusterTopology::mi300x(4);
+        let mut choice = select_cluster(kind, &cluster, size);
+        let auto = run_hier(kind, choice, &cluster, size, &HierRunOptions::default());
+        choice.inter = dma_latte::cluster::InterSchedule::Sequential;
+        let seq = run_hier(kind, choice, &cluster, size, &HierRunOptions::default());
+        println!(
+            "{} {} on 4 nodes: selector {:.1} us (inter {:.1} us) vs sequential {:.1} us",
+            kind.name(),
+            fmt_size(size),
+            auto.latency_ns as f64 / 1e3,
+            auto.inter_ns as f64 / 1e3,
+            seq.latency_ns as f64 / 1e3,
+        );
+        assert!(auto.latency_ns <= seq.latency_ns);
+    }
+    println!("\nbench wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,854 @@
+//! Hierarchical all-gather / all-to-all over `nodes × gpus` ranks.
+//!
+//! A global collective is lowered into (a) an **intra-node DMA phase** —
+//! per-node rounds of the existing single-node planners (`pcpy` / `bcst` /
+//! `swap` / `b2b` via [`CollectivePlan`]), rebased into the global buffer
+//! layout and executed on the per-node DES — and (b) an **inter-node
+//! exchange phase** over the NIC model. The decomposition keeps the small
+//! leg on the NIC and the large leg on xGMI:
+//!
+//! - **All-gather** (inter → intra): rank `(k,g)` first sends its own chunk
+//!   to rank `(k',g)` of every other node (NIC volume `c·(n−1)` per rank),
+//!   then each node runs `n` intra rounds, round `k'` = a flat all-gather of
+//!   node block `k'` (xGMI volume `n·c·(g−1)` per rank). Under a
+//!   [`InterSchedule::Pipelined`] schedule, round `k'` triggers as soon as
+//!   block `k'` lands; [`InterSchedule::Sequential`] barriers all rounds
+//!   behind the full inter leg with a single trigger write.
+//! - **All-to-all** (intra → inter): round `k'` is a flat all-to-all of the
+//!   input block destined to node `k'`, staging the outbound block ordered
+//!   by local source; completed blocks then stream to their peer nodes
+//!   (pipelined: per-round, as each completes; sequential: after all
+//!   rounds). The in-place `swap` variant stages inside the input buffer
+//!   itself — the post-swap block *is* the outbound block — and the inter
+//!   exchange is a buffered full-duplex block swap.
+//!
+//! Buffer layout (per GPU, chunk `c = size/world`): input `[0, size)` by
+//! global destination (AA) / output slot (AG); out-of-place AA output at
+//! [`aa_out_base`]`(size)` by global source; AA staging region after that.
+//!
+//! Chunk bookkeeping is verified `collectives::verify`-style: buffers are
+//! initialized with per-(rank, chunk) patterns, the intra rounds execute
+//! functionally on the per-node DES, the inter exchange moves real bytes
+//! between the per-node memories, and the final placement is checked
+//! against the mathematical definition (and, in `tests/prop_cluster.rs`,
+//! byte-for-byte against the flat single-node planner at the same world
+//! size).
+
+use crate::collectives::exec::{self, PRELAUNCH_PARK_NS};
+use crate::collectives::plan::{aa_out_base, CollectivePlan};
+use crate::collectives::verify::pattern;
+use crate::collectives::{CollectiveKind, Strategy};
+use crate::sim::clock::ns;
+use crate::sim::command::{Addr, Command};
+use crate::sim::host::HostOp;
+use crate::sim::topology::{NodeId, Topology};
+use crate::sim::{HostId, LatencyModel, Sim, SimConfig, SimTime, SignalId};
+
+use super::selector::{ClusterChoice, InterSchedule};
+use super::topology::{ClusterTopology, RankPath};
+
+/// Planner limit on node count (mark names are static).
+pub const MAX_NODES: usize = 16;
+
+const ROUND_MARKS: [&str; MAX_NODES] = [
+    "round0", "round1", "round2", "round3", "round4", "round5", "round6", "round7", "round8",
+    "round9", "round10", "round11", "round12", "round13", "round14", "round15",
+];
+
+/// Base of the all-to-all staging region (outbound blocks ordered by local
+/// source), after the input and out-of-place output regions.
+pub fn aa_stage_base(size: u64) -> u64 {
+    aa_out_base(size) + size + 256
+}
+
+/// Execution options for a hierarchical collective.
+#[derive(Debug, Clone)]
+pub struct HierRunOptions {
+    /// Intra-node latency calibration (shared by every node).
+    pub latency: LatencyModel,
+    /// Initialize buffers, move bytes for real and verify the placement.
+    pub verify: bool,
+}
+
+impl Default for HierRunOptions {
+    fn default() -> Self {
+        HierRunOptions {
+            latency: LatencyModel::default(),
+            verify: false,
+        }
+    }
+}
+
+/// Outcome of one hierarchical collective.
+#[derive(Debug, Clone)]
+pub struct HierResult {
+    /// End-to-end critical path in ns (trigger → last rank complete).
+    pub latency_ns: u64,
+    /// NIC span on the critical path: the inter-leg delivery window (AG)
+    /// or the post-intra NIC tail (AA). 0 for a single node.
+    pub inter_ns: u64,
+    /// Remaining (intra-node DES) span: `latency_ns − inter_ns`.
+    pub intra_ns: u64,
+    /// Total data-move commands across all nodes' intra rounds.
+    pub data_cmds: usize,
+    /// NIC messages posted cluster-wide.
+    pub nic_messages: usize,
+    /// Functional placement check (None when not requested).
+    pub verified: Option<bool>,
+}
+
+/// Build node `node_idx`'s intra rounds for the global collective: one
+/// rebased single-node [`CollectivePlan`] per node block.
+pub fn build_node_rounds(
+    kind: CollectiveKind,
+    node_topo: &Topology,
+    num_nodes: usize,
+    node_idx: usize,
+    size: u64,
+    chunk: u64,
+    variant: crate::collectives::Variant,
+) -> Vec<CollectivePlan> {
+    let g = node_topo.num_gpus;
+    let intra = g as u64 * chunk;
+    let mut rounds = Vec::with_capacity(num_nodes);
+    for k in 0..num_nodes {
+        let base = k as u64 * intra;
+        let mut p = exec::build_plan(kind, variant, node_topo, intra);
+        match kind {
+            CollectiveKind::AllGather => rebase_plan(&mut p, u64::MAX, base, 0),
+            CollectiveKind::AllToAll => {
+                if variant.strategy == Strategy::Swap {
+                    // In-place: the post-swap input block IS the staged
+                    // outbound block (or the final block when k == self).
+                    rebase_plan(&mut p, u64::MAX, base, 0);
+                } else {
+                    let out = if k == node_idx {
+                        aa_out_base(size) + base
+                    } else {
+                        aa_stage_base(size) + base
+                    };
+                    rebase_plan(&mut p, aa_out_base(intra), base, out);
+                    if k != node_idx {
+                        // The flat planner leaves each GPU's own chunk in
+                        // place ("frameworks do the local move"); here the
+                        // cluster layer IS the framework: the diagonal must
+                        // reach the staging block to ride the NIC message.
+                        for r in &mut p.ranks {
+                            let gpu = r.gpu;
+                            let diag = Command::Copy {
+                                src: Addr::new(NodeId::Gpu(gpu), base + gpu as u64 * chunk),
+                                dst: Addr::new(
+                                    NodeId::Gpu(gpu),
+                                    aa_stage_base(size) + base + gpu as u64 * chunk,
+                                ),
+                                len: chunk,
+                            };
+                            // Hazard-free vs the round's other commands
+                            // (disjoint ranges): ride the first engine.
+                            r.engines[0].cmds.push(diag);
+                        }
+                    }
+                }
+            }
+        }
+        rounds.push(p);
+    }
+    rounds
+}
+
+/// Shift every address in `plan`: offsets below `split` move to
+/// `in_base + offset` (input region), offsets at or above it to
+/// `out_base + (offset − split)` (output region). `split = u64::MAX`
+/// rebases a single-region plan.
+fn rebase_plan(plan: &mut CollectivePlan, split: u64, in_base: u64, out_base: u64) {
+    let shift = |a: Addr| -> Addr {
+        if a.offset >= split {
+            Addr::new(a.node, out_base + (a.offset - split))
+        } else {
+            Addr::new(a.node, in_base + a.offset)
+        }
+    };
+    for r in &mut plan.ranks {
+        for e in &mut r.engines {
+            for c in &mut e.cmds {
+                match c {
+                    Command::Copy { src, dst, .. } => {
+                        *src = shift(*src);
+                        *dst = shift(*dst);
+                    }
+                    Command::Bcst {
+                        src, dst0, dst1, ..
+                    } => {
+                        *src = shift(*src);
+                        *dst0 = shift(*dst0);
+                        *dst1 = shift(*dst1);
+                    }
+                    Command::Swap { a, b, .. } => {
+                        *a = shift(*a);
+                        *b = shift(*b);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+/// Queue one node's per-rank host programs for all intra rounds onto its
+/// DES. `triggers[i]` is the absolute time round `i` may start; rounds
+/// sharing a trigger instant share ONE trigger write per rank (this is what
+/// makes a sequential schedule's single barrier cheaper than pipelining's
+/// per-block triggers). Prelaunch creates every round's poll-gated streams
+/// in the setup epoch before `t0`.
+fn queue_node_scripts(
+    sim: &mut Sim,
+    rounds: &[CollectivePlan],
+    prelaunch: bool,
+    t0: SimTime,
+    triggers: &[SimTime],
+) -> Vec<HostId> {
+    assert_eq!(rounds.len(), triggers.len());
+    let num_gpus = sim.cfg.topology.num_gpus;
+    let mut order: Vec<usize> = (0..rounds.len()).collect();
+    order.sort_by_key(|&i| (triggers[i], i));
+    let mut groups: Vec<(SimTime, Vec<usize>)> = Vec::new();
+    for &i in &order {
+        match groups.last_mut() {
+            Some((t, is)) if *t == triggers[i] => is.push(i),
+            _ => groups.push((triggers[i], vec![i])),
+        }
+    }
+    let mut hosts = Vec::new();
+    for g in 0..num_gpus {
+        let mut done: Vec<Vec<SignalId>> = vec![Vec::new(); rounds.len()];
+        for (i, round) in rounds.iter().enumerate() {
+            if let Some(r) = round.ranks.iter().find(|r| r.gpu == g) {
+                done[i] = r.engines.iter().map(|_| sim.alloc_signal(0)).collect();
+            }
+        }
+        let mut script = Vec::new();
+        if prelaunch {
+            let trig: Vec<SignalId> = groups.iter().map(|_| sim.alloc_signal(0)).collect();
+            for (gi, (_, is)) in groups.iter().enumerate() {
+                for &i in is {
+                    let Some(r) = rounds[i].ranks.iter().find(|r| r.gpu == g) else {
+                        continue;
+                    };
+                    for (ei, ep) in r.engines.iter().enumerate() {
+                        script.push(HostOp::CreateCommands {
+                            engine: ep.engine,
+                            cmds: exec::engine_stream(ep, Some(trig[gi]), done[i][ei]),
+                            api: exec::api_kind(ep),
+                        });
+                        script.push(HostOp::RingDoorbell { engine: ep.engine });
+                    }
+                }
+            }
+            script.push(HostOp::DelayUntil { at: t0 });
+            script.push(HostOp::Mark { name: "start" });
+            for (gi, (t, _)) in groups.iter().enumerate() {
+                script.push(HostOp::DelayUntil { at: *t });
+                script.push(HostOp::SetSignal {
+                    signal: trig[gi],
+                    value: 1,
+                });
+            }
+        } else {
+            script.push(HostOp::DelayUntil { at: t0 });
+            script.push(HostOp::Mark { name: "start" });
+            for (t, is) in &groups {
+                script.push(HostOp::DelayUntil { at: *t });
+                for &i in is {
+                    let Some(r) = rounds[i].ranks.iter().find(|r| r.gpu == g) else {
+                        continue;
+                    };
+                    for (ei, ep) in r.engines.iter().enumerate() {
+                        script.push(HostOp::CreateCommands {
+                            engine: ep.engine,
+                            cmds: exec::engine_stream(ep, None, done[i][ei]),
+                            api: exec::api_kind(ep),
+                        });
+                        script.push(HostOp::RingDoorbell { engine: ep.engine });
+                    }
+                }
+            }
+        }
+        for &i in &order {
+            for s in &done[i] {
+                script.push(HostOp::WaitSignal {
+                    signal: *s,
+                    at_least: 1,
+                });
+            }
+            script.push(HostOp::Mark {
+                name: ROUND_MARKS[i],
+            });
+        }
+        script.push(HostOp::Mark { name: "end" });
+        hosts.push(sim.add_host(script, 0));
+    }
+    hosts
+}
+
+/// Run one hierarchical collective end to end: intra rounds on per-node
+/// DES instances, inter exchange on the NIC model, placement optionally
+/// verified byte-for-byte.
+pub fn run_hier(
+    kind: CollectiveKind,
+    choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> HierResult {
+    run_hier_full(kind, choice, cluster, size, opts).0
+}
+
+/// [`run_hier`], additionally returning the per-node simulators so callers
+/// (equivalence tests, figure probes) can inspect the final memories. With
+/// `verify` off only node 0 is simulated (homogeneous symmetry).
+pub fn run_hier_full(
+    kind: CollectiveKind,
+    choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> (HierResult, Vec<Sim>) {
+    let n = cluster.num_nodes();
+    let gpn = cluster.gpus_per_node();
+    assert!(n <= MAX_NODES, "at most {MAX_NODES} nodes supported");
+    assert!(gpn >= 2, "hierarchical planners need ≥ 2 GPUs per node");
+    assert!(
+        choice.intra.strategy.applicable(kind),
+        "{} not applicable to {}",
+        choice.intra.strategy.name(),
+        kind.name()
+    );
+    let w = cluster.world_size() as u64;
+    assert!(
+        size % w == 0 && size >= w,
+        "size {size} must be a positive multiple of world size {w}"
+    );
+    if opts.verify {
+        assert!(w <= 256, "verification patterns need world size ≤ 256");
+    }
+    let c = size / w;
+    let intra = gpn as u64 * c;
+    let in_place = choice.intra.strategy == Strategy::Swap;
+    let prelaunch = choice.intra.prelaunch;
+    let observe = opts.latency.t_host_observe;
+    let nic = cluster.nic.clone();
+
+    // Homogeneous nodes ⇒ identical per-node timing: simulate only node 0
+    // for timing sweeps, every node when moving bytes for verification.
+    let sim_nodes = if opts.verify { n } else { 1 };
+    let mut sims: Vec<Sim> = (0..sim_nodes)
+        .map(|k| {
+            Sim::new(SimConfig {
+                topology: cluster.node(k).clone(),
+                latency: opts.latency.clone(),
+                functional: opts.verify,
+                trace: false,
+            })
+        })
+        .collect();
+    let rounds: Vec<Vec<CollectivePlan>> = (0..sim_nodes)
+        .map(|k| build_node_rounds(kind, cluster.node(k), n, k, size, c, choice.intra))
+        .collect();
+
+    // Prelaunch setup epoch: stream creation + doorbells happen before the
+    // collective triggers at t0. Unlike the flat executor's relative
+    // `Delay`, t0 must be an absolute instant (the NIC leg aligns to it),
+    // so budget the per-rank creation cost from the latency model (worst
+    // rank; engine_stream adds the poll gate + completion atomic) and park
+    // the flat executor's margin on top.
+    let t0: SimTime = if prelaunch {
+        let l = &opts.latency;
+        let setup: SimTime = (0..gpn)
+            .map(|g| {
+                rounds[0]
+                    .iter()
+                    .flat_map(|p| p.ranks.iter().filter(|r| r.gpu == g))
+                    .flat_map(|r| r.engines.iter())
+                    .map(|ep| {
+                        ns(l.control_ns(ep.cmds.len() + 2, ep.batched_control)) + ns(l.t_doorbell)
+                    })
+                    .sum()
+            })
+            .max()
+            .unwrap_or(0);
+        setup + PRELAUNCH_PARK_NS
+    } else {
+        0
+    };
+    let data_cmds = rounds[0].iter().map(|p| p.total_data_cmds()).sum::<usize>() * n;
+    // One (gathered) message per exchange partner: rank (k,g) talks to
+    // rank (k',g) of every other node. Classify each pair through the
+    // topology — cross-node pairs have no intra-node link
+    // (`Topology::try_link_index` returns None) and resolve to NIC links.
+    let nic_messages: usize = (0..cluster.world_size() as u32)
+        .map(|r| {
+            let (_, g) = cluster.locate(r);
+            (0..n)
+                .filter(|&k2| {
+                    matches!(
+                        cluster.path(r, cluster.global_rank(k2, g)),
+                        Some(RankPath::Nic(_))
+                    )
+                })
+                .count()
+        })
+        .sum();
+
+    if opts.verify {
+        init_buffers_cluster(&mut sims, kind, cluster, size, in_place);
+    }
+
+    let (latency_ns, inter_ns) = match kind {
+        CollectiveKind::AllGather => {
+            // Inter leg first: every rank's own chunk crosses the NIC. The
+            // bytes are staged into the receivers' memories up front (they
+            // are initial data); the DES rounds still wait for the modeled
+            // arrival times before touching them.
+            if opts.verify && n > 1 {
+                exchange_ag(&mut sims, cluster, c);
+            }
+            let inter = if n > 1 {
+                ns(nic.leg_ns(n - 1, c) + observe)
+            } else {
+                0
+            };
+            let mut end_max: SimTime = 0;
+            for (k, sim) in sims.iter_mut().enumerate() {
+                let triggers: Vec<SimTime> = (0..n)
+                    .map(|k2| {
+                        if n == 1 {
+                            t0
+                        } else {
+                            match choice.inter {
+                                InterSchedule::Sequential => t0 + inter,
+                                InterSchedule::Pipelined => {
+                                    if k2 == k {
+                                        t0
+                                    } else {
+                                        // Ring send order: node k2's j-th
+                                        // message reaches node (k2+j) mod n.
+                                        let j = (k + n - k2) % n;
+                                        t0 + ns(nic.arrival_ns(j, c) + observe)
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .collect();
+                let hosts = queue_node_scripts(sim, &rounds[k], prelaunch, t0, &triggers);
+                let out = sim.run();
+                assert!(
+                    out.deadlocked.is_empty(),
+                    "hier allgather deadlocked on node {k}: {:?}",
+                    out.deadlocked
+                );
+                for h in hosts {
+                    end_max = end_max.max(sim.host(h).mark("end").unwrap());
+                }
+            }
+            (end_max - t0, inter)
+        }
+        CollectiveKind::AllToAll => {
+            // Intra rounds first (all triggered at t0), then the staged
+            // blocks stream over the NIC.
+            let triggers = vec![t0; n];
+            let mut round_done = vec![0u64; n];
+            let mut end_max: SimTime = 0;
+            for (k, sim) in sims.iter_mut().enumerate() {
+                let hosts = queue_node_scripts(sim, &rounds[k], prelaunch, t0, &triggers);
+                let out = sim.run();
+                assert!(
+                    out.deadlocked.is_empty(),
+                    "hier alltoall deadlocked on node {k}: {:?}",
+                    out.deadlocked
+                );
+                for h in hosts {
+                    let host = sim.host(h);
+                    end_max = end_max.max(host.mark("end").unwrap());
+                    for (j, rd) in round_done.iter_mut().enumerate() {
+                        *rd = (*rd).max(host.mark(ROUND_MARKS[j]).unwrap());
+                    }
+                }
+            }
+            if opts.verify && n > 1 {
+                exchange_aa(&mut sims, cluster, size, in_place);
+            }
+            if n == 1 {
+                (end_max - t0, 0)
+            } else {
+                let all_done = round_done.iter().copied().max().unwrap() as f64;
+                // Port-serialized sends, one per remote block, scheduled at
+                // block readiness (pipelined) or after the whole intra
+                // phase (sequential). Homogeneous nodes: round j completes
+                // at round_done[j] on every node.
+                let mut last_arrival = vec![0f64; n];
+                for k2 in 0..n {
+                    let mut port = 0f64;
+                    for (j, rd) in round_done.iter().enumerate() {
+                        if j == k2 {
+                            continue;
+                        }
+                        let ready = match choice.inter {
+                            InterSchedule::Pipelined => *rd as f64,
+                            InterSchedule::Sequential => all_done,
+                        };
+                        let start = ready.max(port);
+                        port = start + nic.t_post_per_msg + nic.payload_ns(intra);
+                        let arr = port + nic.t_latency + observe;
+                        last_arrival[j] = last_arrival[j].max(arr);
+                    }
+                }
+                let mut total = 0f64;
+                for (j, arr) in last_arrival.iter().enumerate() {
+                    total = total.max(arr.max(round_done[j] as f64));
+                }
+                let latency = ns(total) - t0;
+                let intra_span = round_done.iter().copied().max().unwrap() - t0;
+                (latency, latency.saturating_sub(intra_span))
+            }
+        }
+    };
+
+    let verified = if opts.verify {
+        Some(check_cluster(&sims, kind, cluster, size, in_place))
+    } else {
+        None
+    };
+
+    (
+        HierResult {
+            latency_ns,
+            inter_ns,
+            intra_ns: latency_ns.saturating_sub(inter_ns),
+            data_cmds,
+            nic_messages,
+            verified,
+        },
+        sims,
+    )
+}
+
+/// Initialize every rank's buffers with the global verification patterns
+/// (`collectives::verify::pattern` keyed by global rank / global chunk).
+fn init_buffers_cluster(
+    sims: &mut [Sim],
+    kind: CollectiveKind,
+    cluster: &ClusterTopology,
+    size: u64,
+    in_place: bool,
+) {
+    let w = cluster.world_size() as u32;
+    let c = size / w as u64;
+    for (k, sim) in sims.iter_mut().enumerate() {
+        for g in 0..cluster.gpus_per_node() {
+            let r = cluster.global_rank(k, g);
+            let node = NodeId::Gpu(g);
+            match kind {
+                CollectiveKind::AllGather => {
+                    sim.memory.ensure(node, size);
+                    sim.memory.poke(
+                        node,
+                        r as u64 * c,
+                        &vec![pattern(r as u8, r as u8); c as usize],
+                    );
+                }
+                CollectiveKind::AllToAll => {
+                    let cap = if in_place {
+                        size
+                    } else {
+                        aa_stage_base(size) + size
+                    };
+                    sim.memory.ensure(node, cap);
+                    for d in 0..w {
+                        sim.memory.poke(
+                            node,
+                            d as u64 * c,
+                            &vec![pattern(r as u8, d as u8); c as usize],
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// All-gather inter leg: every rank's own chunk lands at the same offset on
+/// its same-local-rank peers in every other node.
+fn exchange_ag(sims: &mut [Sim], cluster: &ClusterTopology, c: u64) {
+    let n = sims.len();
+    for k in 0..n {
+        for g in 0..cluster.gpus_per_node() {
+            let r = cluster.global_rank(k, g) as u64;
+            let data = sims[k].memory.peek(NodeId::Gpu(g), r * c, c);
+            for (k2, sim2) in sims.iter_mut().enumerate() {
+                if k2 != k {
+                    sim2.memory.poke(NodeId::Gpu(g), r * c, &data);
+                }
+            }
+        }
+    }
+}
+
+/// All-to-all inter leg: buffered block exchange — all outbound blocks are
+/// snapshotted before any receive lands (full-duplex RDMA semantics), which
+/// is what lets the in-place variant reuse the input blocks as staging.
+fn exchange_aa(sims: &mut [Sim], cluster: &ClusterTopology, size: u64, in_place: bool) {
+    let n = sims.len();
+    let gpn = cluster.gpus_per_node();
+    let intra = gpn as u64 * (size / cluster.world_size() as u64);
+    let mut blocks: Vec<(usize, u8, u64, Vec<u8>)> = Vec::new();
+    for (k, sim) in sims.iter().enumerate() {
+        for g in 0..gpn {
+            for k2 in 0..n {
+                if k2 == k {
+                    continue;
+                }
+                let src_off = if in_place {
+                    k2 as u64 * intra
+                } else {
+                    aa_stage_base(size) + k2 as u64 * intra
+                };
+                let dst_off = if in_place {
+                    k as u64 * intra
+                } else {
+                    aa_out_base(size) + k as u64 * intra
+                };
+                let data = sim.memory.peek(NodeId::Gpu(g), src_off, intra);
+                blocks.push((k2, g, dst_off, data));
+            }
+        }
+    }
+    for (k2, g, off, data) in blocks {
+        sims[k2].memory.poke(NodeId::Gpu(g), off, &data);
+    }
+}
+
+/// Check the post-collective placement against the mathematical definition
+/// (AG = concatenation of all ranks' chunks; AA = global transpose).
+pub fn check_cluster(
+    sims: &[Sim],
+    kind: CollectiveKind,
+    cluster: &ClusterTopology,
+    size: u64,
+    in_place: bool,
+) -> bool {
+    let w = cluster.world_size() as u32;
+    let c = size / w as u64;
+    for (k, sim) in sims.iter().enumerate() {
+        for g in 0..cluster.gpus_per_node() {
+            let r = cluster.global_rank(k, g);
+            for d in 0..w {
+                let (off, want) = match kind {
+                    CollectiveKind::AllGather => (d as u64 * c, pattern(d as u8, d as u8)),
+                    CollectiveKind::AllToAll => {
+                        if in_place {
+                            (d as u64 * c, pattern(d as u8, r as u8))
+                        } else if d == r {
+                            // Global diagonal stays in the input, exactly
+                            // like the flat out-of-place convention.
+                            (d as u64 * c, pattern(r as u8, r as u8))
+                        } else {
+                            (aa_out_base(size) + d as u64 * c, pattern(d as u8, r as u8))
+                        }
+                    }
+                };
+                let got = sim.memory.peek(NodeId::Gpu(g), off, c);
+                if got.iter().any(|&b| b != want) {
+                    crate::log_error!(
+                        "cluster verify failed: rank {r} (node {k} gpu {g}) chunk {d}: \
+                         want {want}, got {:?}…",
+                        &got[..got.len().min(4)]
+                    );
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{run_collective, RunOptions, Variant};
+    use crate::util::bytes::KB;
+
+    fn choice(s: Strategy, prelaunch: bool, inter: InterSchedule) -> ClusterChoice {
+        ClusterChoice {
+            intra: Variant::new(s, prelaunch),
+            inter,
+        }
+    }
+
+    /// A 1-node cluster must reproduce the flat collective's latency
+    /// exactly (same plans, same engine streams, same trigger instant).
+    #[test]
+    fn single_node_matches_flat_latency() {
+        let cluster = ClusterTopology::mi300x(1);
+        let size = 64 * KB;
+        for (kind, strat) in [
+            (CollectiveKind::AllGather, Strategy::Pcpy),
+            (CollectiveKind::AllGather, Strategy::B2b),
+            (CollectiveKind::AllToAll, Strategy::Pcpy),
+        ] {
+            for prelaunch in [false, true] {
+                let flat = run_collective(
+                    kind,
+                    Variant::new(strat, prelaunch),
+                    size,
+                    &RunOptions::default(),
+                );
+                let hier = run_hier(
+                    kind,
+                    choice(strat, prelaunch, InterSchedule::Sequential),
+                    &cluster,
+                    size,
+                    &HierRunOptions::default(),
+                );
+                assert_eq!(
+                    hier.latency_ns, flat.latency_ns,
+                    "{} {} prelaunch={prelaunch}",
+                    kind.name(),
+                    strat.name()
+                );
+                assert_eq!(hier.inter_ns, 0);
+                assert_eq!(hier.nic_messages, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn two_node_allgather_verifies_all_variants() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 64u64 * 1024 * 2; // 2 KB per rank chunk
+        for strat in [Strategy::Pcpy, Strategy::Bcst, Strategy::B2b] {
+            for inter in [InterSchedule::Sequential, InterSchedule::Pipelined] {
+                let r = run_hier(
+                    CollectiveKind::AllGather,
+                    choice(strat, true, inter),
+                    &cluster,
+                    size,
+                    &HierRunOptions {
+                        verify: true,
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(r.verified, Some(true), "{} {inter:?}", strat.name());
+                assert!(r.inter_ns > 0 && r.latency_ns > r.inter_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn two_node_alltoall_verifies_all_variants() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 64u64 * 1024 * 2;
+        for strat in [Strategy::Pcpy, Strategy::Swap, Strategy::B2b] {
+            for inter in [InterSchedule::Sequential, InterSchedule::Pipelined] {
+                let r = run_hier(
+                    CollectiveKind::AllToAll,
+                    choice(strat, false, inter),
+                    &cluster,
+                    size,
+                    &HierRunOptions {
+                        verify: true,
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(r.verified, Some(true), "{} {inter:?}", strat.name());
+                assert!(r.inter_ns > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_never_slower_than_sequential() {
+        let cluster = ClusterTopology::mi300x(4);
+        let size = 32u64 << 20;
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            let seq = run_hier(
+                kind,
+                choice(Strategy::Pcpy, true, InterSchedule::Sequential),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            let pipe = run_hier(
+                kind,
+                choice(Strategy::Pcpy, true, InterSchedule::Pipelined),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            assert!(
+                pipe.latency_ns <= seq.latency_ns,
+                "{}: pipe {} vs seq {}",
+                kind.name(),
+                pipe.latency_ns,
+                seq.latency_ns
+            );
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_node_count() {
+        let size = 4u64 << 20;
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            let mut prev = 0u64;
+            for n in [1usize, 2, 4] {
+                let cluster = ClusterTopology::mi300x(n);
+                let r = run_hier(
+                    kind,
+                    choice(Strategy::Pcpy, true, InterSchedule::Pipelined),
+                    &cluster,
+                    size,
+                    &HierRunOptions::default(),
+                );
+                assert!(
+                    r.latency_ns > prev,
+                    "{} n={n}: {} !> {prev}",
+                    kind.name(),
+                    r.latency_ns
+                );
+                prev = r.latency_ns;
+            }
+        }
+    }
+
+    #[test]
+    fn round_plans_cover_global_volume() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 16u64 * 1024;
+        let c = size / 16;
+        let rounds = build_node_rounds(
+            CollectiveKind::AllGather,
+            cluster.node(0),
+            2,
+            0,
+            size,
+            c,
+            Variant::new(Strategy::Pcpy, false),
+        );
+        assert_eq!(rounds.len(), 2);
+        // Each round is a full single-node AG: 8×7 copies.
+        for r in &rounds {
+            assert_eq!(r.total_data_cmds(), 56);
+        }
+        // Round 1 operates on the second node block.
+        let intra = 8 * c;
+        for rank in &rounds[1].ranks {
+            for e in &rank.engines {
+                for cmd in &e.cmds {
+                    if let Command::Copy { src, dst, .. } = cmd {
+                        assert!(src.offset >= intra && dst.offset >= intra);
+                    }
+                }
+            }
+        }
+    }
+}

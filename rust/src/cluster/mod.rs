@@ -1,0 +1,46 @@
+//! Multi-node cluster layer: hierarchical DMA collectives across N
+//! DMA-simulated nodes joined by NIC/RDMA links.
+//!
+//! The paper evaluates DMA collectives inside a single 8-GPU MI300X node;
+//! production serving and training scale out across nodes, where the
+//! standard recipe (GPU-centric communication surveys, hierarchical NCCL/
+//! RCCL algorithms) is a two-level collective: an intra-node leg over the
+//! fast fabric (here: sDMA offloads over xGMI, reusing the paper's
+//! `pcpy`/`bcst`/`swap`/`b2b`/prelaunch variants unchanged) and an
+//! inter-node leg over the NIC. This layer provides:
+//!
+//! - [`topology::ClusterTopology`] — N single-node [`crate::sim::Topology`]
+//!   instances, directed NIC links per cross-node rank pair, and the
+//!   global-rank ↔ (node, local GPU) mapping.
+//! - [`hier`] — hierarchical all-gather / all-to-all planners + executor:
+//!   intra rounds lowered through the existing [`crate::collectives`]
+//!   planners onto per-node DES instances, inter exchange on the NIC
+//!   model, placement verified byte-for-byte.
+//! - [`selector`] — cluster-aware policy: (intra variant, inter schedule)
+//!   per size and node count, extending `collectives::select_variant`.
+//!
+//! # NIC link model assumptions ([`topology::NicModel`])
+//!
+//! - **Bandwidth**: every directed cross-node rank pair runs at a uniform
+//!   `bw_bytes_per_ns` (default 50 B/ns ≈ 400 Gb/s RoCE per GPU NIC),
+//!   full duplex — sends and receives do not contend.
+//! - **Per-message latency**: each message pays a one-way base latency
+//!   (`t_latency`, default 2 µs: propagation + NIC processing) plus a host
+//!   posting cost (`t_post_per_msg`, default 450 ns per RDMA work request).
+//! - **Port serialization**: one rank's concurrent messages to distinct
+//!   peers serialize their payloads through its single NIC port; the base
+//!   latency pipelines across messages.
+//! - **No congestion**: the fabric core is non-blocking — no incast or
+//!   switch contention is modeled (future work; the per-port serialization
+//!   above is the only shared-resource effect).
+//! - **Scatter/gather**: one staged node block travels as a single
+//!   vectored message (RDMA gather lists), so hierarchical AA posts
+//!   `n−1` messages per rank, not `n·g`.
+
+pub mod hier;
+pub mod selector;
+pub mod topology;
+
+pub use hier::{run_hier, run_hier_full, HierResult, HierRunOptions};
+pub use selector::{select_cluster, ClusterChoice, InterSchedule};
+pub use topology::{ClusterTopology, GlobalRank, NicModel};

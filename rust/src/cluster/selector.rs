@@ -1,0 +1,154 @@
+//! Cluster-aware variant selection: extends the single-node best-per-size
+//! policy ([`select_variant`], Tables 2/3) to a per-(size, node count)
+//! choice of **(intra-node variant, inter-node schedule)**.
+//!
+//! - The intra leg of a hierarchical collective runs per-node rounds of
+//!   size `size / nodes`, so the intra variant is the flat policy evaluated
+//!   at the per-round size — more nodes push the intra leg toward the
+//!   latency-bound regime where `b2b`/`bcst`/`swap` win.
+//! - The inter schedule trades a single cheap barrier (sequential: one
+//!   trigger write, one completion observation per rank) against per-block
+//!   overlap (pipelined: a trigger + CQ poll per node block). Pipelining
+//!   pays once the per-peer NIC payload time dominates that per-block
+//!   overhead.
+
+use crate::collectives::{select_variant, CollectiveKind, Variant};
+
+use super::topology::ClusterTopology;
+
+/// How the inter-node exchange is scheduled against the intra-node rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InterSchedule {
+    /// Strict phase barrier: the NIC leg completes (or starts) as one unit;
+    /// a single trigger write / completion observation per rank.
+    Sequential,
+    /// Per-block overlap: each node block triggers its intra round (AG) or
+    /// NIC send (AA) as soon as it is ready; one trigger + CQ poll per
+    /// block.
+    Pipelined,
+}
+
+impl InterSchedule {
+    /// Short name as used in figure labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            InterSchedule::Sequential => "seq",
+            InterSchedule::Pipelined => "pipe",
+        }
+    }
+}
+
+/// A full cluster configuration: intra-node variant × inter-node schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ClusterChoice {
+    pub intra: Variant,
+    pub inter: InterSchedule,
+}
+
+impl ClusterChoice {
+    /// Figure-label name, e.g. `prelaunch_b2b/pipe`.
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.intra.name(), self.inter.name())
+    }
+}
+
+/// Minimum per-peer NIC payload time (ns) before pipelining's per-block
+/// trigger/poll overhead pays for itself (≈ a few sync round-trips).
+pub const PIPELINE_MIN_BLOCK_NS: f64 = 4_000.0;
+
+/// Pick (intra variant, inter schedule) for `kind` at global buffer `size`
+/// bytes per rank on `cluster`.
+pub fn select_cluster(kind: CollectiveKind, cluster: &ClusterTopology, size: u64) -> ClusterChoice {
+    let n = cluster.num_nodes() as u64;
+    // Intra rounds are per-node-block collectives of size/n.
+    let intra = select_variant(kind, (size / n.max(1)).max(1));
+    let inter = if cluster.num_nodes() <= 1 {
+        InterSchedule::Sequential
+    } else {
+        let per_peer = match kind {
+            // AG inter leg moves each rank's own chunk; AA moves a staged
+            // per-node block of gpus_per_node chunks.
+            CollectiveKind::AllGather => size / cluster.world_size() as u64,
+            CollectiveKind::AllToAll => size / n,
+        };
+        if cluster.nic.payload_ns(per_peer) >= PIPELINE_MIN_BLOCK_NS {
+            InterSchedule::Pipelined
+        } else {
+            InterSchedule::Sequential
+        }
+    };
+    ClusterChoice { intra, inter }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Strategy;
+    use crate::util::bytes::{GB, KB, MB};
+
+    #[test]
+    fn intra_variant_follows_per_round_size() {
+        let c = ClusterTopology::mi300x(4);
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            for size in [8 * KB, MB, 64 * MB, GB] {
+                let ch = select_cluster(kind, &c, size);
+                assert_eq!(ch.intra, select_variant(kind, size / 4));
+                assert!(ch.intra.strategy.applicable(kind));
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_is_sequential_and_flat() {
+        let c = ClusterTopology::mi300x(1);
+        let ch = select_cluster(CollectiveKind::AllGather, &c, 32 * MB);
+        assert_eq!(ch.inter, InterSchedule::Sequential);
+        assert_eq!(ch.intra, select_variant(CollectiveKind::AllGather, 32 * MB));
+    }
+
+    #[test]
+    fn schedule_cuts_over_with_size() {
+        let c = ClusterTopology::mi300x(2);
+        for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            assert_eq!(
+                select_cluster(kind, &c, 64 * KB).inter,
+                InterSchedule::Sequential,
+                "{}",
+                kind.name()
+            );
+            assert_eq!(
+                select_cluster(kind, &c, GB).inter,
+                InterSchedule::Pipelined,
+                "{}",
+                kind.name()
+            );
+        }
+        // AA blocks are gpus_per_node× larger than AG chunks, so AA
+        // pipelines earlier.
+        let mid = 2 * MB;
+        let ag = select_cluster(CollectiveKind::AllGather, &c, mid);
+        let aa = select_cluster(CollectiveKind::AllToAll, &c, mid);
+        assert_eq!(ag.inter, InterSchedule::Sequential);
+        assert_eq!(aa.inter, InterSchedule::Pipelined);
+    }
+
+    #[test]
+    fn more_nodes_shift_intra_toward_latency_bound() {
+        // A 16MB flat AA picks pcpy+prelaunch (Table 3); at 8 nodes the
+        // 2MB per-node rounds fall back into swap's window.
+        let c8 = ClusterTopology::mi300x(8);
+        let flat = select_variant(CollectiveKind::AllToAll, 16 * MB);
+        let hier = select_cluster(CollectiveKind::AllToAll, &c8, 16 * MB);
+        assert_eq!(flat.strategy, Strategy::Pcpy);
+        assert_eq!(hier.intra.strategy, Strategy::Swap);
+    }
+
+    #[test]
+    fn choice_names_compose() {
+        let ch = ClusterChoice {
+            intra: Variant::new(Strategy::B2b, true),
+            inter: InterSchedule::Pipelined,
+        };
+        assert_eq!(ch.name(), "prelaunch_b2b/pipe");
+    }
+}

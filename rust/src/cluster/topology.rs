@@ -1,0 +1,262 @@
+//! Cluster topology: N single-node [`Topology`] instances composed with
+//! directed cross-node NIC links, plus the global-rank ↔ (node, local GPU)
+//! mapping used by the hierarchical planners.
+
+use std::collections::HashMap;
+
+use crate::sim::topology::{LinkIdx, NodeId, Topology};
+
+/// Global rank across the whole cluster: `node * gpus_per_node + local_gpu`.
+pub type GlobalRank = u32;
+
+/// NIC / RDMA link model parameters, uniform across the cluster.
+///
+/// See `cluster/mod.rs` for the modeling assumptions (full duplex, no
+/// congestion, port-serialized payloads).
+#[derive(Debug, Clone)]
+pub struct NicModel {
+    /// Per-direction bandwidth in bytes/ns (1 GB/s == 1 byte/ns, matching
+    /// the xGMI convention). Default 50.0 ≈ 400 Gb/s RoCE.
+    pub bw_bytes_per_ns: f64,
+    /// One-way base latency per message: propagation + NIC processing +
+    /// remote write posting, ns.
+    pub t_latency: f64,
+    /// Host/NIC cost to post one RDMA work request, ns.
+    pub t_post_per_msg: f64,
+}
+
+impl Default for NicModel {
+    fn default() -> Self {
+        NicModel {
+            bw_bytes_per_ns: 50.0,
+            t_latency: 2_000.0,
+            t_post_per_msg: 450.0,
+        }
+    }
+}
+
+impl NicModel {
+    /// Pure payload (wire) time for `bytes` at the link bandwidth.
+    pub fn payload_ns(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bw_bytes_per_ns
+    }
+
+    /// Single message of `bytes` to one peer: post + payload + latency.
+    pub fn message_ns(&self, bytes: u64) -> f64 {
+        self.t_post_per_msg + self.payload_ns(bytes) + self.t_latency
+    }
+
+    /// Arrival time (relative to the leg start) of the `pos`-th message
+    /// (1-based) when one rank streams equal-size messages to distinct
+    /// peers through its single full-duplex port: posts and payloads
+    /// serialize on the port, propagation pipelines.
+    pub fn arrival_ns(&self, pos: usize, bytes_per_peer: u64) -> f64 {
+        pos as f64 * (self.t_post_per_msg + self.payload_ns(bytes_per_peer)) + self.t_latency
+    }
+
+    /// Total time for one rank to deliver `bytes_per_peer` to each of
+    /// `peers` peers (the arrival of the last message).
+    pub fn leg_ns(&self, peers: usize, bytes_per_peer: u64) -> f64 {
+        if peers == 0 {
+            0.0
+        } else {
+            self.arrival_ns(peers, bytes_per_peer)
+        }
+    }
+}
+
+/// A directed cross-node NIC link between two global ranks' ports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NicLink {
+    pub src: GlobalRank,
+    pub dst: GlobalRank,
+}
+
+/// Dense NIC link index.
+pub type NicLinkIdx = usize;
+
+/// How two global ranks are connected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankPath {
+    /// Same node: an xGMI link inside that node's [`Topology`].
+    Intra(LinkIdx),
+    /// Different nodes: a directed NIC link.
+    Nic(NicLinkIdx),
+}
+
+/// N single-node platforms joined by a full-mesh of directed NIC links
+/// (one per ordered cross-node pair of global ranks).
+#[derive(Debug, Clone)]
+pub struct ClusterTopology {
+    nodes: Vec<Topology>,
+    pub nic: NicModel,
+    links: Vec<NicLink>,
+    index: HashMap<(GlobalRank, GlobalRank), NicLinkIdx>,
+}
+
+impl ClusterTopology {
+    /// Compose `nodes` (must be homogeneous in GPU count — the hierarchical
+    /// planners assume identical intra-node shapes) with `nic` links.
+    pub fn new(nodes: Vec<Topology>, nic: NicModel) -> Self {
+        assert!(!nodes.is_empty(), "cluster needs at least one node");
+        let g = nodes[0].num_gpus;
+        assert!(
+            nodes.iter().all(|t| t.num_gpus == g),
+            "heterogeneous GPU counts are not supported"
+        );
+        let n = nodes.len();
+        let world = n as u32 * g as u32;
+        let mut links = Vec::new();
+        let mut index = HashMap::new();
+        for src in 0..world {
+            for dst in 0..world {
+                // Cross-node pairs only: intra-node pairs ride xGMI.
+                if src != dst && src / g as u32 != dst / g as u32 {
+                    index.insert((src, dst), links.len());
+                    links.push(NicLink { src, dst });
+                }
+            }
+        }
+        ClusterTopology {
+            nodes,
+            nic,
+            links,
+            index,
+        }
+    }
+
+    /// `num_nodes` copies of `node` with the given NIC model.
+    pub fn homogeneous(num_nodes: usize, node: Topology, nic: NicModel) -> Self {
+        Self::new(vec![node; num_nodes], nic)
+    }
+
+    /// `num_nodes` MI300X platforms over default 400 Gb/s RoCE links.
+    pub fn mi300x(num_nodes: usize) -> Self {
+        Self::homogeneous(num_nodes, Topology::mi300x_platform(), NicModel::default())
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// GPUs per node.
+    pub fn gpus_per_node(&self) -> u8 {
+        self.nodes[0].num_gpus
+    }
+
+    /// Total GPU count across the cluster.
+    pub fn world_size(&self) -> usize {
+        self.nodes.len() * self.gpus_per_node() as usize
+    }
+
+    /// Single-node topology of node `k`.
+    pub fn node(&self, k: usize) -> &Topology {
+        &self.nodes[k]
+    }
+
+    /// (node, local GPU) → global rank.
+    pub fn global_rank(&self, node: usize, gpu: u8) -> GlobalRank {
+        assert!(node < self.num_nodes() && gpu < self.gpus_per_node());
+        (node * self.gpus_per_node() as usize) as u32 + gpu as u32
+    }
+
+    /// Global rank → (node, local GPU).
+    pub fn locate(&self, r: GlobalRank) -> (usize, u8) {
+        assert!((r as usize) < self.world_size(), "rank {r} out of range");
+        let g = self.gpus_per_node() as u32;
+        ((r / g) as usize, (r % g) as u8)
+    }
+
+    /// Directed NIC link between two cross-node global ranks.
+    pub fn try_nic_link(&self, src: GlobalRank, dst: GlobalRank) -> Option<NicLinkIdx> {
+        self.index.get(&(src, dst)).copied()
+    }
+
+    /// NIC link metadata by dense index.
+    pub fn nic_link(&self, idx: NicLinkIdx) -> &NicLink {
+        &self.links[idx]
+    }
+
+    /// Total number of directed NIC links (`world² − world − nodes·gpus²
+    /// + nodes·gpus`, i.e. every ordered cross-node rank pair).
+    pub fn num_nic_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// How global ranks `a` and `b` are connected; `None` when `a == b`.
+    /// Same-node pairs resolve through [`Topology::try_link_index`] —
+    /// cross-node pairs have no intra-node link and route over the NIC.
+    pub fn path(&self, a: GlobalRank, b: GlobalRank) -> Option<RankPath> {
+        if a == b {
+            return None;
+        }
+        let (na, ga) = self.locate(a);
+        let (nb, gb) = self.locate(b);
+        if na == nb {
+            self.nodes[na]
+                .try_link_index(NodeId::Gpu(ga), NodeId::Gpu(gb))
+                .map(RankPath::Intra)
+        } else {
+            self.try_nic_link(a, b).map(RankPath::Nic)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_mapping_roundtrips() {
+        let c = ClusterTopology::mi300x(4);
+        assert_eq!(c.num_nodes(), 4);
+        assert_eq!(c.gpus_per_node(), 8);
+        assert_eq!(c.world_size(), 32);
+        for r in 0..32u32 {
+            let (n, g) = c.locate(r);
+            assert_eq!(c.global_rank(n, g), r);
+        }
+        assert_eq!(c.locate(17), (2, 1));
+    }
+
+    #[test]
+    fn nic_links_cover_cross_node_pairs_only() {
+        let c = ClusterTopology::mi300x(2);
+        // 16 ranks, 8 per node: 16·15 ordered pairs − 2·8·7 intra = 128.
+        assert_eq!(c.num_nic_links(), 128);
+        assert!(c.try_nic_link(0, 8).is_some());
+        assert!(c.try_nic_link(0, 1).is_none()); // same node
+        assert!(c.try_nic_link(3, 3).is_none());
+        let l = c.nic_link(c.try_nic_link(0, 8).unwrap());
+        assert_eq!((l.src, l.dst), (0, 8));
+    }
+
+    #[test]
+    fn path_classifies_pairs() {
+        let c = ClusterTopology::mi300x(2);
+        assert!(matches!(c.path(0, 1), Some(RankPath::Intra(_))));
+        assert!(matches!(c.path(0, 9), Some(RankPath::Nic(_))));
+        assert_eq!(c.path(5, 5), None);
+    }
+
+    #[test]
+    fn single_node_cluster_has_no_nic_links() {
+        let c = ClusterTopology::mi300x(1);
+        assert_eq!(c.num_nic_links(), 0);
+        assert_eq!(c.world_size(), 8);
+    }
+
+    #[test]
+    fn nic_model_timing() {
+        let m = NicModel::default();
+        // 1 MB at 50 B/ns ≈ 21 µs payload.
+        assert!((m.payload_ns(1 << 20) - 20_971.52).abs() < 1e-6);
+        assert!(m.message_ns(0) >= m.t_latency);
+        // Port serialization: last of 3 arrives after 3 payloads.
+        let one = m.arrival_ns(1, 1 << 20);
+        let three = m.arrival_ns(3, 1 << 20);
+        assert!(three > 2.9 * (one - m.t_latency));
+        assert_eq!(m.leg_ns(0, 123), 0.0);
+    }
+}

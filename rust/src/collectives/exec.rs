@@ -12,10 +12,44 @@
 use crate::sim::command::{AtomicOp, Command, PollCond};
 use crate::sim::host::{ApiKind, HostId, HostOp};
 use crate::sim::power::Activity;
-use crate::sim::{Sim, SimConfig};
+use crate::sim::{Sim, SimConfig, SignalId};
 
-use super::plan::CollectivePlan;
+use super::plan::{CollectivePlan, EnginePlan};
 use super::{b2b, bcst, pcpy, swap, verify, CollectiveKind, Strategy, Variant};
+
+/// Prelaunch setup-epoch margin: after creating poll-gated streams and
+/// ringing doorbells, hosts wait this long for engines to park on their
+/// polls before starting the measured window (§4.5).
+pub const PRELAUNCH_PARK_NS: u64 = 20_000;
+
+/// One engine's queue contents for a collective: optional prelaunch gate,
+/// the plan's data commands, and the completion atomic. Shared between
+/// [`run_collective`] and the hierarchical `cluster::hier` executor.
+pub fn engine_stream(ep: &EnginePlan, trigger: Option<SignalId>, done: SignalId) -> Vec<Command> {
+    let mut cmds = Vec::with_capacity(ep.cmds.len() + 2);
+    if let Some(t) = trigger {
+        cmds.push(Command::Poll {
+            signal: t,
+            cond: PollCond::Gte(1),
+        });
+    }
+    cmds.extend(ep.cmds.iter().cloned());
+    cmds.push(Command::Atomic {
+        signal: done,
+        op: AtomicOp::Add(1),
+    });
+    cmds
+}
+
+/// Control-path API style for an engine plan (batched or per-command raw
+/// queue writes).
+pub fn api_kind(ep: &EnginePlan) -> ApiKind {
+    if ep.batched_control {
+        ApiKind::RawBatched
+    } else {
+        ApiKind::Raw
+    }
+}
 
 /// Execution options.
 #[derive(Debug, Clone)]
@@ -120,28 +154,17 @@ pub fn run_collective(
         if variant.prelaunch {
             // Setup epoch: create poll-gated streams + ring doorbells.
             for (ei, ep) in rank.engines.iter().enumerate() {
-                let mut cmds = vec![Command::Poll {
-                    signal: triggers[g],
-                    cond: PollCond::Gte(1),
-                }];
-                cmds.extend(ep.cmds.iter().cloned());
-                cmds.push(Command::Atomic {
-                    signal: eng_signals[ri][ei],
-                    op: AtomicOp::Add(1),
-                });
                 script.push(HostOp::CreateCommands {
                     engine: ep.engine,
-                    cmds,
-                    api: if ep.batched_control {
-                        ApiKind::RawBatched
-                    } else {
-                        ApiKind::Raw
-                    },
+                    cmds: engine_stream(ep, Some(triggers[g]), eng_signals[ri][ei]),
+                    api: api_kind(ep),
                 });
                 script.push(HostOp::RingDoorbell { engine: ep.engine });
             }
             // Let engines park on their polls, then start the clock.
-            script.push(HostOp::Delay { ns: 20_000 });
+            script.push(HostOp::Delay {
+                ns: PRELAUNCH_PARK_NS,
+            });
             script.push(HostOp::Mark { name: "start" });
             script.push(HostOp::SetSignal {
                 signal: triggers[g],
@@ -150,19 +173,10 @@ pub fn run_collective(
         } else {
             script.push(HostOp::Mark { name: "start" });
             for (ei, ep) in rank.engines.iter().enumerate() {
-                let mut cmds = ep.cmds.clone();
-                cmds.push(Command::Atomic {
-                    signal: eng_signals[ri][ei],
-                    op: AtomicOp::Add(1),
-                });
                 script.push(HostOp::CreateCommands {
                     engine: ep.engine,
-                    cmds,
-                    api: if ep.batched_control {
-                        ApiKind::RawBatched
-                    } else {
-                        ApiKind::Raw
-                    },
+                    cmds: engine_stream(ep, None, eng_signals[ri][ei]),
+                    api: api_kind(ep),
                 });
                 script.push(HostOp::RingDoorbell { engine: ep.engine });
             }

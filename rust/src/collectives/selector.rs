@@ -53,21 +53,23 @@ pub struct SweepPoint {
 
 /// Empirically derive the best variant per size from sweep data
 /// (regenerates Tables 2/3 from measurements).
+///
+/// Single pass over the points (the old version re-filtered the full list
+/// per distinct size, O(n²)): per size the running argmin is kept with a
+/// strict `<` comparison, which preserves the historical tie-break — the
+/// earliest point in input order wins among equal latencies.
 pub fn calibrate(points: &[SweepPoint]) -> Vec<(u64, Variant)> {
-    let mut sizes: Vec<u64> = points.iter().map(|p| p.size).collect();
-    sizes.sort_unstable();
-    sizes.dedup();
-    sizes
-        .into_iter()
-        .map(|s| {
-            let best = points
-                .iter()
-                .filter(|p| p.size == s)
-                .min_by_key(|p| p.latency_ns)
-                .expect("size with no points");
-            (s, best.variant)
-        })
-        .collect()
+    use std::collections::HashMap;
+    let mut best: HashMap<u64, (u64, Variant)> = HashMap::with_capacity(points.len());
+    for p in points {
+        let e = best.entry(p.size).or_insert((p.latency_ns, p.variant));
+        if p.latency_ns < e.0 {
+            *e = (p.latency_ns, p.variant);
+        }
+    }
+    let mut out: Vec<(u64, Variant)> = best.into_iter().map(|(s, (_, v))| (s, v)).collect();
+    out.sort_unstable_by_key(|&(s, _)| s);
+    out
 }
 
 /// Collapse a per-size best list into contiguous ranges (table rows).
@@ -153,5 +155,18 @@ mod tests {
         assert_eq!(r.len(), 2);
         assert_eq!(r[0], (1024, 2048, v1));
         assert_eq!(r[1], (4096, 4096, v2));
+    }
+
+    #[test]
+    fn calibrate_tie_break_prefers_first_in_input_order() {
+        let v1 = Variant::new(Strategy::B2b, true);
+        let v2 = Variant::new(Strategy::Pcpy, true);
+        let pts = vec![
+            SweepPoint { size: 2048, variant: v2, latency_ns: 10 },
+            SweepPoint { size: 2048, variant: v1, latency_ns: 10 },
+            SweepPoint { size: 1024, variant: v1, latency_ns: 5 },
+        ];
+        // Sizes ascending; equal latencies keep the earlier input point.
+        assert_eq!(calibrate(&pts), vec![(1024, v1), (2048, v2)]);
     }
 }

@@ -27,6 +27,11 @@ pub struct ServeConfig {
     pub perf: PerfModel,
     /// Workload seed.
     pub seed: u64,
+    /// Nodes this deployment spans (8 GPUs each). 1 = the paper's
+    /// single-node platform; >1 sizes collectives for the hierarchical
+    /// cluster layer (`crate::cluster::ClusterTopology::mi300x(num_nodes)`
+    /// is the matching topology).
+    pub num_nodes: usize,
 }
 
 impl ServeConfig {
@@ -43,7 +48,21 @@ impl ServeConfig {
             framework_overhead_ns: 1_800_000,
             perf: PerfModel::default(),
             seed: 0xC0FFEE,
+            num_nodes: 1,
         }
+    }
+
+    /// Deploy across `num_nodes` 8-GPU nodes.
+    pub fn with_nodes(mut self, num_nodes: usize) -> Self {
+        assert!(num_nodes >= 1);
+        self.num_nodes = num_nodes;
+        self
+    }
+
+    /// Total GPU count across the deployment (8 GPUs per node, matching
+    /// [`crate::sim::Topology::mi300x_platform`]).
+    pub fn world_size(&self) -> usize {
+        self.num_nodes * 8
     }
 }
 
@@ -58,5 +77,13 @@ mod tests {
         assert_eq!(c.block_tokens, 16);
         assert!(c.hit_rate == 1.0);
         assert!(c.max_batch > 0);
+        assert_eq!(c.num_nodes, 1);
+        assert_eq!(c.world_size(), 8);
+    }
+
+    #[test]
+    fn multi_node_world_size() {
+        let c = ServeConfig::new(&LLAMA31_8B, FetchImpl::DmaB2b).with_nodes(4);
+        assert_eq!(c.world_size(), 32);
     }
 }

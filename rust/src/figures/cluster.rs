@@ -1,0 +1,141 @@
+//! Cluster scaling figure (beyond the paper): hierarchical DMA collective
+//! latency across node counts (1 → 8) and sizes (1KB → 1GB), with the
+//! cluster-aware selector picking the (intra variant, inter schedule) per
+//! cell. The single-node column reproduces the flat collective, so the
+//! table reads as "what scale-out costs on top of the paper's numbers".
+
+use crate::cluster::{run_hier, select_cluster, ClusterChoice, ClusterTopology, HierRunOptions};
+use crate::collectives::CollectiveKind;
+use crate::util::bytes::{fmt_size, size_sweep, GB, KB};
+
+/// One (node count) cell of a scaling row.
+#[derive(Debug, Clone)]
+pub struct ScaleCell {
+    pub nodes: usize,
+    pub choice: ClusterChoice,
+    pub latency_ns: u64,
+    pub inter_ns: u64,
+}
+
+/// One size row across all node counts.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub size: u64,
+    pub cells: Vec<ScaleCell>,
+}
+
+/// Sweep the hierarchical collectives over `node_counts` × sizes
+/// (default 1KB..1GB ×4), selector-chosen configuration per cell.
+pub fn scaling(
+    kind: CollectiveKind,
+    node_counts: &[usize],
+    sizes: Option<Vec<u64>>,
+) -> Vec<ScaleRow> {
+    let sizes = sizes.unwrap_or_else(|| size_sweep(KB, GB, 4));
+    let opts = HierRunOptions::default();
+    sizes
+        .into_iter()
+        .map(|size| {
+            let cells = node_counts
+                .iter()
+                .map(|&n| {
+                    let cluster = ClusterTopology::mi300x(n);
+                    // Round the nominal size up to a multiple of this
+                    // cell's world size (a no-op for power-of-two node
+                    // counts on the power-of-two sweeps).
+                    let w = cluster.world_size() as u64;
+                    let size = ((size + w - 1) / w).max(1) * w;
+                    let choice = select_cluster(kind, &cluster, size);
+                    let r = run_hier(kind, choice, &cluster, size, &opts);
+                    ScaleCell {
+                        nodes: n,
+                        choice,
+                        latency_ns: r.latency_ns,
+                        inter_ns: r.inter_ns,
+                    }
+                })
+                .collect();
+            ScaleRow { size, cells }
+        })
+        .collect()
+}
+
+/// Render a scaling sweep as an ASCII table: per node count, the latency
+/// in µs and the selector's choice.
+pub fn render(kind: CollectiveKind, rows: &[ScaleRow]) -> String {
+    let mut header = vec!["size".to_string()];
+    if let Some(r0) = rows.first() {
+        for c in &r0.cells {
+            header.push(format!("{}n_us", c.nodes));
+            header.push(format!("{}n_choice", c.nodes));
+        }
+    }
+    let mut t = crate::util::table::Table::new(header);
+    for r in rows {
+        let mut cells = vec![fmt_size(r.size)];
+        for c in &r.cells {
+            cells.push(format!("{:.1}", c.latency_ns as f64 / 1e3));
+            cells.push(c.choice.name());
+        }
+        t.row(cells);
+    }
+    format!("cluster scaling — {}\n{}", kind.name(), t.render())
+}
+
+/// CSV dump of a scaling sweep.
+pub fn to_csv(rows: &[ScaleRow]) -> crate::util::csv::Csv {
+    let mut header = vec!["size_bytes".to_string()];
+    if let Some(r0) = rows.first() {
+        for c in &r0.cells {
+            header.push(format!("nodes{}_ns", c.nodes));
+            header.push(format!("nodes{}_inter_ns", c.nodes));
+            header.push(format!("nodes{}_choice", c.nodes));
+        }
+    }
+    let mut csv = crate::util::csv::Csv::new(header);
+    for r in rows {
+        let mut cells = vec![r.size.to_string()];
+        for c in &r.cells {
+            cells.push(c.latency_ns.to_string());
+            cells.push(c.inter_ns.to_string());
+            cells.push(c.choice.name());
+        }
+        csv.row(cells);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+
+    #[test]
+    fn scaling_shape_and_monotonicity() {
+        let rows = scaling(
+            CollectiveKind::AllGather,
+            &[1, 2],
+            Some(vec![64 * KB, 4 * MB]),
+        );
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.cells.len(), 2);
+            assert!(r.cells.iter().all(|c| c.latency_ns > 0));
+        }
+        // Crossing nodes costs: 2-node latency exceeds 1-node at the same
+        // size, and the single-node cell has no NIC component.
+        let big = &rows[1];
+        assert!(big.cells[1].latency_ns > big.cells[0].latency_ns);
+        assert_eq!(big.cells[0].inter_ns, 0);
+        assert!(big.cells[1].inter_ns > 0);
+    }
+
+    #[test]
+    fn render_and_csv_include_choices() {
+        let rows = scaling(CollectiveKind::AllToAll, &[1, 2], Some(vec![256 * KB]));
+        let s = render(CollectiveKind::AllToAll, &rows);
+        assert!(s.contains("alltoall") && s.contains("2n_us"), "{s}");
+        let csv = to_csv(&rows).render();
+        assert!(csv.contains("nodes2_ns"), "{csv}");
+    }
+}

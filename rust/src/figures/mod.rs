@@ -3,6 +3,7 @@
 //! subcommand render as ASCII tables and CSV files under `results/`.
 
 pub mod breakdown;
+pub mod cluster;
 pub mod collectives;
 pub mod power;
 pub mod serving;

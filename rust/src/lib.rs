@@ -9,6 +9,9 @@
 //! - [`sim`] — discrete-event MI300X DMA-subsystem simulator (substrate).
 //! - [`collectives`] — the paper's optimized DMA collectives (pcpy / bcst /
 //!   swap / b2b / prelaunch) over the simulator.
+//! - [`cluster`] — multi-node layer: N simulated nodes over NIC links,
+//!   hierarchical all-gather / all-to-all (intra-node DMA leg + inter-node
+//!   exchange), and the cluster-aware (variant, schedule) selector.
 //! - [`rccl`] — calibrated CU-based collective baseline (RCCL stand-in).
 //! - [`models`] — LLM architecture zoo + MI300X roofline timing model.
 //! - [`kvcache`] — paged KV cache, CPU offload tier, fetch engines.
@@ -17,6 +20,7 @@
 //! - [`figures`] — one generator per paper figure/table.
 
 pub mod cli;
+pub mod cluster;
 pub mod collectives;
 pub mod coordinator;
 pub mod figures;

@@ -3,6 +3,7 @@
 //! ```text
 //! dma-latte figures   [--out results/] [--quick]   # all paper figures
 //! dma-latte sweep     [--kind allgather|alltoall] [--max 4G]
+//! dma-latte cluster   [--kind ...] [--nodes 1,2,4] [--max 1G]  # scaling
 //! dma-latte breakdown                              # Fig. 7
 //! dma-latte power                                  # Fig. 15
 //! dma-latte ttft      [--prefill 4096]             # Fig. 16
@@ -12,7 +13,7 @@
 
 use dma_latte::cli::Args;
 use dma_latte::collectives::CollectiveKind;
-use dma_latte::figures::{breakdown, collectives as figc, power, serving};
+use dma_latte::figures::{breakdown, cluster as figcl, collectives as figc, power, serving};
 use dma_latte::models::{zoo, ALL_MODELS};
 use dma_latte::util::bytes::{parse_size, size_sweep, GB, KB, MB};
 
@@ -35,6 +36,32 @@ fn cmd_sweep(args: &Args) {
     }
 }
 
+fn cmd_cluster(args: &Args) {
+    let kind = match args.get("kind", "allgather").as_str() {
+        "alltoall" => CollectiveKind::AllToAll,
+        _ => CollectiveKind::AllGather,
+    };
+    let max = parse_size(&args.get("max", "1G")).expect("bad --max");
+    let spec = args.get("nodes", "1,2,4");
+    let mut nodes = Vec::new();
+    for tok in spec.split(',') {
+        match tok.trim().parse::<usize>() {
+            Ok(n) if (1..=dma_latte::cluster::hier::MAX_NODES).contains(&n) => nodes.push(n),
+            _ => {
+                eprintln!(
+                    "bad --nodes entry {tok:?} (need integers in 1..={})",
+                    dma_latte::cluster::hier::MAX_NODES
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    // Sweep sizes are rounded up per cell to a multiple of that cell's
+    // world size by figures::cluster::scaling.
+    let rows = figcl::scaling(kind, &nodes, Some(size_sweep(KB, max, 2)));
+    print!("{}", figcl::render(kind, &rows));
+}
+
 fn cmd_figures(args: &Args) {
     let out = args.get("out", "results");
     let quick = args.has("quick");
@@ -54,6 +81,16 @@ fn cmd_figures(args: &Args) {
     figc::to_csv(CollectiveKind::AllToAll, &aa)
         .write(format!("{out}/fig14_alltoall.csv"))
         .unwrap();
+
+    println!("\n# Cluster scaling — hierarchical AG/AA over 1/2/4 nodes");
+    let cl_sizes = Some(size_sweep(KB, if quick { 16 * MB } else { GB }, 4));
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        let rows = figcl::scaling(kind, &[1, 2, 4], cl_sizes.clone());
+        print!("{}", figcl::render(kind, &rows));
+        figcl::to_csv(&rows)
+            .write(format!("{out}/cluster_{}.csv", kind.name()))
+            .unwrap();
+    }
 
     println!("\n# Fig 7 — single-copy latency breakdown");
     let bd = breakdown::fig7();
@@ -138,6 +175,7 @@ fn main() {
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("sweep") => cmd_sweep(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("figures") => cmd_figures(&args),
         Some("breakdown") => print!("{}", breakdown::render(&breakdown::fig7())),
         Some("power") => print!("{}", power::render(&power::fig15(None))),
@@ -149,7 +187,7 @@ fn main() {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!(
-                "usage: dma-latte <figures|sweep|breakdown|power|ttft|throughput|selftest> [--flags]"
+                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|selftest> [--flags]"
             );
             std::process::exit(2);
         }

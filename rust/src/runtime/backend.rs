@@ -3,9 +3,9 @@
 //! threaded server can serve real batched requests through the compiled
 //! model.
 
-use anyhow::Result;
-
 use crate::coordinator::server::ModelBackend;
+
+use super::error::Result;
 
 use super::executor::Executor;
 

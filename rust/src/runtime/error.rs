@@ -1,0 +1,102 @@
+//! Minimal error plumbing for the runtime layer (`anyhow` is not in the
+//! offline vendor set, DESIGN.md §8): a message-carrying error, a `Result`
+//! alias, a `Context` extension trait mirroring the `anyhow::Context`
+//! surface this crate uses, and the [`crate::rt_error!`] constructor macro.
+
+use std::fmt;
+
+/// Runtime-layer error: a human-readable message chain.
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl RuntimeError {
+    /// Construct from any message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        RuntimeError(m.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError(e.to_string())
+    }
+}
+
+impl From<String> for RuntimeError {
+    fn from(s: String) -> Self {
+        RuntimeError(s)
+    }
+}
+
+impl From<&str> for RuntimeError {
+    fn from(s: &str) -> Self {
+        RuntimeError(s.to_string())
+    }
+}
+
+/// Runtime-layer result.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// `anyhow::Context`-style message chaining on any displayable error.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Wrap the error with a lazily-built message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| RuntimeError(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| RuntimeError(format!("{}: {e}", f().into())))
+    }
+}
+
+/// Construct a [`RuntimeError`] with `format!` syntax (the offline stand-in
+/// for `anyhow!`).
+#[macro_export]
+macro_rules! rt_error {
+    ($($arg:tt)*) => {
+        $crate::runtime::error::RuntimeError(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 2: inner");
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = crate::rt_error!("missing field {}", "vocab");
+        assert_eq!(e.to_string(), "missing field vocab");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(f().is_err());
+    }
+}

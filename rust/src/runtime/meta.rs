@@ -3,8 +3,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use super::error::{Context, Result};
+use crate::rt_error;
 use crate::util::json::Json;
 
 /// One parameter tensor's manifest entry.
@@ -51,7 +51,7 @@ pub struct ArtifactMeta {
 fn req_u64(j: &Json, k: &str) -> Result<u64> {
     j.get(k)
         .and_then(Json::u64)
-        .ok_or_else(|| anyhow!("missing field {k}"))
+        .ok_or_else(|| rt_error!("missing field {k}"))
 }
 
 impl ArtifactMeta {
@@ -60,8 +60,8 @@ impl ArtifactMeta {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("meta.json"))
             .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
-        let cfg = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let j = Json::parse(&text).map_err(|e| rt_error!("meta.json: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| rt_error!("missing config"))?;
         let dims = ModelDims {
             vocab: req_u64(cfg, "vocab")? as usize,
             d_model: req_u64(cfg, "d_model")? as usize,
@@ -79,26 +79,26 @@ impl ArtifactMeta {
         let params = j
             .get("param_manifest")
             .and_then(Json::arr)
-            .ok_or_else(|| anyhow!("missing param_manifest"))?
+            .ok_or_else(|| rt_error!("missing param_manifest"))?
             .iter()
             .map(|e| -> Result<ParamEntry> {
                 Ok(ParamEntry {
                     name: e
                         .get("name")
                         .and_then(Json::str)
-                        .ok_or_else(|| anyhow!("param name"))?
+                        .ok_or_else(|| rt_error!("param name"))?
                         .to_string(),
                     shape: e
                         .get("shape")
                         .and_then(Json::arr)
-                        .ok_or_else(|| anyhow!("param shape"))?
+                        .ok_or_else(|| rt_error!("param shape"))?
                         .iter()
                         .map(|d| d.u64().unwrap_or(0) as usize)
                         .collect(),
                     scale: e
                         .get("scale")
                         .and_then(Json::num)
-                        .ok_or_else(|| anyhow!("param scale"))? as f32,
+                        .ok_or_else(|| rt_error!("param scale"))? as f32,
                     offset: req_u64(e, "offset")?,
                 })
             })
@@ -114,7 +114,7 @@ impl ArtifactMeta {
     /// Load the golden vectors.
     pub fn goldens(&self) -> Result<Json> {
         let text = std::fs::read_to_string(self.dir.join("golden.json"))?;
-        Json::parse(&text).map_err(|e| anyhow!("golden.json: {e}"))
+        Json::parse(&text).map_err(|e| rt_error!("golden.json: {e}"))
     }
 
     /// Total parameter count.

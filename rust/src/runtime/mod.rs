@@ -7,15 +7,20 @@
 //!   to `python/compile/model.py`), avoiding a 220 MB params file.
 //! - [`executor`]: PJRT CPU client — `HloModuleProto::from_text_file` →
 //!   compile → execute, with parameter buffers uploaded once and reused.
+//!   (Offline builds ship an API-identical stub; the `xla` bindings are not
+//!   in the vendor set. See `executor.rs` module docs.)
+//! - [`error`]: dependency-free `Result`/`Context` (`anyhow` stand-in).
 //! - [`backend`]: [`crate::coordinator::server::ModelBackend`] over the
 //!   compiled prefill/decode executables + a paged KV pool.
 
 pub mod backend;
+pub mod error;
 pub mod executor;
 pub mod meta;
 pub mod params;
 pub mod tokenizer;
 
 pub use backend::PjrtBackend;
+pub use error::{Result, RuntimeError};
 pub use executor::Executor;
 pub use meta::ArtifactMeta;

@@ -299,6 +299,10 @@ impl Sim {
                 HostOp::Delay { ns: d } => {
                     self.hosts[hid.0 as usize].now += d;
                 }
+                HostOp::DelayUntil { at } => {
+                    let h = &mut self.hosts[hid.0 as usize];
+                    h.now = h.now.max(at);
+                }
                 HostOp::Mark { name } => {
                     let h = &mut self.hosts[hid.0 as usize];
                     let t = h.now;

@@ -47,6 +47,10 @@ pub enum HostOp {
     SetSignal { signal: SignalId, value: i64 },
     /// Spend fixed host time (models framework overhead around offloads).
     Delay { ns: u64 },
+    /// Advance the host cursor to absolute time `at` (no-op if already
+    /// past). Used by the cluster layer to align intra-node phases with
+    /// inter-node NIC arrivals.
+    DelayUntil { at: u64 },
     /// Record the current host time under `name` (measurement marker).
     Mark { name: &'static str },
 }

@@ -124,12 +124,18 @@ impl Topology {
         }
     }
 
-    /// Directed link from `src` to `dst`. Panics if the pair is not
-    /// connected (same node, or unknown node).
+    /// Directed link from `src` to `dst`, or `None` if the pair is not
+    /// connected (same node, unknown node — or, in a cluster, a cross-node
+    /// pair: the `cluster` layer routes those over NIC links instead).
+    pub fn try_link_index(&self, src: NodeId, dst: NodeId) -> Option<LinkIdx> {
+        self.index.get(&(src, dst)).copied()
+    }
+
+    /// Directed link from `src` to `dst`. Panicking convenience wrapper
+    /// around [`Topology::try_link_index`] for callers that know the pair
+    /// is intra-node connected.
     pub fn link_index(&self, src: NodeId, dst: NodeId) -> LinkIdx {
-        *self
-            .index
-            .get(&(src, dst))
+        self.try_link_index(src, dst)
             .unwrap_or_else(|| panic!("no link {src} -> {dst}"))
     }
 
@@ -193,6 +199,18 @@ mod tests {
     fn self_link_panics() {
         let t = Topology::mi300x_platform();
         t.link_index(NodeId::Gpu(0), NodeId::Gpu(0));
+    }
+
+    #[test]
+    fn try_link_index_is_total() {
+        let t = Topology::mi300x_platform();
+        assert!(t.try_link_index(NodeId::Gpu(0), NodeId::Gpu(1)).is_some());
+        assert!(t.try_link_index(NodeId::Gpu(0), NodeId::Gpu(0)).is_none());
+        assert!(t.try_link_index(NodeId::Gpu(200), NodeId::Cpu).is_none());
+        assert_eq!(
+            t.try_link_index(NodeId::Gpu(2), NodeId::Cpu),
+            Some(t.link_index(NodeId::Gpu(2), NodeId::Cpu))
+        );
     }
 
     #[test]

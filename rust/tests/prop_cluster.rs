@@ -1,0 +1,204 @@
+//! Property tests for the cluster layer: a hierarchical all-gather /
+//! all-to-all over `nodes × gpus` ranks must deliver exactly the same
+//! chunk placement as the flat single-node planner reshaped to the same
+//! world size, for randomized node counts, GPU counts, variants, schedules
+//! and sizes.
+
+use dma_latte::cluster::{
+    run_hier_full, select_cluster, ClusterChoice, ClusterTopology, HierRunOptions, InterSchedule,
+    NicModel,
+};
+use dma_latte::collectives::exec::build_plan;
+use dma_latte::collectives::plan::aa_out_base;
+use dma_latte::collectives::verify::pattern;
+use dma_latte::collectives::{CollectiveKind, Strategy, Variant};
+use dma_latte::sim::command::Command;
+use dma_latte::sim::memory::MemorySystem;
+use dma_latte::sim::{NodeId, Topology};
+use dma_latte::util::proptest::{run as prop_run, Config};
+use dma_latte::util::rng::Rng;
+
+/// Execute the FLAT single-node planner functionally at world size: init
+/// the standard verification patterns, then apply the plan's data-move
+/// commands to a bare [`MemorySystem`]. (All flat plans are intra-plan
+/// hazard-free — each byte range is written exactly once — so application
+/// order does not matter.)
+fn flat_placement(kind: CollectiveKind, v: Variant, topo: &Topology, size: u64) -> MemorySystem {
+    let n = topo.num_gpus;
+    let chunk = size / n as u64;
+    let in_place = v.strategy == Strategy::Swap;
+    let mut mem = MemorySystem::new(true);
+    for gpu in 0..n {
+        let node = NodeId::Gpu(gpu);
+        match kind {
+            CollectiveKind::AllGather => {
+                mem.ensure(node, size);
+                mem.poke(
+                    node,
+                    gpu as u64 * chunk,
+                    &vec![pattern(gpu, gpu); chunk as usize],
+                );
+            }
+            CollectiveKind::AllToAll => {
+                mem.ensure(node, if in_place { size } else { aa_out_base(size) + size });
+                for j in 0..n {
+                    mem.poke(node, j as u64 * chunk, &vec![pattern(gpu, j); chunk as usize]);
+                }
+            }
+        }
+    }
+    let plan = build_plan(kind, v, topo, size);
+    for r in &plan.ranks {
+        for e in &r.engines {
+            for cmd in &e.cmds {
+                match *cmd {
+                    Command::Copy { src, dst, len } => {
+                        mem.dma_copy(src.node, src.offset, dst.node, dst.offset, len)
+                    }
+                    Command::Bcst {
+                        src,
+                        dst0,
+                        dst1,
+                        len,
+                    } => mem.dma_bcst(
+                        src.node,
+                        src.offset,
+                        (dst0.node, dst0.offset),
+                        (dst1.node, dst1.offset),
+                        len,
+                    ),
+                    Command::Swap { a, b, len } => {
+                        mem.dma_swap((a.node, a.offset), (b.node, b.offset), len)
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    mem
+}
+
+/// Hierarchical placement == flat placement, byte for byte, over random
+/// shapes: nodes 1–4, GPUs 2–4, all applicable variants, both schedules.
+#[test]
+fn prop_hier_matches_flat_placement() {
+    prop_run(
+        "hier-flat-equivalence",
+        Config {
+            cases: 24,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 4);
+            let g = rng.range(2, 4) as u8;
+            let world = (n * g as usize) as u8;
+            let kind = if rng.chance(0.5) {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let variants = Variant::all_for(kind);
+            let v = *rng.pick(&variants);
+            let inter = if rng.chance(0.5) {
+                InterSchedule::Sequential
+            } else {
+                InterSchedule::Pipelined
+            };
+            let chunk = 256 * rng.range(1, 4) as u64;
+            let size = chunk * world as u64;
+            let cluster = ClusterTopology::homogeneous(
+                n,
+                Topology::custom(g, 16, 64.0, 64.0),
+                NicModel::default(),
+            );
+            let (res, sims) = run_hier_full(
+                kind,
+                ClusterChoice { intra: v, inter },
+                &cluster,
+                size,
+                &HierRunOptions {
+                    verify: true,
+                    ..Default::default()
+                },
+            );
+            let label = format!(
+                "{} {} {inter:?} n={n} g={g} size={size}",
+                kind.name(),
+                v.name()
+            );
+            assert_eq!(res.verified, Some(true), "{label}");
+            assert!(res.latency_ns > 0, "{label}");
+
+            // Flat reference at the same world size (same strategy family).
+            let topo = Topology::custom(world, world.max(16), 64.0, 64.0);
+            let flat = flat_placement(kind, v, &topo, size);
+            let in_place = v.strategy == Strategy::Swap;
+            // Input region always; out-of-place AA also compares the
+            // output region (the input keeps the untouched diagonal).
+            let mut regions: Vec<(u64, u64)> = vec![(0, size)];
+            if kind == CollectiveKind::AllToAll && !in_place {
+                regions.push((aa_out_base(size), size));
+            }
+            for r in 0..world as u32 {
+                let (node, local) = cluster.locate(r);
+                for &(base, len) in &regions {
+                    assert_eq!(
+                        sims[node].memory.peek(NodeId::Gpu(local), base, len),
+                        flat.peek(NodeId::Gpu(r as u8), base, len),
+                        "{label}: rank {r} region base {base}"
+                    );
+                }
+            }
+        },
+    );
+}
+
+/// The cluster selector is total, applicable, and sequential on one node.
+#[test]
+fn prop_cluster_selector_total() {
+    prop_run(
+        "cluster-selector",
+        Config {
+            cases: 200,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let cluster = ClusterTopology::mi300x(n);
+            let size = 1 + rng.below(8 << 30);
+            for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+                let ch = select_cluster(kind, &cluster, size);
+                assert!(ch.intra.strategy.applicable(kind), "n={n} size={size}");
+                if n == 1 {
+                    assert_eq!(ch.inter, InterSchedule::Sequential);
+                }
+            }
+        },
+    );
+}
+
+/// Global-rank mapping round-trips for random cluster shapes.
+#[test]
+fn prop_rank_mapping_roundtrips() {
+    prop_run(
+        "rank-mapping",
+        Config {
+            cases: 32,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let g = rng.range(1, 16) as u8;
+            let cluster = ClusterTopology::homogeneous(
+                n,
+                Topology::custom(g, 4, 64.0, 64.0),
+                NicModel::default(),
+            );
+            assert_eq!(cluster.world_size(), n * g as usize);
+            for r in 0..cluster.world_size() as u32 {
+                let (k, local) = cluster.locate(r);
+                assert_eq!(cluster.global_rank(k, local), r);
+            }
+        },
+    );
+}
