@@ -66,7 +66,14 @@ fn chain_split(size_per_peer: u64, engines: usize) -> u64 {
 fn ablation_engines_vs_b2b() {
     println!("## 1. engines-vs-b2b: one rank's 7 sends over E engines");
     let mut t = Table::new(vec!["size/peer", "E=1(b2b)", "E=2", "E=4", "E=7(pcpy)", "best"]);
-    for size in [4 * KB, 64 * KB, 256 * KB, MB, 4 * MB, 16 * MB] {
+    // Smoke runs keep one size per regime (latency-bound / crossover /
+    // bandwidth-bound).
+    let sizes: &[u64] = if dma_latte::util::bench_smoke() {
+        &[4 * KB, 256 * KB, 4 * MB]
+    } else {
+        &[4 * KB, 64 * KB, 256 * KB, MB, 4 * MB, 16 * MB]
+    };
+    for &size in sizes {
         let vals: Vec<u64> = [1usize, 2, 4, 7].iter().map(|&e| chain_split(size, e)).collect();
         let best = [1, 2, 4, 7][vals
             .iter()
@@ -152,7 +159,12 @@ fn ablation_fanout_threshold() {
 fn ablation_moe() {
     println!("## 3. MoE top-k dispatch: bcst vs copy (k=2, 4KB tokens)");
     let mut t = Table::new(vec!["tokens", "copy_cmds", "bcst_cmds", "copy", "bcst", "speedup"]);
-    for tokens in [16u32, 64, 256, 1024] {
+    let token_counts: &[u32] = if dma_latte::util::bench_smoke() {
+        &[16, 256]
+    } else {
+        &[16, 64, 256, 1024]
+    };
+    for &tokens in token_counts {
         let mut rng = Rng::new(7);
         let run = |mode| {
             let mut sim = Sim::new(SimConfig::mi300x());

@@ -1,0 +1,67 @@
+//! BENCH — cluster reduction scaling: hierarchical reduce-scatter and
+//! all-reduce over 1, 2 and 4 MI300X nodes (8 GPUs each, 400 Gb/s RoCE NIC
+//! model), 1KB to 1GB, selector-chosen configuration per cell. RS is the
+//! paper-faithful split (DMA/NIC move chunks, CUs reduce); AR composes RS
+//! with the hierarchical all-gather. The 1-node column is the flat
+//! single-node cost; the other columns are the scale-out cost on top.
+//!
+//! `DMA_LATTE_BENCH_SMOKE=1` shrinks the sweep for CI smoke runs.
+
+use dma_latte::cluster::{
+    run_hier, run_hier_ar, run_hier_rs, select_allreduce, ClusterKind, ClusterTopology,
+    HierRunOptions, InterSchedule,
+};
+use dma_latte::collectives::CollectiveKind;
+use dma_latte::figures::cluster as fig;
+use dma_latte::util::bytes::{fmt_size, size_sweep, GB, KB, MB};
+
+fn main() {
+    let smoke = dma_latte::util::bench_smoke();
+    let max = if smoke { 16 * MB } else { GB };
+    let nodes = [1usize, 2, 4];
+    let t0 = std::time::Instant::now();
+    for kind in [ClusterKind::ReduceScatter, ClusterKind::AllReduce] {
+        let rows = fig::scaling(kind, &nodes, Some(size_sweep(KB, max, 2)));
+        print!("{}", fig::render(kind, &rows));
+        fig::to_csv(&rows)
+            .write(format!("results/cluster_{}.csv", kind.name()))
+            .unwrap();
+        println!();
+    }
+
+    // Decomposition sanity at one bandwidth-bound size: AR must cost
+    // exactly its RS phase plus its AG phase, and pipelining the RS
+    // partial exchange must not lose to the sequential barrier.
+    let size = if smoke { 8 * MB } else { 64 * MB };
+    let cluster = ClusterTopology::mi300x(4);
+    let opts = HierRunOptions::default();
+    let (rs_c, ag_c) = select_allreduce(&cluster, size);
+    let rs = run_hier_rs(rs_c, &cluster, size, &opts);
+    let ag = run_hier(CollectiveKind::AllGather, ag_c, &cluster, size, &opts);
+    let ar = run_hier_ar(rs_c, ag_c, &cluster, size, &opts);
+    assert_eq!(ar.latency_ns, rs.latency_ns + ag.latency_ns);
+    println!(
+        "allreduce {} on 4 nodes: {:.1} us = rs {:.1} us ({}) + ag {:.1} us ({})",
+        fmt_size(size),
+        ar.latency_ns as f64 / 1e3,
+        rs.latency_ns as f64 / 1e3,
+        rs_c.name(),
+        ag.latency_ns as f64 / 1e3,
+        ag_c.name(),
+    );
+
+    let mut seq_c = rs_c;
+    seq_c.inter = InterSchedule::Sequential;
+    let mut pipe_c = rs_c;
+    pipe_c.inter = InterSchedule::Pipelined;
+    let seq = run_hier_rs(seq_c, &cluster, size, &opts);
+    let pipe = run_hier_rs(pipe_c, &cluster, size, &opts);
+    assert!(pipe.latency_ns <= seq.latency_ns);
+    println!(
+        "reduce_scatter {} on 4 nodes: pipelined {:.1} us vs sequential {:.1} us",
+        fmt_size(size),
+        pipe.latency_ns as f64 / 1e3,
+        seq.latency_ns as f64 / 1e3,
+    );
+    println!("\nbench wall time: {:.2?}", t0.elapsed());
+}

@@ -2,12 +2,14 @@
 
 use dma_latte::collectives::{CollectiveKind, Strategy, Variant};
 use dma_latte::figures::collectives as fig;
-use dma_latte::util::bytes::{GB, MB};
+use dma_latte::util::bytes::{size_sweep, GB, KB, MB};
 use dma_latte::util::stats::geomean;
 
 fn main() {
     let kind = CollectiveKind::AllToAll;
-    let rows = fig::sweep(kind, None);
+    // Smoke runs stop at 64MB (keeps the ≥32MB summary band non-empty).
+    let sizes = dma_latte::util::bench_smoke().then(|| size_sweep(KB, 64 * MB, 2));
+    let rows = fig::sweep(kind, sizes);
     print!("{}", fig::render(kind, &rows));
 
     println!("\n-- Table 3 (derived from this sweep) --");
@@ -25,7 +27,7 @@ fn main() {
     let best = fig::geomean_best(&rows, below);
     let large: Vec<f64> = rows
         .iter()
-        .filter(|r| r.size >= 32 * MB && r.size <= GB)
+        .filter(|r| (32 * MB..=GB).contains(&r.size))
         .map(|r| r.best().1)
         .collect();
     println!("\n-- paper-vs-measured (geomean, <32MB unless noted) --");

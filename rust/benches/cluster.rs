@@ -10,17 +10,19 @@ use dma_latte::figures::cluster as fig;
 use dma_latte::util::bytes::{fmt_size, size_sweep, GB, KB};
 
 fn main() {
+    let smoke = dma_latte::util::bench_smoke();
+    let max = if smoke { 16 * 1024 * 1024 } else { GB };
     let nodes = [1usize, 2, 4];
     let t0 = std::time::Instant::now();
     for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
-        let rows = fig::scaling(kind, &nodes, Some(size_sweep(KB, GB, 2)));
+        let rows = fig::scaling(kind, &nodes, Some(size_sweep(KB, max, 2)));
         print!("{}", fig::render(kind, &rows));
         println!();
     }
 
     // Spot-check the schedule axis at one bandwidth-bound size: pipelining
     // must not lose to the sequential barrier.
-    let size = 64 * 1024 * 1024;
+    let size = if smoke { 8 * 1024 * 1024 } else { 64 * 1024 * 1024 };
     for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
         let cluster = ClusterTopology::mi300x(4);
         let mut choice = select_cluster(kind, &cluster, size);

@@ -17,8 +17,12 @@ fn main() {
     let mut csv = Csv::new(vec![
         "model", "tokens", "block_bytes", "impl", "host_ns", "total_ns", "gpu_cu_ns",
     ]);
-    for &m in ALL_MODELS {
-        for tokens in [4096u64, 8192] {
+    // Smoke runs cover two models at one context length.
+    let smoke = dma_latte::util::bench_smoke();
+    let models = if smoke { &ALL_MODELS[..2] } else { ALL_MODELS };
+    let token_counts: &[u64] = if smoke { &[4096] } else { &[4096, 8192] };
+    for &m in models {
+        for &tokens in token_counts {
             let layout = BlockLayout::new(m, 16);
             let blocks = layout.blocks_for(tokens);
             let copies: Vec<_> = (0..blocks)

@@ -18,13 +18,16 @@ use dma_latte::util::timer::{bench, black_box};
 
 fn main() {
     println!("== L3 hot-path microbenchmarks ==\n");
+    // Smoke runs trade measurement stability for wall time.
+    let smoke = dma_latte::util::bench_smoke();
+    let (warm, iters) = if smoke { (1, 5) } else { (3, 50) };
 
     // 1) DES throughput: one pcpy collective episode = ~500 events.
     let opts = RunOptions {
         sim: SimConfig::mi300x(),
         verify: false,
     };
-    let r = bench("collective episode (pcpy AG 1MB)", 3, 50, || {
+    let r = bench("collective episode (pcpy AG 1MB)", warm, iters, || {
         black_box(run_collective(
             CollectiveKind::AllGather,
             Variant::new(Strategy::Pcpy, false),
@@ -60,14 +63,14 @@ fn main() {
 
     // 2) Fetch episode (the serving loop's per-admission cost).
     let copies_small: Vec<_> = copies[..256].to_vec();
-    let r = bench("fetch episode (b2b, 256 blocks)", 3, 100, || {
+    let r = bench("fetch episode (b2b, 256 blocks)", warm, if smoke { 10 } else { 100 }, || {
         let mut sim = Sim::new(SimConfig::mi300x());
         black_box(run_fetch(&mut sim, FetchImpl::DmaB2b, &copies_small));
     });
     println!("{}", r.summary());
 
     // 3) Virtual serving engine: requests/s of the simulator itself.
-    let r = bench("virtual engine (64 reqs, b2b)", 1, 10, || {
+    let r = bench("virtual engine (64 reqs, b2b)", 1, if smoke { 3 } else { 10 }, || {
         let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
         cfg.gpu_blocks = 1 << 18;
         let mut eng = VirtualEngine::new(cfg);

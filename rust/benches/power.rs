@@ -5,12 +5,15 @@ use dma_latte::figures::power;
 use dma_latte::util::bytes::{fmt_size, KB, MB};
 
 fn main() {
-    let rows = power::fig15(None);
+    // Smoke runs keep one size per summary band (16-64KB and ≥64MB).
+    let sizes = dma_latte::util::bench_smoke()
+        .then(|| vec![16 * KB, 64 * KB, MB, 64 * MB]);
+    let rows = power::fig15(sizes);
     print!("{}", power::render(&rows));
 
     let small: Vec<&power::PowerRow> = rows
         .iter()
-        .filter(|r| r.size >= 16 * KB && r.size <= 64 * KB)
+        .filter(|r| (16 * KB..=64 * KB).contains(&r.size))
         .collect();
     let large: Vec<&power::PowerRow> = rows.iter().filter(|r| r.size >= 64 * MB).collect();
     let avg =

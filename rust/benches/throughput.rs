@@ -11,12 +11,20 @@ use dma_latte::util::stats;
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let sweep_hit = std::env::args().any(|a| a == "--sweep-hit");
-    let n: u64 = if full { 2000 } else { 400 };
+    let smoke = dma_latte::util::bench_smoke();
+    let n: u64 = if smoke {
+        64
+    } else if full {
+        2000
+    } else {
+        400
+    };
     let decode = 32;
+    let models = if smoke { &ALL_MODELS[..2] } else { ALL_MODELS };
 
     println!("# Fig 17 — {} requests, prefill 4096, 100% hit", n);
     let mut rows = Vec::new();
-    for &m in ALL_MODELS {
+    for &m in models {
         let r = serving::throughput(m, 4096, n, decode, 1.0);
         rows.push(r);
     }

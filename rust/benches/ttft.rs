@@ -3,10 +3,16 @@
 //! 100% CPU-cache hit.
 
 use dma_latte::figures::serving;
+use dma_latte::models::ALL_MODELS;
 use dma_latte::util::stats;
 
 fn main() {
-    let rows = serving::fig16_default();
+    // Smoke runs cover two models at one prefill length.
+    let rows = if dma_latte::util::bench_smoke() {
+        serving::fig16(&ALL_MODELS[..2], &[4096])
+    } else {
+        serving::fig16_default()
+    };
     print!("{}", serving::render_fig16(&rows));
 
     let gpu: Vec<f64> = rows.iter().map(|r| r.speedup_gpu).collect();

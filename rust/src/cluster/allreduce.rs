@@ -1,0 +1,635 @@
+//! Hierarchical reduce-scatter / all-reduce over `nodes × gpus` ranks.
+//!
+//! DMA engines move bytes but cannot reduce (paper §2.1.1/§7), so the
+//! cluster-level reduction collectives follow the same software-feasible
+//! split as the flat [`crate::collectives::reduce_scatter`]: **DMA (and the
+//! NIC) move chunks, CUs reduce**. The lowering is the standard two-level
+//! recipe (hierarchical NCCL/RCCL algorithms):
+//!
+//! - **Reduce-scatter** (intra → reduce → inter → reduce): round `k'` is a
+//!   flat intra-node **all-to-all** of the input block destined to node `k'`
+//!   — RS "has a similar communication pattern as AA" (paper §2.1.1) — run
+//!   through the existing [`CollectivePlan`] planners (`pcpy`/`swap`/`b2b`,
+//!   ± prelaunch) rebased into the global layout, exactly like
+//!   [`super::hier`]. After round `k'`, GPU `p` holds its node's `g`
+//!   contribution chunks for destination rank `(k',p)` and a CU pass folds
+//!   them into one **partial** chunk ([`cu_reduce_ns`]). Partials then ride
+//!   the NIC to their destination node's same-local-rank GPU (`c` bytes per
+//!   peer node — the minimal inter-node RS volume), where a final CU pass
+//!   folds the `n` node partials into the reduced chunk at
+//!   [`rs_result_base`]. A
+//!   [`Pipelined`](super::InterSchedule::Pipelined) schedule streams each
+//!   partial as its round's reduction completes; a
+//!   [`Sequential`](super::InterSchedule::Sequential) schedule barriers
+//!   the NIC leg behind the whole intra phase.
+//! - **All-reduce** = reduce-scatter + the already-shipped hierarchical
+//!   all-gather of the reduced chunks ([`super::hier::run_hier`]) as a
+//!   strictly sequential second phase (the gather cannot start before its
+//!   input chunk exists).
+//!
+//! Chunk bookkeeping is verified `collectives::verify`-style: inputs carry
+//! per-(rank, chunk) patterns, the transport rounds move real bytes on the
+//! per-node DES, reductions are u8 wrapping adds (order-independent, so any
+//! reduction tree matches the flat reference), the NIC legs move real bytes
+//! between per-node memories, and `tests/prop_cluster.rs` checks the final
+//! values byte-for-byte against the flat single-node reduce-scatter
+//! ([`crate::collectives::reduce_scatter::plan_transport`] +
+//! [`crate::collectives::reduce_scatter::reduce_staged`]) at the same world
+//! size.
+
+use crate::collectives::plan::{aa_out_base, CollectivePlan};
+use crate::collectives::reduce_scatter::cu_reduce_ns;
+use crate::collectives::verify::pattern;
+use crate::collectives::{CollectiveKind, Strategy};
+use crate::sim::clock::ns;
+use crate::sim::topology::NodeId;
+use crate::sim::{Sim, SimConfig, SimTime};
+
+use super::hier::{
+    aa_stage_base, build_node_rounds, count_nic_messages, exchange_ag, nic_exchange_arrivals,
+    prelaunch_t0, queue_node_scripts, run_hier, HierResult, HierRunOptions, MAX_NODES,
+    ROUND_MARKS,
+};
+use super::selector::ClusterChoice;
+use super::topology::ClusterTopology;
+
+/// Base of the outbound partial region: the node-local partial sum destined
+/// to node `k'` lives at `rs_partial_base(size) + k' * chunk`.
+pub fn rs_partial_base(size: u64) -> u64 {
+    aa_stage_base(size) + size + 256
+}
+
+/// Base of the inbox region: the partial received from node `k` lands at
+/// `rs_inbox_base(size, chunk) + k * chunk` (slots sized for [`MAX_NODES`]).
+pub fn rs_inbox_base(size: u64, chunk: u64) -> u64 {
+    rs_partial_base(size) + MAX_NODES as u64 * chunk + 256
+}
+
+/// Offset of the final reduced chunk (`chunk` bytes) on every GPU.
+pub fn rs_result_base(size: u64, chunk: u64) -> u64 {
+    rs_inbox_base(size, chunk) + MAX_NODES as u64 * chunk + 256
+}
+
+/// CU pass 1 (functional): fold each round's `g` transported chunks into
+/// the node-local partial for destination node `k2` at [`rs_partial_base`].
+fn reduce_node_partials(
+    sim: &mut Sim,
+    node_idx: usize,
+    num_nodes: usize,
+    size: u64,
+    chunk: u64,
+    in_place: bool,
+) {
+    let gpn = sim.cfg.topology.num_gpus;
+    // Offset (on GPU `gpu`) of the post-transport chunk contributed by
+    // local source `q` for destination rank `(k2, gpu)` — where round
+    // `k2`'s rebased all-to-all left it.
+    let chunk_off = |k2: usize, q: u8, gpu: u8| -> u64 {
+        let base = k2 as u64 * gpn as u64 * chunk;
+        if in_place {
+            // swap transposes inside the input block.
+            base + q as u64 * chunk
+        } else if k2 == node_idx {
+            if q == gpu {
+                // Out-of-place diagonal stays in the input (flat convention).
+                base + q as u64 * chunk
+            } else {
+                aa_out_base(size) + base + q as u64 * chunk
+            }
+        } else {
+            // Remote-destination blocks are fully staged (incl. the
+            // diagonal, which build_node_rounds copies explicitly).
+            aa_stage_base(size) + base + q as u64 * chunk
+        }
+    };
+    for gpu in 0..gpn {
+        for k2 in 0..num_nodes {
+            let mut acc = vec![0u8; chunk as usize];
+            for q in 0..gpn {
+                let data = sim.memory.peek(NodeId::Gpu(gpu), chunk_off(k2, q, gpu), chunk);
+                for (a, b) in acc.iter_mut().zip(data) {
+                    *a = a.wrapping_add(b);
+                }
+            }
+            sim.memory
+                .poke(NodeId::Gpu(gpu), rs_partial_base(size) + k2 as u64 * chunk, &acc);
+        }
+    }
+}
+
+/// Inter leg (functional): every node's partial for destination `(k2, p)`
+/// lands in node `k2` GPU `p`'s inbox slot indexed by the *source* node
+/// (the own-node partial is copied into its own slot so the final fold is
+/// uniform).
+fn exchange_partials(sims: &mut [Sim], cluster: &ClusterTopology, size: u64, chunk: u64) {
+    let n = sims.len();
+    let gpn = cluster.gpus_per_node();
+    let mut blocks: Vec<(usize, u8, u64, Vec<u8>)> = Vec::new();
+    for (k, sim) in sims.iter().enumerate() {
+        for g in 0..gpn {
+            for k2 in 0..n {
+                let data =
+                    sim.memory
+                        .peek(NodeId::Gpu(g), rs_partial_base(size) + k2 as u64 * chunk, chunk);
+                blocks.push((k2, g, rs_inbox_base(size, chunk) + k as u64 * chunk, data));
+            }
+        }
+    }
+    for (k2, g, off, data) in blocks {
+        sims[k2].memory.poke(NodeId::Gpu(g), off, &data);
+    }
+}
+
+/// CU pass 2 (functional): fold the `n` inbox partials into the reduced
+/// chunk at [`rs_result_base`].
+fn reduce_final(sims: &mut [Sim], num_nodes: usize, size: u64, chunk: u64) {
+    for sim in sims.iter_mut() {
+        let gpn = sim.cfg.topology.num_gpus;
+        for gpu in 0..gpn {
+            let mut acc = vec![0u8; chunk as usize];
+            for k in 0..num_nodes {
+                let data = sim.memory.peek(
+                    NodeId::Gpu(gpu),
+                    rs_inbox_base(size, chunk) + k as u64 * chunk,
+                    chunk,
+                );
+                for (a, b) in acc.iter_mut().zip(data) {
+                    *a = a.wrapping_add(b);
+                }
+            }
+            sim.memory
+                .poke(NodeId::Gpu(gpu), rs_result_base(size, chunk), &acc);
+        }
+    }
+}
+
+/// Expected reduced byte for destination rank `r`: the wrapping sum of
+/// every rank's input pattern for chunk `r` (the flat reference reduction;
+/// wrapping add is order-independent, so any reduction tree must agree).
+pub fn expected_reduced_byte(world: u32, r: u32) -> u8 {
+    (0..world).fold(0u8, |acc, s| acc.wrapping_add(pattern(s as u8, r as u8)))
+}
+
+/// Check every rank's reduced chunk against the flat reference.
+fn check_rs(sims: &[Sim], cluster: &ClusterTopology, size: u64, chunk: u64) -> bool {
+    let w = cluster.world_size() as u32;
+    for (k, sim) in sims.iter().enumerate() {
+        for g in 0..cluster.gpus_per_node() {
+            let r = cluster.global_rank(k, g);
+            let want = expected_reduced_byte(w, r);
+            let got = sim
+                .memory
+                .peek(NodeId::Gpu(g), rs_result_base(size, chunk), chunk);
+            if got.iter().any(|&b| b != want) {
+                crate::log_error!(
+                    "cluster RS verify failed: rank {r} (node {k} gpu {g}): want {want}, \
+                     got {:?}…",
+                    &got[..got.len().min(4)]
+                );
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Check every rank's all-reduce output buffer `[0, size)` against the flat
+/// reference (every chunk fully reduced, replicated everywhere).
+fn check_ar(sims: &[Sim], cluster: &ClusterTopology, size: u64, chunk: u64) -> bool {
+    let w = cluster.world_size() as u32;
+    for (k, sim) in sims.iter().enumerate() {
+        for g in 0..cluster.gpus_per_node() {
+            for d in 0..w {
+                let want = expected_reduced_byte(w, d);
+                let got = sim.memory.peek(NodeId::Gpu(g), d as u64 * chunk, chunk);
+                if got.iter().any(|&b| b != want) {
+                    crate::log_error!(
+                        "cluster AR verify failed: node {k} gpu {g} chunk {d}: want {want}, \
+                         got {:?}…",
+                        &got[..got.len().min(4)]
+                    );
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Run one hierarchical reduce-scatter end to end; see [`run_hier_rs_full`].
+pub fn run_hier_rs(
+    choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> HierResult {
+    run_hier_rs_full(choice, cluster, size, opts).0
+}
+
+/// Hierarchical reduce-scatter: intra-node all-to-all transport rounds on
+/// per-node DES instances, CU partial reduction, NIC partial exchange, CU
+/// final reduction. Returns the per-node simulators so callers can inspect
+/// the reduced chunks at [`rs_result_base`]. With `verify` off only node 0
+/// is simulated (homogeneous symmetry).
+pub fn run_hier_rs_full(
+    choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> (HierResult, Vec<Sim>) {
+    let n = cluster.num_nodes();
+    let gpn = cluster.gpus_per_node();
+    assert!(n <= MAX_NODES, "at most {MAX_NODES} nodes supported");
+    assert!(gpn >= 2, "hierarchical planners need ≥ 2 GPUs per node");
+    assert!(
+        choice.intra.strategy.applicable(CollectiveKind::AllToAll),
+        "{} not applicable to the RS transport (AA pattern)",
+        choice.intra.strategy.name()
+    );
+    let w = cluster.world_size() as u64;
+    assert!(
+        size % w == 0 && size >= w,
+        "size {size} must be a positive multiple of world size {w}"
+    );
+    if opts.verify {
+        assert!(w <= 256, "verification patterns need world size ≤ 256");
+    }
+    let c = size / w;
+    let in_place = choice.intra.strategy == Strategy::Swap;
+    let prelaunch = choice.intra.prelaunch;
+    let observe = opts.latency.t_host_observe;
+    let nic = cluster.nic.clone();
+
+    let sim_nodes = if opts.verify { n } else { 1 };
+    let mut sims: Vec<Sim> = (0..sim_nodes)
+        .map(|k| {
+            Sim::new(SimConfig {
+                topology: cluster.node(k).clone(),
+                latency: opts.latency.clone(),
+                functional: opts.verify,
+                trace: false,
+            })
+        })
+        .collect();
+    let rounds: Vec<Vec<CollectivePlan>> = (0..sim_nodes)
+        .map(|k| {
+            build_node_rounds(
+                CollectiveKind::AllToAll,
+                cluster.node(k),
+                n,
+                k,
+                size,
+                c,
+                choice.intra,
+            )
+        })
+        .collect();
+
+    let t0 = prelaunch_t0(&rounds[0], gpn, &opts.latency, prelaunch);
+    let data_cmds = rounds[0].iter().map(|p| p.total_data_cmds()).sum::<usize>() * n;
+    let nic_messages = count_nic_messages(cluster);
+
+    if opts.verify {
+        for (k, sim) in sims.iter_mut().enumerate() {
+            for g in 0..gpn {
+                let r = cluster.global_rank(k, g);
+                let node = NodeId::Gpu(g);
+                sim.memory.ensure(node, rs_result_base(size, c) + c);
+                for d in 0..w as u32 {
+                    sim.memory.poke(
+                        node,
+                        d as u64 * c,
+                        &vec![pattern(r as u8, d as u8); c as usize],
+                    );
+                }
+            }
+        }
+    }
+
+    // Intra transport rounds, all triggered at t0 (like hierarchical AA).
+    let triggers = vec![t0; n];
+    let mut round_done = vec![0u64; n];
+    for (k, sim) in sims.iter_mut().enumerate() {
+        let hosts = queue_node_scripts(sim, &rounds[k], prelaunch, t0, &triggers);
+        let out = sim.run();
+        assert!(
+            out.deadlocked.is_empty(),
+            "hier reduce-scatter deadlocked on node {k}: {:?}",
+            out.deadlocked
+        );
+        for h in hosts {
+            let host = sim.host(h);
+            for (j, rd) in round_done.iter_mut().enumerate() {
+                *rd = (*rd).max(host.mark(ROUND_MARKS[j]).unwrap());
+            }
+        }
+    }
+
+    // CU pass 1: fold round k2's g chunks into one partial per destination
+    // node. Homogeneous nodes ⇒ every node's round j completes at
+    // round_done[j].
+    let reduce_intra = ns(cu_reduce_ns(c, gpn));
+    let partial_ready: Vec<SimTime> = round_done.iter().map(|&rd| rd + reduce_intra).collect();
+    if opts.verify {
+        for (k, sim) in sims.iter_mut().enumerate() {
+            reduce_node_partials(sim, k, n, size, c, in_place);
+        }
+    }
+
+    let (latency_ns, inter_ns) = if n == 1 {
+        // Degenerate single node: one transport round + one CU fold — the
+        // flat RS split, no NIC plan is ever built.
+        (partial_ready[0] - t0, 0)
+    } else {
+        // Port-serialized partial sends (c bytes each), scheduled at
+        // partial readiness (pipelined) or after the whole intra + reduce
+        // phase (sequential); same vectored-message accounting as the
+        // hierarchical AA inter leg.
+        let ready: Vec<f64> = partial_ready.iter().map(|&pr| pr as f64).collect();
+        let last_arrival = nic_exchange_arrivals(&nic, choice.inter, &ready, c, observe);
+        // CU pass 2 on each destination node: wait for the last incoming
+        // partial AND the own-node partial, then fold n chunks.
+        let reduce_inter = cu_reduce_ns(c, n as u8);
+        let mut done = 0f64;
+        for (j, arr) in last_arrival.iter().enumerate() {
+            done = done.max(arr.max(partial_ready[j] as f64) + reduce_inter);
+        }
+        let latency = ns(done) - t0;
+        let intra_span = *partial_ready.iter().max().unwrap() - t0;
+        (latency, latency.saturating_sub(intra_span))
+    };
+
+    if opts.verify {
+        exchange_partials(&mut sims, cluster, size, c);
+        reduce_final(&mut sims, n, size, c);
+    }
+    let verified = if opts.verify {
+        Some(check_rs(&sims, cluster, size, c))
+    } else {
+        None
+    };
+
+    (
+        HierResult {
+            latency_ns,
+            inter_ns,
+            intra_ns: latency_ns.saturating_sub(inter_ns),
+            data_cmds,
+            nic_messages,
+            verified,
+        },
+        sims,
+    )
+}
+
+/// Run one hierarchical all-reduce end to end; see [`run_hier_ar_full`].
+pub fn run_hier_ar(
+    rs_choice: ClusterChoice,
+    ag_choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> HierResult {
+    run_hier_ar_full(rs_choice, ag_choice, cluster, size, opts).0
+}
+
+/// Hierarchical all-reduce = hierarchical reduce-scatter (`rs_choice`) +
+/// hierarchical all-gather of the reduced chunks (`ag_choice`), phases
+/// strictly sequential. Returns the gather-phase simulators whose `[0,
+/// size)` buffers hold the fully reduced, fully replicated result (the
+/// reduce-scatter simulators when `verify` is off — timing-only runs don't
+/// materialize the gather memories).
+pub fn run_hier_ar_full(
+    rs_choice: ClusterChoice,
+    ag_choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> (HierResult, Vec<Sim>) {
+    assert!(
+        ag_choice.intra.strategy.applicable(CollectiveKind::AllGather),
+        "{} not applicable to the AR gather phase",
+        ag_choice.intra.strategy.name()
+    );
+    let (rs_res, rs_sims) = run_hier_rs_full(rs_choice, cluster, size, opts);
+    // Gather-phase timing on its own DES episode (the phases share no
+    // overlap: the gather input is the reduce output).
+    let ag_res = run_hier(
+        CollectiveKind::AllGather,
+        ag_choice,
+        cluster,
+        size,
+        &HierRunOptions {
+            latency: opts.latency.clone(),
+            verify: false,
+        },
+    );
+
+    let n = cluster.num_nodes();
+    let gpn = cluster.gpus_per_node();
+    let c = size / cluster.world_size() as u64;
+    let (verified, sims) = if opts.verify {
+        // Functional gather over the real reduced bytes: seed fresh
+        // per-node memories with each rank's reduced chunk at its AG slot,
+        // stage the inter leg, then run the same rebased AG rounds the
+        // timing path uses (schedule choice does not affect placement, so
+        // the functional pass runs untriggered).
+        let mut sims: Vec<Sim> = (0..n)
+            .map(|k| {
+                Sim::new(SimConfig {
+                    topology: cluster.node(k).clone(),
+                    latency: opts.latency.clone(),
+                    functional: true,
+                    trace: false,
+                })
+            })
+            .collect();
+        for (k, sim) in sims.iter_mut().enumerate() {
+            for g in 0..gpn {
+                let r = cluster.global_rank(k, g) as u64;
+                let red = rs_sims[k]
+                    .memory
+                    .peek(NodeId::Gpu(g), rs_result_base(size, c), c);
+                sim.memory.ensure(NodeId::Gpu(g), size);
+                sim.memory.poke(NodeId::Gpu(g), r * c, &red);
+            }
+        }
+        exchange_ag(&mut sims, cluster, c);
+        for (k, sim) in sims.iter_mut().enumerate() {
+            let rounds = build_node_rounds(
+                CollectiveKind::AllGather,
+                cluster.node(k),
+                n,
+                k,
+                size,
+                c,
+                ag_choice.intra,
+            );
+            let triggers = vec![0; n];
+            queue_node_scripts(sim, &rounds, false, 0, &triggers);
+            let out = sim.run();
+            assert!(
+                out.deadlocked.is_empty(),
+                "hier allreduce gather deadlocked on node {k}: {:?}",
+                out.deadlocked
+            );
+        }
+        let ok = rs_res.verified == Some(true) && check_ar(&sims, cluster, size, c);
+        (Some(ok), sims)
+    } else {
+        (None, rs_sims)
+    };
+
+    let latency_ns = rs_res.latency_ns + ag_res.latency_ns;
+    let inter_ns = rs_res.inter_ns + ag_res.inter_ns;
+    (
+        HierResult {
+            latency_ns,
+            inter_ns,
+            intra_ns: latency_ns.saturating_sub(inter_ns),
+            data_cmds: rs_res.data_cmds + ag_res.data_cmds,
+            nic_messages: rs_res.nic_messages + ag_res.nic_messages,
+            verified,
+        },
+        sims,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::InterSchedule;
+    use crate::collectives::Variant;
+    use crate::util::bytes::KB;
+
+    fn choice(s: Strategy, prelaunch: bool, inter: InterSchedule) -> ClusterChoice {
+        ClusterChoice {
+            intra: Variant::new(s, prelaunch),
+            inter,
+        }
+    }
+
+    fn verify_opts() -> HierRunOptions {
+        HierRunOptions {
+            verify: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn two_node_reduce_scatter_verifies_all_variants() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 64u64 * 1024 * 2;
+        for strat in [Strategy::Pcpy, Strategy::Swap, Strategy::B2b] {
+            for inter in [InterSchedule::Sequential, InterSchedule::Pipelined] {
+                let r = run_hier_rs(
+                    choice(strat, false, inter),
+                    &cluster,
+                    size,
+                    &verify_opts(),
+                );
+                assert_eq!(r.verified, Some(true), "{} {inter:?}", strat.name());
+                assert!(r.inter_ns > 0 && r.latency_ns > r.inter_ns);
+                assert_eq!(r.nic_messages, 16);
+            }
+        }
+    }
+
+    #[test]
+    fn two_node_allreduce_verifies() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 64u64 * 1024 * 2;
+        for inter in [InterSchedule::Sequential, InterSchedule::Pipelined] {
+            let (r, sims) = run_hier_ar_full(
+                choice(Strategy::Pcpy, true, inter),
+                choice(Strategy::Pcpy, true, inter),
+                &cluster,
+                size,
+                &verify_opts(),
+            );
+            assert_eq!(r.verified, Some(true), "{inter:?}");
+            assert!(r.inter_ns > 0);
+            // Fully replicated: every GPU's buffer holds the reduced vector.
+            let w = cluster.world_size() as u32;
+            let c = size / w as u64;
+            let b = sims[1].memory.peek(NodeId::Gpu(3), 5 * c, c);
+            assert!(b.iter().all(|&x| x == expected_reduced_byte(w, 5)));
+        }
+    }
+
+    #[test]
+    fn single_node_rs_has_no_nic_leg() {
+        let cluster = ClusterTopology::mi300x(1);
+        let r = run_hier_rs(
+            choice(Strategy::Swap, true, InterSchedule::Sequential),
+            &cluster,
+            64 * KB,
+            &verify_opts(),
+        );
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.inter_ns, 0);
+        assert_eq!(r.nic_messages, 0);
+    }
+
+    #[test]
+    fn allreduce_is_rs_plus_ag() {
+        let cluster = ClusterTopology::mi300x(4);
+        let size = 4u64 << 20;
+        let rs_c = choice(Strategy::Pcpy, true, InterSchedule::Pipelined);
+        let ag_c = choice(Strategy::Pcpy, true, InterSchedule::Pipelined);
+        let rs = run_hier_rs(rs_c, &cluster, size, &HierRunOptions::default());
+        let ag = run_hier(
+            CollectiveKind::AllGather,
+            ag_c,
+            &cluster,
+            size,
+            &HierRunOptions::default(),
+        );
+        let ar = run_hier_ar(rs_c, ag_c, &cluster, size, &HierRunOptions::default());
+        assert_eq!(ar.latency_ns, rs.latency_ns + ag.latency_ns);
+        assert_eq!(ar.inter_ns, rs.inter_ns + ag.inter_ns);
+        assert_eq!(ar.nic_messages, rs.nic_messages + ag.nic_messages);
+    }
+
+    #[test]
+    fn pipelined_rs_never_slower_than_sequential() {
+        let cluster = ClusterTopology::mi300x(4);
+        for size in [16u64 << 20, 32u64 << 20] {
+            let seq = run_hier_rs(
+                choice(Strategy::Pcpy, true, InterSchedule::Sequential),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            let pipe = run_hier_rs(
+                choice(Strategy::Pcpy, true, InterSchedule::Pipelined),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            assert!(
+                pipe.latency_ns <= seq.latency_ns,
+                "size {size}: pipe {} vs seq {}",
+                pipe.latency_ns,
+                seq.latency_ns
+            );
+        }
+    }
+
+    #[test]
+    fn rs_latency_grows_with_node_count() {
+        let size = 4u64 << 20;
+        let mut prev = 0u64;
+        for n in [1usize, 2, 4] {
+            let cluster = ClusterTopology::mi300x(n);
+            let r = run_hier_rs(
+                choice(Strategy::Pcpy, true, InterSchedule::Pipelined),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            assert!(r.latency_ns > prev, "n={n}: {} !> {prev}", r.latency_ns);
+            prev = r.latency_ns;
+        }
+    }
+}

@@ -45,12 +45,12 @@ use crate::sim::topology::{NodeId, Topology};
 use crate::sim::{HostId, LatencyModel, Sim, SimConfig, SimTime, SignalId};
 
 use super::selector::{ClusterChoice, InterSchedule};
-use super::topology::{ClusterTopology, RankPath};
+use super::topology::{ClusterTopology, NicModel, RankPath};
 
 /// Planner limit on node count (mark names are static).
 pub const MAX_NODES: usize = 16;
 
-const ROUND_MARKS: [&str; MAX_NODES] = [
+pub(crate) const ROUND_MARKS: [&str; MAX_NODES] = [
     "round0", "round1", "round2", "round3", "round4", "round5", "round6", "round7", "round8",
     "round9", "round10", "round11", "round12", "round13", "round14", "round15",
 ];
@@ -62,21 +62,12 @@ pub fn aa_stage_base(size: u64) -> u64 {
 }
 
 /// Execution options for a hierarchical collective.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct HierRunOptions {
     /// Intra-node latency calibration (shared by every node).
     pub latency: LatencyModel,
     /// Initialize buffers, move bytes for real and verify the placement.
     pub verify: bool,
-}
-
-impl Default for HierRunOptions {
-    fn default() -> Self {
-        HierRunOptions {
-            latency: LatencyModel::default(),
-            verify: false,
-        }
-    }
 }
 
 /// Outcome of one hierarchical collective.
@@ -194,13 +185,101 @@ fn rebase_plan(plan: &mut CollectivePlan, split: u64, in_base: u64, out_base: u6
     }
 }
 
+/// Absolute trigger instant `t0` for a prelaunched hierarchical phase (0
+/// when not prelaunching). Unlike the flat executor's relative `Delay`, the
+/// NIC leg aligns to an absolute instant, so budget the worst rank's stream
+/// creation cost from the latency model (`engine_stream` adds the poll gate
+/// + completion atomic) and park the flat executor's margin on top.
+pub(crate) fn prelaunch_t0(
+    rounds: &[CollectivePlan],
+    num_gpus: u8,
+    l: &LatencyModel,
+    prelaunch: bool,
+) -> SimTime {
+    if !prelaunch {
+        return 0;
+    }
+    let setup: SimTime = (0..num_gpus)
+        .map(|g| {
+            rounds
+                .iter()
+                .flat_map(|p| p.ranks.iter().filter(|r| r.gpu == g))
+                .flat_map(|r| r.engines.iter())
+                .map(|ep| {
+                    ns(l.control_ns(ep.cmds.len() + 2, ep.batched_control)) + ns(l.t_doorbell)
+                })
+                .sum()
+        })
+        .max()
+        .unwrap_or(0);
+    setup + PRELAUNCH_PARK_NS
+}
+
+/// NIC messages posted cluster-wide by a same-local-rank exchange: rank
+/// (k,g) talks to rank (k',g) of every other node, one (gathered) message
+/// per partner. Each pair is classified through the topology — cross-node
+/// pairs have no intra-node link ([`Topology::try_link_index`] returns
+/// `None`) and resolve to NIC links.
+pub(crate) fn count_nic_messages(cluster: &ClusterTopology) -> usize {
+    let n = cluster.num_nodes();
+    (0..cluster.world_size() as u32)
+        .map(|r| {
+            let (_, g) = cluster.locate(r);
+            (0..n)
+                .filter(|&k2| {
+                    matches!(
+                        cluster.path(r, cluster.global_rank(k2, g)),
+                        Some(RankPath::Nic(_))
+                    )
+                })
+                .count()
+        })
+        .sum()
+}
+
+/// NIC exchange timing shared by the hierarchical AA and RS inter legs:
+/// every node streams one `payload`-byte message per peer node through its
+/// single full-duplex port (posts and payloads serialize, propagation
+/// pipelines), the message for destination `j` becoming eligible at
+/// `ready[j]` under [`InterSchedule::Pipelined`] or at the phase maximum
+/// under [`InterSchedule::Sequential`]. Homogeneous nodes ⇒ one sender
+/// timeline per node. Returns the latest arrival (incl. the `observe`
+/// host observation cost) per destination-node index.
+pub(crate) fn nic_exchange_arrivals(
+    nic: &NicModel,
+    inter: InterSchedule,
+    ready: &[f64],
+    payload: u64,
+    observe: f64,
+) -> Vec<f64> {
+    let n = ready.len();
+    let all_ready = ready.iter().copied().fold(0f64, f64::max);
+    let mut last_arrival = vec![0f64; n];
+    for sender in 0..n {
+        let mut port = 0f64;
+        for (j, r) in ready.iter().enumerate() {
+            if j == sender {
+                continue;
+            }
+            let eligible = match inter {
+                InterSchedule::Pipelined => *r,
+                InterSchedule::Sequential => all_ready,
+            };
+            let start = eligible.max(port);
+            port = start + nic.t_post_per_msg + nic.payload_ns(payload);
+            last_arrival[j] = last_arrival[j].max(port + nic.t_latency + observe);
+        }
+    }
+    last_arrival
+}
+
 /// Queue one node's per-rank host programs for all intra rounds onto its
 /// DES. `triggers[i]` is the absolute time round `i` may start; rounds
 /// sharing a trigger instant share ONE trigger write per rank (this is what
 /// makes a sequential schedule's single barrier cheaper than pipelining's
 /// per-block triggers). Prelaunch creates every round's poll-gated streams
 /// in the setup epoch before `t0`.
-fn queue_node_scripts(
+pub(crate) fn queue_node_scripts(
     sim: &mut Sim,
     rounds: &[CollectivePlan],
     prelaunch: bool,
@@ -356,48 +435,10 @@ pub fn run_hier_full(
         .collect();
 
     // Prelaunch setup epoch: stream creation + doorbells happen before the
-    // collective triggers at t0. Unlike the flat executor's relative
-    // `Delay`, t0 must be an absolute instant (the NIC leg aligns to it),
-    // so budget the per-rank creation cost from the latency model (worst
-    // rank; engine_stream adds the poll gate + completion atomic) and park
-    // the flat executor's margin on top.
-    let t0: SimTime = if prelaunch {
-        let l = &opts.latency;
-        let setup: SimTime = (0..gpn)
-            .map(|g| {
-                rounds[0]
-                    .iter()
-                    .flat_map(|p| p.ranks.iter().filter(|r| r.gpu == g))
-                    .flat_map(|r| r.engines.iter())
-                    .map(|ep| {
-                        ns(l.control_ns(ep.cmds.len() + 2, ep.batched_control)) + ns(l.t_doorbell)
-                    })
-                    .sum()
-            })
-            .max()
-            .unwrap_or(0);
-        setup + PRELAUNCH_PARK_NS
-    } else {
-        0
-    };
+    // collective triggers at t0.
+    let t0 = prelaunch_t0(&rounds[0], gpn, &opts.latency, prelaunch);
     let data_cmds = rounds[0].iter().map(|p| p.total_data_cmds()).sum::<usize>() * n;
-    // One (gathered) message per exchange partner: rank (k,g) talks to
-    // rank (k',g) of every other node. Classify each pair through the
-    // topology — cross-node pairs have no intra-node link
-    // (`Topology::try_link_index` returns None) and resolve to NIC links.
-    let nic_messages: usize = (0..cluster.world_size() as u32)
-        .map(|r| {
-            let (_, g) = cluster.locate(r);
-            (0..n)
-                .filter(|&k2| {
-                    matches!(
-                        cluster.path(r, cluster.global_rank(k2, g)),
-                        Some(RankPath::Nic(_))
-                    )
-                })
-                .count()
-        })
-        .sum();
+    let nic_messages = count_nic_messages(cluster);
 
     if opts.verify {
         init_buffers_cluster(&mut sims, kind, cluster, size, in_place);
@@ -481,28 +522,12 @@ pub fn run_hier_full(
             if n == 1 {
                 (end_max - t0, 0)
             } else {
-                let all_done = round_done.iter().copied().max().unwrap() as f64;
                 // Port-serialized sends, one per remote block, scheduled at
                 // block readiness (pipelined) or after the whole intra
-                // phase (sequential). Homogeneous nodes: round j completes
-                // at round_done[j] on every node.
-                let mut last_arrival = vec![0f64; n];
-                for k2 in 0..n {
-                    let mut port = 0f64;
-                    for (j, rd) in round_done.iter().enumerate() {
-                        if j == k2 {
-                            continue;
-                        }
-                        let ready = match choice.inter {
-                            InterSchedule::Pipelined => *rd as f64,
-                            InterSchedule::Sequential => all_done,
-                        };
-                        let start = ready.max(port);
-                        port = start + nic.t_post_per_msg + nic.payload_ns(intra);
-                        let arr = port + nic.t_latency + observe;
-                        last_arrival[j] = last_arrival[j].max(arr);
-                    }
-                }
+                // phase (sequential).
+                let ready: Vec<f64> = round_done.iter().map(|&rd| rd as f64).collect();
+                let last_arrival =
+                    nic_exchange_arrivals(&nic, choice.inter, &ready, intra, observe);
                 let mut total = 0f64;
                 for (j, arr) in last_arrival.iter().enumerate() {
                     total = total.max(arr.max(round_done[j] as f64));
@@ -579,7 +604,7 @@ fn init_buffers_cluster(
 
 /// All-gather inter leg: every rank's own chunk lands at the same offset on
 /// its same-local-rank peers in every other node.
-fn exchange_ag(sims: &mut [Sim], cluster: &ClusterTopology, c: u64) {
+pub(crate) fn exchange_ag(sims: &mut [Sim], cluster: &ClusterTopology, c: u64) {
     let n = sims.len();
     for k in 0..n {
         for g in 0..cluster.gpus_per_node() {

@@ -16,8 +16,17 @@
 //!   intra rounds lowered through the existing [`crate::collectives`]
 //!   planners onto per-node DES instances, inter exchange on the NIC
 //!   model, placement verified byte-for-byte.
+//! - [`allreduce`] — hierarchical **reduce-scatter** and **all-reduce**:
+//!   all-to-all-pattern DMA transport rounds + CU reductions
+//!   ([`crate::collectives::reduce_scatter`]'s split: DMA/NIC move, CUs
+//!   reduce), a partial-chunk reduce-exchange leg on the NIC (sequential or
+//!   pipelined), and the hierarchical all-gather as all-reduce's second
+//!   phase; values verified against the flat reference reduction.
 //! - [`selector`] — cluster-aware policy: (intra variant, inter schedule)
-//!   per size and node count, extending `collectives::select_variant`.
+//!   per [`ClusterKind`] (AG / AA / RS / AR), size and node count,
+//!   extending `collectives::select_variant`; the serving path routes
+//!   through it via `coordinator::comm` whenever
+//!   `ServeConfig::num_nodes > 1`.
 //!
 //! # NIC link model assumptions ([`topology::NicModel`])
 //!
@@ -37,10 +46,12 @@
 //!   vectored message (RDMA gather lists), so hierarchical AA posts
 //!   `n−1` messages per rank, not `n·g`.
 
+pub mod allreduce;
 pub mod hier;
 pub mod selector;
 pub mod topology;
 
+pub use allreduce::{run_hier_ar, run_hier_ar_full, run_hier_rs, run_hier_rs_full};
 pub use hier::{run_hier, run_hier_full, HierResult, HierRunOptions};
-pub use selector::{select_cluster, ClusterChoice, InterSchedule};
+pub use selector::{select_allreduce, select_cluster, ClusterChoice, ClusterKind, InterSchedule};
 pub use topology::{ClusterTopology, GlobalRank, NicModel};

@@ -1,20 +1,73 @@
 //! Cluster-aware variant selection: extends the single-node best-per-size
 //! policy ([`select_variant`], Tables 2/3) to a per-(size, node count)
-//! choice of **(intra-node variant, inter-node schedule)**.
+//! choice of **(intra-node variant, inter-node schedule)**, covering the
+//! full hierarchical collective set ([`ClusterKind`]: all-gather,
+//! all-to-all, reduce-scatter, all-reduce).
 //!
 //! - The intra leg of a hierarchical collective runs per-node rounds of
-//!   size `size / nodes`, so the intra variant is the flat policy evaluated
-//!   at the per-round size — more nodes push the intra leg toward the
-//!   latency-bound regime where `b2b`/`bcst`/`swap` win.
+//!   size `size / nodes` through the flat planners of its *transport
+//!   pattern* ([`ClusterKind::transport`]: reduce-scatter rides the
+//!   all-to-all pattern, paper §2.1.1), so the intra variant is the flat
+//!   policy evaluated at the per-round size — more nodes push the intra leg
+//!   toward the latency-bound regime where `b2b`/`bcst`/`swap` win.
 //! - The inter schedule trades a single cheap barrier (sequential: one
 //!   trigger write, one completion observation per rank) against per-block
 //!   overlap (pipelined: a trigger + CQ poll per node block). Pipelining
 //!   pays once the per-peer NIC payload time dominates that per-block
-//!   overhead.
+//!   overhead. The per-peer unit differs by collective: AG moves a rank
+//!   chunk, AA a staged node block, RS a reduced partial chunk.
+//! - All-reduce is two-phase (reduce-scatter then all-gather), each phase
+//!   with its own choice: [`select_allreduce`].
 
 use crate::collectives::{select_variant, CollectiveKind, Variant};
 
 use super::topology::ClusterTopology;
+
+/// Which hierarchical collective — a superset of the single-node
+/// [`CollectiveKind`] adding the reduction collectives whose transport legs
+/// ride the same DMA planners.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClusterKind {
+    AllGather,
+    AllToAll,
+    /// All-to-all-pattern DMA transport + CU reduction
+    /// ([`crate::cluster::allreduce::run_hier_rs`]).
+    ReduceScatter,
+    /// Reduce-scatter followed by a hierarchical all-gather
+    /// ([`crate::cluster::allreduce::run_hier_ar`]).
+    AllReduce,
+}
+
+impl ClusterKind {
+    /// Short name as used in figure labels and CSV file names.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterKind::AllGather => "allgather",
+            ClusterKind::AllToAll => "alltoall",
+            ClusterKind::ReduceScatter => "reduce_scatter",
+            ClusterKind::AllReduce => "allreduce",
+        }
+    }
+
+    /// Intra-node transport pattern of the (first-phase) leg: the flat
+    /// planner family whose variants apply. Reduce-scatter and all-reduce
+    /// move chunks in the all-to-all pattern (paper §2.1.1).
+    pub fn transport(&self) -> CollectiveKind {
+        match self {
+            ClusterKind::AllGather => CollectiveKind::AllGather,
+            _ => CollectiveKind::AllToAll,
+        }
+    }
+}
+
+impl From<CollectiveKind> for ClusterKind {
+    fn from(k: CollectiveKind) -> Self {
+        match k {
+            CollectiveKind::AllGather => ClusterKind::AllGather,
+            CollectiveKind::AllToAll => ClusterKind::AllToAll,
+        }
+    }
+}
 
 /// How the inter-node exchange is scheduled against the intra-node rounds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -57,19 +110,29 @@ impl ClusterChoice {
 pub const PIPELINE_MIN_BLOCK_NS: f64 = 4_000.0;
 
 /// Pick (intra variant, inter schedule) for `kind` at global buffer `size`
-/// bytes per rank on `cluster`.
-pub fn select_cluster(kind: CollectiveKind, cluster: &ClusterTopology, size: u64) -> ClusterChoice {
+/// bytes per rank on `cluster`. Total and non-panicking on degenerate
+/// inputs: a single-node cluster falls through to the flat
+/// [`select_variant`] policy (Sequential, no NIC plan is consulted), and
+/// `size == 0` selects at the minimal flat size.
+pub fn select_cluster<K: Into<ClusterKind>>(
+    kind: K,
+    cluster: &ClusterTopology,
+    size: u64,
+) -> ClusterChoice {
+    let kind = kind.into();
     let n = cluster.num_nodes() as u64;
-    // Intra rounds are per-node-block collectives of size/n.
-    let intra = select_variant(kind, (size / n.max(1)).max(1));
+    // Intra rounds are per-node-block collectives of size/n, planned by
+    // the kind's transport pattern.
+    let intra = select_variant(kind.transport(), (size / n.max(1)).max(1));
     let inter = if cluster.num_nodes() <= 1 {
         InterSchedule::Sequential
     } else {
         let per_peer = match kind {
-            // AG inter leg moves each rank's own chunk; AA moves a staged
-            // per-node block of gpus_per_node chunks.
-            CollectiveKind::AllGather => size / cluster.world_size() as u64,
-            CollectiveKind::AllToAll => size / n,
+            // AA moves a staged per-node block of gpus_per_node chunks; AG
+            // moves each rank's own chunk; RS (and AR's reduce phase) move
+            // one reduced partial chunk per peer node.
+            ClusterKind::AllToAll => size / n,
+            _ => size / cluster.world_size() as u64,
         };
         if cluster.nic.payload_ns(per_peer) >= PIPELINE_MIN_BLOCK_NS {
             InterSchedule::Pipelined
@@ -78,6 +141,17 @@ pub fn select_cluster(kind: CollectiveKind, cluster: &ClusterTopology, size: u64
         }
     };
     ClusterChoice { intra, inter }
+}
+
+/// Both phases of a hierarchical all-reduce: the reduce-scatter leg and the
+/// all-gather leg each get their own (variant, schedule) choice — the
+/// gather phase moves the same per-peer chunk volume but through the AG
+/// planner family.
+pub fn select_allreduce(cluster: &ClusterTopology, size: u64) -> (ClusterChoice, ClusterChoice) {
+    (
+        select_cluster(ClusterKind::ReduceScatter, cluster, size),
+        select_cluster(ClusterKind::AllGather, cluster, size),
+    )
 }
 
 #[cfg(test)]
@@ -141,6 +215,56 @@ mod tests {
         let hier = select_cluster(CollectiveKind::AllToAll, &c8, 16 * MB);
         assert_eq!(flat.strategy, Strategy::Pcpy);
         assert_eq!(hier.intra.strategy, Strategy::Swap);
+    }
+
+    #[test]
+    fn reduce_kinds_use_aa_transport_variants() {
+        let c = ClusterTopology::mi300x(4);
+        for size in [8 * KB, MB, 64 * MB, GB] {
+            for kind in [ClusterKind::ReduceScatter, ClusterKind::AllReduce] {
+                let ch = select_cluster(kind, &c, size);
+                assert_eq!(ch.intra, select_variant(CollectiveKind::AllToAll, size / 4));
+                assert!(ch.intra.strategy.applicable(CollectiveKind::AllToAll));
+            }
+        }
+        // RS partials are per-chunk (world-divided), so RS pipelines later
+        // than AA at the same size.
+        let mid = 2 * MB;
+        let aa = select_cluster(ClusterKind::AllToAll, &ClusterTopology::mi300x(2), mid);
+        let rs = select_cluster(ClusterKind::ReduceScatter, &ClusterTopology::mi300x(2), mid);
+        assert_eq!(aa.inter, InterSchedule::Pipelined);
+        assert_eq!(rs.inter, InterSchedule::Sequential);
+    }
+
+    #[test]
+    fn allreduce_phases_pair_rs_and_ag() {
+        let c = ClusterTopology::mi300x(2);
+        let (rs, ag) = select_allreduce(&c, 32 * MB);
+        assert_eq!(rs, select_cluster(ClusterKind::ReduceScatter, &c, 32 * MB));
+        assert_eq!(ag, select_cluster(ClusterKind::AllGather, &c, 32 * MB));
+        assert!(rs.intra.strategy.applicable(CollectiveKind::AllToAll));
+        assert!(ag.intra.strategy.applicable(CollectiveKind::AllGather));
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        // Zero-byte transfers fall back to the minimal flat size; a
+        // single-node cluster never consults the NIC model.
+        for n in [1usize, 2] {
+            let c = ClusterTopology::mi300x(n);
+            for kind in [
+                ClusterKind::AllGather,
+                ClusterKind::AllToAll,
+                ClusterKind::ReduceScatter,
+                ClusterKind::AllReduce,
+            ] {
+                let ch = select_cluster(kind, &c, 0);
+                assert!(ch.intra.strategy.applicable(kind.transport()));
+            }
+        }
+        let single = select_cluster(ClusterKind::ReduceScatter, &ClusterTopology::mi300x(1), MB);
+        assert_eq!(single.inter, InterSchedule::Sequential);
+        assert_eq!(single.intra, select_variant(CollectiveKind::AllToAll, MB));
     }
 
     #[test]

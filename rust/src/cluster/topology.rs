@@ -125,12 +125,16 @@ impl ClusterTopology {
         }
     }
 
-    /// `num_nodes` copies of `node` with the given NIC model.
+    /// `num_nodes` copies of `node` with the given NIC model. A degenerate
+    /// `num_nodes == 0` is clamped to a single node: callers sizing
+    /// deployments from config should get the flat single-node fall-through
+    /// (no NIC links), not a panic.
     pub fn homogeneous(num_nodes: usize, node: Topology, nic: NicModel) -> Self {
-        Self::new(vec![node; num_nodes], nic)
+        Self::new(vec![node; num_nodes.max(1)], nic)
     }
 
-    /// `num_nodes` MI300X platforms over default 400 Gb/s RoCE links.
+    /// `num_nodes` MI300X platforms over default 400 Gb/s RoCE links
+    /// (clamped to ≥ 1 node like [`ClusterTopology::homogeneous`]).
     pub fn mi300x(num_nodes: usize) -> Self {
         Self::homogeneous(num_nodes, Topology::mi300x_platform(), NicModel::default())
     }
@@ -148,6 +152,14 @@ impl ClusterTopology {
     /// Total GPU count across the cluster.
     pub fn world_size(&self) -> usize {
         self.nodes.len() * self.gpus_per_node() as usize
+    }
+
+    /// Round `bytes` up to a positive multiple of the world size (the
+    /// collective chunking requirement shared by the serving path, the
+    /// figures, and the hierarchical executors' size asserts).
+    pub fn pad_size(&self, bytes: u64) -> u64 {
+        let w = self.world_size() as u64;
+        bytes.div_ceil(w).max(1) * w
     }
 
     /// Single-node topology of node `k`.
@@ -245,6 +257,22 @@ mod tests {
         let c = ClusterTopology::mi300x(1);
         assert_eq!(c.num_nic_links(), 0);
         assert_eq!(c.world_size(), 8);
+    }
+
+    #[test]
+    fn pad_size_rounds_to_world_multiple() {
+        let c = ClusterTopology::mi300x(2); // world 16
+        assert_eq!(c.pad_size(0), 16);
+        assert_eq!(c.pad_size(1), 16);
+        assert_eq!(c.pad_size(16), 16);
+        assert_eq!(c.pad_size(17), 32);
+    }
+
+    #[test]
+    fn zero_nodes_clamps_to_single_node() {
+        let c = ClusterTopology::mi300x(0);
+        assert_eq!(c.num_nodes(), 1);
+        assert_eq!(c.num_nic_links(), 0);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Cluster-aware collective sizing on the serving path.
+//!
+//! Tensor-parallel serving spends its communication budget on all-reduce
+//! (lowered as reduce-scatter + all-gather). On the paper's single 8-GPU
+//! node that cost is folded into the MI300X roofline perf model
+//! ([`crate::models::perf`]), so a single-node deployment adds nothing
+//! here. When a deployment spans nodes ([`ServeConfig::num_nodes`] > 1),
+//! the engine must instead size every step's collective through the
+//! cluster-aware selector ([`crate::cluster::select_cluster`] via
+//! [`crate::cluster::select_allreduce`]) and charge the hierarchical
+//! executor's modeled latency — the flat single-node selector knows nothing
+//! about the NIC leg and would undersize it badly.
+//!
+//! [`CollectiveComm`] memoizes the modeled latency per padded size (the DES
+//! outcome is a pure function of the byte count for a fixed cluster), so
+//! the serving loop pays one hierarchical episode per distinct batch shape.
+
+use std::collections::HashMap;
+
+use crate::cluster::{
+    hier, run_hier_ar, select_allreduce, ClusterChoice, ClusterTopology, HierRunOptions,
+};
+use crate::models::ModelConfig;
+
+use super::config::ServeConfig;
+
+/// Per-engine collective cost model: flat (free) on one node, hierarchical
+/// (selector-routed) across nodes.
+pub struct CollectiveComm {
+    /// `None` on single-node deployments — the flat path builds no cluster
+    /// topology and charges nothing.
+    cluster: Option<ClusterTopology>,
+    /// Modeled all-reduce latency per padded size.
+    cache: HashMap<u64, u64>,
+}
+
+impl CollectiveComm {
+    /// Build from the serving config ([`ServeConfig::num_nodes`] decides
+    /// the path). Node counts above the hierarchical planner's
+    /// [`hier::MAX_NODES`] limit are clamped to it — the collective cost is
+    /// then modeled for the largest supported cluster (an underestimate),
+    /// and a warning records the divergence from the config.
+    pub fn new(cfg: &ServeConfig) -> Self {
+        if cfg.num_nodes > hier::MAX_NODES {
+            crate::log_warn!(
+                "num_nodes {} exceeds the cluster planner limit {}; collective \
+                 costs are modeled for a {}-node cluster",
+                cfg.num_nodes,
+                hier::MAX_NODES,
+                hier::MAX_NODES
+            );
+        }
+        let cluster = (cfg.num_nodes > 1)
+            .then(|| ClusterTopology::mi300x(cfg.num_nodes.min(hier::MAX_NODES)));
+        CollectiveComm {
+            cluster,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Whether the hierarchical (multi-node) path is active.
+    pub fn is_multi_node(&self) -> bool {
+        self.cluster.is_some()
+    }
+
+    /// The selector's decision for an all-reduce of `bytes`: the
+    /// (reduce-scatter, all-gather) phase choices, or `None` on a
+    /// single-node deployment (flat path — no cluster collective is built).
+    pub fn allreduce_choices(&self, bytes: u64) -> Option<(ClusterChoice, ClusterChoice)> {
+        self.cluster
+            .as_ref()
+            .map(|cl| select_allreduce(cl, cl.pad_size(bytes)))
+    }
+
+    /// Modeled latency of one tensor-parallel all-reduce of `bytes` across
+    /// the deployment. 0 on a single node and for zero-byte transfers.
+    pub fn allreduce_ns(&mut self, bytes: u64) -> u64 {
+        let Some(cl) = &self.cluster else {
+            return 0;
+        };
+        if bytes == 0 {
+            return 0;
+        }
+        let size = cl.pad_size(bytes);
+        if let Some(&t) = self.cache.get(&size) {
+            return t;
+        }
+        let (rs, ag) = select_allreduce(cl, size);
+        let t = run_hier_ar(rs, ag, cl, size, &HierRunOptions::default()).latency_ns;
+        self.cache.insert(size, t);
+        t
+    }
+
+    /// Collective time for one model step over `tokens` rows: a bf16
+    /// activation all-reduce per layer for each of the two TP-sharded
+    /// blocks (attention output + MLP output).
+    pub fn step_allreduce_ns(&mut self, model: &ModelConfig, tokens: u64) -> u64 {
+        if self.cluster.is_none() {
+            return 0;
+        }
+        let bytes = tokens * model.hidden as u64 * 2;
+        2 * model.layers as u64 * self.allreduce_ns(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::fetch::FetchImpl;
+    use crate::models::zoo::QWEN25_0_5B;
+
+    fn cfg(nodes: usize) -> ServeConfig {
+        ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b).with_nodes(nodes)
+    }
+
+    #[test]
+    fn single_node_is_flat_and_free() {
+        let mut comm = CollectiveComm::new(&cfg(1));
+        assert!(!comm.is_multi_node());
+        assert_eq!(comm.allreduce_choices(1 << 20), None);
+        assert_eq!(comm.allreduce_ns(1 << 20), 0);
+        assert_eq!(comm.step_allreduce_ns(&QWEN25_0_5B, 64), 0);
+    }
+
+    /// The acceptance check: with `num_nodes > 1` the engine's collective
+    /// sizing goes through `cluster::select_cluster` (via
+    /// `select_allreduce`) and the hierarchical executor — not the flat
+    /// single-node selector.
+    #[test]
+    fn multi_node_routes_through_select_cluster() {
+        let mut comm = CollectiveComm::new(&cfg(2));
+        assert!(comm.is_multi_node());
+        let cl = ClusterTopology::mi300x(2);
+        let bytes = 900_001u64; // deliberately unaligned
+        let padded = bytes.div_ceil(16).max(1) * 16;
+        let want = select_allreduce(&cl, padded);
+        assert_eq!(comm.allreduce_choices(bytes), Some(want));
+        let t = comm.allreduce_ns(bytes);
+        let (rs, ag) = want;
+        let reference = run_hier_ar(rs, ag, &cl, padded, &HierRunOptions::default()).latency_ns;
+        assert_eq!(t, reference);
+        assert!(t > 0);
+    }
+
+    #[test]
+    fn zero_bytes_cost_nothing_even_multi_node() {
+        let mut comm = CollectiveComm::new(&cfg(4));
+        assert_eq!(comm.allreduce_ns(0), 0);
+        assert_eq!(comm.step_allreduce_ns(&QWEN25_0_5B, 0), 0);
+    }
+
+    #[test]
+    fn memoizes_per_padded_size() {
+        let mut comm = CollectiveComm::new(&cfg(2));
+        let a = comm.allreduce_ns(4096);
+        let b = comm.allreduce_ns(4096);
+        assert_eq!(a, b);
+        assert!(a > 0);
+        // Sub-chunk sizes share the padded entry.
+        assert_eq!(comm.allreduce_ns(4090), a);
+        assert_eq!(comm.cache.len(), 1);
+    }
+
+    #[test]
+    fn step_cost_scales_with_layers_and_tokens() {
+        let mut comm = CollectiveComm::new(&cfg(2));
+        let one = comm.step_allreduce_ns(&QWEN25_0_5B, 1);
+        let many = comm.step_allreduce_ns(&QWEN25_0_5B, 4096);
+        assert!(one > 0);
+        assert!(many > one);
+        assert_eq!(
+            one,
+            2 * QWEN25_0_5B.layers as u64 * comm.allreduce_ns(QWEN25_0_5B.hidden as u64 * 2)
+        );
+    }
+}

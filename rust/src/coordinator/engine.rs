@@ -13,6 +13,7 @@ use crate::kvcache::fetch::{run_fetch, CopySpec, FetchImpl, FetchOutcome};
 use crate::kvcache::BlockLayout;
 use crate::sim::{Sim, SimConfig};
 
+use super::comm::CollectiveComm;
 use super::config::ServeConfig;
 use super::metrics::ServeMetrics;
 use super::request::{Request, RequestState};
@@ -40,6 +41,9 @@ pub struct VirtualEngine {
     pub metrics: ServeMetrics,
     /// Memoized fetch cost per copy-count (all blocks are equal-sized).
     fetch_cache: std::collections::HashMap<usize, FetchOutcome>,
+    /// Cluster-aware collective sizing (free on a single node; routed
+    /// through `cluster::select_cluster` when `cfg.num_nodes > 1`).
+    comm: CollectiveComm,
 }
 
 impl VirtualEngine {
@@ -69,6 +73,7 @@ impl VirtualEngine {
             running: Vec::new(),
             metrics: ServeMetrics::default(),
             fetch_cache: std::collections::HashMap::new(),
+            comm: CollectiveComm::new(&cfg),
             cfg,
         }
     }
@@ -172,9 +177,13 @@ impl VirtualEngine {
                     self.metrics.cache_misses += 1;
                     let t =
                         (self.cfg.perf.prefill_s(self.cfg.model, req.prompt_tokens) * 1e9) as u64;
+                    // Cross-node TP all-reduces of the prompt activations
+                    // (0 on a single node — folded into the perf model).
+                    let comm = self.comm.step_allreduce_ns(self.cfg.model, req.prompt_tokens);
                     let start = self.gpu_free.max(self.host_free);
-                    self.gpu_free = start + t;
+                    self.gpu_free = start + t + comm;
                     self.metrics.gpu_busy_ns += t;
+                    self.metrics.comm_ns += comm;
                     req.state = RequestState::Prefilling;
                     self.pending.push(Pending {
                         req,
@@ -207,10 +216,14 @@ impl VirtualEngine {
         let ctx =
             self.running.iter().map(|r| r.context()).sum::<u64>() / batch;
         let t = (self.cfg.perf.decode_step_s(self.cfg.model, batch, ctx) * 1e9) as u64;
+        // Cross-node TP all-reduces of the step's activations, sized
+        // through the cluster selector (0 on a single node).
+        let comm = self.comm.step_allreduce_ns(self.cfg.model, batch);
         let start = self.gpu_free.max(self.now);
-        self.gpu_free = start + t;
+        self.gpu_free = start + t + comm;
         self.now = self.gpu_free;
         self.metrics.gpu_busy_ns += t;
+        self.metrics.comm_ns += comm;
         let now = self.now;
         let mut finished = Vec::new();
         for r in &mut self.running {
@@ -309,6 +322,29 @@ mod tests {
         assert!((1.6..3.2).contains(&sp_gpu), "gpu speedup {sp_gpu}");
         assert!(sp_total < sp_gpu, "framework overhead must dilute: {sp_total}");
         assert!(sp_total > 1.2, "total speedup {sp_total}");
+    }
+
+    #[test]
+    fn multi_node_charges_hierarchical_collectives() {
+        let run_nodes = |nodes: usize| {
+            let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b).with_nodes(nodes);
+            cfg.gpu_blocks = 1 << 18;
+            let mut eng = VirtualEngine::new(cfg);
+            for i in 0..8 {
+                eng.submit(Request::new(i, 1024, 8, 0), true);
+            }
+            eng.run_to_completion().clone()
+        };
+        let single = run_nodes(1);
+        let multi = run_nodes(2);
+        assert_eq!(single.finished, 8);
+        assert_eq!(multi.finished, 8);
+        // Single node: TP comm folded into the perf model, nothing here.
+        assert_eq!(single.comm_ns, 0);
+        // Multi node: the selector-routed all-reduce shows up on the
+        // critical path and slows the run down.
+        assert!(multi.comm_ns > 0);
+        assert!(multi.wall_ns > single.wall_ns);
     }
 
     #[test]

@@ -13,6 +13,9 @@ pub struct ServeMetrics {
     pub host_busy_ns: u64,
     /// GPU busy time (decode + prefill + kernel-fetch CU time).
     pub gpu_busy_ns: u64,
+    /// Cross-node collective (TP all-reduce) time on the critical path;
+    /// 0 on single-node deployments (folded into the perf model there).
+    pub comm_ns: u64,
     /// Total fetch bytes moved CPU→GPU.
     pub fetch_bytes: u64,
     pub cache_hits: u64,

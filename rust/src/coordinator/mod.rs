@@ -9,8 +9,13 @@
 //! - [`server::Server`] — real threaded serving loop running the
 //!   AOT-compiled JAX model through PJRT (`crate::runtime`); used by the
 //!   end-to-end example with wall-clock metrics.
+//!
+//! Multi-node deployments (`ServeConfig::num_nodes > 1`) route per-step
+//! collective sizing through the cluster-aware selector via [`comm`];
+//! single-node deployments keep the paper's flat behavior.
 
 pub mod batcher;
+pub mod comm;
 pub mod config;
 pub mod engine;
 pub mod metrics;
@@ -19,6 +24,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use comm::CollectiveComm;
 pub use config::ServeConfig;
 pub use engine::VirtualEngine;
 pub use request::{Request, RequestState};

@@ -1,20 +1,39 @@
-//! Cluster scaling figure (beyond the paper): hierarchical DMA collective
-//! latency across node counts (1 → 8) and sizes (1KB → 1GB), with the
-//! cluster-aware selector picking the (intra variant, inter schedule) per
-//! cell. The single-node column reproduces the flat collective, so the
-//! table reads as "what scale-out costs on top of the paper's numbers".
+//! Cluster scaling figures (beyond the paper): hierarchical DMA collective
+//! latency across node counts (1 → 8) and sizes (1KB → 1GB) for the full
+//! [`ClusterKind`] set — all-gather, all-to-all, reduce-scatter and
+//! all-reduce — with the cluster-aware selector picking the configuration
+//! per cell (for all-reduce: one choice per phase). The single-node column
+//! reproduces the flat collective (reduce-scatter: the flat DMA+CU split),
+//! so the table reads as "what scale-out costs on top of the paper's
+//! numbers".
 
-use crate::cluster::{run_hier, select_cluster, ClusterChoice, ClusterTopology, HierRunOptions};
-use crate::collectives::CollectiveKind;
+use crate::cluster::{
+    run_hier, run_hier_ar, run_hier_rs, select_allreduce, select_cluster, ClusterChoice,
+    ClusterKind, ClusterTopology, HierRunOptions,
+};
 use crate::util::bytes::{fmt_size, size_sweep, GB, KB};
 
 /// One (node count) cell of a scaling row.
 #[derive(Debug, Clone)]
 pub struct ScaleCell {
     pub nodes: usize,
+    /// Selector choice (the reduce-scatter phase choice for all-reduce).
     pub choice: ClusterChoice,
+    /// All-reduce only: the gather-phase choice.
+    pub ag_choice: Option<ClusterChoice>,
     pub latency_ns: u64,
     pub inter_ns: u64,
+}
+
+impl ScaleCell {
+    /// Figure-label name of the cell's configuration (`rs+ag` composite
+    /// for all-reduce).
+    pub fn choice_name(&self) -> String {
+        match &self.ag_choice {
+            Some(ag) => format!("{}+{}", self.choice.name(), ag.name()),
+            None => self.choice.name(),
+        }
+    }
 }
 
 /// One size row across all node counts.
@@ -24,13 +43,14 @@ pub struct ScaleRow {
     pub cells: Vec<ScaleCell>,
 }
 
-/// Sweep the hierarchical collectives over `node_counts` × sizes
-/// (default 1KB..1GB ×4), selector-chosen configuration per cell.
-pub fn scaling(
-    kind: CollectiveKind,
+/// Sweep a hierarchical collective over `node_counts` × sizes (default
+/// 1KB..1GB ×4), selector-chosen configuration per cell.
+pub fn scaling<K: Into<ClusterKind>>(
+    kind: K,
     node_counts: &[usize],
     sizes: Option<Vec<u64>>,
 ) -> Vec<ScaleRow> {
+    let kind = kind.into();
     let sizes = sizes.unwrap_or_else(|| size_sweep(KB, GB, 4));
     let opts = HierRunOptions::default();
     sizes
@@ -43,13 +63,28 @@ pub fn scaling(
                     // Round the nominal size up to a multiple of this
                     // cell's world size (a no-op for power-of-two node
                     // counts on the power-of-two sweeps).
-                    let w = cluster.world_size() as u64;
-                    let size = ((size + w - 1) / w).max(1) * w;
-                    let choice = select_cluster(kind, &cluster, size);
-                    let r = run_hier(kind, choice, &cluster, size, &opts);
+                    let size = cluster.pad_size(size);
+                    let (choice, ag_choice, r) = match kind {
+                        ClusterKind::AllGather | ClusterKind::AllToAll => {
+                            let choice = select_cluster(kind, &cluster, size);
+                            let r = run_hier(kind.transport(), choice, &cluster, size, &opts);
+                            (choice, None, r)
+                        }
+                        ClusterKind::ReduceScatter => {
+                            let choice = select_cluster(kind, &cluster, size);
+                            let r = run_hier_rs(choice, &cluster, size, &opts);
+                            (choice, None, r)
+                        }
+                        ClusterKind::AllReduce => {
+                            let (rs, ag) = select_allreduce(&cluster, size);
+                            let r = run_hier_ar(rs, ag, &cluster, size, &opts);
+                            (rs, Some(ag), r)
+                        }
+                    };
                     ScaleCell {
                         nodes: n,
                         choice,
+                        ag_choice,
                         latency_ns: r.latency_ns,
                         inter_ns: r.inter_ns,
                     }
@@ -62,7 +97,7 @@ pub fn scaling(
 
 /// Render a scaling sweep as an ASCII table: per node count, the latency
 /// in µs and the selector's choice.
-pub fn render(kind: CollectiveKind, rows: &[ScaleRow]) -> String {
+pub fn render<K: Into<ClusterKind>>(kind: K, rows: &[ScaleRow]) -> String {
     let mut header = vec!["size".to_string()];
     if let Some(r0) = rows.first() {
         for c in &r0.cells {
@@ -75,11 +110,11 @@ pub fn render(kind: CollectiveKind, rows: &[ScaleRow]) -> String {
         let mut cells = vec![fmt_size(r.size)];
         for c in &r.cells {
             cells.push(format!("{:.1}", c.latency_ns as f64 / 1e3));
-            cells.push(c.choice.name());
+            cells.push(c.choice_name());
         }
         t.row(cells);
     }
-    format!("cluster scaling — {}\n{}", kind.name(), t.render())
+    format!("cluster scaling — {}\n{}", kind.into().name(), t.render())
 }
 
 /// CSV dump of a scaling sweep.
@@ -98,7 +133,7 @@ pub fn to_csv(rows: &[ScaleRow]) -> crate::util::csv::Csv {
         for c in &r.cells {
             cells.push(c.latency_ns.to_string());
             cells.push(c.inter_ns.to_string());
-            cells.push(c.choice.name());
+            cells.push(c.choice_name());
         }
         csv.row(cells);
     }
@@ -108,6 +143,7 @@ pub fn to_csv(rows: &[ScaleRow]) -> crate::util::csv::Csv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::CollectiveKind;
     use crate::util::bytes::MB;
 
     #[test]
@@ -137,5 +173,30 @@ mod tests {
         assert!(s.contains("alltoall") && s.contains("2n_us"), "{s}");
         let csv = to_csv(&rows).render();
         assert!(csv.contains("nodes2_ns"), "{csv}");
+    }
+
+    #[test]
+    fn reduce_kinds_scale_and_compose() {
+        let sizes = Some(vec![64 * KB, 4 * MB]);
+        let rs = scaling(ClusterKind::ReduceScatter, &[1, 2], sizes.clone());
+        let ar = scaling(ClusterKind::AllReduce, &[1, 2], sizes);
+        for rows in [&rs, &ar] {
+            for r in rows.iter() {
+                assert!(r.cells.iter().all(|c| c.latency_ns > 0));
+                assert_eq!(r.cells[0].inter_ns, 0);
+                assert!(r.cells[1].inter_ns > 0);
+            }
+        }
+        // AR = RS + AG per cell, so AR strictly dominates RS.
+        for (rrow, arow) in rs.iter().zip(&ar) {
+            for (rc, ac) in rrow.cells.iter().zip(&arow.cells) {
+                assert!(ac.latency_ns > rc.latency_ns);
+            }
+        }
+        // AR cells carry both phase choices in the composite label.
+        let label = ar[0].cells[1].choice_name();
+        assert!(label.contains('+'), "{label}");
+        let s = render(ClusterKind::AllReduce, &ar);
+        assert!(s.contains("allreduce"), "{s}");
     }
 }

@@ -10,12 +10,16 @@
 //! - [`collectives`] — the paper's optimized DMA collectives (pcpy / bcst /
 //!   swap / b2b / prelaunch) over the simulator.
 //! - [`cluster`] — multi-node layer: N simulated nodes over NIC links,
-//!   hierarchical all-gather / all-to-all (intra-node DMA leg + inter-node
-//!   exchange), and the cluster-aware (variant, schedule) selector.
+//!   hierarchical all-gather / all-to-all / reduce-scatter / all-reduce
+//!   (intra-node DMA leg + inter-node exchange; reductions on CUs per the
+//!   paper's §7 split), and the cluster-aware (variant, schedule) selector
+//!   covering all four collectives per size × node count.
 //! - [`rccl`] — calibrated CU-based collective baseline (RCCL stand-in).
 //! - [`models`] — LLM architecture zoo + MI300X roofline timing model.
 //! - [`kvcache`] — paged KV cache, CPU offload tier, fetch engines.
-//! - [`coordinator`] — vLLM-like serving stack (router, batcher, scheduler).
+//! - [`coordinator`] — vLLM-like serving stack (router, batcher, scheduler);
+//!   multi-node deployments route collective sizing through the cluster
+//!   selector (`coordinator::comm`).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts.
 //! - [`figures`] — one generator per paper figure/table.
 

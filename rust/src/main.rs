@@ -3,7 +3,8 @@
 //! ```text
 //! dma-latte figures   [--out results/] [--quick]   # all paper figures
 //! dma-latte sweep     [--kind allgather|alltoall] [--max 4G]
-//! dma-latte cluster   [--kind ...] [--nodes 1,2,4] [--max 1G]  # scaling
+//! dma-latte cluster   [--kind allgather|alltoall|reduce-scatter|allreduce]
+//!                     [--nodes 1,2,4] [--max 1G]   # hierarchical scaling
 //! dma-latte breakdown                              # Fig. 7
 //! dma-latte power                                  # Fig. 15
 //! dma-latte ttft      [--prefill 4096]             # Fig. 16
@@ -38,8 +39,12 @@ fn cmd_sweep(args: &Args) {
 
 fn cmd_cluster(args: &Args) {
     let kind = match args.get("kind", "allgather").as_str() {
-        "alltoall" => CollectiveKind::AllToAll,
-        _ => CollectiveKind::AllGather,
+        "alltoall" => dma_latte::cluster::ClusterKind::AllToAll,
+        "reduce-scatter" | "reduce_scatter" | "reducescatter" | "rs" => {
+            dma_latte::cluster::ClusterKind::ReduceScatter
+        }
+        "allreduce" | "all-reduce" | "ar" => dma_latte::cluster::ClusterKind::AllReduce,
+        _ => dma_latte::cluster::ClusterKind::AllGather,
     };
     let max = parse_size(&args.get("max", "1G")).expect("bad --max");
     let spec = args.get("nodes", "1,2,4");
@@ -82,9 +87,14 @@ fn cmd_figures(args: &Args) {
         .write(format!("{out}/fig14_alltoall.csv"))
         .unwrap();
 
-    println!("\n# Cluster scaling — hierarchical AG/AA over 1/2/4 nodes");
+    println!("\n# Cluster scaling — hierarchical AG/AA/RS/AR over 1/2/4 nodes");
     let cl_sizes = Some(size_sweep(KB, if quick { 16 * MB } else { GB }, 4));
-    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+    for kind in [
+        dma_latte::cluster::ClusterKind::AllGather,
+        dma_latte::cluster::ClusterKind::AllToAll,
+        dma_latte::cluster::ClusterKind::ReduceScatter,
+        dma_latte::cluster::ClusterKind::AllReduce,
+    ] {
         let rows = figcl::scaling(kind, &[1, 2, 4], cl_sizes.clone());
         print!("{}", figcl::render(kind, &rows));
         figcl::to_csv(&rows)

@@ -170,6 +170,6 @@ mod tests {
         }
         e.retire_inflight(100);
         assert_eq!(e.inflight.len(), 1);
-        assert!(e.quiescent() == false);
+        assert!(!e.quiescent());
     }
 }

@@ -13,3 +13,11 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod timer;
+
+/// True when `DMA_LATTE_BENCH_SMOKE` is set (to anything but `0`): the
+/// bench binaries shrink their sweeps to small sizes / few iterations so CI
+/// can smoke-run every bench and figure path on each change without paying
+/// for the full tables.
+pub fn bench_smoke() -> bool {
+    std::env::var_os("DMA_LATTE_BENCH_SMOKE").is_some_and(|v| v != "0")
+}

@@ -20,7 +20,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             cases: 64,
-            base_seed: 0xD31A_1A77E,
+            base_seed: 0xD_31A1_A77E,
         }
     }
 }

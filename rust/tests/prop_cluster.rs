@@ -1,20 +1,23 @@
 //! Property tests for the cluster layer: a hierarchical all-gather /
 //! all-to-all over `nodes × gpus` ranks must deliver exactly the same
 //! chunk placement as the flat single-node planner reshaped to the same
-//! world size, for randomized node counts, GPU counts, variants, schedules
-//! and sizes.
+//! world size — and a hierarchical reduce-scatter / all-reduce must deliver
+//! exactly the flat reference reduction's element values — for randomized
+//! node counts, GPU counts, variants, schedules and sizes.
 
+use dma_latte::cluster::allreduce::rs_result_base;
 use dma_latte::cluster::{
-    run_hier_full, select_cluster, ClusterChoice, ClusterTopology, HierRunOptions, InterSchedule,
-    NicModel,
+    run_hier_ar_full, run_hier_full, run_hier_rs_full, select_cluster, ClusterChoice, ClusterKind,
+    ClusterTopology, HierRunOptions, InterSchedule, NicModel,
 };
 use dma_latte::collectives::exec::build_plan;
 use dma_latte::collectives::plan::aa_out_base;
+use dma_latte::collectives::reduce_scatter::{plan_transport, reduce_staged, stage_base};
 use dma_latte::collectives::verify::pattern;
 use dma_latte::collectives::{CollectiveKind, Strategy, Variant};
 use dma_latte::sim::command::Command;
 use dma_latte::sim::memory::MemorySystem;
-use dma_latte::sim::{NodeId, Topology};
+use dma_latte::sim::{LatencyModel, NodeId, Sim, SimConfig, Topology};
 use dma_latte::util::proptest::{run as prop_run, Config};
 use dma_latte::util::rng::Rng;
 
@@ -153,7 +156,139 @@ fn prop_hier_matches_flat_placement() {
     );
 }
 
-/// The cluster selector is total, applicable, and sequential on one node.
+/// Hierarchical reduce-scatter / all-reduce element values match the flat
+/// reference reduction (the single-node DMA transport + CU reduce split of
+/// `collectives::reduce_scatter` run at world size), over random shapes:
+/// nodes 1–4, GPUs 2–4, all AA-pattern transport variants, all AG gather
+/// variants, both inter schedules, random sizes.
+#[test]
+fn prop_hier_reduce_matches_flat_reference() {
+    prop_run(
+        "hier-rs-ar-flat-reduction",
+        Config {
+            cases: 16,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 4);
+            let g = rng.range(2, 4) as u8;
+            let world = (n * g as usize) as u8;
+            let rs_v = *rng.pick(&Variant::all_for(CollectiveKind::AllToAll));
+            let ag_v = *rng.pick(&Variant::all_for(CollectiveKind::AllGather));
+            let pick_inter = |rng: &mut Rng| {
+                if rng.chance(0.5) {
+                    InterSchedule::Sequential
+                } else {
+                    InterSchedule::Pipelined
+                }
+            };
+            let rs_inter = pick_inter(rng);
+            let ag_inter = pick_inter(rng);
+            let chunk = 64 * rng.range(1, 4) as u64;
+            let size = chunk * world as u64;
+            let cluster = ClusterTopology::homogeneous(
+                n,
+                Topology::custom(g, 16, 64.0, 64.0),
+                NicModel::default(),
+            );
+            let label = format!(
+                "rs={} {rs_inter:?} ag={} {ag_inter:?} n={n} g={g} size={size}",
+                rs_v.name(),
+                ag_v.name()
+            );
+
+            // Flat reference: the single-node RS split (AA-pattern DMA
+            // transport + staged CU reduce) at world size.
+            let topo = Topology::custom(world, 16, 64.0, 64.0);
+            let mut flat = Sim::new(SimConfig {
+                topology: topo.clone(),
+                latency: LatencyModel::default(),
+                functional: true,
+                trace: false,
+            });
+            for r in 0..world {
+                for d in 0..world {
+                    flat.memory.poke(
+                        NodeId::Gpu(r),
+                        d as u64 * chunk,
+                        &vec![pattern(r, d); chunk as usize],
+                    );
+                }
+            }
+            for r in &plan_transport(&topo, size).ranks {
+                for e in &r.engines {
+                    for cmd in &e.cmds {
+                        if let Command::Copy { src, dst, len } = *cmd {
+                            flat.memory
+                                .dma_copy(src.node, src.offset, dst.node, dst.offset, len);
+                        }
+                    }
+                }
+            }
+            reduce_staged(&mut flat, size);
+            let result_off = stage_base(size) + world as u64 * chunk;
+            let expected: Vec<Vec<u8>> = (0..world)
+                .map(|r| flat.memory.peek(NodeId::Gpu(r), result_off, chunk))
+                .collect();
+
+            // Hierarchical reduce-scatter must reproduce those values.
+            let opts = HierRunOptions {
+                verify: true,
+                ..Default::default()
+            };
+            let (rs_res, rs_sims) = run_hier_rs_full(
+                ClusterChoice {
+                    intra: rs_v,
+                    inter: rs_inter,
+                },
+                &cluster,
+                size,
+                &opts,
+            );
+            assert_eq!(rs_res.verified, Some(true), "{label}");
+            for r in 0..world as u32 {
+                let (node, local) = cluster.locate(r);
+                assert_eq!(
+                    rs_sims[node]
+                        .memory
+                        .peek(NodeId::Gpu(local), rs_result_base(size, chunk), chunk),
+                    expected[r as usize],
+                    "{label}: rank {r} reduced chunk"
+                );
+            }
+
+            // Hierarchical all-reduce: every rank ends with the full
+            // reduced vector.
+            let (ar_res, ar_sims) = run_hier_ar_full(
+                ClusterChoice {
+                    intra: rs_v,
+                    inter: rs_inter,
+                },
+                ClusterChoice {
+                    intra: ag_v,
+                    inter: ag_inter,
+                },
+                &cluster,
+                size,
+                &opts,
+            );
+            assert_eq!(ar_res.verified, Some(true), "{label}");
+            assert!(ar_res.latency_ns > rs_res.latency_ns, "{label}");
+            let full: Vec<u8> = expected.iter().flatten().copied().collect();
+            for r in 0..world as u32 {
+                let (node, local) = cluster.locate(r);
+                assert_eq!(
+                    ar_sims[node].memory.peek(NodeId::Gpu(local), 0, size),
+                    full,
+                    "{label}: rank {r} allreduce buffer"
+                );
+            }
+        },
+    );
+}
+
+/// The cluster selector is total, applicable, and sequential on one node,
+/// across the full collective set and degenerate sizes.
 #[test]
 fn prop_cluster_selector_total() {
     prop_run(
@@ -165,10 +300,19 @@ fn prop_cluster_selector_total() {
         |rng: &mut Rng| {
             let n = rng.range(1, 8);
             let cluster = ClusterTopology::mi300x(n);
-            let size = 1 + rng.below(8 << 30);
-            for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+            // Include the zero-byte degenerate in the sampled domain.
+            let size = rng.below(8 << 30);
+            for kind in [
+                ClusterKind::AllGather,
+                ClusterKind::AllToAll,
+                ClusterKind::ReduceScatter,
+                ClusterKind::AllReduce,
+            ] {
                 let ch = select_cluster(kind, &cluster, size);
-                assert!(ch.intra.strategy.applicable(kind), "n={n} size={size}");
+                assert!(
+                    ch.intra.strategy.applicable(kind.transport()),
+                    "n={n} size={size}"
+                );
                 if n == 1 {
                     assert_eq!(ch.inter, InterSchedule::Sequential);
                 }
