@@ -1,46 +1,112 @@
-//! BENCH — §Perf: wall-clock micro-benchmarks of the L3 hot paths
-//! (EXPERIMENTS.md §Perf records before/after for the optimization pass).
+//! BENCH — §Perf: wall-clock micro-benchmarks of the L3 hot paths, run
+//! BOTH through the legacy (pre-optimization) code paths and the
+//! optimized ones, in one process on one machine — the before/after rows
+//! of the `BENCH_*.json` trajectory (this PR: `BENCH_PR3.json`).
 //!
-//! - DES event throughput (events/s) — the substrate under every figure.
-//! - Collective sweep point (end-to-end DES episode).
-//! - Fetch planning + DES episode (the serving scheduler's inner call).
-//! - Virtual serving engine step rate (requests/s).
+//! - Collective episode: fresh-Sim + fresh-plan per call (legacy) vs one
+//!   reset-reused simulator + cross-episode plan cache.
+//! - Fetch plan + episode: fresh `Sim::new` per admission (legacy) vs
+//!   `Sim::reset` reuse.
+//! - Virtual serving engine step rate and raw DES event rate (optimized
+//!   path only — their legacy substrate no longer exists in-tree).
+//!
+//! Row names are stable and grep-asserted by the CI bench-smoke job. The
+//! JSON lands at `../BENCH_PR3.json` (the repo root when run via cargo);
+//! override with `DMA_LATTE_BENCH_JSON=path` or disable with `=0`.
+//! See `rust/benches/README.md` for the methodology.
 
-use dma_latte::collectives::{run_collective, CollectiveKind, RunOptions, Strategy, Variant};
+use dma_latte::collectives::exec::run_collective_uncached;
+use dma_latte::collectives::{
+    cache, CollectiveKind, CollectiveRunner, RunOptions, Strategy, Variant,
+};
 use dma_latte::coordinator::request::Request;
 use dma_latte::coordinator::{ServeConfig, VirtualEngine};
-use dma_latte::kvcache::fetch::{run_fetch, FetchImpl};
+use dma_latte::kvcache::fetch::{run_fetch, CopySpec, FetchImpl};
 use dma_latte::models::zoo::QWEN25_0_5B;
 use dma_latte::sim::topology::NodeId;
 use dma_latte::sim::{Addr, Sim, SimConfig};
-use dma_latte::util::bytes::MB;
-use dma_latte::util::timer::{bench, black_box};
+use dma_latte::util::bytes::{fmt_ns, KB, MB};
+use dma_latte::util::timer::{bench, bench_json, black_box, BenchComparison};
 
-fn main() {
-    println!("== L3 hot-path microbenchmarks ==\n");
-    // Smoke runs trade measurement stability for wall time.
-    let smoke = dma_latte::util::bench_smoke();
-    let (warm, iters) = if smoke { (1, 5) } else { (3, 50) };
+fn report(row: &BenchComparison) {
+    if let Some(b) = &row.before {
+        println!("  before: {}", b.summary());
+    }
+    println!("  after:  {}", row.after.summary());
+    match row.speedup() {
+        Some(sp) => println!(
+            "row {:<36} before {:>10} after {:>10} speedup {:.2}x\n",
+            row.path,
+            fmt_ns(row.before.as_ref().unwrap().median_ns),
+            fmt_ns(row.after.median_ns),
+            sp
+        ),
+        None => println!(
+            "row {:<36} after {:>10}\n",
+            row.path,
+            fmt_ns(row.after.median_ns)
+        ),
+    }
+}
 
-    // 1) DES throughput: one pcpy collective episode = ~500 events.
+fn collective_row(
+    path: &str,
+    kind: CollectiveKind,
+    v: Variant,
+    size: u64,
+    warm: usize,
+    iters: usize,
+) -> BenchComparison {
     let opts = RunOptions {
         sim: SimConfig::mi300x(),
         verify: false,
     };
-    let r = bench("collective episode (pcpy AG 1MB)", warm, iters, || {
-        black_box(run_collective(
-            CollectiveKind::AllGather,
-            Variant::new(Strategy::Pcpy, false),
-            MB,
-            &opts,
-        ));
+    let before = bench(&format!("{path} (legacy fresh-sim)"), warm, iters, || {
+        black_box(run_collective_uncached(kind, v, size, &opts));
     });
-    println!("{}", r.summary());
+    let mut runner = CollectiveRunner::new(&opts);
+    let after = bench(&format!("{path} (reset+plan-cache)"), warm, iters, || {
+        black_box(runner.run(kind, v, size));
+    });
+    BenchComparison {
+        path: path.to_string(),
+        before: Some(before),
+        after,
+    }
+}
 
-    // Events/s measurement.
-    let mut sim = Sim::new(SimConfig::mi300x());
-    let sig = sim.alloc_signal(0);
-    let copies: Vec<_> = (0..2048u64)
+fn main() {
+    println!("== L3 hot-path microbenchmarks (before/after, BENCH_PR3) ==\n");
+    // Smoke runs trade measurement stability for wall time.
+    let smoke = dma_latte::util::bench_smoke();
+    let (warm, iters) = if smoke { (1, 5) } else { (3, 50) };
+    let mut rows: Vec<BenchComparison> = Vec::new();
+
+    // 1) Collective episodes: the substrate under every sweep figure and
+    //    the cluster selector. One bandwidth-bound point, one
+    //    latency-bound point (higher episode rate ⇒ setup dominates more).
+    rows.push(collective_row(
+        "collective_episode_pcpy_ag_1mb",
+        CollectiveKind::AllGather,
+        Variant::new(Strategy::Pcpy, false),
+        MB,
+        warm,
+        iters,
+    ));
+    report(rows.last().unwrap());
+    rows.push(collective_row(
+        "collective_episode_prelaunch_b2b_64kb",
+        CollectiveKind::AllGather,
+        Variant::new(Strategy::B2b, true),
+        64 * KB,
+        warm,
+        iters,
+    ));
+    report(rows.last().unwrap());
+
+    // 2) Fetch plan + episode (the serving scheduler's per-admission
+    //    inner call): fresh Sim per admission vs reset reuse.
+    let copies: Vec<CopySpec> = (0..256u64)
         .map(|i| {
             (
                 Addr::new(NodeId::Cpu, i * 4096),
@@ -49,37 +115,92 @@ fn main() {
             )
         })
         .collect();
+    let fetch_iters = if smoke { 10 } else { 100 };
+    let before = bench("fetch episode (legacy fresh-sim)", warm, fetch_iters, || {
+        let mut sim = Sim::new(SimConfig::mi300x());
+        black_box(run_fetch(&mut sim, FetchImpl::DmaB2b, &copies));
+    });
+    let mut fetch_sim = Sim::new(SimConfig::mi300x());
+    let after = bench("fetch episode (reset reuse)", warm, fetch_iters, || {
+        fetch_sim.reset();
+        black_box(run_fetch(&mut fetch_sim, FetchImpl::DmaB2b, &copies));
+    });
+    rows.push(BenchComparison {
+        path: "fetch_episode_b2b_256".to_string(),
+        before: Some(before),
+        after,
+    });
+    report(rows.last().unwrap());
+
+    // 3) Virtual serving engine: requests/s of the simulator itself
+    //    (optimized substrate only — no legacy toggle survives in-tree).
+    let after = bench(
+        "virtual engine (64 reqs, b2b)",
+        1,
+        if smoke { 3 } else { 10 },
+        || {
+            let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+            cfg.gpu_blocks = 1 << 18;
+            let mut eng = VirtualEngine::new(cfg);
+            for i in 0..64 {
+                eng.submit(Request::new(i, 1024, 8, 0), true);
+            }
+            black_box(eng.run_to_completion().finished);
+        },
+    );
+    rows.push(BenchComparison {
+        path: "virtual_engine_64req".to_string(),
+        before: None,
+        after,
+    });
+    report(rows.last().unwrap());
+
+    // 4) Raw DES event rate over one long fetch episode.
+    let big_copies: Vec<CopySpec> = (0..2048u64)
+        .map(|i| {
+            (
+                Addr::new(NodeId::Cpu, i * 4096),
+                Addr::new(NodeId::Gpu(0), i * 4096),
+                4096u64,
+            )
+        })
+        .collect();
+    let mut sim = Sim::new(SimConfig::mi300x());
     let t0 = std::time::Instant::now();
-    let out = run_fetch(&mut sim, FetchImpl::DmaBaseline, &copies);
-    let outcome = { black_box(out); sim };
-    let _ = sig;
+    black_box(run_fetch(&mut sim, FetchImpl::DmaBaseline, &big_copies));
     let events = 2048 * 4; // ≈ events per copy
     println!(
-        "DES rate ≈ {:.2}M events/s (2048-copy fetch episode in {:.1}ms)",
+        "DES rate ≈ {:.2}M events/s (2048-copy fetch episode in {:.1}ms)\n",
         events as f64 / t0.elapsed().as_secs_f64() / 1e6,
         t0.elapsed().as_secs_f64() * 1e3
     );
-    drop(outcome);
 
-    // 2) Fetch episode (the serving loop's per-admission cost).
-    let copies_small: Vec<_> = copies[..256].to_vec();
-    let r = bench("fetch episode (b2b, 256 blocks)", warm, if smoke { 10 } else { 100 }, || {
-        let mut sim = Sim::new(SimConfig::mi300x());
-        black_box(run_fetch(&mut sim, FetchImpl::DmaB2b, &copies_small));
-    });
-    println!("{}", r.summary());
+    let (hits, misses) = cache::stats();
+    println!("plan cache: {hits} hits / {misses} misses");
 
-    // 3) Virtual serving engine: requests/s of the simulator itself.
-    let r = bench("virtual engine (64 reqs, b2b)", 1, if smoke { 3 } else { 10 }, || {
-        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
-        cfg.gpu_blocks = 1 << 18;
-        let mut eng = VirtualEngine::new(cfg);
-        for i in 0..64 {
-            eng.submit(Request::new(i, 1024, 8, 0), true);
+    // Machine-readable trajectory file.
+    let dest = std::env::var("DMA_LATTE_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_PR3.json".to_string());
+    if dest != "0" {
+        let meta = [
+            ("pr", "PR3".to_string()),
+            ("mode", if smoke { "smoke" } else { "full" }.to_string()),
+            (
+                "note",
+                "before = legacy fresh-sim/fresh-plan path, after = Sim::reset + \
+                 cross-episode plan cache; same process, same machine"
+                    .to_string(),
+            ),
+        ];
+        let doc = bench_json("perf_hotpath", &meta, &rows);
+        if let Err(e) = std::fs::write(&dest, doc) {
+            // Fatal: CI asserts the file was regenerated; a silent miss
+            // would let a stale checked-in copy masquerade as fresh.
+            eprintln!("could not write {dest}: {e}");
+            std::process::exit(1);
         }
-        black_box(eng.run_to_completion().finished);
-    });
-    println!("{}", r.summary());
+        println!("wrote {dest}");
+    }
 
     println!("\nTargets (DESIGN.md §7): DES ≥ 1M events/s; serving loop");
     println!(">10x faster than the workload it models.");

@@ -45,8 +45,10 @@ use crate::sim::clock::ns;
 use crate::sim::topology::NodeId;
 use crate::sim::{Sim, SimConfig, SimTime};
 
+use std::sync::Arc;
+
 use super::hier::{
-    aa_stage_base, build_node_rounds, count_nic_messages, exchange_ag, nic_exchange_arrivals,
+    aa_stage_base, cached_node_rounds, count_nic_messages, exchange_ag, nic_exchange_arrivals,
     prelaunch_t0, queue_node_scripts, run_hier, HierResult, HierRunOptions, MAX_NODES,
     ROUND_MARKS,
 };
@@ -271,9 +273,9 @@ pub fn run_hier_rs_full(
             })
         })
         .collect();
-    let rounds: Vec<Vec<CollectivePlan>> = (0..sim_nodes)
+    let rounds: Vec<Arc<Vec<CollectivePlan>>> = (0..sim_nodes)
         .map(|k| {
-            build_node_rounds(
+            cached_node_rounds(
                 CollectiveKind::AllToAll,
                 cluster.node(k),
                 n,
@@ -456,7 +458,7 @@ pub fn run_hier_ar_full(
         }
         exchange_ag(&mut sims, cluster, c);
         for (k, sim) in sims.iter_mut().enumerate() {
-            let rounds = build_node_rounds(
+            let rounds = cached_node_rounds(
                 CollectiveKind::AllGather,
                 cluster.node(k),
                 n,

@@ -34,10 +34,14 @@
 //! byte-for-byte against the flat single-node planner at the same world
 //! size).
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::collectives::cache::{get_or_build, WorldShape};
 use crate::collectives::exec::{self, PRELAUNCH_PARK_NS};
 use crate::collectives::plan::{aa_out_base, CollectivePlan};
 use crate::collectives::verify::pattern;
-use crate::collectives::{CollectiveKind, Strategy};
+use crate::collectives::{CollectiveKind, Strategy, Variant};
 use crate::sim::clock::ns;
 use crate::sim::command::{Addr, Command};
 use crate::sim::host::HostOp;
@@ -86,6 +90,63 @@ pub struct HierResult {
     pub nic_messages: usize,
     /// Functional placement check (None when not requested).
     pub verified: Option<bool>,
+}
+
+/// Cache key for a node's rebased intra rounds: the flat plan-cache key
+/// ([`crate::collectives::cache::PlanKey`] analogue) extended with the
+/// node coordinates that drive the rebase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct RoundsKey {
+    kind: CollectiveKind,
+    variant: Variant,
+    size: u64,
+    num_nodes: u8,
+    node_idx: u8,
+    shape: WorldShape,
+}
+
+/// Runaway guard, mirroring the flat plan cache's flush-at-cap policy.
+const ROUNDS_CACHE_CAP: usize = 1024;
+
+static ROUNDS: OnceLock<Mutex<HashMap<RoundsKey, Arc<Vec<CollectivePlan>>>>> = OnceLock::new();
+
+/// [`build_node_rounds`] through the cross-episode cache (§Perf pass): the
+/// rebased per-node scripts are a pure function of the key, so selector
+/// calibration, `coordinator::comm`'s per-batch-shape sizing and repeated
+/// hierarchical episodes replay one shared build.
+///
+/// `chunk` is deliberately NOT part of the key: it must equal
+/// `size / (num_nodes * gpus_per_node)` (the hierarchical layout's only
+/// chunking), which the assert below enforces so a future caller with a
+/// different chunking cannot silently receive mismatched cached rounds.
+pub fn cached_node_rounds(
+    kind: CollectiveKind,
+    node_topo: &Topology,
+    num_nodes: usize,
+    node_idx: usize,
+    size: u64,
+    chunk: u64,
+    variant: Variant,
+) -> Arc<Vec<CollectivePlan>> {
+    assert!(num_nodes <= MAX_NODES && node_idx < num_nodes.max(1));
+    assert_eq!(
+        chunk * num_nodes as u64 * node_topo.num_gpus as u64,
+        size,
+        "chunk must be size / world (it is excluded from the cache key)"
+    );
+    let key = RoundsKey {
+        kind,
+        variant,
+        size,
+        num_nodes: num_nodes as u8,
+        node_idx: node_idx as u8,
+        shape: WorldShape::of(node_topo),
+    };
+    let table = ROUNDS.get_or_init(|| Mutex::new(HashMap::new()));
+    let (rounds, _hit) = get_or_build(table, ROUNDS_CACHE_CAP, key, || {
+        build_node_rounds(kind, node_topo, num_nodes, node_idx, size, chunk, variant)
+    });
+    rounds
 }
 
 /// Build node `node_idx`'s intra rounds for the global collective: one
@@ -430,8 +491,8 @@ pub fn run_hier_full(
             })
         })
         .collect();
-    let rounds: Vec<Vec<CollectivePlan>> = (0..sim_nodes)
-        .map(|k| build_node_rounds(kind, cluster.node(k), n, k, size, c, choice.intra))
+    let rounds: Vec<Arc<Vec<CollectivePlan>>> = (0..sim_nodes)
+        .map(|k| cached_node_rounds(kind, cluster.node(k), n, k, size, c, choice.intra))
         .collect();
 
     // Prelaunch setup epoch: stream creation + doorbells happen before the

@@ -1,0 +1,155 @@
+//! Cross-episode plan cache (§Perf pass).
+//!
+//! Planning a collective is a pure function of the collective kind, the
+//! base strategy, the byte size and the *shape* of the topology (GPU and
+//! engine counts — no planner consults link bandwidths), so repeated
+//! episodes at the same point — selector calibration sweeps, figure
+//! generators, the serving path's per-batch-shape sizing — used to rebuild
+//! the identical `Vec<Command>` lists every call. The cache builds each
+//! plan once and hands out [`Arc`] clones; the executor reads through the
+//! `Arc`, so replay costs two reference-count bumps instead of a planner
+//! walk. The hierarchical `cluster::hier` layer keeps a sibling cache of
+//! its rebased node scripts keyed the same way plus the node coordinates.
+//!
+//! Caching is semantically invisible: planners are deterministic, plans
+//! are immutable once built, and `tests/determinism.rs` pins cache-hit
+//! episodes to fresh-build episodes bit for bit.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::sim::Topology;
+
+use super::exec::build_plan;
+use super::plan::CollectivePlan;
+use super::{CollectiveKind, Variant};
+
+/// Shape fingerprint of a topology: everything a planner reads from it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorldShape {
+    pub num_gpus: u8,
+    pub engines_per_gpu: u8,
+}
+
+impl WorldShape {
+    /// Fingerprint `topo` (bandwidths deliberately excluded — plans carry
+    /// addresses and engine placements, never link speeds).
+    pub fn of(topo: &Topology) -> Self {
+        WorldShape {
+            num_gpus: topo.num_gpus,
+            engines_per_gpu: topo.engines_per_gpu,
+        }
+    }
+}
+
+/// Cache key: (kind, variant, size, world shape). The variant's prelaunch
+/// flag is part of the key for uniformity even though planners only read
+/// the strategy — keying on the full variant keeps the key aligned with
+/// the call sites and costs one extra bool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub kind: CollectiveKind,
+    pub variant: Variant,
+    pub size: u64,
+    pub shape: WorldShape,
+}
+
+/// Runaway guard: property tests draw random sizes, and an unbounded map
+/// would slowly pin every plan ever built. Past this many entries the
+/// cache is dropped wholesale (episodes after a flush rebuild on miss —
+/// correctness is unaffected).
+const CACHE_CAP: usize = 4096;
+
+static PLANS: OnceLock<Mutex<HashMap<PlanKey, Arc<CollectivePlan>>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn table() -> &'static Mutex<HashMap<PlanKey, Arc<CollectivePlan>>> {
+    PLANS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Shared skeleton for the crate's cross-episode caches (this flat plan
+/// cache and `cluster::hier`'s rounds cache): double-checked lookup with
+/// the build running OUTSIDE the lock (planning can be slow and must not
+/// serialize concurrent test threads), flush-at-cap as a runaway guard,
+/// first-insert-wins on a build race so every caller shares one
+/// allocation. Returns the value and whether the first lookup hit.
+pub(crate) fn get_or_build<K: Eq + Hash, V>(
+    table: &Mutex<HashMap<K, Arc<V>>>,
+    cap: usize,
+    key: K,
+    build: impl FnOnce() -> V,
+) -> (Arc<V>, bool) {
+    if let Some(v) = table.lock().unwrap().get(&key) {
+        return (Arc::clone(v), true);
+    }
+    let v = Arc::new(build());
+    let mut t = table.lock().unwrap();
+    if t.len() >= cap {
+        t.clear();
+    }
+    (Arc::clone(t.entry(key).or_insert(v)), false)
+}
+
+/// Plan `variant` for `kind` at `size` bytes on `topo`, served from the
+/// cross-episode cache. Identical to [`build_plan`] output by
+/// construction (the builder is deterministic).
+pub fn cached_plan(
+    kind: CollectiveKind,
+    variant: Variant,
+    topo: &Topology,
+    size: u64,
+) -> Arc<CollectivePlan> {
+    let key = PlanKey {
+        kind,
+        variant,
+        size,
+        shape: WorldShape::of(topo),
+    };
+    let (plan, hit) =
+        get_or_build(table(), CACHE_CAP, key, || build_plan(kind, variant, topo, size));
+    let counter = if hit { &HITS } else { &MISSES };
+    counter.fetch_add(1, Ordering::Relaxed);
+    plan
+}
+
+/// Lifetime (hit, miss) counters — benches report them, tests assert the
+/// replay path actually hits.
+pub fn stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Strategy;
+    use crate::util::bytes::KB;
+
+    #[test]
+    fn hit_returns_shared_plan_identical_to_fresh_build() {
+        let topo = Topology::mi300x_platform();
+        let v = Variant::new(Strategy::Pcpy, true);
+        let a = cached_plan(CollectiveKind::AllGather, v, &topo, 8 * KB);
+        let b = cached_plan(CollectiveKind::AllGather, v, &topo, 8 * KB);
+        assert!(Arc::ptr_eq(&a, &b), "repeat lookups must share one plan");
+        let fresh = build_plan(CollectiveKind::AllGather, v, &topo, 8 * KB);
+        assert_eq!(a.total_data_cmds(), fresh.total_data_cmds());
+        assert_eq!(a.total_engines(), fresh.total_engines());
+        assert_eq!(a.size, fresh.size);
+        let (h, _) = stats();
+        assert!(h >= 1);
+    }
+
+    #[test]
+    fn distinct_shapes_do_not_collide() {
+        let big = Topology::mi300x_platform();
+        let small = Topology::custom(4, 16, 64.0, 64.0);
+        let v = Variant::new(Strategy::Pcpy, false);
+        let a = cached_plan(CollectiveKind::AllToAll, v, &big, 16 * KB);
+        let b = cached_plan(CollectiveKind::AllToAll, v, &small, 16 * KB);
+        assert_eq!(a.ranks.len(), 8);
+        assert_eq!(b.ranks.len(), 4);
+    }
+}

@@ -15,7 +15,7 @@ use crate::sim::power::Activity;
 use crate::sim::{Sim, SimConfig, SignalId};
 
 use super::plan::{CollectivePlan, EnginePlan};
-use super::{b2b, bcst, pcpy, swap, verify, CollectiveKind, Strategy, Variant};
+use super::{b2b, bcst, cache, pcpy, swap, verify, CollectiveKind, Strategy, Variant};
 
 /// Prelaunch setup-epoch margin: after creating poll-gated streams and
 /// ringing doorbells, hosts wait this long for engines to park on their
@@ -108,24 +108,112 @@ pub fn build_plan(
 }
 
 /// Run one collective end to end on the DES and measure it.
+///
+/// Builds a fresh [`CollectiveRunner`] per call; the plan still comes from
+/// the cross-episode cache and the topology clone is two `Arc` bumps, so a
+/// one-shot call is already cheap — but sweeps should hold a runner and
+/// reuse its simulator across episodes.
 pub fn run_collective(
     kind: CollectiveKind,
     variant: Variant,
     size: u64,
     opts: &RunOptions,
 ) -> CollectiveResult {
-    let topo = opts.sim.topology.clone();
-    let plan = build_plan(kind, variant, &topo, size);
+    CollectiveRunner::new(opts).run(kind, variant, size)
+}
+
+/// The pre-optimization episode path, kept for `benches/perf_hotpath`'s
+/// before/after rows (`BENCH_PR3.json`): a fresh simulator, a fresh
+/// planner walk (no cross-episode cache) and fresh signal scratch on every
+/// call — exactly what the §Perf pass removed. Results are bit-identical
+/// to [`run_collective`]; only the wall-clock differs.
+pub fn run_collective_uncached(
+    kind: CollectiveKind,
+    variant: Variant,
+    size: u64,
+    opts: &RunOptions,
+) -> CollectiveResult {
     let mut cfg = opts.sim.clone();
     if opts.verify {
         cfg.functional = true;
     }
     let mut sim = Sim::new(cfg);
+    let plan = build_plan(kind, variant, &sim.cfg.topology, size);
+    run_episode(&mut sim, &plan, variant, opts.verify, &mut Vec::new(), &mut Vec::new())
+}
+
+/// Reusable collective-episode driver (§Perf pass): one simulator
+/// ([`Sim::reset`] between episodes instead of a rebuild), scratch signal
+/// buffers reused across episodes, plans served from the cross-episode
+/// cache ([`cache::cached_plan`]). Episodes are bit-identical to one-shot
+/// [`run_collective`] runs — `tests/determinism.rs` pins this.
+pub struct CollectiveRunner {
+    sim: Sim,
+    verify: bool,
+    /// Per-(rank, engine) completion-signal scratch, reused across
+    /// episodes (the satellite fix for the per-call `alloc_signal` vecs).
+    eng_signals: Vec<Vec<SignalId>>,
+    /// Per-rank prelaunch-trigger scratch.
+    triggers: Vec<SignalId>,
+    used: bool,
+}
+
+impl CollectiveRunner {
+    /// Build a runner for `opts` (the simulator is constructed once here).
+    pub fn new(opts: &RunOptions) -> Self {
+        let mut cfg = opts.sim.clone();
+        if opts.verify {
+            cfg.functional = true;
+        }
+        CollectiveRunner {
+            sim: Sim::new(cfg),
+            verify: opts.verify,
+            eng_signals: Vec::new(),
+            triggers: Vec::new(),
+            used: false,
+        }
+    }
+
+    /// The simulator, holding the state of the most recent episode
+    /// (trace inspection, memory checksums).
+    pub fn sim(&self) -> &Sim {
+        &self.sim
+    }
+
+    /// Run one episode, resetting the simulator first if it was used.
+    pub fn run(&mut self, kind: CollectiveKind, variant: Variant, size: u64) -> CollectiveResult {
+        if self.used {
+            self.sim.reset();
+        }
+        self.used = true;
+        let plan = cache::cached_plan(kind, variant, &self.sim.cfg.topology, size);
+        run_episode(
+            &mut self.sim,
+            &plan,
+            variant,
+            self.verify,
+            &mut self.eng_signals,
+            &mut self.triggers,
+        )
+    }
+}
+
+/// One collective episode on a pristine (fresh or reset) simulator.
+fn run_episode(
+    sim: &mut Sim,
+    plan: &CollectivePlan,
+    variant: Variant,
+    verify: bool,
+    eng_signals: &mut Vec<Vec<SignalId>>,
+    triggers: &mut Vec<SignalId>,
+) -> CollectiveResult {
+    let kind = plan.kind;
+    let size = plan.size;
 
     // Buffers (also sizes non-functional accounting consistently).
     let in_place_swap = variant.strategy == Strategy::Swap;
-    if opts.verify {
-        verify::init_buffers(&mut sim, kind, size, in_place_swap);
+    if verify {
+        verify::init_buffers(sim, kind, size, in_place_swap);
     }
 
     // Per-engine completion signals: each engine stream ends with its own
@@ -133,20 +221,26 @@ pub fn run_collective(
     // signals in turn. This is the paper's sync-scaling mechanism: more
     // engines ⇒ more sync commands AND more host-side completions to
     // observe (§5.2.4), which bcst/swap/b2b then halve or collapse.
-    let mut eng_signals: Vec<Vec<crate::sim::SignalId>> = Vec::new();
-    for rank in &plan.ranks {
-        eng_signals.push(
-            rank.engines
-                .iter()
-                .map(|_| sim.alloc_signal(0))
-                .collect(),
-        );
+    // The outer/inner Vecs are scratch reused across episodes; post-reset
+    // the allocated ids repeat deterministically.
+    while eng_signals.len() < plan.ranks.len() {
+        eng_signals.push(Vec::new());
+    }
+    eng_signals.truncate(plan.ranks.len());
+    for (ri, rank) in plan.ranks.iter().enumerate() {
+        eng_signals[ri].clear();
+        for _ in &rank.engines {
+            let s = sim.alloc_signal(0);
+            eng_signals[ri].push(s);
+        }
     }
 
     // Per-rank prelaunch triggers.
-    let triggers: Vec<_> = (0..topo.num_gpus)
-        .map(|_| sim.alloc_signal(0))
-        .collect();
+    triggers.clear();
+    for _ in 0..sim.cfg.topology.num_gpus {
+        let s = sim.alloc_signal(0);
+        triggers.push(s);
+    }
 
     for (ri, rank) in plan.ranks.iter().enumerate() {
         let mut script = Vec::new();
@@ -209,8 +303,8 @@ pub fn run_collective(
         .max()
         .unwrap();
 
-    let verified = if opts.verify {
-        Some(verify::check(&sim, kind, size, in_place_swap))
+    let verified = if verify {
+        Some(verify::check(sim, kind, size, in_place_swap))
     } else {
         None
     };
@@ -239,6 +333,32 @@ mod tests {
                 verify: size <= MB,
             },
         )
+    }
+
+    /// A reused runner (reset simulator + cached plan) must reproduce the
+    /// one-shot path exactly, even when episodes of different kinds and
+    /// variants interleave between repeats.
+    #[test]
+    fn runner_reuse_matches_one_shot() {
+        let opts = RunOptions {
+            sim: SimConfig::mi300x(),
+            verify: true,
+        };
+        let ag = Variant::new(Strategy::B2b, true);
+        let mut runner = CollectiveRunner::new(&opts);
+        let a = runner.run(CollectiveKind::AllGather, ag, 64 * KB);
+        let b = runner.run(CollectiveKind::AllToAll, Variant::new(Strategy::Swap, true), 64 * KB);
+        let c = runner.run(CollectiveKind::AllGather, ag, 64 * KB);
+        assert_eq!(a.verified, Some(true));
+        assert_eq!(b.verified, Some(true));
+        assert_eq!(a.latency_ns, c.latency_ns);
+        assert_eq!(a.activity.hbm_bytes, c.activity.hbm_bytes);
+        let one_shot = run_collective(CollectiveKind::AllGather, ag, 64 * KB, &opts);
+        assert_eq!(one_shot.latency_ns, a.latency_ns);
+        assert_eq!(one_shot.engines_used, a.engines_used);
+        let legacy = run_collective_uncached(CollectiveKind::AllGather, ag, 64 * KB, &opts);
+        assert_eq!(legacy.latency_ns, a.latency_ns);
+        assert_eq!(legacy.verified, a.verified);
     }
 
     #[test]

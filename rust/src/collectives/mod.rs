@@ -17,6 +17,7 @@
 
 pub mod b2b;
 pub mod bcst;
+pub mod cache;
 pub mod exec;
 pub mod moe;
 pub mod pcpy;
@@ -26,7 +27,7 @@ pub mod selector;
 pub mod swap;
 pub mod verify;
 
-pub use exec::{run_collective, CollectiveResult, RunOptions};
+pub use exec::{run_collective, CollectiveResult, CollectiveRunner, RunOptions};
 pub use plan::{CollectivePlan, EnginePlan, RankPlan};
 pub use selector::select_variant;
 

@@ -3,7 +3,7 @@
 //! (values < 1 are slowdowns, exactly as the paper plots).
 
 use crate::collectives::selector::{calibrate, ranges, SweepPoint};
-use crate::collectives::{run_collective, CollectiveKind, RunOptions, Variant};
+use crate::collectives::{CollectiveKind, CollectiveRunner, RunOptions, Variant};
 use crate::rccl::RcclModel;
 use crate::sim::SimConfig;
 use crate::util::bytes::{fmt_size, size_sweep, GB, KB, MB};
@@ -46,6 +46,9 @@ pub fn sweep(kind: CollectiveKind, sizes: Option<Vec<u64>>) -> Vec<SweepRow> {
         sim: SimConfig::mi300x(),
         verify: false,
     };
+    // One simulator reused (reset) across every (size, variant) episode;
+    // plans come from the cross-episode cache (§Perf pass).
+    let mut runner = CollectiveRunner::new(&opts);
     let variants = Variant::all_for(kind);
     sizes
         .into_iter()
@@ -54,7 +57,7 @@ pub fn sweep(kind: CollectiveKind, sizes: Option<Vec<u64>>) -> Vec<SweepRow> {
             let variants = variants
                 .iter()
                 .map(|&v| {
-                    let r = run_collective(kind, v, size, &opts);
+                    let r = runner.run(kind, v, size);
                     (v, r.latency_ns, rccl_ns / r.latency_ns as f64)
                 })
                 .collect();

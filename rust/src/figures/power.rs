@@ -2,7 +2,7 @@
 //! for all-gather across sizes, via the component power model fed by DES
 //! activity (DMA side) and the RCCL activity model (CU side).
 
-use crate::collectives::{run_collective, select_variant, CollectiveKind, RunOptions};
+use crate::collectives::{select_variant, CollectiveKind, CollectiveRunner, RunOptions};
 use crate::rccl::RcclModel;
 use crate::sim::power::{PowerModel, PowerSample};
 use crate::sim::SimConfig;
@@ -34,11 +34,13 @@ pub fn fig15(sizes: Option<Vec<u64>>) -> Vec<PowerRow> {
         verify: false,
     };
     let kind = CollectiveKind::AllGather;
+    // One reset-reused simulator for the whole sweep (§Perf pass).
+    let mut runner = CollectiveRunner::new(&opts);
     sizes
         .into_iter()
         .map(|size| {
             let v = select_variant(kind, size);
-            let r = run_collective(kind, v, size, &opts);
+            let r = runner.run(kind, v, size);
             // DES activity is platform-wide; the power model (like the
             // paper's Fig. 15) reports per-GPU watts.
             let n = opts.sim.topology.num_gpus as f64;

@@ -7,8 +7,16 @@
 //!
 //! Layer map:
 //! - [`sim`] — discrete-event MI300X DMA-subsystem simulator (substrate).
+//!   Allocation-free hot path: `Sim::reset` lets sweeps and the serving
+//!   engine reuse one simulator per episode; the event queue keeps a
+//!   front-slot fast path and in-flight retirement drains a sorted deque.
 //! - [`collectives`] — the paper's optimized DMA collectives (pcpy / bcst /
-//!   swap / b2b / prelaunch) over the simulator.
+//!   swap / b2b / prelaunch) over the simulator. Plans are built once per
+//!   (kind, variant, size, world shape) and replayed from the
+//!   cross-episode cache ([`collectives::cache`]); sweeps drive episodes
+//!   through the reusable [`collectives::CollectiveRunner`]. Before/after
+//!   wall-clock numbers live in `BENCH_PR3.json`
+//!   (`benches/perf_hotpath.rs`, methodology in `benches/README.md`).
 //! - [`cluster`] — multi-node layer: N simulated nodes over NIC links,
 //!   hierarchical all-gather / all-to-all / reduce-scatter / all-reduce
 //!   (intra-node DMA leg + inter-node exchange; reductions on CUs per the

@@ -128,6 +128,31 @@ impl Sim {
         }
     }
 
+    /// Return the simulator to the state `Sim::new(cfg)` would produce,
+    /// keeping the engine array, event heap, signal table and link vector
+    /// allocations. An episode run on a reset simulator is bit-identical
+    /// to one run on a fresh simulator (signal/host ids restart at 0, the
+    /// event sequence restarts, every clock returns to 0) — this is what
+    /// lets sweeps and the serving engine reuse ONE simulator instead of
+    /// rebuilding state, heap and signal tables every episode (§Perf pass).
+    pub fn reset(&mut self) {
+        self.time = 0;
+        self.events.clear();
+        self.hosts.clear();
+        for e in &mut self.engines {
+            e.reset();
+        }
+        self.link_free.fill(0);
+        self.signals.reset();
+        self.sig_host_waiters.clear();
+        self.sig_engine_pollers.clear();
+        self.memory.reset();
+        self.trace.clear();
+        self.doorbell_at.fill(None);
+        self.link_bytes = 0;
+        self.events_processed = 0;
+    }
+
     fn eidx(&self, id: EngineId) -> usize {
         id.gpu as usize * self.cfg.topology.engines_per_gpu as usize + id.idx as usize
     }
@@ -251,21 +276,41 @@ impl Sim {
                 self.hosts[hid.0 as usize].done = true;
                 return;
             }
+            // Each op executes exactly once (pc strictly advances), so the
+            // one op with a heap payload — CreateCommands — MOVES its
+            // command vector into the engine queue instead of cloning it
+            // per execution; the remaining ops are cheap to clone (§Perf
+            // pass: this was the last per-command allocation on the host
+            // hot path).
+            if let HostOp::CreateCommands { engine, cmds, api } =
+                &mut self.hosts[hid.0 as usize].script[pc]
+            {
+                let (engine, api) = (*engine, *api);
+                let cmds = std::mem::take(cmds);
+                let n_data = cmds.iter().filter(|c| c.is_data_move()).count();
+                let cost = self.api_control_cost(&api, n_data, cmds.len());
+                let h = &mut self.hosts[hid.0 as usize];
+                let start = h.now;
+                h.now += cost;
+                let end = h.now;
+                if self.cfg.trace {
+                    self.trace.record(Some(engine), 0, Phase::Control, start, end);
+                }
+                let i = self.eidx(engine);
+                let e = &mut self.engines[i];
+                if e.pending.is_empty() {
+                    e.pending = cmds; // adopt the script's buffer wholesale
+                } else {
+                    e.pending.extend(cmds);
+                }
+                self.hosts[hid.0 as usize].pc += 1;
+                continue;
+            }
             let op = self.hosts[hid.0 as usize].script[pc].clone();
             match op {
-                HostOp::CreateCommands { engine, cmds, api } => {
-                    let n_data = cmds.iter().filter(|c| c.is_data_move()).count();
-                    let cost = self.api_control_cost(&api, n_data, cmds.len());
-                    let h = &mut self.hosts[hid.0 as usize];
-                    let start = h.now;
-                    h.now += cost;
-                    let end = h.now;
-                    if self.cfg.trace {
-                        self.trace.record(Some(engine), 0, Phase::Control, start, end);
-                    }
-                    let i = self.eidx(engine);
-                    self.engines[i].pending.extend(cmds);
-                }
+                // Handled by the move-out fast path above; kept for match
+                // exhaustiveness only.
+                HostOp::CreateCommands { .. } => unreachable!(),
                 HostOp::RingDoorbell { engine } => {
                     let h = &mut self.hosts[hid.0 as usize];
                     h.now += ns(self.cfg.latency.t_doorbell);
@@ -552,7 +597,7 @@ impl Sim {
         e.data_free_at = done;
         e.last_data_done = e.last_data_done.max(done);
         e.busy_ns += done - decode_start;
-        e.inflight.push(Inflight {
+        e.note_inflight(Inflight {
             cmd_seq: seq,
             done_at: done,
             cmd,
@@ -867,6 +912,59 @@ mod tests {
         );
         let out = sim.run();
         assert_eq!(out.deadlocked.len(), 1);
+    }
+
+    /// A reset simulator replays an episode bit-identically to a fresh one
+    /// (same makespan, same event count, same signal ids, same bytes).
+    #[test]
+    fn reset_replays_identically() {
+        let episode = |sim: &mut Sim| -> (SimTime, u64, u64) {
+            let sig = sim.alloc_signal(0);
+            assert_eq!(sig, SignalId(0), "signal ids must restart at 0");
+            sim.memory.poke(NodeId::Gpu(0), 0, &[3u8; 4096]);
+            sim.add_host(
+                vec![
+                    HostOp::CreateCommands {
+                        engine: eng(0, 0),
+                        cmds: vec![
+                            Command::Copy {
+                                src: Addr::new(NodeId::Gpu(0), 0),
+                                dst: Addr::new(NodeId::Gpu(1), 0),
+                                len: 4 * KB,
+                            },
+                            Command::Atomic {
+                                signal: sig,
+                                op: AtomicOp::Add(1),
+                            },
+                        ],
+                        api: ApiKind::Raw,
+                    },
+                    HostOp::RingDoorbell { engine: eng(0, 0) },
+                    HostOp::WaitSignal {
+                        signal: sig,
+                        at_least: 1,
+                    },
+                ],
+                0,
+            );
+            let out = sim.run();
+            assert!(out.deadlocked.is_empty());
+            (out.makespan, out.events_processed, sim.link_bytes)
+        };
+        let mut fresh = Sim::new(SimConfig::mi300x().functional().traced());
+        let want = episode(&mut fresh);
+        let want_spans = fresh.trace.spans.len();
+
+        let mut reused = Sim::new(SimConfig::mi300x().functional().traced());
+        for _ in 0..3 {
+            reused.reset();
+            assert_eq!(episode(&mut reused), want);
+            assert_eq!(reused.trace.spans.len(), want_spans);
+            assert_eq!(
+                reused.memory.peek(NodeId::Gpu(1), 0, 4096),
+                vec![3u8; 4096]
+            );
+        }
     }
 
     /// Same-time events process deterministically; repeated runs agree.

@@ -46,9 +46,20 @@ impl PartialOrd for Entry {
 }
 
 /// Deterministic min-heap of timestamped events.
+///
+/// A one-entry `front` slot sits ahead of the binary heap as a fast path
+/// for the DES's dominant access pattern: a dispatched handler pushes the
+/// very next event (same or near-same time) which the main loop immediately
+/// pops. In that pattern both the push and the pop are O(1) — one slot
+/// store plus one comparison — instead of two O(log n) heap operations.
+/// Ordering is unchanged: `pop` always compares the slot against the heap
+/// top under the full `(time, seq)` order, so replay stays deterministic.
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<Entry>>,
+    /// Fast-path slot; NOT guaranteed to hold the global minimum — `pop`
+    /// compares it against the heap top.
+    front: Option<Entry>,
     seq: u64,
 }
 
@@ -56,31 +67,62 @@ impl EventQueue {
     /// Schedule `ev` at absolute time `at`.
     pub fn push(&mut self, at: SimTime, ev: Event) {
         self.seq += 1;
-        self.heap.push(Reverse(Entry {
+        let e = Entry {
             at,
             seq: self.seq,
             ev,
-        }));
+        };
+        match &self.front {
+            None => self.front = Some(e),
+            Some(f) if (e.at, e.seq) < (f.at, f.seq) => {
+                let old = self.front.replace(e).unwrap();
+                self.heap.push(Reverse(old));
+            }
+            Some(_) => self.heap.push(Reverse(e)),
+        }
     }
 
     /// Pop the earliest event.
     pub fn pop(&mut self) -> Option<(SimTime, Event)> {
-        self.heap.pop().map(|Reverse(e)| (e.at, e.ev))
+        let front_first = match (&self.front, self.heap.peek()) {
+            (Some(_), None) => true,
+            // seq is unique, so the order is strict — no tie possible.
+            (Some(f), Some(Reverse(h))) => (f.at, f.seq) < (h.at, h.seq),
+            (None, _) => false,
+        };
+        if front_first {
+            self.front.take().map(|e| (e.at, e.ev))
+        } else {
+            self.heap.pop().map(|Reverse(e)| (e.at, e.ev))
+        }
     }
 
     /// Earliest scheduled time, if any.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.at)
+        let h = self.heap.peek().map(|Reverse(e)| e.at);
+        let f = self.front.as_ref().map(|e| e.at);
+        match (f, h) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (x, y) => x.or(y),
+        }
     }
 
     /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + usize::from(self.front.is_some())
     }
 
     /// True when no events remain.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.heap.is_empty() && self.front.is_none()
+    }
+
+    /// Drop all pending events and restart the deterministic sequence
+    /// numbering, keeping the heap's allocation ([`crate::sim::Sim::reset`]).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.front = None;
+        self.seq = 0;
     }
 }
 
@@ -119,5 +161,48 @@ mod tests {
         assert_eq!(q.len(), 1);
         assert!(!q.is_empty());
         assert_eq!(q.peek_time(), Some(5));
+    }
+
+    /// The push-then-pop-at-head pattern must pop in exactly the same
+    /// order a plain heap would, including same-time insertion ties.
+    #[test]
+    fn front_slot_preserves_order() {
+        let mut q = EventQueue::default();
+        q.push(10, wake(0));
+        q.push(5, wake(1)); // displaces the front slot
+        q.push(20, wake(2));
+        assert_eq!(q.peek_time(), Some(5));
+        assert_eq!(q.len(), 3);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![5, 10, 20]);
+
+        // Interleave pushes and pops; ties at t=7 keep insertion order.
+        q.push(7, wake(3));
+        q.push(7, wake(4));
+        match q.pop().unwrap().1 {
+            Event::SignalUpdate { signal, .. } => assert_eq!(signal, SignalId(3)),
+            _ => unreachable!(),
+        }
+        q.push(6, wake(5));
+        assert_eq!(q.pop().unwrap().0, 6);
+        assert_eq!(q.pop().unwrap().0, 7);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn clear_restarts_sequence() {
+        let mut q = EventQueue::default();
+        q.push(5, wake(0));
+        q.push(5, wake(1));
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        // Post-clear ties break exactly as in a fresh queue.
+        q.push(3, wake(2));
+        q.push(3, wake(3));
+        match q.pop().unwrap().1 {
+            Event::SignalUpdate { signal, .. } => assert_eq!(signal, SignalId(2)),
+            _ => unreachable!(),
+        }
     }
 }

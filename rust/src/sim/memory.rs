@@ -37,6 +37,16 @@ impl MemorySystem {
         self.functional
     }
 
+    /// Drop all node memories and traffic counters, keeping the
+    /// functional/timing-only mode ([`crate::sim::Sim::reset`]). Releases
+    /// the per-node byte buffers — a reused simulator must not pin every
+    /// episode's buffers at once.
+    pub fn reset(&mut self) {
+        self.mem.clear();
+        self.read_bytes.clear();
+        self.write_bytes.clear();
+    }
+
     /// Ensure `node`'s memory is at least `size` bytes (functional mode).
     pub fn ensure(&mut self, node: NodeId, size: u64) {
         if self.functional {
@@ -188,6 +198,17 @@ mod tests {
         assert_eq!(m.peek(G0, 0, 8), vec![2; 8]);
         assert_eq!(m.peek(G1, 0, 8), vec![1; 8]);
         assert_eq!(m.total_traffic(), 32);
+    }
+
+    #[test]
+    fn reset_clears_data_and_counters_keeps_mode() {
+        let mut m = MemorySystem::new(true);
+        m.poke(G0, 0, &[5; 8]);
+        m.dma_copy(G0, 0, G1, 0, 8);
+        m.reset();
+        assert!(m.is_functional());
+        assert_eq!(m.total_traffic(), 0);
+        assert_eq!(m.peek(G1, 0, 8), vec![0; 8]);
     }
 
     #[test]

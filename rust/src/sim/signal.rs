@@ -40,6 +40,13 @@ impl SignalTable {
         *v
     }
 
+    /// Drop every signal, keeping the table's allocation. A table reset
+    /// this way re-allocates the same deterministic id sequence (0, 1, …)
+    /// as a fresh one ([`crate::sim::Sim::reset`]).
+    pub fn reset(&mut self) {
+        self.values.clear();
+    }
+
     /// Number of allocated signals.
     pub fn len(&self) -> usize {
         self.values.len()
@@ -65,5 +72,17 @@ mod tests {
         assert_eq!(t.add(a, -1), 2);
         assert_eq!(t.set(b, 10), 10);
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn reset_restarts_id_sequence() {
+        let mut t = SignalTable::default();
+        let a = t.alloc(1);
+        let _ = t.alloc(2);
+        t.reset();
+        assert!(t.is_empty());
+        let a2 = t.alloc(7);
+        assert_eq!(a, a2);
+        assert_eq!(t.get(a2), 7);
     }
 }

@@ -6,6 +6,7 @@
 //! each GPU carries 16 sDMA engines on its IO dies.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A device that owns memory: the host CPU or one of the GPUs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -49,12 +50,17 @@ pub struct Link {
 }
 
 /// Static platform description.
+///
+/// The link tables are immutable after construction and shared behind
+/// [`Arc`], so cloning a `Topology` (which every DES episode used to pay
+/// for) is two reference-count bumps — the §Perf pass relies on this to
+/// make `SimConfig` effectively free to clone per episode.
 #[derive(Debug, Clone)]
 pub struct Topology {
     pub num_gpus: u8,
     pub engines_per_gpu: u8,
-    links: Vec<Link>,
-    index: HashMap<(NodeId, NodeId), LinkIdx>,
+    links: Arc<[Link]>,
+    index: Arc<HashMap<(NodeId, NodeId), LinkIdx>>,
 }
 
 impl Topology {
@@ -119,8 +125,8 @@ impl Topology {
         Topology {
             num_gpus,
             engines_per_gpu,
-            links,
-            index,
+            links: links.into(),
+            index: Arc::new(index),
         }
     }
 
@@ -211,6 +217,15 @@ mod tests {
             t.try_link_index(NodeId::Gpu(2), NodeId::Cpu),
             Some(t.link_index(NodeId::Gpu(2), NodeId::Cpu))
         );
+    }
+
+    #[test]
+    fn clone_shares_link_tables() {
+        let t = Topology::mi300x_platform();
+        let u = t.clone();
+        assert!(Arc::ptr_eq(&t.links, &u.links));
+        assert!(Arc::ptr_eq(&t.index, &u.index));
+        assert_eq!(t.num_links(), u.num_links());
     }
 
     #[test]

@@ -37,6 +37,13 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Drop all recorded spans and stamps, keeping the allocations
+    /// ([`crate::sim::Sim::reset`]).
+    pub fn clear(&mut self) {
+        self.spans.clear();
+        self.stamps.clear();
+    }
+
     /// Record a phase span.
     pub fn record(
         &mut self,

@@ -1,7 +1,9 @@
 //! Wall-clock micro-bench helper (criterion is not vendored offline).
 //!
 //! Every `rust/benches/*` binary uses [`bench`] for hot-path measurements:
-//! warmup, N timed iterations, mean/median/p99 in nanoseconds.
+//! warmup, N timed iterations, mean/median/p95/p99 in nanoseconds.
+//! [`bench_json`] serializes before/after comparison rows into the
+//! machine-readable `BENCH_*.json` trajectory files.
 
 use std::time::Instant;
 
@@ -14,6 +16,7 @@ pub struct BenchResult {
     pub iters: usize,
     pub mean_ns: f64,
     pub median_ns: f64,
+    pub p95_ns: f64,
     pub p99_ns: f64,
     pub min_ns: f64,
 }
@@ -22,14 +25,108 @@ impl BenchResult {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{:<40} {:>12} median  {:>12} mean  {:>12} p99  ({} iters)",
+            "{:<40} {:>12} median  {:>12} mean  {:>12} p95  {:>12} p99  ({} iters)",
             self.name,
             crate::util::bytes::fmt_ns(self.median_ns),
             crate::util::bytes::fmt_ns(self.mean_ns),
+            crate::util::bytes::fmt_ns(self.p95_ns),
             crate::util::bytes::fmt_ns(self.p99_ns),
             self.iters
         )
     }
+
+    /// JSON object for the machine-readable `BENCH_*.json` trajectory
+    /// files (`serde` is not vendored; the schema is flat numbers only).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\": {}, \"iters\": {}, \"mean_ns\": {:.1}, \"median_ns\": {:.1}, \
+             \"p95_ns\": {:.1}, \"p99_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            json_str(&self.name),
+            self.iters,
+            self.mean_ns,
+            self.median_ns,
+            self.p95_ns,
+            self.p99_ns,
+            self.min_ns
+        )
+    }
+}
+
+/// One before/after row of a `BENCH_*.json` trajectory file: the same hot
+/// path measured through the legacy (pre-optimization) code path and the
+/// optimized one, in the same process on the same machine.
+#[derive(Debug, Clone)]
+pub struct BenchComparison {
+    /// Stable row identifier (greppable in CI).
+    pub path: String,
+    /// Legacy code-path measurement; `None` for rows that only exist in
+    /// the optimized form (reported without a speedup).
+    pub before: Option<BenchResult>,
+    pub after: BenchResult,
+}
+
+impl BenchComparison {
+    /// Median-over-median speedup; `None` without a baseline.
+    pub fn speedup(&self) -> Option<f64> {
+        self.before
+            .as_ref()
+            .map(|b| b.median_ns / self.after.median_ns)
+    }
+
+    /// JSON object for this row.
+    pub fn json(&self) -> String {
+        let mut s = format!("{{\"path\": {}", json_str(&self.path));
+        if let Some(b) = &self.before {
+            s.push_str(&format!(", \"before\": {}", b.json()));
+        }
+        s.push_str(&format!(", \"after\": {}", self.after.json()));
+        // A zero-duration median would make the ratio non-finite and the
+        // document unparseable; drop the field instead.
+        if let Some(sp) = self.speedup().filter(|sp| sp.is_finite()) {
+            s.push_str(&format!(", \"speedup_median\": {sp:.2}"));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Assemble a full `BENCH_*.json` document: bench name, free-form string
+/// metadata, and the comparison rows. Parseable by [`crate::util::json`].
+pub fn bench_json(bench: &str, meta: &[(&str, String)], rows: &[BenchComparison]) -> String {
+    let mut s = format!("{{\n  \"bench\": {}", json_str(bench));
+    for (k, v) in meta {
+        s.push_str(&format!(",\n  {}: {}", json_str(k), json_str(v)));
+    }
+    s.push_str(",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&r.json());
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Time `f` for `iters` iterations after `warmup` unrecorded runs.
@@ -49,6 +146,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         iters,
         mean_ns: stats::mean(&samples),
         median_ns: stats::median(&samples),
+        p95_ns: stats::percentile(&samples, 95.0),
         p99_ns: stats::percentile(&samples, 99.0),
         min_ns: stats::min(&samples),
     }
@@ -72,6 +170,51 @@ mod tests {
         assert_eq!(r.iters, 16);
         assert!(r.mean_ns >= 0.0);
         assert!(r.min_ns <= r.median_ns);
-        assert!(r.median_ns <= r.p99_ns + 1e-9);
+        assert!(r.median_ns <= r.p95_ns + 1e-9);
+        assert!(r.p95_ns <= r.p99_ns + 1e-9);
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_parser() {
+        let a = bench("after", 1, 4, || {
+            black_box((0..10_000).sum::<u64>());
+        });
+        let b = bench("before", 1, 4, || {
+            black_box((0..100_000).sum::<u64>());
+        });
+        let doc = bench_json(
+            "perf_hotpath",
+            &[("pr", "PR3".to_string()), ("mode", "smoke".to_string())],
+            &[
+                BenchComparison {
+                    path: "collective_episode".to_string(),
+                    before: Some(b),
+                    after: a.clone(),
+                },
+                BenchComparison {
+                    path: "baseline_free_row".to_string(),
+                    before: None,
+                    after: a,
+                },
+            ],
+        );
+        let j = crate::util::json::Json::parse(&doc).expect("emitted JSON must parse");
+        assert_eq!(j.get("bench").unwrap().str(), Some("perf_hotpath"));
+        assert_eq!(j.get("pr").unwrap().str(), Some("PR3"));
+        let rows = j.get("rows").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("path").unwrap().str(),
+            Some("collective_episode")
+        );
+        assert!(rows[0].get("speedup_median").unwrap().num().is_some());
+        assert!(rows[0].get("before").unwrap().get("median_ns").is_some());
+        assert!(rows[1].get("before").is_none());
+        assert!(rows[1].get("after").unwrap().get("p95_ns").is_some());
+    }
+
+    #[test]
+    fn json_str_escapes() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
     }
 }

@@ -1,0 +1,121 @@
+//! Determinism regression tests for the §Perf pass: episode replay on a
+//! reset-reused simulator with cache-served plans must be bit-identical to
+//! a fresh simulator with freshly built plans — same simulated latency,
+//! same trace event count, same functional bytes. Guards `Sim::reset`, the
+//! cross-episode plan cache and the hierarchical rounds cache.
+
+use dma_latte::cluster::{run_hier, ClusterChoice, ClusterTopology, HierRunOptions, InterSchedule};
+use dma_latte::collectives::exec::run_collective_uncached;
+use dma_latte::collectives::{CollectiveKind, CollectiveRunner, RunOptions, Strategy, Variant};
+use dma_latte::sim::topology::NodeId;
+use dma_latte::sim::{Sim, SimConfig};
+use dma_latte::util::bytes::KB;
+
+/// Wrapping checksum of every GPU's full buffer region (input + output +
+/// staging) — any byte the episode placed differently changes it.
+fn checksum(sim: &Sim, extent: u64) -> u64 {
+    (0..sim.cfg.topology.num_gpus)
+        .map(|g| {
+            sim.memory
+                .peek(NodeId::Gpu(g), 0, extent)
+                .iter()
+                .map(|&b| b as u64)
+                .sum::<u64>()
+        })
+        .fold(0u64, |a, x| a.wrapping_add(x))
+}
+
+#[test]
+fn reused_sim_replays_every_variant_bit_identically() {
+    let opts = RunOptions {
+        sim: SimConfig::mi300x().traced(),
+        verify: true,
+    };
+    let size = 64 * KB;
+    // Generous extent: covers AA output + staging regions too.
+    let extent = 4 * size;
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        for v in Variant::all_for(kind) {
+            // Twice through ONE reused simulator (second run resets)…
+            let mut reused = CollectiveRunner::new(&opts);
+            let first = reused.run(kind, v, size);
+            let spans_first = reused.sim().trace.spans.len();
+            let sum_first = checksum(reused.sim(), extent);
+            let second = reused.run(kind, v, size);
+            let spans_second = reused.sim().trace.spans.len();
+            let sum_second = checksum(reused.sim(), extent);
+            // …and once through a fresh simulator with a fresh plan build.
+            let mut fresh = CollectiveRunner::new(&opts);
+            let fresh_res = fresh.run(kind, v, size);
+            let legacy = run_collective_uncached(kind, v, size, &opts);
+
+            let label = format!("{} {}", kind.name(), v.name());
+            assert_eq!(first.verified, Some(true), "{label}");
+            assert_eq!(first.latency_ns, second.latency_ns, "{label}: reset replay");
+            assert_eq!(spans_first, spans_second, "{label}: trace event count");
+            assert_eq!(sum_first, sum_second, "{label}: verify checksum");
+            assert_eq!(first.latency_ns, fresh_res.latency_ns, "{label}: fresh sim");
+            assert_eq!(
+                spans_first,
+                fresh.sim().trace.spans.len(),
+                "{label}: fresh trace count"
+            );
+            assert_eq!(sum_first, checksum(fresh.sim(), extent), "{label}: fresh sum");
+            assert_eq!(first.latency_ns, legacy.latency_ns, "{label}: legacy path");
+            assert_eq!(legacy.verified, Some(true), "{label}");
+            assert_eq!(first.engines_used, legacy.engines_used, "{label}");
+            assert_eq!(
+                first.activity.hbm_bytes, legacy.activity.hbm_bytes,
+                "{label}: traffic accounting"
+            );
+        }
+    }
+}
+
+/// Interleaving different episodes between repeats must not leak state
+/// through the reused simulator or the plan cache.
+#[test]
+fn interleaved_episodes_do_not_contaminate_replay() {
+    let opts = RunOptions {
+        sim: SimConfig::mi300x(),
+        verify: false,
+    };
+    let mut runner = CollectiveRunner::new(&opts);
+    let probe = |r: &mut CollectiveRunner| {
+        r.run(
+            CollectiveKind::AllGather,
+            Variant::new(Strategy::Pcpy, true),
+            256 * KB,
+        )
+        .latency_ns
+    };
+    let want = probe(&mut runner);
+    for v in Variant::all_for(CollectiveKind::AllToAll) {
+        runner.run(CollectiveKind::AllToAll, v, 32 * KB);
+        assert_eq!(probe(&mut runner), want, "after {}", v.name());
+    }
+}
+
+/// The hierarchical executor's cached node rounds replay identically:
+/// first call builds, later calls (and other node counts in between) hit
+/// the cache and must reproduce the same modeled latency split.
+#[test]
+fn hier_cached_rounds_replay_identically() {
+    let choice = ClusterChoice {
+        intra: Variant::new(Strategy::Pcpy, true),
+        inter: InterSchedule::Pipelined,
+    };
+    let size = 128 * KB;
+    let opts = HierRunOptions::default();
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllToAll] {
+        let c2 = ClusterTopology::mi300x(2);
+        let first = run_hier(kind, choice, &c2, size, &opts);
+        // Interleave a different cluster shape, then replay.
+        let c4 = ClusterTopology::mi300x(4);
+        run_hier(kind, choice, &c4, size, &opts);
+        let second = run_hier(kind, choice, &c2, size, &opts);
+        assert_eq!(first.latency_ns, second.latency_ns, "{}", kind.name());
+        assert_eq!(first.inter_ns, second.inter_ns, "{}", kind.name());
+        assert_eq!(first.data_cmds, second.data_cmds, "{}", kind.name());
+    }
+}
