@@ -29,9 +29,11 @@ fn main() {
         println!();
     }
 
-    // Decomposition sanity at one bandwidth-bound size: AR must cost
-    // exactly its RS phase plus its AG phase, and pipelining the RS
-    // partial exchange must not lose to the sequential barrier.
+    // Decomposition sanity at one bandwidth-bound size: the selector's AR
+    // is the chunk-granular fused schedule (PR 4), so it must cost no
+    // more than its RS phase plus its AG phase — and at least as much as
+    // either phase alone. Pipelining the RS partial exchange must not
+    // lose to the sequential barrier.
     let size = if smoke { 8 * MB } else { 64 * MB };
     let cluster = ClusterTopology::mi300x(4);
     let opts = HierRunOptions::default();
@@ -39,11 +41,13 @@ fn main() {
     let rs = run_hier_rs(rs_c, &cluster, size, &opts);
     let ag = run_hier(CollectiveKind::AllGather, ag_c, &cluster, size, &opts);
     let ar = run_hier_ar(rs_c, ag_c, &cluster, size, &opts);
-    assert_eq!(ar.latency_ns, rs.latency_ns + ag.latency_ns);
+    assert!(ar.latency_ns <= rs.latency_ns + ag.latency_ns);
+    assert!(ar.latency_ns >= rs.latency_ns.max(ag.latency_ns));
     println!(
-        "allreduce {} on 4 nodes: {:.1} us = rs {:.1} us ({}) + ag {:.1} us ({})",
+        "allreduce {} on 4 nodes: {:.1} us (fused, {:.1} us under rs {:.1} us ({}) + ag {:.1} us ({}))",
         fmt_size(size),
         ar.latency_ns as f64 / 1e3,
+        (rs.latency_ns + ag.latency_ns - ar.latency_ns) as f64 / 1e3,
         rs.latency_ns as f64 / 1e3,
         rs_c.name(),
         ag.latency_ns as f64 / 1e3,

@@ -23,9 +23,15 @@
 //!   [`Sequential`](super::InterSchedule::Sequential) schedule barriers
 //!   the NIC leg behind the whole intra phase.
 //! - **All-reduce** = reduce-scatter + the already-shipped hierarchical
-//!   all-gather of the reduced chunks ([`super::hier::run_hier`]) as a
-//!   strictly sequential second phase (the gather cannot start before its
-//!   input chunk exists).
+//!   all-gather of the reduced chunks ([`super::hier::run_hier`]). Under a
+//!   [`Sequential`](super::InterSchedule::Sequential) or
+//!   [`Pipelined`](super::InterSchedule::Pipelined) phase choice the two
+//!   phases compose behind a strict barrier; the
+//!   [`Overlapped`](super::InterSchedule::Overlapped) schedule instead
+//!   fuses them at chunk granularity ([`super::overlap`]) — the gather of
+//!   chunk `k` launches the moment chunk `k`'s final CU reduction lands
+//!   (a chunk's gather still cannot start before that chunk exists; the
+//!   *other* chunks no longer wait for it).
 //!
 //! Chunk bookkeeping is verified `collectives::verify`-style: inputs carry
 //! per-(rank, chunk) patterns, the transport rounds move real bytes on the
@@ -52,7 +58,7 @@ use super::hier::{
     prelaunch_t0, queue_node_scripts, run_hier, HierResult, HierRunOptions, MAX_NODES,
     ROUND_MARKS,
 };
-use super::selector::ClusterChoice;
+use super::selector::{ClusterChoice, InterSchedule};
 use super::topology::ClusterTopology;
 
 /// Base of the outbound partial region: the node-local partial sum destined
@@ -228,6 +234,20 @@ pub fn run_hier_rs(
     run_hier_rs_full(choice, cluster, size, opts).0
 }
 
+/// Per-chunk readiness of a hierarchical reduce-scatter on the absolute
+/// episode timeline — the dependency information the chunk-granular
+/// overlap scheduler ([`super::overlap`]) threads into the gather leg.
+#[derive(Debug, Clone)]
+pub struct RsChunkTimes {
+    /// Trigger instant of the reduce-scatter phase (prelaunch setup epoch
+    /// excluded from latency accounting, exactly like [`HierResult`]).
+    pub t0: SimTime,
+    /// `ready[k]`: absolute instant at which destination node `k`'s
+    /// reduced chunk lands (final CU fold complete on every GPU of node
+    /// `k`). `max(ready) − t0 == latency_ns` of the reduce-scatter.
+    pub ready: Vec<SimTime>,
+}
+
 /// Hierarchical reduce-scatter: intra-node all-to-all transport rounds on
 /// per-node DES instances, CU partial reduction, NIC partial exchange, CU
 /// final reduction. Returns the per-node simulators so callers can inspect
@@ -239,6 +259,19 @@ pub fn run_hier_rs_full(
     size: u64,
     opts: &HierRunOptions,
 ) -> (HierResult, Vec<Sim>) {
+    let (res, sims, _) = run_hier_rs_timed(choice, cluster, size, opts);
+    (res, sims)
+}
+
+/// [`run_hier_rs_full`], additionally returning the per-destination-node
+/// chunk ready instants ([`RsChunkTimes`]) that drive the overlapped
+/// all-reduce schedule.
+pub fn run_hier_rs_timed(
+    choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> (HierResult, Vec<Sim>, RsChunkTimes) {
     let n = cluster.num_nodes();
     let gpn = cluster.gpus_per_node();
     assert!(n <= MAX_NODES, "at most {MAX_NODES} nodes supported");
@@ -269,21 +302,13 @@ pub fn run_hier_rs_full(
                 topology: cluster.node(k).clone(),
                 latency: opts.latency.clone(),
                 functional: opts.verify,
-                trace: false,
+                trace: opts.trace,
             })
         })
         .collect();
     let rounds: Vec<Arc<Vec<CollectivePlan>>> = (0..sim_nodes)
         .map(|k| {
-            cached_node_rounds(
-                CollectiveKind::AllToAll,
-                cluster.node(k),
-                n,
-                k,
-                size,
-                c,
-                choice.intra,
-            )
+            cached_node_rounds(CollectiveKind::AllToAll, cluster.node(k), n, k, size, c, choice)
         })
         .collect();
 
@@ -338,27 +363,29 @@ pub fn run_hier_rs_full(
         }
     }
 
-    let (latency_ns, inter_ns) = if n == 1 {
+    let (latency_ns, inter_ns, chunk_ready) = if n == 1 {
         // Degenerate single node: one transport round + one CU fold — the
         // flat RS split, no NIC plan is ever built.
-        (partial_ready[0] - t0, 0)
+        (partial_ready[0] - t0, 0, vec![partial_ready[0]])
     } else {
         // Port-serialized partial sends (c bytes each), scheduled at
-        // partial readiness (pipelined) or after the whole intra + reduce
-        // phase (sequential); same vectored-message accounting as the
-        // hierarchical AA inter leg.
+        // partial readiness (pipelined/overlapped) or after the whole
+        // intra + reduce phase (sequential); same vectored-message
+        // accounting as the hierarchical AA inter leg.
         let ready: Vec<f64> = partial_ready.iter().map(|&pr| pr as f64).collect();
         let last_arrival = nic_exchange_arrivals(&nic, choice.inter, &ready, c, observe);
         // CU pass 2 on each destination node: wait for the last incoming
         // partial AND the own-node partial, then fold n chunks.
         let reduce_inter = cu_reduce_ns(c, n as u8);
-        let mut done = 0f64;
-        for (j, arr) in last_arrival.iter().enumerate() {
-            done = done.max(arr.max(partial_ready[j] as f64) + reduce_inter);
-        }
-        let latency = ns(done) - t0;
+        let chunk_ready: Vec<SimTime> = last_arrival
+            .iter()
+            .enumerate()
+            .map(|(j, arr)| ns(arr.max(partial_ready[j] as f64) + reduce_inter))
+            .collect();
+        let done = *chunk_ready.iter().max().unwrap();
+        let latency = done - t0;
         let intra_span = *partial_ready.iter().max().unwrap() - t0;
-        (latency, latency.saturating_sub(intra_span))
+        (latency, latency.saturating_sub(intra_span), chunk_ready)
     };
 
     if opts.verify {
@@ -381,6 +408,10 @@ pub fn run_hier_rs_full(
             verified,
         },
         sims,
+        RsChunkTimes {
+            t0,
+            ready: chunk_ready,
+        },
     )
 }
 
@@ -396,11 +427,14 @@ pub fn run_hier_ar(
 }
 
 /// Hierarchical all-reduce = hierarchical reduce-scatter (`rs_choice`) +
-/// hierarchical all-gather of the reduced chunks (`ag_choice`), phases
-/// strictly sequential. Returns the gather-phase simulators whose `[0,
-/// size)` buffers hold the fully reduced, fully replicated result (the
-/// reduce-scatter simulators when `verify` is off — timing-only runs don't
-/// materialize the gather memories).
+/// hierarchical all-gather of the reduced chunks (`ag_choice`). With
+/// either phase choice carrying [`InterSchedule::Overlapped`] the phases
+/// fuse at chunk granularity ([`super::overlap`]: the gather of chunk `k`
+/// launches at chunk `k`'s final reduction); otherwise they compose as a
+/// strictly sequential barrier. Returns the gather-phase simulators whose
+/// `[0, size)` buffers hold the fully reduced, fully replicated result
+/// (the reduce-scatter simulators when `verify` is off — timing-only runs
+/// don't materialize the gather memories).
 pub fn run_hier_ar_full(
     rs_choice: ClusterChoice,
     ag_choice: ClusterChoice,
@@ -408,6 +442,17 @@ pub fn run_hier_ar_full(
     size: u64,
     opts: &HierRunOptions,
 ) -> (HierResult, Vec<Sim>) {
+    if rs_choice.inter == InterSchedule::Overlapped
+        || ag_choice.inter == InterSchedule::Overlapped
+    {
+        return super::overlap::run_hier_ar_overlapped_full(
+            rs_choice,
+            ag_choice,
+            cluster,
+            size,
+            opts,
+        );
+    }
     assert!(
         ag_choice.intra.strategy.applicable(CollectiveKind::AllGather),
         "{} not applicable to the AR gather phase",
@@ -424,60 +469,13 @@ pub fn run_hier_ar_full(
         &HierRunOptions {
             latency: opts.latency.clone(),
             verify: false,
+            trace: false,
         },
     );
 
-    let n = cluster.num_nodes();
-    let gpn = cluster.gpus_per_node();
-    let c = size / cluster.world_size() as u64;
     let (verified, sims) = if opts.verify {
-        // Functional gather over the real reduced bytes: seed fresh
-        // per-node memories with each rank's reduced chunk at its AG slot,
-        // stage the inter leg, then run the same rebased AG rounds the
-        // timing path uses (schedule choice does not affect placement, so
-        // the functional pass runs untriggered).
-        let mut sims: Vec<Sim> = (0..n)
-            .map(|k| {
-                Sim::new(SimConfig {
-                    topology: cluster.node(k).clone(),
-                    latency: opts.latency.clone(),
-                    functional: true,
-                    trace: false,
-                })
-            })
-            .collect();
-        for (k, sim) in sims.iter_mut().enumerate() {
-            for g in 0..gpn {
-                let r = cluster.global_rank(k, g) as u64;
-                let red = rs_sims[k]
-                    .memory
-                    .peek(NodeId::Gpu(g), rs_result_base(size, c), c);
-                sim.memory.ensure(NodeId::Gpu(g), size);
-                sim.memory.poke(NodeId::Gpu(g), r * c, &red);
-            }
-        }
-        exchange_ag(&mut sims, cluster, c);
-        for (k, sim) in sims.iter_mut().enumerate() {
-            let rounds = cached_node_rounds(
-                CollectiveKind::AllGather,
-                cluster.node(k),
-                n,
-                k,
-                size,
-                c,
-                ag_choice.intra,
-            );
-            let triggers = vec![0; n];
-            queue_node_scripts(sim, &rounds, false, 0, &triggers);
-            let out = sim.run();
-            assert!(
-                out.deadlocked.is_empty(),
-                "hier allreduce gather deadlocked on node {k}: {:?}",
-                out.deadlocked
-            );
-        }
-        let ok = rs_res.verified == Some(true) && check_ar(&sims, cluster, size, c);
-        (Some(ok), sims)
+        let (ok, sims) = gather_functional_pass(&rs_sims, ag_choice, cluster, size, opts);
+        (Some(rs_res.verified == Some(true) && ok), sims)
     } else {
         (None, rs_sims)
     };
@@ -495,6 +493,67 @@ pub fn run_hier_ar_full(
         },
         sims,
     )
+}
+
+/// Functional gather over the real reduced bytes, shared by the
+/// sequential and overlapped all-reduce compositions: seed fresh per-node
+/// memories with each rank's reduced chunk at its AG slot, stage the
+/// inter leg, then run the same rebased AG rounds the timing path uses
+/// (schedule choice does not affect placement, so the functional pass
+/// runs untriggered). Returns whether the final placement checks out and
+/// the gather simulators.
+pub(crate) fn gather_functional_pass(
+    rs_sims: &[Sim],
+    ag_choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> (bool, Vec<Sim>) {
+    let n = cluster.num_nodes();
+    let gpn = cluster.gpus_per_node();
+    let c = size / cluster.world_size() as u64;
+    let mut sims: Vec<Sim> = (0..n)
+        .map(|k| {
+            Sim::new(SimConfig {
+                topology: cluster.node(k).clone(),
+                latency: opts.latency.clone(),
+                functional: true,
+                trace: false,
+            })
+        })
+        .collect();
+    for (k, sim) in sims.iter_mut().enumerate() {
+        for g in 0..gpn {
+            let r = cluster.global_rank(k, g) as u64;
+            let red = rs_sims[k]
+                .memory
+                .peek(NodeId::Gpu(g), rs_result_base(size, c), c);
+            sim.memory.ensure(NodeId::Gpu(g), size);
+            sim.memory.poke(NodeId::Gpu(g), r * c, &red);
+        }
+    }
+    exchange_ag(&mut sims, cluster, c);
+    for (k, sim) in sims.iter_mut().enumerate() {
+        let rounds = cached_node_rounds(
+            CollectiveKind::AllGather,
+            cluster.node(k),
+            n,
+            k,
+            size,
+            c,
+            ag_choice,
+        );
+        let triggers = vec![0; n];
+        queue_node_scripts(sim, &rounds, false, 0, &triggers);
+        let out = sim.run();
+        assert!(
+            out.deadlocked.is_empty(),
+            "hier allreduce gather deadlocked on node {k}: {:?}",
+            out.deadlocked
+        );
+    }
+    let ok = check_ar(&sims, cluster, size, c);
+    (ok, sims)
 }
 
 #[cfg(test)]

@@ -72,6 +72,9 @@ pub struct HierRunOptions {
     pub latency: LatencyModel,
     /// Initialize buffers, move bytes for real and verify the placement.
     pub verify: bool,
+    /// Record trace spans on the per-node DES instances (determinism tests
+    /// compare span counts across cached/fresh episodes).
+    pub trace: bool,
 }
 
 /// Outcome of one hierarchical collective.
@@ -94,11 +97,19 @@ pub struct HierResult {
 
 /// Cache key for a node's rebased intra rounds: the flat plan-cache key
 /// ([`crate::collectives::cache::PlanKey`] analogue) extended with the
-/// node coordinates that drive the rebase.
+/// node coordinates that drive the rebase AND the inter schedule the
+/// rounds will run under. Today every schedule executes structurally
+/// identical rounds (triggers are applied at queue time, never baked into
+/// the plan), but keying on the schedule guarantees an
+/// [`InterSchedule::Overlapped`] episode can never be served a build made
+/// for a `Sequential` one if a future builder specializes — the cost is a
+/// handful of duplicate entries, the poison test below proves the
+/// isolation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct RoundsKey {
     kind: CollectiveKind,
     variant: Variant,
+    schedule: InterSchedule,
     size: u64,
     num_nodes: u8,
     node_idx: u8,
@@ -119,6 +130,8 @@ static ROUNDS: OnceLock<Mutex<HashMap<RoundsKey, Arc<Vec<CollectivePlan>>>>> = O
 /// `size / (num_nodes * gpus_per_node)` (the hierarchical layout's only
 /// chunking), which the assert below enforces so a future caller with a
 /// different chunking cannot silently receive mismatched cached rounds.
+/// The full [`ClusterChoice`] (intra variant AND inter schedule) is part
+/// of the key — see `RoundsKey`.
 pub fn cached_node_rounds(
     kind: CollectiveKind,
     node_topo: &Topology,
@@ -126,7 +139,7 @@ pub fn cached_node_rounds(
     node_idx: usize,
     size: u64,
     chunk: u64,
-    variant: Variant,
+    choice: ClusterChoice,
 ) -> Arc<Vec<CollectivePlan>> {
     assert!(num_nodes <= MAX_NODES && node_idx < num_nodes.max(1));
     assert_eq!(
@@ -136,7 +149,8 @@ pub fn cached_node_rounds(
     );
     let key = RoundsKey {
         kind,
-        variant,
+        variant: choice.intra,
+        schedule: choice.inter,
         size,
         num_nodes: num_nodes as u8,
         node_idx: node_idx as u8,
@@ -144,7 +158,7 @@ pub fn cached_node_rounds(
     };
     let table = ROUNDS.get_or_init(|| Mutex::new(HashMap::new()));
     let (rounds, _hit) = get_or_build(table, ROUNDS_CACHE_CAP, key, || {
-        build_node_rounds(kind, node_topo, num_nodes, node_idx, size, chunk, variant)
+        build_node_rounds(kind, node_topo, num_nodes, node_idx, size, chunk, choice.intra)
     });
     rounds
 }
@@ -323,7 +337,9 @@ pub(crate) fn nic_exchange_arrivals(
                 continue;
             }
             let eligible = match inter {
-                InterSchedule::Pipelined => *r,
+                // Overlapped degenerates to per-block readiness inside a
+                // single leg (the fusion lives across phases).
+                InterSchedule::Pipelined | InterSchedule::Overlapped => *r,
                 InterSchedule::Sequential => all_ready,
             };
             let start = eligible.max(port);
@@ -487,12 +503,12 @@ pub fn run_hier_full(
                 topology: cluster.node(k).clone(),
                 latency: opts.latency.clone(),
                 functional: opts.verify,
-                trace: false,
+                trace: opts.trace,
             })
         })
         .collect();
     let rounds: Vec<Arc<Vec<CollectivePlan>>> = (0..sim_nodes)
-        .map(|k| cached_node_rounds(kind, cluster.node(k), n, k, size, c, choice.intra))
+        .map(|k| cached_node_rounds(kind, cluster.node(k), n, k, size, c, choice))
         .collect();
 
     // Prelaunch setup epoch: stream creation + doorbells happen before the
@@ -528,7 +544,7 @@ pub fn run_hier_full(
                         } else {
                             match choice.inter {
                                 InterSchedule::Sequential => t0 + inter,
-                                InterSchedule::Pipelined => {
+                                InterSchedule::Pipelined | InterSchedule::Overlapped => {
                                     if k2 == k {
                                         t0
                                     } else {
@@ -904,6 +920,73 @@ mod tests {
                 prev = r.latency_ns;
             }
         }
+    }
+
+    /// Satellite (PR 4): the rounds cache key includes the inter schedule,
+    /// so a build cached under one schedule can never be served to
+    /// another. Proven by poisoning: a bogus (empty) entry planted under
+    /// the `Sequential` key must be invisible to an `Overlapped` lookup of
+    /// the otherwise-identical coordinates — and must be exactly what the
+    /// same-schedule lookup returns (showing the probe actually reaches
+    /// the poisoned slot, not a different table).
+    #[test]
+    fn rounds_cache_isolates_schedules() {
+        // Unique world shape (3 GPUs × 5 engines) so the poison cannot
+        // collide with any other test sharing the process-wide cache.
+        let node = Topology::custom(3, 5, 64.0, 64.0);
+        let (n, chunk) = (2usize, 64u64);
+        let size = chunk * n as u64 * node.num_gpus as u64;
+        let variant = Variant::new(Strategy::Pcpy, false);
+        let key = |schedule: InterSchedule| RoundsKey {
+            kind: CollectiveKind::AllToAll,
+            variant,
+            schedule,
+            size,
+            num_nodes: n as u8,
+            node_idx: 0,
+            shape: WorldShape::of(&node),
+        };
+        let table = ROUNDS.get_or_init(|| Mutex::new(HashMap::new()));
+        table
+            .lock()
+            .unwrap()
+            .insert(key(InterSchedule::Sequential), Arc::new(Vec::new()));
+
+        let choice = |inter| ClusterChoice {
+            intra: variant,
+            inter,
+        };
+        let ovl = cached_node_rounds(
+            CollectiveKind::AllToAll,
+            &node,
+            n,
+            0,
+            size,
+            chunk,
+            choice(InterSchedule::Overlapped),
+        );
+        assert!(
+            !ovl.is_empty(),
+            "Overlapped lookup was served the poisoned Sequential build"
+        );
+        let seq = cached_node_rounds(
+            CollectiveKind::AllToAll,
+            &node,
+            n,
+            0,
+            size,
+            chunk,
+            choice(InterSchedule::Sequential),
+        );
+        assert!(
+            seq.is_empty(),
+            "same-schedule lookup must hit the poisoned slot (probe sanity)"
+        );
+
+        // Un-poison so no later caller of this exact shape can trip.
+        let mut t = table.lock().unwrap();
+        t.remove(&key(InterSchedule::Sequential));
+        t.remove(&key(InterSchedule::Overlapped));
     }
 
     #[test]

@@ -19,14 +19,32 @@
 //! - [`allreduce`] — hierarchical **reduce-scatter** and **all-reduce**:
 //!   all-to-all-pattern DMA transport rounds + CU reductions
 //!   ([`crate::collectives::reduce_scatter`]'s split: DMA/NIC move, CUs
-//!   reduce), a partial-chunk reduce-exchange leg on the NIC (sequential or
-//!   pipelined), and the hierarchical all-gather as all-reduce's second
-//!   phase; values verified against the flat reference reduction.
+//!   reduce), a partial-chunk reduce-exchange leg on the NIC, and the
+//!   hierarchical all-gather as all-reduce's second phase; values verified
+//!   against the flat reference reduction.
+//! - [`overlap`] — chunk-granular overlap scheduler: the all-reduce
+//!   phases fused at chunk granularity (the gather of chunk `k` launches
+//!   at chunk `k`'s final CU reduction, ready-times threaded into the
+//!   gather triggers), replacing the strict RS → AG barrier.
 //! - [`selector`] — cluster-aware policy: (intra variant, inter schedule)
 //!   per [`ClusterKind`] (AG / AA / RS / AR), size and node count,
 //!   extending `collectives::select_variant`; the serving path routes
 //!   through it via `coordinator::comm` whenever
 //!   `ServeConfig::num_nodes > 1`.
+//!
+//! # Schedule taxonomy ([`InterSchedule`])
+//!
+//! - **Sequential** — strict phase barrier; one trigger write and one
+//!   completion observation per rank. Cheapest control, zero overlap.
+//! - **Pipelined** — per-block overlap *inside* one leg: each node block
+//!   triggers its intra round (AG) or NIC send (AA/RS) at its own
+//!   readiness; one trigger + CQ poll per block.
+//! - **Overlapped** — chunk-granular fusion *across* phases ([`overlap`]):
+//!   all-reduce's gather of chunk `k` launches at chunk `k`'s final
+//!   reduction. Subsumes Pipelined inside each leg (identical per-block
+//!   eligibility) and coalesces coincident triggers, so it is never
+//!   slower than either barriered composition; the selector picks it for
+//!   every multi-node all-reduce.
 //!
 //! # NIC link model assumptions ([`topology::NicModel`])
 //!
@@ -48,10 +66,14 @@
 
 pub mod allreduce;
 pub mod hier;
+pub mod overlap;
 pub mod selector;
 pub mod topology;
 
-pub use allreduce::{run_hier_ar, run_hier_ar_full, run_hier_rs, run_hier_rs_full};
+pub use allreduce::{
+    run_hier_ar, run_hier_ar_full, run_hier_rs, run_hier_rs_full, run_hier_rs_timed, RsChunkTimes,
+};
 pub use hier::{run_hier, run_hier_full, HierResult, HierRunOptions};
+pub use overlap::{overlap_report, run_hier_ar_overlapped, OverlapReport};
 pub use selector::{select_allreduce, select_cluster, ClusterChoice, ClusterKind, InterSchedule};
 pub use topology::{ClusterTopology, GlobalRank, NicModel};

@@ -1,0 +1,345 @@
+//! Chunk-granular overlap scheduler: fused hierarchical all-reduce.
+//!
+//! The barriered composition in [`super::allreduce`] charges the full
+//! all-gather behind the full reduce-scatter — yet the gather of chunk `k`
+//! only depends on chunk `k`'s final CU reduction, not on every other
+//! chunk's. The paper's thesis (DMA engines move bytes while GPU cores do
+//! something useful) plus the finer-grain DMA chunking literature say
+//! exactly where the headroom is, so this module replaces the phase
+//! barrier with a **chunk-level dependency schedule**:
+//!
+//! - The reduce-scatter leg runs with per-partial streaming
+//!   ([`run_hier_rs_timed`] under per-block eligibility) and reports each
+//!   destination node's reduced-chunk ready instant
+//!   ([`RsChunkTimes::ready`]).
+//! - The gather leg reuses the exact rebased AG rounds of the barriered
+//!   path, but threads those ready instants into the trigger times: node
+//!   `k2`'s NIC send of its reduced chunk departs at `ready[k2]` (port
+//!   serialization preserved), and node `k`'s intra round for block `k2`
+//!   triggers at that message's arrival — via the existing
+//!   `DelayUntil`/trigger-signal machinery of
+//!   [`queue_node_scripts`](super::hier), with triggers landing at the
+//!   same instant coalescing into one trigger write per rank.
+//! - Per-node trigger times now differ across nodes (chunk `k2` of a
+//!   pipelined exchange lands at different instants on different
+//!   destinations), so the gather leg simulates **every** node instead of
+//!   leaning on homogeneous symmetry; the critical path is the latest
+//!   `end` mark.
+//!
+//! Every trigger instant is ≤ its counterpart in the barriered
+//! composition (each phase-composition trigger is the same expression
+//! with `max(ready)` in place of `ready[k2]`), the round scripts are
+//! identical, and the DES is monotone in trigger times — so the fused
+//! schedule is never slower than the best barriered composition
+//! (prop-tested in `tests/prop_cluster.rs` and asserted per figure-sweep
+//! cell by `benches/overlap.rs`). Placement is schedule-independent, so
+//! the result is byte-identical to the sequential composition (and hence
+//! to the flat reference reduction).
+
+use crate::collectives::CollectiveKind;
+use crate::sim::clock::ns;
+use crate::sim::{Sim, SimConfig, SimTime};
+
+use super::allreduce::{gather_functional_pass, run_hier_rs_timed, RsChunkTimes};
+use super::hier::{
+    cached_node_rounds, count_nic_messages, queue_node_scripts, HierResult, HierRunOptions,
+};
+use super::selector::{ClusterChoice, InterSchedule};
+use super::topology::ClusterTopology;
+
+/// Overlap accounting for one fused all-reduce episode, on top of the
+/// plain [`HierResult`]: what the chunk-granular schedule saved relative
+/// to the barriered composition of the same intra variants.
+#[derive(Debug, Clone)]
+pub struct OverlapReport {
+    /// The fused chunk-granular episode.
+    pub overlapped: HierResult,
+    /// The barriered (strict RS → AG) composition of the same intra
+    /// variants with per-block pipelining inside each phase — the
+    /// strongest non-fused baseline.
+    pub barrier: HierResult,
+    /// `barrier.latency_ns − overlapped.latency_ns` (≥ 0 by schedule
+    /// monotonicity).
+    pub saved_ns: u64,
+}
+
+/// Downgrade an [`InterSchedule::Overlapped`] choice to its per-phase
+/// equivalent (per-block pipelining without cross-phase fusion).
+fn barriered(mut c: ClusterChoice) -> ClusterChoice {
+    if c.inter == InterSchedule::Overlapped {
+        c.inter = InterSchedule::Pipelined;
+    }
+    c
+}
+
+/// Run one fused hierarchical all-reduce; see
+/// [`run_hier_ar_overlapped_full`].
+pub fn run_hier_ar_overlapped(
+    rs_choice: ClusterChoice,
+    ag_choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> HierResult {
+    run_hier_ar_overlapped_full(rs_choice, ag_choice, cluster, size, opts).0
+}
+
+/// Chunk-granular fused all-reduce: reduce-scatter with per-partial
+/// streaming, then the all-gather of chunk `k2` launched at `ready[k2]`
+/// instead of behind a phase barrier. Returned simulators follow the
+/// [`super::allreduce::run_hier_ar_full`] convention (gather memories
+/// when `verify` is on, reduce-scatter simulators otherwise).
+pub fn run_hier_ar_overlapped_full(
+    rs_choice: ClusterChoice,
+    ag_choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> (HierResult, Vec<Sim>) {
+    assert!(
+        ag_choice.intra.strategy.applicable(CollectiveKind::AllGather),
+        "{} not applicable to the AR gather phase",
+        ag_choice.intra.strategy.name()
+    );
+    let n = cluster.num_nodes();
+    let c = size / cluster.world_size().max(1) as u64;
+    let nic = cluster.nic.clone();
+    let observe = opts.latency.t_host_observe;
+
+    // Phase 1: reduce-scatter with per-partial streaming (Overlapped
+    // eligibility == per-block readiness inside a single leg).
+    let (rs_res, rs_sims, times) = run_hier_rs_timed(rs_choice, cluster, size, opts);
+    let RsChunkTimes { t0, ready } = &times;
+
+    // Phase 2: the gather leg with chunk-granular triggers. Ready instants
+    // differ per destination node, so every node is simulated (no
+    // homogeneous shortcut) — the scripts are identical to the barriered
+    // path, only the trigger times move.
+    let prelaunch = ag_choice.intra.prelaunch;
+    let mut end_max: SimTime = 0;
+    let mut ag_tail: SimTime = 0;
+    let mut ag_data_cmds = 0usize;
+    for k in 0..n {
+        let mut sim = Sim::new(SimConfig {
+            topology: cluster.node(k).clone(),
+            latency: opts.latency.clone(),
+            functional: false,
+            trace: opts.trace,
+        });
+        let rounds = cached_node_rounds(
+            CollectiveKind::AllGather,
+            cluster.node(k),
+            n,
+            k,
+            size,
+            c,
+            ag_choice,
+        );
+        if k == 0 {
+            ag_data_cmds = rounds.iter().map(|p| p.total_data_cmds()).sum::<usize>() * n;
+        }
+        let triggers: Vec<SimTime> = (0..n)
+            .map(|k2| {
+                if k2 == k {
+                    // Own block: the reduced chunk is already resident.
+                    ready[k]
+                } else {
+                    // Node k2 streams its reduced chunk through its single
+                    // NIC port starting at ready[k2]; ring send order puts
+                    // the message for node (k2+j) mod n at position j.
+                    let j = (k + n - k2) % n;
+                    ready[k2] + ns(nic.arrival_ns(j, c) + observe)
+                }
+            })
+            .collect();
+        let last_trigger = *triggers.iter().max().unwrap();
+        let hosts = queue_node_scripts(&mut sim, &rounds, prelaunch, *t0, &triggers);
+        let out = sim.run();
+        assert!(
+            out.deadlocked.is_empty(),
+            "overlapped allreduce gather deadlocked on node {k}: {:?}",
+            out.deadlocked
+        );
+        for h in hosts {
+            let end = sim.host(h).mark("end").unwrap();
+            end_max = end_max.max(end);
+            ag_tail = ag_tail.max(end.saturating_sub(last_trigger));
+        }
+    }
+
+    let latency_ns = end_max - t0;
+    // NIC/exchange span on the critical path: whatever the intra DES work
+    // (reduce-scatter rounds + the gather tail after the final trigger)
+    // does not cover. Overlap shrinks exactly this component relative to
+    // `rs.inter + ag.inter` of the barriered composition.
+    let inter_ns = latency_ns.saturating_sub(rs_res.intra_ns + ag_tail);
+
+    let (verified, sims) = if opts.verify {
+        let (ok, sims) = gather_functional_pass(&rs_sims, ag_choice, cluster, size, opts);
+        (Some(rs_res.verified == Some(true) && ok), sims)
+    } else {
+        (None, rs_sims)
+    };
+
+    (
+        HierResult {
+            latency_ns,
+            inter_ns,
+            intra_ns: latency_ns.saturating_sub(inter_ns),
+            data_cmds: rs_res.data_cmds + ag_data_cmds,
+            nic_messages: rs_res.nic_messages + count_nic_messages(cluster),
+            verified,
+        },
+        sims,
+    )
+}
+
+/// Fused episode plus its barriered baseline ([`OverlapReport`]): what the
+/// chunk-granular schedule buys at this (cluster, size) point. Figures and
+/// the overlap bench report `saved_ns` per cell.
+pub fn overlap_report(
+    rs_choice: ClusterChoice,
+    ag_choice: ClusterChoice,
+    cluster: &ClusterTopology,
+    size: u64,
+    opts: &HierRunOptions,
+) -> OverlapReport {
+    let overlapped = run_hier_ar_overlapped(rs_choice, ag_choice, cluster, size, opts);
+    let barrier = super::allreduce::run_hier_ar(
+        barriered(rs_choice),
+        barriered(ag_choice),
+        cluster,
+        size,
+        opts,
+    );
+    OverlapReport {
+        saved_ns: barrier.latency_ns.saturating_sub(overlapped.latency_ns),
+        overlapped,
+        barrier,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::allreduce::{expected_reduced_byte, run_hier_ar, run_hier_ar_full};
+    use crate::collectives::{Strategy, Variant};
+    use crate::sim::topology::NodeId;
+
+    fn choice(s: Strategy, prelaunch: bool, inter: InterSchedule) -> ClusterChoice {
+        ClusterChoice {
+            intra: Variant::new(s, prelaunch),
+            inter,
+        }
+    }
+
+    fn verify_opts() -> HierRunOptions {
+        HierRunOptions {
+            verify: true,
+            ..Default::default()
+        }
+    }
+
+    /// The fused schedule routes through `run_hier_ar` dispatch, verifies
+    /// byte-for-byte, and beats both barriered compositions.
+    #[test]
+    fn overlapped_allreduce_verifies_and_wins() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 64u64 * 1024 * 2;
+        let (r, sims) = run_hier_ar_full(
+            choice(Strategy::Pcpy, true, InterSchedule::Overlapped),
+            choice(Strategy::Pcpy, true, InterSchedule::Overlapped),
+            &cluster,
+            size,
+            &verify_opts(),
+        );
+        assert_eq!(r.verified, Some(true));
+        assert!(r.inter_ns > 0 && r.latency_ns > r.inter_ns);
+        let w = cluster.world_size() as u32;
+        let c = size / w as u64;
+        let b = sims[1].memory.peek(NodeId::Gpu(3), 5 * c, c);
+        assert!(b.iter().all(|&x| x == expected_reduced_byte(w, 5)));
+
+        for inter in [InterSchedule::Sequential, InterSchedule::Pipelined] {
+            let base = run_hier_ar(
+                choice(Strategy::Pcpy, true, inter),
+                choice(Strategy::Pcpy, true, inter),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            let ovl = run_hier_ar(
+                choice(Strategy::Pcpy, true, InterSchedule::Overlapped),
+                choice(Strategy::Pcpy, true, InterSchedule::Overlapped),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            );
+            assert!(
+                ovl.latency_ns <= base.latency_ns,
+                "{inter:?}: ovl {} vs {}",
+                ovl.latency_ns,
+                base.latency_ns
+            );
+        }
+    }
+
+    /// Savings exist and grow once the NIC legs matter; a single node has
+    /// nothing to fuse (the report degenerates to ~zero savings).
+    #[test]
+    fn overlap_report_quantifies_savings() {
+        let opts = HierRunOptions::default();
+        let cluster = ClusterTopology::mi300x(4);
+        let size = 16u64 << 20;
+        let (rs_c, ag_c) = crate::cluster::select_allreduce(&cluster, size);
+        assert_eq!(rs_c.inter, InterSchedule::Overlapped);
+        let rep = overlap_report(rs_c, ag_c, &cluster, size, &opts);
+        assert!(rep.saved_ns > 0, "no overlap win at {size}B on 4 nodes");
+        assert_eq!(
+            rep.barrier.latency_ns,
+            rep.overlapped.latency_ns + rep.saved_ns
+        );
+        assert_eq!(rep.overlapped.nic_messages, rep.barrier.nic_messages);
+        assert_eq!(rep.overlapped.data_cmds, rep.barrier.data_cmds);
+
+        let single = ClusterTopology::mi300x(1);
+        let (rs1, ag1) = crate::cluster::select_allreduce(&single, size);
+        let rep1 = overlap_report(
+            ClusterChoice {
+                inter: InterSchedule::Overlapped,
+                ..rs1
+            },
+            ClusterChoice {
+                inter: InterSchedule::Overlapped,
+                ..ag1
+            },
+            &single,
+            size,
+            &opts,
+        );
+        assert_eq!(rep1.overlapped.nic_messages, 0);
+    }
+
+    /// Fused latency is bounded below by the reduce-scatter alone and the
+    /// all-gather alone — fusion hides latency, it cannot delete work.
+    #[test]
+    fn overlap_is_bounded_by_each_phase() {
+        let cluster = ClusterTopology::mi300x(2);
+        let size = 4u64 << 20;
+        let opts = HierRunOptions::default();
+        let rs_c = choice(Strategy::Pcpy, true, InterSchedule::Overlapped);
+        let ag_c = choice(Strategy::Pcpy, true, InterSchedule::Overlapped);
+        let ovl = run_hier_ar(rs_c, ag_c, &cluster, size, &opts);
+        let rs = crate::cluster::run_hier_rs(barriered(rs_c), &cluster, size, &opts);
+        let ag = crate::cluster::run_hier(
+            CollectiveKind::AllGather,
+            barriered(ag_c),
+            &cluster,
+            size,
+            &opts,
+        );
+        assert!(ovl.latency_ns >= rs.latency_ns);
+        assert!(ovl.latency_ns >= ag.latency_ns);
+        assert!(ovl.latency_ns < rs.latency_ns + ag.latency_ns);
+    }
+}

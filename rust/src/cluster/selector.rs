@@ -17,7 +17,11 @@
 //!   overhead. The per-peer unit differs by collective: AG moves a rank
 //!   chunk, AA a staged node block, RS a reduced partial chunk.
 //! - All-reduce is two-phase (reduce-scatter then all-gather), each phase
-//!   with its own choice: [`select_allreduce`].
+//!   with its own choice: [`select_allreduce`]. On a multi-node cluster the
+//!   phases are fused by the chunk-granular [`InterSchedule::Overlapped`]
+//!   schedule (the gather of chunk `k` launches at chunk `k`'s final
+//!   reduction, [`crate::cluster::overlap`]), which subsumes per-phase
+//!   pipelining and is never slower than the barriered compositions.
 
 use crate::collectives::{select_variant, CollectiveKind, Variant};
 
@@ -79,6 +83,13 @@ pub enum InterSchedule {
     /// NIC send (AA) as soon as it is ready; one trigger + CQ poll per
     /// block.
     Pipelined,
+    /// Chunk-granular cross-phase fusion ([`crate::cluster::overlap`]): a
+    /// two-phase collective (all-reduce) launches the gather of chunk `k`
+    /// as soon as chunk `k`'s final CU reduction lands instead of
+    /// barriering the phases. Within a single-phase leg it degenerates to
+    /// [`Pipelined`] eligibility (per-block readiness), so it strictly
+    /// subsumes pipelining.
+    Overlapped,
 }
 
 impl InterSchedule {
@@ -87,6 +98,7 @@ impl InterSchedule {
         match self {
             InterSchedule::Sequential => "seq",
             InterSchedule::Pipelined => "pipe",
+            InterSchedule::Overlapped => "ovl",
         }
     }
 }
@@ -126,6 +138,14 @@ pub fn select_cluster<K: Into<ClusterKind>>(
     let intra = select_variant(kind.transport(), (size / n.max(1)).max(1));
     let inter = if cluster.num_nodes() <= 1 {
         InterSchedule::Sequential
+    } else if kind == ClusterKind::AllReduce {
+        // Two-phase collective: the fused chunk-granular schedule launches
+        // the gather of chunk k at chunk k's reduction, subsumes per-block
+        // pipelining inside each phase, and coalesces its triggers when
+        // ready instants collide — so it is never slower than the best of
+        // Sequential/Pipelined at any size (prop-tested), and the policy
+        // needs no cutover.
+        InterSchedule::Overlapped
     } else {
         let per_peer = match kind {
             // AA moves a staged per-node block of gpus_per_node chunks; AG
@@ -146,12 +166,25 @@ pub fn select_cluster<K: Into<ClusterKind>>(
 /// Both phases of a hierarchical all-reduce: the reduce-scatter leg and the
 /// all-gather leg each get their own (variant, schedule) choice — the
 /// gather phase moves the same per-peer chunk volume but through the AG
-/// planner family.
+/// planner family. On a multi-node cluster both phases carry the
+/// [`InterSchedule::Overlapped`] schedule (matching
+/// [`select_cluster`]`(AllReduce)`): the phases fuse at chunk granularity
+/// instead of barriering, so `run_hier_ar` routes through
+/// [`crate::cluster::overlap`]. A single node keeps the per-phase flat
+/// choices (there is nothing to fuse across).
 pub fn select_allreduce(cluster: &ClusterTopology, size: u64) -> (ClusterChoice, ClusterChoice) {
-    (
-        select_cluster(ClusterKind::ReduceScatter, cluster, size),
-        select_cluster(ClusterKind::AllGather, cluster, size),
-    )
+    let mut rs = select_cluster(ClusterKind::ReduceScatter, cluster, size);
+    let mut ag = select_cluster(ClusterKind::AllGather, cluster, size);
+    // Single source of truth for the AR schedule policy: whatever
+    // select_cluster decides for the composite collective governs both
+    // phases (Overlapped fuses them; a barriered decision keeps each
+    // phase's own streaming policy).
+    let ar = select_cluster(ClusterKind::AllReduce, cluster, size).inter;
+    if ar == InterSchedule::Overlapped {
+        rs.inter = InterSchedule::Overlapped;
+        ag.inter = InterSchedule::Overlapped;
+    }
+    (rs, ag)
 }
 
 #[cfg(test)]
@@ -240,10 +273,36 @@ mod tests {
     fn allreduce_phases_pair_rs_and_ag() {
         let c = ClusterTopology::mi300x(2);
         let (rs, ag) = select_allreduce(&c, 32 * MB);
-        assert_eq!(rs, select_cluster(ClusterKind::ReduceScatter, &c, 32 * MB));
-        assert_eq!(ag, select_cluster(ClusterKind::AllGather, &c, 32 * MB));
+        // Intra variants come from the per-phase flat policies; the inter
+        // schedule is the fused chunk-granular one on a multi-node cluster.
+        assert_eq!(
+            rs.intra,
+            select_cluster(ClusterKind::ReduceScatter, &c, 32 * MB).intra
+        );
+        assert_eq!(
+            ag.intra,
+            select_cluster(ClusterKind::AllGather, &c, 32 * MB).intra
+        );
+        assert_eq!(rs.inter, InterSchedule::Overlapped);
+        assert_eq!(ag.inter, InterSchedule::Overlapped);
         assert!(rs.intra.strategy.applicable(CollectiveKind::AllToAll));
         assert!(ag.intra.strategy.applicable(CollectiveKind::AllGather));
+    }
+
+    #[test]
+    fn allreduce_overlaps_multi_node_only() {
+        // Multi-node AR fuses its phases; a single node has nothing to
+        // fuse and keeps the flat sequential composition.
+        for size in [8 * KB, 64 * MB] {
+            let multi = select_cluster(ClusterKind::AllReduce, &ClusterTopology::mi300x(4), size);
+            assert_eq!(multi.inter, InterSchedule::Overlapped, "size {size}");
+            let single = select_cluster(ClusterKind::AllReduce, &ClusterTopology::mi300x(1), size);
+            assert_eq!(single.inter, InterSchedule::Sequential, "size {size}");
+            let (rs, ag) = select_allreduce(&ClusterTopology::mi300x(1), size);
+            assert_ne!(rs.inter, InterSchedule::Overlapped);
+            assert_ne!(ag.inter, InterSchedule::Overlapped);
+        }
+        assert_eq!(InterSchedule::Overlapped.name(), "ovl");
     }
 
     #[test]

@@ -48,6 +48,15 @@ impl WorldShape {
 /// flag is part of the key for uniformity even though planners only read
 /// the strategy — keying on the full variant keeps the key aligned with
 /// the call sites and costs one extra bool.
+///
+/// Schedule audit (PR 4): the cluster layer's inter schedules
+/// (`Sequential`/`Pipelined`/`Overlapped`) do NOT appear here by design —
+/// flat single-node plans have no inter leg, no caller threads a schedule
+/// into [`build_plan`], and triggers are applied at queue time. The
+/// schedule-sensitive cache is `cluster::hier`'s rounds cache, whose
+/// `RoundsKey` carries the full `ClusterChoice` (variant AND schedule);
+/// its poison test proves an `Overlapped` lookup can never be served a
+/// `Sequential` build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub kind: CollectiveKind,

@@ -11,18 +11,49 @@
 //! executor's modeled latency — the flat single-node selector knows nothing
 //! about the NIC leg and would undersize it badly.
 //!
-//! [`CollectiveComm`] memoizes the modeled latency per padded size (the DES
-//! outcome is a pure function of the byte count for a fixed cluster), so
-//! the serving loop pays one hierarchical episode per distinct batch shape.
+//! [`CollectiveComm`] memoizes the modeled latency per padded size and
+//! selected schedule pair (the DES outcome is a pure function of those for
+//! a fixed cluster), so the serving loop pays one hierarchical episode per
+//! distinct batch shape.
+//!
+//! **Overlap decomposition (PR 4).** Real tensor-parallel serving does not
+//! serialize every all-reduce behind compute: with the collective on DMA
+//! engines and the NIC (the paper's offload thesis), chunk `k`'s
+//! all-reduce rides behind the producing GEMM's chunk `k+1` — the
+//! cluster layer's [`crate::cluster::overlap`] schedule models exactly
+//! this fusion inside the collective, and [`CommCost`] models it against
+//! the layer's compute: of each per-layer all-reduce, the part that fits
+//! under the producing block's GEMM window is **hidden**; the remainder —
+//! plus the step's final all-reduce, which has no following compute — is
+//! **exposed** and is all the decode/prefill critical path pays.
 
 use std::collections::HashMap;
 
 use crate::cluster::{
     hier, run_hier_ar, select_allreduce, ClusterChoice, ClusterTopology, HierRunOptions,
+    InterSchedule,
 };
 use crate::models::ModelConfig;
 
 use super::config::ServeConfig;
+
+/// Overlap-decomposed collective cost of one model step: the exposed part
+/// is charged on the serving critical path, the hidden part rides behind
+/// compute (`total = exposed + hidden` always).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommCost {
+    /// Full modeled collective time (what a no-overlap engine would pay).
+    pub total_ns: u64,
+    /// Part that no compute window covers — the critical-path charge.
+    pub exposed_ns: u64,
+}
+
+impl CommCost {
+    /// Part hidden behind compute windows.
+    pub fn hidden_ns(&self) -> u64 {
+        self.total_ns - self.exposed_ns
+    }
+}
 
 /// Per-engine collective cost model: flat (free) on one node, hierarchical
 /// (selector-routed) across nodes.
@@ -30,8 +61,11 @@ pub struct CollectiveComm {
     /// `None` on single-node deployments — the flat path builds no cluster
     /// topology and charges nothing.
     cluster: Option<ClusterTopology>,
-    /// Modeled all-reduce latency per padded size.
-    cache: HashMap<u64, u64>,
+    /// Modeled all-reduce latency per (padded size, phase schedules). The
+    /// schedules are part of the key for the same reason the cluster
+    /// rounds cache keys on them: an `Overlapped` episode must never be
+    /// served a latency modeled for a barriered composition.
+    cache: HashMap<(u64, InterSchedule, InterSchedule), u64>,
 }
 
 impl CollectiveComm {
@@ -73,7 +107,9 @@ impl CollectiveComm {
     }
 
     /// Modeled latency of one tensor-parallel all-reduce of `bytes` across
-    /// the deployment. 0 on a single node and for zero-byte transfers.
+    /// the deployment (the selector's schedule — chunk-granular overlapped
+    /// on multi-node — applied). 0 on a single node and for zero-byte
+    /// transfers.
     pub fn allreduce_ns(&mut self, bytes: u64) -> u64 {
         let Some(cl) = &self.cluster else {
             return 0;
@@ -82,12 +118,13 @@ impl CollectiveComm {
             return 0;
         }
         let size = cl.pad_size(bytes);
-        if let Some(&t) = self.cache.get(&size) {
+        let (rs, ag) = select_allreduce(cl, size);
+        let key = (size, rs.inter, ag.inter);
+        if let Some(&t) = self.cache.get(&key) {
             return t;
         }
-        let (rs, ag) = select_allreduce(cl, size);
         let t = run_hier_ar(rs, ag, cl, size, &HierRunOptions::default()).latency_ns;
-        self.cache.insert(size, t);
+        self.cache.insert(key, t);
         t
     }
 
@@ -100,6 +137,53 @@ impl CollectiveComm {
         }
         let bytes = tokens * model.hidden as u64 * 2;
         2 * model.layers as u64 * self.allreduce_ns(bytes)
+    }
+
+    /// Overlap-decomposed collective cost of one model step whose GPU
+    /// compute takes `step_compute_ns`: each of the `2·layers` per-layer
+    /// all-reduces can hide under the GEMM window of the block that
+    /// produces its input — chunk `k`'s collective rides behind chunk
+    /// `k+1`'s compute, so at most `(world−1)/world` of one all-reduce is
+    /// hidable (the first chunk has nothing in flight yet) and never more
+    /// than the window itself. The step's final all-reduce stays fully
+    /// exposed: the sampled token depends on it, there is no following
+    /// compute in the step. With `overlap` false (or on a single node /
+    /// degenerate inputs) the whole cost is exposed — the pre-PR-4
+    /// behavior.
+    pub fn step_allreduce_split(
+        &mut self,
+        model: &ModelConfig,
+        tokens: u64,
+        step_compute_ns: u64,
+        overlap: bool,
+    ) -> CommCost {
+        let Some(cl) = &self.cluster else {
+            return CommCost::default();
+        };
+        let world = cl.world_size() as u64;
+        let bytes = tokens * model.hidden as u64 * 2;
+        let per_ar = self.allreduce_ns(bytes);
+        let count = 2 * model.layers as u64;
+        let total = count * per_ar;
+        if total == 0 {
+            return CommCost::default();
+        }
+        if !overlap || count < 2 {
+            return CommCost {
+                total_ns: total,
+                exposed_ns: total,
+            };
+        }
+        // Compute window of the producing block, split evenly across the
+        // step's collectives.
+        let window = step_compute_ns / count;
+        let hidable = per_ar - per_ar / world.max(1);
+        let hidden_per_ar = hidable.min(window);
+        let hidden = (count - 1) * hidden_per_ar;
+        CommCost {
+            total_ns: total,
+            exposed_ns: total - hidden,
+        }
     }
 }
 
@@ -159,6 +243,35 @@ mod tests {
         // Sub-chunk sizes share the padded entry.
         assert_eq!(comm.allreduce_ns(4090), a);
         assert_eq!(comm.cache.len(), 1);
+    }
+
+    /// The overlap decomposition is exact (`exposed + hidden == total`),
+    /// hides something behind a generous compute window, never hides the
+    /// step's final all-reduce, and degrades to fully-exposed with
+    /// overlap off / zero window / single node.
+    #[test]
+    fn split_decomposes_and_hides_only_with_overlap() {
+        let mut comm = CollectiveComm::new(&cfg(2));
+        let total = comm.step_allreduce_ns(&QWEN25_0_5B, 64);
+        let compute = 300_000_000u64;
+        let split = comm.step_allreduce_split(&QWEN25_0_5B, 64, compute, true);
+        assert_eq!(split.total_ns, total);
+        assert_eq!(split.exposed_ns + split.hidden_ns(), split.total_ns);
+        assert!(split.exposed_ns < split.total_ns, "nothing hidden");
+        assert!(
+            split.exposed_ns >= total / (2 * QWEN25_0_5B.layers as u64),
+            "the final all-reduce has no following compute to hide behind"
+        );
+        let off = comm.step_allreduce_split(&QWEN25_0_5B, 64, compute, false);
+        assert_eq!(off.total_ns, total);
+        assert_eq!(off.exposed_ns, off.total_ns);
+        let zero = comm.step_allreduce_split(&QWEN25_0_5B, 64, 0, true);
+        assert_eq!(zero.exposed_ns, zero.total_ns);
+        let mut one = CollectiveComm::new(&cfg(1));
+        assert_eq!(
+            one.step_allreduce_split(&QWEN25_0_5B, 64, compute, true),
+            CommCost::default()
+        );
     }
 
     #[test]

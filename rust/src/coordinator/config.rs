@@ -32,6 +32,12 @@ pub struct ServeConfig {
     /// cluster layer (`crate::cluster::ClusterTopology::mi300x(num_nodes)`
     /// is the matching topology).
     pub num_nodes: usize,
+    /// Overlap per-layer TP all-reduces with the next block's compute
+    /// (`coordinator::comm::CommCost` split): the critical path is charged
+    /// only the exposed part. On by default — DMA/NIC offload is the
+    /// paper's whole point; disable to model a strictly serialized engine
+    /// (the pre-PR-4 accounting, kept as the overlap bench baseline).
+    pub comm_overlap: bool,
 }
 
 impl ServeConfig {
@@ -49,6 +55,7 @@ impl ServeConfig {
             perf: PerfModel::default(),
             seed: 0xC0FFEE,
             num_nodes: 1,
+            comm_overlap: true,
         }
     }
 
@@ -56,6 +63,12 @@ impl ServeConfig {
     pub fn with_nodes(mut self, num_nodes: usize) -> Self {
         assert!(num_nodes >= 1);
         self.num_nodes = num_nodes;
+        self
+    }
+
+    /// Toggle collective/compute overlap (see [`ServeConfig::comm_overlap`]).
+    pub fn with_comm_overlap(mut self, on: bool) -> Self {
+        self.comm_overlap = on;
         self
     }
 
@@ -79,6 +92,8 @@ mod tests {
         assert!(c.max_batch > 0);
         assert_eq!(c.num_nodes, 1);
         assert_eq!(c.world_size(), 8);
+        assert!(c.comm_overlap);
+        assert!(!c.with_comm_overlap(false).comm_overlap);
     }
 
     #[test]

@@ -13,9 +13,17 @@ pub struct ServeMetrics {
     pub host_busy_ns: u64,
     /// GPU busy time (decode + prefill + kernel-fetch CU time).
     pub gpu_busy_ns: u64,
-    /// Cross-node collective (TP all-reduce) time on the critical path;
-    /// 0 on single-node deployments (folded into the perf model there).
+    /// Total cross-node collective (TP all-reduce) time; 0 on single-node
+    /// deployments (folded into the perf model there). Always equals
+    /// `comm_exposed_ns + comm_hidden_ns`.
     pub comm_ns: u64,
+    /// Collective time actually charged on the decode/prefill critical
+    /// path — the part no compute window covers (all of `comm_ns` when
+    /// overlap is disabled).
+    pub comm_exposed_ns: u64,
+    /// Collective time hidden behind per-layer compute by the
+    /// chunk-granular overlap model (`coordinator::comm::CommCost`).
+    pub comm_hidden_ns: u64,
     /// Total fetch bytes moved CPU→GPU.
     pub fetch_bytes: u64,
     pub cache_hits: u64,
@@ -39,6 +47,15 @@ impl ServeMetrics {
     /// p99 TTFT in ms.
     pub fn ttft_p99_ms(&self) -> f64 {
         stats::percentile(&self.ttft_ns, 99.0) / 1e6
+    }
+
+    /// Fraction of collective time hidden behind compute (0 when no
+    /// collectives ran).
+    pub fn comm_hidden_frac(&self) -> f64 {
+        if self.comm_ns == 0 {
+            return 0.0;
+        }
+        self.comm_hidden_ns as f64 / self.comm_ns as f64
     }
 
     /// GPU utilization over the run.
@@ -85,5 +102,18 @@ mod tests {
         let m = ServeMetrics::default();
         assert_eq!(m.tps(), 0.0);
         assert_eq!(m.gpu_util(), 0.0);
+        assert_eq!(m.comm_hidden_frac(), 0.0);
+    }
+
+    #[test]
+    fn comm_split_fraction() {
+        let m = ServeMetrics {
+            comm_ns: 100,
+            comm_exposed_ns: 30,
+            comm_hidden_ns: 70,
+            ..Default::default()
+        };
+        assert_eq!(m.comm_exposed_ns + m.comm_hidden_ns, m.comm_ns);
+        assert!((m.comm_hidden_frac() - 0.7).abs() < 1e-12);
     }
 }

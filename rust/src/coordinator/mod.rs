@@ -11,8 +11,11 @@
 //!   end-to-end example with wall-clock metrics.
 //!
 //! Multi-node deployments (`ServeConfig::num_nodes > 1`) route per-step
-//! collective sizing through the cluster-aware selector via [`comm`];
-//! single-node deployments keep the paper's flat behavior.
+//! collective sizing through the cluster-aware selector via [`comm`] and,
+//! with `ServeConfig::comm_overlap` (the default), charge decode/prefill
+//! only the **exposed** part of each step's all-reduces — the rest hides
+//! behind per-layer compute ([`comm::CommCost`]); single-node deployments
+//! keep the paper's flat behavior.
 
 pub mod batcher;
 pub mod comm;
@@ -24,7 +27,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use comm::CollectiveComm;
+pub use comm::{CollectiveComm, CommCost};
 pub use config::ServeConfig;
 pub use engine::VirtualEngine;
 pub use request::{Request, RequestState};

@@ -2,14 +2,16 @@
 //! latency across node counts (1 → 8) and sizes (1KB → 1GB) for the full
 //! [`ClusterKind`] set — all-gather, all-to-all, reduce-scatter and
 //! all-reduce — with the cluster-aware selector picking the configuration
-//! per cell (for all-reduce: one choice per phase). The single-node column
-//! reproduces the flat collective (reduce-scatter: the flat DMA+CU split),
-//! so the table reads as "what scale-out costs on top of the paper's
-//! numbers".
+//! per cell (for all-reduce: one choice per phase; multi-node all-reduce
+//! cells run the chunk-granular [`InterSchedule::Overlapped`] schedule and
+//! additionally report what the fusion saved over the barriered
+//! composition). The single-node column reproduces the flat collective
+//! (reduce-scatter: the flat DMA+CU split), so the table reads as "what
+//! scale-out costs on top of the paper's numbers".
 
 use crate::cluster::{
-    run_hier, run_hier_ar, run_hier_rs, select_allreduce, select_cluster, ClusterChoice,
-    ClusterKind, ClusterTopology, HierRunOptions,
+    overlap_report, run_hier, run_hier_ar, run_hier_rs, select_allreduce, select_cluster,
+    ClusterChoice, ClusterKind, ClusterTopology, HierRunOptions, InterSchedule,
 };
 use crate::util::bytes::{fmt_size, size_sweep, GB, KB};
 
@@ -23,6 +25,10 @@ pub struct ScaleCell {
     pub ag_choice: Option<ClusterChoice>,
     pub latency_ns: u64,
     pub inter_ns: u64,
+    /// All-reduce cells on the overlapped schedule: latency the
+    /// chunk-granular fusion shaved off the barriered composition
+    /// (`None` elsewhere).
+    pub overlap_saved_ns: Option<u64>,
 }
 
 impl ScaleCell {
@@ -50,9 +56,29 @@ pub fn scaling<K: Into<ClusterKind>>(
     node_counts: &[usize],
     sizes: Option<Vec<u64>>,
 ) -> Vec<ScaleRow> {
+    scaling_with_schedule(kind, node_counts, sizes, None)
+}
+
+/// [`scaling`] with the inter schedule optionally forced (`None` = the
+/// selector's per-cell choice; the `dma-latte cluster --schedule` flag
+/// maps here). Forcing [`InterSchedule::Overlapped`] on a non-all-reduce
+/// kind runs its single leg with per-block eligibility (the schedule's
+/// degenerate within-leg meaning).
+pub fn scaling_with_schedule<K: Into<ClusterKind>>(
+    kind: K,
+    node_counts: &[usize],
+    sizes: Option<Vec<u64>>,
+    schedule: Option<InterSchedule>,
+) -> Vec<ScaleRow> {
     let kind = kind.into();
     let sizes = sizes.unwrap_or_else(|| size_sweep(KB, GB, 4));
     let opts = HierRunOptions::default();
+    let force = |mut c: ClusterChoice| {
+        if let Some(s) = schedule {
+            c.inter = s;
+        }
+        c
+    };
     sizes
         .into_iter()
         .map(|size| {
@@ -64,21 +90,29 @@ pub fn scaling<K: Into<ClusterKind>>(
                     // cell's world size (a no-op for power-of-two node
                     // counts on the power-of-two sweeps).
                     let size = cluster.pad_size(size);
-                    let (choice, ag_choice, r) = match kind {
+                    let (choice, ag_choice, r, saved) = match kind {
                         ClusterKind::AllGather | ClusterKind::AllToAll => {
-                            let choice = select_cluster(kind, &cluster, size);
+                            let choice = force(select_cluster(kind, &cluster, size));
                             let r = run_hier(kind.transport(), choice, &cluster, size, &opts);
-                            (choice, None, r)
+                            (choice, None, r, None)
                         }
                         ClusterKind::ReduceScatter => {
-                            let choice = select_cluster(kind, &cluster, size);
+                            let choice = force(select_cluster(kind, &cluster, size));
                             let r = run_hier_rs(choice, &cluster, size, &opts);
-                            (choice, None, r)
+                            (choice, None, r, None)
                         }
                         ClusterKind::AllReduce => {
                             let (rs, ag) = select_allreduce(&cluster, size);
-                            let r = run_hier_ar(rs, ag, &cluster, size, &opts);
-                            (rs, Some(ag), r)
+                            let (rs, ag) = (force(rs), force(ag));
+                            if rs.inter == InterSchedule::Overlapped
+                                || ag.inter == InterSchedule::Overlapped
+                            {
+                                let rep = overlap_report(rs, ag, &cluster, size, &opts);
+                                (rs, Some(ag), rep.overlapped, Some(rep.saved_ns))
+                            } else {
+                                let r = run_hier_ar(rs, ag, &cluster, size, &opts);
+                                (rs, Some(ag), r, None)
+                            }
                         }
                     };
                     ScaleCell {
@@ -87,6 +121,7 @@ pub fn scaling<K: Into<ClusterKind>>(
                         ag_choice,
                         latency_ns: r.latency_ns,
                         inter_ns: r.inter_ns,
+                        overlap_saved_ns: saved,
                     }
                 })
                 .collect();
@@ -96,13 +131,20 @@ pub fn scaling<K: Into<ClusterKind>>(
 }
 
 /// Render a scaling sweep as an ASCII table: per node count, the latency
-/// in µs and the selector's choice.
+/// in µs, the selector's choice, and — on overlapped all-reduce cells —
+/// the latency saved vs the barriered composition.
 pub fn render<K: Into<ClusterKind>>(kind: K, rows: &[ScaleRow]) -> String {
+    let with_saved = rows
+        .iter()
+        .any(|r| r.cells.iter().any(|c| c.overlap_saved_ns.is_some()));
     let mut header = vec!["size".to_string()];
     if let Some(r0) = rows.first() {
         for c in &r0.cells {
             header.push(format!("{}n_us", c.nodes));
             header.push(format!("{}n_choice", c.nodes));
+            if with_saved {
+                header.push(format!("{}n_saved_us", c.nodes));
+            }
         }
     }
     let mut t = crate::util::table::Table::new(header);
@@ -111,20 +153,34 @@ pub fn render<K: Into<ClusterKind>>(kind: K, rows: &[ScaleRow]) -> String {
         for c in &r.cells {
             cells.push(format!("{:.1}", c.latency_ns as f64 / 1e3));
             cells.push(c.choice_name());
+            if with_saved {
+                cells.push(match c.overlap_saved_ns {
+                    Some(s) => format!("{:.1}", s as f64 / 1e3),
+                    None => "-".to_string(),
+                });
+            }
         }
         t.row(cells);
     }
     format!("cluster scaling — {}\n{}", kind.into().name(), t.render())
 }
 
-/// CSV dump of a scaling sweep.
+/// CSV dump of a scaling sweep. The overlap-savings column only appears
+/// on sweeps where some cell ran the fused schedule (all-reduce),
+/// mirroring [`render`] — other kinds keep their pre-overlap schema.
 pub fn to_csv(rows: &[ScaleRow]) -> crate::util::csv::Csv {
+    let with_saved = rows
+        .iter()
+        .any(|r| r.cells.iter().any(|c| c.overlap_saved_ns.is_some()));
     let mut header = vec!["size_bytes".to_string()];
     if let Some(r0) = rows.first() {
         for c in &r0.cells {
             header.push(format!("nodes{}_ns", c.nodes));
             header.push(format!("nodes{}_inter_ns", c.nodes));
             header.push(format!("nodes{}_choice", c.nodes));
+            if with_saved {
+                header.push(format!("nodes{}_overlap_saved_ns", c.nodes));
+            }
         }
     }
     let mut csv = crate::util::csv::Csv::new(header);
@@ -134,6 +190,9 @@ pub fn to_csv(rows: &[ScaleRow]) -> crate::util::csv::Csv {
             cells.push(c.latency_ns.to_string());
             cells.push(c.inter_ns.to_string());
             cells.push(c.choice_name());
+            if with_saved {
+                cells.push(c.overlap_saved_ns.unwrap_or(0).to_string());
+            }
         }
         csv.row(cells);
     }
@@ -187,16 +246,63 @@ mod tests {
                 assert!(r.cells[1].inter_ns > 0);
             }
         }
-        // AR = RS + AG per cell, so AR strictly dominates RS.
+        // AR contains a full RS phase (fused or not), so AR strictly
+        // dominates RS per cell.
         for (rrow, arow) in rs.iter().zip(&ar) {
             for (rc, ac) in rrow.cells.iter().zip(&arow.cells) {
                 assert!(ac.latency_ns > rc.latency_ns);
             }
         }
-        // AR cells carry both phase choices in the composite label.
-        let label = ar[0].cells[1].choice_name();
-        assert!(label.contains('+'), "{label}");
+        // AR cells carry both phase choices in the composite label; the
+        // multi-node cells run the fused schedule and report savings.
+        let cell = &ar[0].cells[1];
+        let label = cell.choice_name();
+        assert!(label.contains('+') && label.contains("ovl"), "{label}");
+        assert!(cell.overlap_saved_ns.is_some());
+        assert!(ar[0].cells[0].overlap_saved_ns.is_none(), "1-node: no fusion");
         let s = render(ClusterKind::AllReduce, &ar);
-        assert!(s.contains("allreduce"), "{s}");
+        assert!(s.contains("allreduce") && s.contains("2n_saved_us"), "{s}");
+        let csv = to_csv(&ar).render();
+        assert!(csv.contains("nodes2_overlap_saved_ns"), "{csv}");
+    }
+
+    /// Acceptance (PR 4): on every figure-sweep cell the overlapped AR is
+    /// at least as fast as BOTH barriered compositions (sequential and
+    /// pipelined), i.e. the fusion never loses.
+    #[test]
+    fn overlapped_cells_never_lose_to_barriered_schedules() {
+        let sizes = Some(vec![64 * KB, MB, 16 * MB]);
+        let nodes = [1usize, 2, 4];
+        let ovl = scaling_with_schedule(
+            ClusterKind::AllReduce,
+            &nodes,
+            sizes.clone(),
+            Some(InterSchedule::Overlapped),
+        );
+        let seq = scaling_with_schedule(
+            ClusterKind::AllReduce,
+            &nodes,
+            sizes.clone(),
+            Some(InterSchedule::Sequential),
+        );
+        let pipe = scaling_with_schedule(
+            ClusterKind::AllReduce,
+            &nodes,
+            sizes,
+            Some(InterSchedule::Pipelined),
+        );
+        for ((orow, srow), prow) in ovl.iter().zip(&seq).zip(&pipe) {
+            for ((oc, sc), pc) in orow.cells.iter().zip(&srow.cells).zip(&prow.cells) {
+                let best = sc.latency_ns.min(pc.latency_ns);
+                assert!(
+                    oc.latency_ns <= best,
+                    "size {} nodes {}: ovl {} vs best barriered {best}",
+                    orow.size,
+                    oc.nodes,
+                    oc.latency_ns
+                );
+                assert_eq!(oc.overlap_saved_ns.unwrap(), pc.latency_ns - oc.latency_ns);
+            }
+        }
     }
 }

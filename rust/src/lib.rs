@@ -20,14 +20,24 @@
 //! - [`cluster`] — multi-node layer: N simulated nodes over NIC links,
 //!   hierarchical all-gather / all-to-all / reduce-scatter / all-reduce
 //!   (intra-node DMA leg + inter-node exchange; reductions on CUs per the
-//!   paper's §7 split), and the cluster-aware (variant, schedule) selector
-//!   covering all four collectives per size × node count.
+//!   paper's §7 split), the chunk-granular overlap scheduler
+//!   ([`cluster::overlap`]: all-reduce's gather of chunk `k` launches at
+//!   chunk `k`'s final reduction instead of behind a phase barrier —
+//!   schedule taxonomy Sequential / Pipelined / Overlapped in
+//!   [`cluster::InterSchedule`]), and the cluster-aware (variant,
+//!   schedule) selector covering all four collectives per size × node
+//!   count. Overlap wins per size live in `BENCH_PR4.json`
+//!   (`benches/overlap.rs`).
 //! - [`rccl`] — calibrated CU-based collective baseline (RCCL stand-in).
 //! - [`models`] — LLM architecture zoo + MI300X roofline timing model.
 //! - [`kvcache`] — paged KV cache, CPU offload tier, fetch engines.
 //! - [`coordinator`] — vLLM-like serving stack (router, batcher, scheduler);
 //!   multi-node deployments route collective sizing through the cluster
-//!   selector (`coordinator::comm`).
+//!   selector (`coordinator::comm`) and charge the critical path only the
+//!   **exposed** part of each step's all-reduces — the remainder hides
+//!   behind the producing layers' GEMMs
+//!   ([`coordinator::comm::CommCost`]; `ServeMetrics` splits `comm_ns`
+//!   into exposed + hidden).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts.
 //! - [`figures`] — one generator per paper figure/table.
 

@@ -4,7 +4,10 @@
 //! dma-latte figures   [--out results/] [--quick]   # all paper figures
 //! dma-latte sweep     [--kind allgather|alltoall] [--max 4G]
 //! dma-latte cluster   [--kind allgather|alltoall|reduce-scatter|allreduce]
-//!                     [--nodes 1,2,4] [--max 1G]   # hierarchical scaling
+//!                     [--nodes 1,2,4] [--max 1G]
+//!                     [--schedule auto|sequential|pipelined|overlapped]
+//!                     # hierarchical scaling (overlapped = chunk-granular
+//!                     # fused all-reduce; auto lets the selector pick)
 //! dma-latte breakdown                              # Fig. 7
 //! dma-latte power                                  # Fig. 15
 //! dma-latte ttft      [--prefill 4096]             # Fig. 16
@@ -61,9 +64,19 @@ fn cmd_cluster(args: &Args) {
             }
         }
     }
+    let schedule = match args.get("schedule", "auto").as_str() {
+        "auto" => None,
+        "sequential" | "seq" => Some(dma_latte::cluster::InterSchedule::Sequential),
+        "pipelined" | "pipe" => Some(dma_latte::cluster::InterSchedule::Pipelined),
+        "overlapped" | "overlap" | "ovl" => Some(dma_latte::cluster::InterSchedule::Overlapped),
+        other => {
+            eprintln!("bad --schedule {other:?} (need auto|sequential|pipelined|overlapped)");
+            std::process::exit(2);
+        }
+    };
     // Sweep sizes are rounded up per cell to a multiple of that cell's
     // world size by figures::cluster::scaling.
-    let rows = figcl::scaling(kind, &nodes, Some(size_sweep(KB, max, 2)));
+    let rows = figcl::scaling_with_schedule(kind, &nodes, Some(size_sweep(KB, max, 2)), schedule);
     print!("{}", figcl::render(kind, &rows));
 }
 

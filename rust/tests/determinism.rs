@@ -4,7 +4,9 @@
 //! same trace event count, same functional bytes. Guards `Sim::reset`, the
 //! cross-episode plan cache and the hierarchical rounds cache.
 
-use dma_latte::cluster::{run_hier, ClusterChoice, ClusterTopology, HierRunOptions, InterSchedule};
+use dma_latte::cluster::{
+    run_hier, run_hier_ar_full, ClusterChoice, ClusterTopology, HierRunOptions, InterSchedule,
+};
 use dma_latte::collectives::exec::run_collective_uncached;
 use dma_latte::collectives::{CollectiveKind, CollectiveRunner, RunOptions, Strategy, Variant};
 use dma_latte::sim::topology::NodeId;
@@ -94,6 +96,84 @@ fn interleaved_episodes_do_not_contaminate_replay() {
         runner.run(CollectiveKind::AllToAll, v, 32 * KB);
         assert_eq!(probe(&mut runner), want, "after {}", v.name());
     }
+}
+
+/// The overlapped (chunk-granular fused) all-reduce replays bit-identically
+/// across cached episodes: the first run builds the schedule-keyed rounds,
+/// interleaved episodes at other shapes/schedules churn the caches, and the
+/// replay must reproduce the same modeled latency split, the same trace
+/// span count, and the same functional bytes.
+#[test]
+fn overlapped_allreduce_replays_bit_identically() {
+    let rs_c = ClusterChoice {
+        intra: Variant::new(Strategy::Pcpy, true),
+        inter: InterSchedule::Overlapped,
+    };
+    let ag_c = ClusterChoice {
+        intra: Variant::new(Strategy::Pcpy, true),
+        inter: InterSchedule::Overlapped,
+    };
+    let cluster = ClusterTopology::mi300x(2);
+    let size = 128 * KB;
+    let run_traced = || {
+        run_hier_ar_full(
+            rs_c,
+            ag_c,
+            &cluster,
+            size,
+            &HierRunOptions {
+                trace: true,
+                ..Default::default()
+            },
+        )
+    };
+    let run_verified = || {
+        run_hier_ar_full(
+            rs_c,
+            ag_c,
+            &cluster,
+            size,
+            &HierRunOptions {
+                verify: true,
+                ..Default::default()
+            },
+        )
+    };
+    let mem_sum = |sims: &[Sim]| {
+        sims.iter()
+            .map(|s| checksum(s, size))
+            .fold(0u64, |a, x| a.wrapping_add(x))
+    };
+
+    let (first, first_sims) = run_traced();
+    let first_spans: usize = first_sims.iter().map(|s| s.trace.spans.len()).sum();
+    let (vfirst, vfirst_sims) = run_verified();
+    let vfirst_sum = mem_sum(&vfirst_sims);
+    assert_eq!(vfirst.verified, Some(true));
+
+    // Churn the caches: other node counts, sizes and schedules in between.
+    run_hier_ar_full(
+        rs_c,
+        ag_c,
+        &ClusterTopology::mi300x(4),
+        256 * KB,
+        &HierRunOptions::default(),
+    );
+    let mut seq_c = rs_c;
+    seq_c.inter = InterSchedule::Sequential;
+    run_hier_ar_full(seq_c, seq_c, &cluster, size, &HierRunOptions::default());
+
+    let (second, second_sims) = run_traced();
+    let second_spans: usize = second_sims.iter().map(|s| s.trace.spans.len()).sum();
+    let (vsecond, vsecond_sims) = run_verified();
+
+    assert_eq!(first.latency_ns, second.latency_ns, "overlapped replay latency");
+    assert_eq!(first.inter_ns, second.inter_ns, "overlapped replay inter split");
+    assert_eq!(first.data_cmds, second.data_cmds, "overlapped replay cmds");
+    assert_eq!(first_spans, second_spans, "overlapped replay trace span count");
+    assert_eq!(vsecond.verified, Some(true));
+    assert_eq!(vfirst.latency_ns, vsecond.latency_ns, "verify-mode replay latency");
+    assert_eq!(vfirst_sum, mem_sum(&vsecond_sims), "overlapped replay memory checksum");
 }
 
 /// The hierarchical executor's cached node rounds replay identically:

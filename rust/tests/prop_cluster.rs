@@ -287,6 +287,87 @@ fn prop_hier_reduce_matches_flat_reference() {
     );
 }
 
+/// PR 4 acceptance: the chunk-granular overlapped all-reduce is
+/// byte-identical to the sequential composition (both checked against the
+/// flat reference reduction) and never slower than the best of the
+/// sequential/pipelined barriered compositions, over random shapes,
+/// variants and node counts.
+#[test]
+fn prop_overlapped_ar_byte_identical_and_never_slower() {
+    prop_run(
+        "overlapped-ar-equivalence",
+        Config {
+            cases: 12,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 4);
+            let g = rng.range(2, 4) as u8;
+            let world = (n * g as usize) as u8;
+            let rs_v = *rng.pick(&Variant::all_for(CollectiveKind::AllToAll));
+            let ag_v = *rng.pick(&Variant::all_for(CollectiveKind::AllGather));
+            let chunk = 64 * rng.range(1, 4) as u64;
+            let size = chunk * world as u64;
+            let cluster = ClusterTopology::homogeneous(
+                n,
+                Topology::custom(g, 16, 64.0, 64.0),
+                NicModel::default(),
+            );
+            let label = format!("rs={} ag={} n={n} g={g} size={size}", rs_v.name(), ag_v.name());
+            let choice = |v, inter| ClusterChoice { intra: v, inter };
+            let opts = HierRunOptions {
+                verify: true,
+                ..Default::default()
+            };
+
+            let (ovl_res, ovl_sims) = run_hier_ar_full(
+                choice(rs_v, InterSchedule::Overlapped),
+                choice(ag_v, InterSchedule::Overlapped),
+                &cluster,
+                size,
+                &opts,
+            );
+            let (seq_res, seq_sims) = run_hier_ar_full(
+                choice(rs_v, InterSchedule::Sequential),
+                choice(ag_v, InterSchedule::Sequential),
+                &cluster,
+                size,
+                &opts,
+            );
+            assert_eq!(ovl_res.verified, Some(true), "{label}");
+            assert_eq!(seq_res.verified, Some(true), "{label}");
+            // Byte-identical final buffers on every rank.
+            for r in 0..world as u32 {
+                let (node, local) = cluster.locate(r);
+                assert_eq!(
+                    ovl_sims[node].memory.peek(NodeId::Gpu(local), 0, size),
+                    seq_sims[node].memory.peek(NodeId::Gpu(local), 0, size),
+                    "{label}: rank {r} allreduce buffer"
+                );
+            }
+            // Same NIC message and data-command budget — fusion reorders,
+            // it does not add or drop work.
+            assert_eq!(ovl_res.nic_messages, seq_res.nic_messages, "{label}");
+            assert_eq!(ovl_res.data_cmds, seq_res.data_cmds, "{label}");
+            // Never slower than the best barriered composition.
+            let pipe_res = run_hier_ar_full(
+                choice(rs_v, InterSchedule::Pipelined),
+                choice(ag_v, InterSchedule::Pipelined),
+                &cluster,
+                size,
+                &HierRunOptions::default(),
+            )
+            .0;
+            let best = seq_res.latency_ns.min(pipe_res.latency_ns);
+            assert!(
+                ovl_res.latency_ns <= best,
+                "{label}: ovl {} vs best barriered {best}",
+                ovl_res.latency_ns
+            );
+        },
+    );
+}
+
 /// The cluster selector is total, applicable, and sequential on one node,
 /// across the full collective set and degenerate sizes.
 #[test]
