@@ -47,6 +47,7 @@ use crate::collectives::plan::{aa_out_base, CollectivePlan};
 use crate::collectives::reduce_scatter::cu_reduce_ns;
 use crate::collectives::verify::pattern;
 use crate::collectives::{CollectiveKind, Strategy};
+use crate::obs::{self, record, SpanKind, Track};
 use crate::sim::clock::ns;
 use crate::sim::topology::NodeId;
 use crate::sim::{Sim, SimConfig, SimTime};
@@ -54,9 +55,9 @@ use crate::sim::{Sim, SimConfig, SimTime};
 use std::sync::Arc;
 
 use super::hier::{
-    aa_stage_base, cached_node_rounds, count_nic_messages, exchange_ag, nic_exchange_arrivals,
-    prelaunch_t0, queue_node_scripts, run_hier, HierResult, HierRunOptions, MAX_NODES,
-    ROUND_MARKS,
+    aa_stage_base, cached_node_rounds, count_nic_messages, emit_nic_msg_spans, exchange_ag,
+    nic_exchange_arrivals, nic_exchange_messages, prelaunch_t0, queue_node_scripts, run_hier,
+    HierResult, HierRunOptions, MAX_NODES, ROUND_MARKS,
 };
 use super::selector::{ClusterChoice, InterSchedule};
 use super::topology::ClusterTopology;
@@ -295,6 +296,15 @@ pub fn run_hier_rs_timed(
     let observe = opts.latency.t_host_observe;
     let nic = cluster.nic.clone();
 
+    // Joins the all-reduce episode when one is open; owns its own when the
+    // reduce-scatter runs standalone.
+    let emitting = opts.trace && record::active();
+    let episode = if emitting {
+        record::with(|r| r.open_episode("collective:reduce-scatter"))
+    } else {
+        None
+    };
+
     let sim_nodes = if opts.verify { n } else { 1 };
     let mut sims: Vec<Sim> = (0..sim_nodes)
         .map(|k| {
@@ -366,6 +376,21 @@ pub fn run_hier_rs_timed(
     let (latency_ns, inter_ns, chunk_ready) = if n == 1 {
         // Degenerate single node: one transport round + one CU fold — the
         // flat RS split, no NIC plan is ever built.
+        if emitting {
+            record::with(|r| {
+                for (k, sim) in sims.iter().enumerate() {
+                    obs::lift_sim_trace(r, k as u8, &sim.trace);
+                }
+                r.span(
+                    "partial r0".to_string(),
+                    SpanKind::CuReduce,
+                    Track::Cu { node: 0 },
+                    round_done[0],
+                    partial_ready[0],
+                );
+                r.measure("reduce-scatter", t0, partial_ready[0]);
+            });
+        }
         (partial_ready[0] - t0, 0, vec![partial_ready[0]])
     } else {
         // Port-serialized partial sends (c bytes each), scheduled at
@@ -385,8 +410,45 @@ pub fn run_hier_rs_timed(
         let done = *chunk_ready.iter().max().unwrap();
         let latency = done - t0;
         let intra_span = *partial_ready.iter().max().unwrap() - t0;
+        if emitting {
+            let msgs = nic_exchange_messages(&nic, choice.inter, &ready, c, observe);
+            record::with(|r| {
+                for (k, sim) in sims.iter().enumerate() {
+                    obs::lift_sim_trace(r, k as u8, &sim.trace);
+                }
+                // CU pass 1 on every node (homogeneous symmetry — emitted
+                // even when only node 0 was simulated), then the NIC
+                // partial exchange, then CU pass 2 on each destination.
+                for k in 0..n {
+                    for (j, &rd) in round_done.iter().enumerate() {
+                        r.span(
+                            format!("partial r{j}"),
+                            SpanKind::CuReduce,
+                            Track::Cu { node: k as u8 },
+                            rd,
+                            partial_ready[j],
+                        );
+                    }
+                }
+                emit_nic_msg_spans(r, &msgs);
+                for (j, arr) in last_arrival.iter().enumerate() {
+                    r.span(
+                        "final".to_string(),
+                        SpanKind::CuReduce,
+                        Track::Cu { node: j as u8 },
+                        ns(arr.max(partial_ready[j] as f64)),
+                        chunk_ready[j],
+                    );
+                }
+                r.measure("reduce-scatter", t0, done);
+            });
+        }
         (latency, latency.saturating_sub(intra_span), chunk_ready)
     };
+
+    if matches!(episode, Some((_, true))) {
+        record::with(|r| r.close_episode());
+    }
 
     if opts.verify {
         exchange_partials(&mut sims, cluster, size, c);
@@ -458,7 +520,20 @@ pub fn run_hier_ar_full(
         "{} not applicable to the AR gather phase",
         ag_choice.intra.strategy.name()
     );
+    // Own the episode before the phases run so both join it; the rebase
+    // between them stacks the gather's t0-anchored timeline after the
+    // reduce-scatter's, making the two measure windows sum to the
+    // composite latency.
+    let emitting = opts.trace && record::active();
+    let episode = if emitting {
+        record::with(|r| r.open_episode("collective:allreduce"))
+    } else {
+        None
+    };
     let (rs_res, rs_sims) = run_hier_rs_full(rs_choice, cluster, size, opts);
+    if emitting {
+        record::with(|r| r.rebase_to_end());
+    }
     // Gather-phase timing on its own DES episode (the phases share no
     // overlap: the gather input is the reduce output).
     let ag_res = run_hier(
@@ -469,9 +544,12 @@ pub fn run_hier_ar_full(
         &HierRunOptions {
             latency: opts.latency.clone(),
             verify: false,
-            trace: false,
+            trace: opts.trace,
         },
     );
+    if matches!(episode, Some((_, true))) {
+        record::with(|r| r.close_episode());
+    }
 
     let (verified, sims) = if opts.verify {
         let (ok, sims) = gather_functional_pass(&rs_sims, ag_choice, cluster, size, opts);

@@ -35,9 +35,11 @@
 //! size).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::collectives::cache::{get_or_build, WorldShape};
+use crate::obs::{self, record, SpanKind, Track};
 use crate::collectives::exec::{self, PRELAUNCH_PARK_NS};
 use crate::collectives::plan::{aa_out_base, CollectivePlan};
 use crate::collectives::verify::pattern;
@@ -120,6 +122,18 @@ struct RoundsKey {
 const ROUNDS_CACHE_CAP: usize = 1024;
 
 static ROUNDS: OnceLock<Mutex<HashMap<RoundsKey, Arc<Vec<CollectivePlan>>>>> = OnceLock::new();
+static ROUNDS_HITS: AtomicU64 = AtomicU64::new(0);
+static ROUNDS_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Lifetime (hit, miss) counters of the rounds cache, mirroring the flat
+/// plan cache's [`crate::collectives::cache::stats`] — the serving CLI
+/// summary reports both so replay efficiency is visible per run.
+pub fn rounds_cache_stats() -> (u64, u64) {
+    (
+        ROUNDS_HITS.load(Ordering::Relaxed),
+        ROUNDS_MISSES.load(Ordering::Relaxed),
+    )
+}
 
 /// [`build_node_rounds`] through the cross-episode cache (§Perf pass): the
 /// rebased per-node scripts are a pure function of the key, so selector
@@ -157,9 +171,11 @@ pub fn cached_node_rounds(
         shape: WorldShape::of(node_topo),
     };
     let table = ROUNDS.get_or_init(|| Mutex::new(HashMap::new()));
-    let (rounds, _hit) = get_or_build(table, ROUNDS_CACHE_CAP, key, || {
+    let (rounds, hit) = get_or_build(table, ROUNDS_CACHE_CAP, key, || {
         build_node_rounds(kind, node_topo, num_nodes, node_idx, size, chunk, choice.intra)
     });
+    let counter = if hit { &ROUNDS_HITS } else { &ROUNDS_MISSES };
+    counter.fetch_add(1, Ordering::Relaxed);
     rounds
 }
 
@@ -350,6 +366,85 @@ pub(crate) fn nic_exchange_arrivals(
     last_arrival
 }
 
+/// One NIC message of an exchange, with its full port/flight timeline
+/// (absolute f64 ns, same clock as [`nic_exchange_arrivals`]). Used only
+/// by the tracing path: the latency-critical arrivals fold above is kept
+/// untouched (bit-identical float evaluation order matters to the
+/// determinism tests), and a unit test pins the two to each other.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct NicMsg {
+    pub sender: usize,
+    pub dest: usize,
+    /// Port occupancy begins (post issued).
+    pub start: f64,
+    /// Port released (post + payload fully serialized).
+    pub port_end: f64,
+    /// Delivery incl. the receiving host's observe cost —
+    /// `port_end + t_latency + observe`.
+    pub arrive: f64,
+}
+
+/// Per-message mirror of [`nic_exchange_arrivals`]: the identical loop,
+/// returning every message instead of folding the per-destination max.
+pub(crate) fn nic_exchange_messages(
+    nic: &NicModel,
+    inter: InterSchedule,
+    ready: &[f64],
+    payload: u64,
+    observe: f64,
+) -> Vec<NicMsg> {
+    let n = ready.len();
+    let all_ready = ready.iter().copied().fold(0f64, f64::max);
+    let mut msgs = Vec::with_capacity(n * n.saturating_sub(1));
+    for sender in 0..n {
+        let mut port = 0f64;
+        for (j, r) in ready.iter().enumerate() {
+            if j == sender {
+                continue;
+            }
+            let eligible = match inter {
+                InterSchedule::Pipelined | InterSchedule::Overlapped => *r,
+                InterSchedule::Sequential => all_ready,
+            };
+            let start = eligible.max(port);
+            port = start + nic.t_post_per_msg + nic.payload_ns(payload);
+            msgs.push(NicMsg {
+                sender,
+                dest: j,
+                start,
+                port_end: port,
+                arrive: port + nic.t_latency + observe,
+            });
+        }
+    }
+    msgs
+}
+
+/// Emit port + flight spans for `msgs` into the active recorder (AA inter
+/// leg, and the RS leg in `cluster::allreduce`). Port spans land on each
+/// sender's exclusive [`Track::Nic`]; flights on the destination's
+/// overlap-tolerant [`Track::NicFlight`].
+pub(crate) fn emit_nic_msg_spans(rec: &mut record::Recorder, msgs: &[NicMsg]) {
+    for m in msgs {
+        rec.span(
+            format!("send->{}", m.dest),
+            SpanKind::Nic,
+            Track::Nic {
+                node: m.sender as u8,
+            },
+            ns(m.start),
+            ns(m.port_end),
+        );
+        rec.span(
+            format!("flight {}->{}", m.sender, m.dest),
+            SpanKind::NicFlight,
+            Track::NicFlight { node: m.dest as u8 },
+            ns(m.port_end),
+            ns(m.arrive),
+        );
+    }
+}
+
 /// Queue one node's per-rank host programs for all intra rounds onto its
 /// DES. `triggers[i]` is the absolute time round `i` may start; rounds
 /// sharing a trigger instant share ONE trigger write per rank (this is what
@@ -494,6 +589,15 @@ pub fn run_hier_full(
     let observe = opts.latency.t_host_observe;
     let nic = cluster.nic.clone();
 
+    // Tracing gate: one thread-local check per episode, zero work when no
+    // recorder is installed or the caller did not opt in.
+    let emitting = opts.trace && record::active();
+    let episode = if emitting {
+        record::with(|r| r.open_episode(&format!("collective:{}", kind.name())))
+    } else {
+        None
+    };
+
     // Homogeneous nodes ⇒ identical per-node timing: simulate only node 0
     // for timing sweeps, every node when moving bytes for verification.
     let sim_nodes = if opts.verify { n } else { 1 };
@@ -569,6 +673,43 @@ pub fn run_hier_full(
                     end_max = end_max.max(sim.host(h).mark("end").unwrap());
                 }
             }
+            if emitting {
+                record::with(|r| {
+                    for (k, sim) in sims.iter().enumerate() {
+                        obs::lift_sim_trace(r, k as u8, &sim.trace);
+                    }
+                    // Synthesize the inter-leg NIC timeline for every node
+                    // (homogeneous symmetry — emitted even when only node 0
+                    // was simulated): sender k2's p-th message serializes on
+                    // its port, then flies to node (k2+p) mod n, matching
+                    // the round-trigger formula above.
+                    if n > 1 {
+                        let step = nic.t_post_per_msg + nic.payload_ns(c);
+                        for k2 in 0..n {
+                            for p in 1..n {
+                                let dest = (k2 + p) % n;
+                                let port_s = t0 + ns((p - 1) as f64 * step);
+                                let port_e = t0 + ns(p as f64 * step);
+                                r.span(
+                                    format!("send->{dest}"),
+                                    SpanKind::Nic,
+                                    Track::Nic { node: k2 as u8 },
+                                    port_s,
+                                    port_e,
+                                );
+                                r.span(
+                                    format!("flight {k2}->{dest}"),
+                                    SpanKind::NicFlight,
+                                    Track::NicFlight { node: dest as u8 },
+                                    port_e,
+                                    t0 + ns(nic.arrival_ns(p, c)),
+                                );
+                            }
+                        }
+                    }
+                    r.measure(kind.name(), t0, end_max);
+                });
+            }
             (end_max - t0, inter)
         }
         CollectiveKind::AllToAll => {
@@ -597,6 +738,14 @@ pub fn run_hier_full(
                 exchange_aa(&mut sims, cluster, size, in_place);
             }
             if n == 1 {
+                if emitting {
+                    record::with(|r| {
+                        for (k, sim) in sims.iter().enumerate() {
+                            obs::lift_sim_trace(r, k as u8, &sim.trace);
+                        }
+                        r.measure(kind.name(), t0, end_max);
+                    });
+                }
                 (end_max - t0, 0)
             } else {
                 // Port-serialized sends, one per remote block, scheduled at
@@ -611,10 +760,24 @@ pub fn run_hier_full(
                 }
                 let latency = ns(total) - t0;
                 let intra_span = round_done.iter().copied().max().unwrap() - t0;
+                if emitting {
+                    let msgs = nic_exchange_messages(&nic, choice.inter, &ready, intra, observe);
+                    record::with(|r| {
+                        for (k, sim) in sims.iter().enumerate() {
+                            obs::lift_sim_trace(r, k as u8, &sim.trace);
+                        }
+                        emit_nic_msg_spans(r, &msgs);
+                        r.measure(kind.name(), t0, t0 + latency);
+                    });
+                }
                 (latency, latency.saturating_sub(intra_span))
             }
         }
     };
+
+    if matches!(episode, Some((_, true))) {
+        record::with(|r| r.close_episode());
+    }
 
     let verified = if opts.verify {
         Some(check_cluster(&sims, kind, cluster, size, in_place))
@@ -987,6 +1150,30 @@ mod tests {
         let mut t = table.lock().unwrap();
         t.remove(&key(InterSchedule::Sequential));
         t.remove(&key(InterSchedule::Overlapped));
+    }
+
+    /// The tracing-path message list must fold back to exactly the float
+    /// arrivals the latency path computes — same loop, same evaluation
+    /// order, so `==` on f64 is the right comparison.
+    #[test]
+    fn nic_messages_fold_to_arrivals() {
+        let nic = NicModel::default();
+        let ready = [1_000.0, 2_500.0, 1_800.0, 4_000.0];
+        for inter in [
+            InterSchedule::Sequential,
+            InterSchedule::Pipelined,
+            InterSchedule::Overlapped,
+        ] {
+            let arr = nic_exchange_arrivals(&nic, inter, &ready, 4096, 120.0);
+            let msgs = nic_exchange_messages(&nic, inter, &ready, 4096, 120.0);
+            assert_eq!(msgs.len(), ready.len() * (ready.len() - 1));
+            let mut folded = vec![0f64; ready.len()];
+            for m in &msgs {
+                assert!(m.start < m.port_end && m.port_end < m.arrive);
+                folded[m.dest] = folded[m.dest].max(m.arrive);
+            }
+            assert_eq!(arr, folded, "{inter:?}");
+        }
     }
 
     #[test]

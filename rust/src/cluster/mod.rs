@@ -73,7 +73,7 @@ pub mod topology;
 pub use allreduce::{
     run_hier_ar, run_hier_ar_full, run_hier_rs, run_hier_rs_full, run_hier_rs_timed, RsChunkTimes,
 };
-pub use hier::{run_hier, run_hier_full, HierResult, HierRunOptions};
+pub use hier::{rounds_cache_stats, run_hier, run_hier_full, HierResult, HierRunOptions};
 pub use overlap::{overlap_report, run_hier_ar_overlapped, OverlapReport};
 pub use selector::{select_allreduce, select_cluster, ClusterChoice, ClusterKind, InterSchedule};
 pub use topology::{ClusterTopology, GlobalRank, NicModel};

@@ -37,6 +37,7 @@
 //! to the flat reference reduction).
 
 use crate::collectives::CollectiveKind;
+use crate::obs::{self, record, SpanKind, Track};
 use crate::sim::clock::ns;
 use crate::sim::{Sim, SimConfig, SimTime};
 
@@ -106,6 +107,17 @@ pub fn run_hier_ar_overlapped_full(
     let nic = cluster.nic.clone();
     let observe = opts.latency.t_host_observe;
 
+    // Own the episode before phase 1 so the reduce-scatter joins it. The
+    // fused phases share one absolute timeline (no rebase): the gather's
+    // measure window is the remainder [t0 + rs latency, end] — the two
+    // windows partition the fused end-to-end latency.
+    let emitting = opts.trace && record::active();
+    let episode = if emitting {
+        record::with(|r| r.open_episode("collective:allreduce"))
+    } else {
+        None
+    };
+
     // Phase 1: reduce-scatter with per-partial streaming (Overlapped
     // eligibility == per-block readiness inside a single leg).
     let (rs_res, rs_sims, times) = run_hier_rs_timed(rs_choice, cluster, size, opts);
@@ -165,6 +177,43 @@ pub fn run_hier_ar_overlapped_full(
             end_max = end_max.max(end);
             ag_tail = ag_tail.max(end.saturating_sub(last_trigger));
         }
+        if emitting {
+            // The gather sim is dropped at the end of this iteration —
+            // lift its spans now (all n nodes are simulated here).
+            record::with(|r| obs::lift_sim_trace(r, k as u8, &sim.trace));
+        }
+    }
+
+    if emitting {
+        record::with(|r| {
+            // Gather-leg NIC timeline: node k2 streams its reduced chunk
+            // from ready[k2] through its port; ring order puts position p
+            // at destination (k2+p) mod n — matching the trigger formula
+            // above.
+            if n > 1 {
+                let step = nic.t_post_per_msg + nic.payload_ns(c);
+                for (k2, &rdy) in ready.iter().enumerate() {
+                    for p in 1..n {
+                        let dest = (k2 + p) % n;
+                        r.span(
+                            format!("send->{dest}"),
+                            SpanKind::Nic,
+                            Track::Nic { node: k2 as u8 },
+                            rdy + ns((p - 1) as f64 * step),
+                            rdy + ns(p as f64 * step),
+                        );
+                        r.span(
+                            format!("flight {k2}->{dest}"),
+                            SpanKind::NicFlight,
+                            Track::NicFlight { node: dest as u8 },
+                            rdy + ns(p as f64 * step),
+                            rdy + ns(nic.arrival_ns(p, c)),
+                        );
+                    }
+                }
+            }
+            r.measure("gather", *t0 + rs_res.latency_ns, end_max);
+        });
     }
 
     let latency_ns = end_max - t0;
@@ -173,6 +222,10 @@ pub fn run_hier_ar_overlapped_full(
     // does not cover. Overlap shrinks exactly this component relative to
     // `rs.inter + ag.inter` of the barriered composition.
     let inter_ns = latency_ns.saturating_sub(rs_res.intra_ns + ag_tail);
+
+    if matches!(episode, Some((_, true))) {
+        record::with(|r| r.close_episode());
+    }
 
     let (verified, sims) = if opts.verify {
         let (ok, sims) = gather_functional_pass(&rs_sims, ag_choice, cluster, size, opts);

@@ -11,11 +11,12 @@
 
 use crate::kvcache::fetch::{run_fetch, CopySpec, FetchImpl, FetchOutcome};
 use crate::kvcache::BlockLayout;
+use crate::obs::{record, SpanKind, Track};
 use crate::sim::{Sim, SimConfig};
 
 use super::comm::CollectiveComm;
 use super::config::ServeConfig;
-use super::metrics::ServeMetrics;
+use super::metrics::{RequestSpan, ServeMetrics};
 use super::request::{Request, RequestState};
 use super::scheduler::{AdmitAction, Scheduler};
 
@@ -98,7 +99,22 @@ impl VirtualEngine {
     }
 
     /// Run until all submitted requests finish; returns the metrics.
+    ///
+    /// When an [`crate::obs::record`] recorder is active the whole run is
+    /// traced as one episode: framework/API time on the scheduler-host
+    /// track, step GEMMs on the GPU track, exposed collective remainders
+    /// on the comm track, fetch wire time on the PCIe track, and one span
+    /// per finished request — with a measure window over the full wall
+    /// time, so the critical-path attribution partitions it exactly.
     pub fn run_to_completion(&mut self) -> &ServeMetrics {
+        let emitting = record::active();
+        let plan0 = crate::collectives::cache::stats();
+        let rounds0 = crate::cluster::rounds_cache_stats();
+        let episode = if emitting {
+            record::with(|r| r.open_episode("serving"))
+        } else {
+            None
+        };
         loop {
             self.admit();
             self.absorb_ready();
@@ -127,26 +143,70 @@ impl VirtualEngine {
         }
         self.metrics.wall_ns = self.now;
         self.metrics.host_busy_ns = self.host_free.min(self.now);
+        // Cache counters are process-wide (other threads may bump them
+        // concurrently): the deltas are display-only and saturating.
+        let plan1 = crate::collectives::cache::stats();
+        let rounds1 = crate::cluster::rounds_cache_stats();
+        self.metrics.plan_cache = (
+            plan1.0.saturating_sub(plan0.0),
+            plan1.1.saturating_sub(plan0.1),
+        );
+        self.metrics.rounds_cache = (
+            rounds1.0.saturating_sub(rounds0.0),
+            rounds1.1.saturating_sub(rounds0.1),
+        );
+        if emitting {
+            let wall = self.metrics.wall_ns;
+            record::with(|r| r.measure("serving", 0, wall));
+        }
+        if matches!(episode, Some((_, true))) {
+            record::with(|r| r.close_episode());
+        }
         &self.metrics
     }
 
     /// Admit as many waiting requests as the policy allows, charging host /
     /// pcie / gpu resources per the fetch implementation.
     fn admit(&mut self) {
+        let emitting = record::active();
         let in_flight = self.running.len() + self.pending.len();
         let actions = self.sched.admit_round(in_flight);
         for act in actions {
             // Framework (Python/scheduler) overhead serializes on the host.
             let issue_start = self.host_free.max(self.now);
             self.host_free = issue_start + self.cfg.framework_overhead_ns;
+            if emitting {
+                let end = self.host_free;
+                record::with(|r| {
+                    r.span(
+                        "framework".to_string(),
+                        SpanKind::HostApi,
+                        Track::SchedHost,
+                        issue_start,
+                        end,
+                    );
+                });
+            }
             match act {
                 AdmitAction::Fetch { mut req, copies } => {
                     self.metrics.cache_hits += 1;
                     self.metrics.fetch_bytes += copies.iter().map(|c| c.2).sum::<u64>();
                     let cost = self.fetch_cost(&copies);
                     // API calls serialize on the host thread.
+                    let api_start = self.host_free;
                     let api_end = self.host_free + cost.host_ns;
                     self.host_free = api_end;
+                    if emitting {
+                        record::with(|r| {
+                            r.span(
+                                "fetch api".to_string(),
+                                SpanKind::HostApi,
+                                Track::SchedHost,
+                                api_start,
+                                api_end,
+                            );
+                        });
+                    }
                     let ready = match self.cfg.fetch {
                         FetchImpl::Kernel => {
                             // CU gather kernel contends with model compute
@@ -160,6 +220,17 @@ impl VirtualEngine {
                             let start = self.gpu_free.max(api_end);
                             self.gpu_free = start + serialized;
                             self.metrics.gpu_busy_ns += serialized;
+                            if emitting {
+                                record::with(|r| {
+                                    r.span(
+                                        "fetch kernel".to_string(),
+                                        SpanKind::Gemm,
+                                        Track::Gpu,
+                                        start,
+                                        start + cost.gpu_cu_ns,
+                                    );
+                                });
+                            }
                             start + cost.gpu_cu_ns
                         }
                         _ => {
@@ -167,6 +238,18 @@ impl VirtualEngine {
                             let wire = cost.total_ns.saturating_sub(cost.host_ns);
                             let start = self.pcie_free.max(api_end);
                             self.pcie_free = start + wire;
+                            if emitting {
+                                let end = self.pcie_free;
+                                record::with(|r| {
+                                    r.span(
+                                        "kv fetch".to_string(),
+                                        SpanKind::Copy,
+                                        Track::Pcie,
+                                        start,
+                                        end,
+                                    );
+                                });
+                            }
                             self.pcie_free
                         }
                     };
@@ -193,6 +276,27 @@ impl VirtualEngine {
                     self.metrics.comm_ns += comm.total_ns;
                     self.metrics.comm_exposed_ns += comm.exposed_ns;
                     self.metrics.comm_hidden_ns += comm.hidden_ns();
+                    if emitting {
+                        let exposed = comm.exposed_ns;
+                        record::with(|r| {
+                            r.span(
+                                "prefill".to_string(),
+                                SpanKind::Gemm,
+                                Track::Gpu,
+                                start,
+                                start + t,
+                            );
+                            if exposed > 0 {
+                                r.span(
+                                    "tp allreduce".to_string(),
+                                    SpanKind::ExposedComm,
+                                    Track::Comm,
+                                    start + t,
+                                    start + t + exposed,
+                                );
+                            }
+                        });
+                    }
                     req.state = RequestState::Prefilling;
                     self.pending.push(Pending {
                         req,
@@ -238,6 +342,28 @@ impl VirtualEngine {
         self.metrics.comm_ns += comm.total_ns;
         self.metrics.comm_exposed_ns += comm.exposed_ns;
         self.metrics.comm_hidden_ns += comm.hidden_ns();
+        let emitting = record::active();
+        if emitting {
+            let exposed = comm.exposed_ns;
+            record::with(|r| {
+                r.span(
+                    format!("decode b{batch}"),
+                    SpanKind::Gemm,
+                    Track::Gpu,
+                    start,
+                    start + t,
+                );
+                if exposed > 0 {
+                    r.span(
+                        "tp allreduce".to_string(),
+                        SpanKind::ExposedComm,
+                        Track::Comm,
+                        start + t,
+                        start + t + exposed,
+                    );
+                }
+            });
+        }
         let now = self.now;
         let mut finished = Vec::new();
         for r in &mut self.running {
@@ -248,6 +374,28 @@ impl VirtualEngine {
             }
             if r.state == RequestState::Finished {
                 finished.push(r.id);
+                let span = RequestSpan {
+                    id: r.id,
+                    arrival_ns: r.arrival_ns,
+                    first_token_ns: r.first_token_ns.unwrap(),
+                    finish_ns: r.finished_ns.unwrap(),
+                    tokens: r.generated,
+                };
+                if let Some(tpot) = span.tpot_ns() {
+                    self.metrics.tpot_ns.push(tpot);
+                }
+                self.metrics.requests.push(span);
+                if emitting {
+                    record::with(|rec| {
+                        rec.span(
+                            format!("req{}", span.id),
+                            SpanKind::Request,
+                            Track::Requests,
+                            span.arrival_ns,
+                            span.finish_ns,
+                        );
+                    });
+                }
             }
         }
         self.running.retain(|r| r.state != RequestState::Finished);
@@ -297,6 +445,15 @@ mod tests {
         assert_eq!(m.cache_hits, 32);
         assert!(m.tps() > 0.0);
         assert_eq!(m.ttft_ns.len(), 32);
+        // One span record per finished request; 8 tokens each ⇒ every
+        // request contributes a per-token latency sample.
+        assert_eq!(m.requests.len(), 32);
+        assert_eq!(m.tpot_ns.len(), 32);
+        assert!(m
+            .requests
+            .iter()
+            .all(|r| r.finish_ns > r.first_token_ns && r.first_token_ns > r.arrival_ns));
+        assert!(m.tpot_pct_ms(99.0) >= m.tpot_pct_ms(50.0));
     }
 
     #[test]

@@ -1,11 +1,45 @@
-//! Serving metrics: TTFT distribution, throughput, utilization counters.
+//! Serving metrics: TTFT / per-token latency distributions (nearest-rank
+//! percentiles), throughput, utilization counters, per-request span
+//! records and cross-episode cache hit rates.
 
 use crate::util::stats;
+
+/// One finished request's lifetime on the serving timeline (ns) — the
+/// record behind the per-request Perfetto spans and the percentile
+/// distributions.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestSpan {
+    pub id: u64,
+    /// Submission instant.
+    pub arrival_ns: u64,
+    /// First token completion (TTFT = `first_token_ns - arrival_ns`).
+    pub first_token_ns: u64,
+    /// Last token completion.
+    pub finish_ns: u64,
+    /// Tokens generated.
+    pub tokens: u64,
+}
+
+impl RequestSpan {
+    /// Mean per-token latency over the decode phase (ns/token); `None`
+    /// for single-token requests (no inter-token interval exists).
+    pub fn tpot_ns(&self) -> Option<f64> {
+        if self.tokens < 2 {
+            return None;
+        }
+        Some((self.finish_ns - self.first_token_ns) as f64 / (self.tokens - 1) as f64)
+    }
+}
 
 /// Aggregated serving metrics (times in ns unless noted).
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     pub ttft_ns: Vec<f64>,
+    /// Per-request mean inter-token latency samples (ns/token), one per
+    /// finished request that generated ≥ 2 tokens.
+    pub tpot_ns: Vec<f64>,
+    /// One record per finished request, in finish order.
+    pub requests: Vec<RequestSpan>,
     pub finished: u64,
     pub tokens_out: u64,
     pub wall_ns: u64,
@@ -28,6 +62,12 @@ pub struct ServeMetrics {
     pub fetch_bytes: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Flat plan-cache (hit, miss) delta over this run
+    /// ([`crate::collectives::cache::stats`]).
+    pub plan_cache: (u64, u64),
+    /// Hierarchical rounds-cache (hit, miss) delta over this run
+    /// ([`crate::cluster::rounds_cache_stats`]).
+    pub rounds_cache: (u64, u64),
 }
 
 impl ServeMetrics {
@@ -44,9 +84,29 @@ impl ServeMetrics {
         stats::mean(&self.ttft_ns) / 1e6
     }
 
-    /// p99 TTFT in ms.
+    /// Nearest-rank TTFT percentile in ms.
+    pub fn ttft_pct_ms(&self, p: f64) -> f64 {
+        stats::percentile_nearest_rank(&self.ttft_ns, p) / 1e6
+    }
+
+    /// p50 TTFT in ms (nearest rank).
+    pub fn ttft_p50_ms(&self) -> f64 {
+        self.ttft_pct_ms(50.0)
+    }
+
+    /// p95 TTFT in ms (nearest rank).
+    pub fn ttft_p95_ms(&self) -> f64 {
+        self.ttft_pct_ms(95.0)
+    }
+
+    /// p99 TTFT in ms (nearest rank).
     pub fn ttft_p99_ms(&self) -> f64 {
-        stats::percentile(&self.ttft_ns, 99.0) / 1e6
+        self.ttft_pct_ms(99.0)
+    }
+
+    /// Nearest-rank per-token latency percentile in ms/token.
+    pub fn tpot_pct_ms(&self, p: f64) -> f64 {
+        stats::percentile_nearest_rank(&self.tpot_ns, p) / 1e6
     }
 
     /// Fraction of collective time hidden behind compute (0 when no
@@ -68,15 +128,33 @@ impl ServeMetrics {
 
     /// One-line summary.
     pub fn summary(&self) -> String {
-        format!(
-            "{} reqs, {} tok, {:.1} tok/s, ttft mean {:.1}ms p99 {:.1}ms, gpu util {:.0}%",
+        let mut s = format!(
+            "{} reqs, {} tok, {:.1} tok/s, ttft p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms \
+             (mean {:.1}ms), gpu util {:.0}%",
             self.finished,
             self.tokens_out,
             self.tps(),
-            self.ttft_mean_ms(),
+            self.ttft_p50_ms(),
+            self.ttft_p95_ms(),
             self.ttft_p99_ms(),
+            self.ttft_mean_ms(),
             self.gpu_util() * 100.0
-        )
+        );
+        if !self.tpot_ns.is_empty() {
+            s.push_str(&format!(
+                ", tpot p50 {:.2}ms p99 {:.2}ms",
+                self.tpot_pct_ms(50.0),
+                self.tpot_pct_ms(99.0)
+            ));
+        }
+        let (ph, pm) = self.plan_cache;
+        let (rh, rm) = self.rounds_cache;
+        if ph + pm + rh + rm > 0 {
+            s.push_str(&format!(
+                ", plan cache {ph}h/{pm}m, rounds cache {rh}h/{rm}m"
+            ));
+        }
+        s
     }
 }
 
@@ -95,6 +173,10 @@ mod tests {
         };
         assert!((m.tps() - 150.0).abs() < 1e-9);
         assert!((m.ttft_mean_ms() - 2.0).abs() < 1e-9);
+        // Nearest-rank on 3 samples: p50 → 2nd, p95/p99 → 3rd.
+        assert!((m.ttft_p50_ms() - 2.0).abs() < 1e-9);
+        assert!((m.ttft_p95_ms() - 3.0).abs() < 1e-9);
+        assert!((m.ttft_p99_ms() - 3.0).abs() < 1e-9);
     }
 
     #[test]
@@ -103,6 +185,8 @@ mod tests {
         assert_eq!(m.tps(), 0.0);
         assert_eq!(m.gpu_util(), 0.0);
         assert_eq!(m.comm_hidden_frac(), 0.0);
+        // Percentiles of an empty distribution are NaN, never a panic.
+        assert!(m.ttft_p99_ms().is_nan());
     }
 
     #[test]
@@ -115,5 +199,35 @@ mod tests {
         };
         assert_eq!(m.comm_exposed_ns + m.comm_hidden_ns, m.comm_ns);
         assert!((m.comm_hidden_frac() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_span_tpot() {
+        let r = RequestSpan {
+            id: 0,
+            arrival_ns: 100,
+            first_token_ns: 1_100,
+            finish_ns: 5_100,
+            tokens: 5,
+        };
+        assert_eq!(r.tpot_ns(), Some(1_000.0));
+        let single = RequestSpan { tokens: 1, ..r };
+        assert_eq!(single.tpot_ns(), None);
+    }
+
+    #[test]
+    fn summary_includes_percentiles_and_caches() {
+        let m = ServeMetrics {
+            ttft_ns: vec![1e6; 4],
+            tpot_ns: vec![5e5; 4],
+            plan_cache: (3, 1),
+            rounds_cache: (2, 2),
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("p50") && s.contains("p95") && s.contains("p99"));
+        assert!(s.contains("tpot"));
+        assert!(s.contains("plan cache 3h/1m"));
+        assert!(s.contains("rounds cache 2h/2m"));
     }
 }

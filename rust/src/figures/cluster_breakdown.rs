@@ -1,0 +1,175 @@
+//! Cluster-level latency breakdown: critical-path attribution of the
+//! hierarchical collectives (AG / AA / RS / AR) per message size — the
+//! multi-node analogue of Fig. 7's single-copy phase breakdown, produced
+//! by the [`crate::obs`] tracing subsystem instead of the DES phase
+//! counters. Streaming schedules are pinned (Pipelined for the barriered
+//! collectives, Overlapped for all-reduce) so rows compare sizes, not
+//! selector policy flips.
+
+use crate::cluster::{
+    run_hier, run_hier_ar, run_hier_rs, select_allreduce, select_cluster, ClusterKind,
+    ClusterTopology, HierRunOptions, InterSchedule,
+};
+use crate::obs::{attribute, record, Attribution, COMPONENTS};
+use crate::util::bytes::{fmt_size, KB, MB};
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// One (collective, size) cell: end-to-end latency and its nine-way
+/// critical-path partition.
+#[derive(Debug, Clone)]
+pub struct ClusterBreakdownRow {
+    pub kind: ClusterKind,
+    pub size: u64,
+    pub nodes: usize,
+    pub latency_ns: u64,
+    pub attr: Attribution,
+}
+
+/// Trace one hierarchical collective and attribute its latency. The
+/// attribution partitions the measured window exactly, so the parts sum
+/// to `latency_ns` (asserted here — this is the figure's invariant).
+pub fn measure(kind: ClusterKind, nodes: usize, size: u64) -> ClusterBreakdownRow {
+    let cluster = ClusterTopology::mi300x(nodes);
+    let size = cluster.pad_size(size);
+    let opts = HierRunOptions {
+        trace: true,
+        ..Default::default()
+    };
+    record::start();
+    let res = match kind {
+        ClusterKind::AllGather | ClusterKind::AllToAll => {
+            let mut choice = select_cluster(kind, &cluster, size);
+            if nodes > 1 {
+                choice.inter = InterSchedule::Pipelined;
+            }
+            run_hier(kind.transport(), choice, &cluster, size, &opts)
+        }
+        ClusterKind::ReduceScatter => {
+            let mut choice = select_cluster(kind, &cluster, size);
+            if nodes > 1 {
+                choice.inter = InterSchedule::Pipelined;
+            }
+            run_hier_rs(choice, &cluster, size, &opts)
+        }
+        ClusterKind::AllReduce => {
+            let (mut rs, mut ag) = select_allreduce(&cluster, size);
+            if nodes > 1 {
+                rs.inter = InterSchedule::Overlapped;
+                ag.inter = InterSchedule::Overlapped;
+            }
+            run_hier_ar(rs, ag, &cluster, size, &opts)
+        }
+    };
+    let trace = record::finish().expect("recorder installed above");
+    let attr = attribute(&trace);
+    assert_eq!(
+        attr.total(),
+        res.latency_ns,
+        "attribution must partition the collective latency exactly"
+    );
+    ClusterBreakdownRow {
+        kind,
+        size,
+        nodes,
+        latency_ns: res.latency_ns,
+        attr,
+    }
+}
+
+/// Default figure: all four collectives × a small size ladder on 2 nodes.
+pub fn fig_cluster_breakdown(sizes: Option<Vec<u64>>) -> Vec<ClusterBreakdownRow> {
+    let sizes = sizes.unwrap_or_else(|| vec![64 * KB, MB, 16 * MB]);
+    let mut rows = Vec::new();
+    for kind in [
+        ClusterKind::AllGather,
+        ClusterKind::AllToAll,
+        ClusterKind::ReduceScatter,
+        ClusterKind::AllReduce,
+    ] {
+        for &size in &sizes {
+            rows.push(measure(kind, 2, size));
+        }
+    }
+    rows
+}
+
+/// ASCII table: one row per (collective, size), one percentage column per
+/// attribution component.
+pub fn render(rows: &[ClusterBreakdownRow]) -> String {
+    let mut header = vec!["collective".to_string(), "size".to_string(), "us".to_string()];
+    header.extend(COMPONENTS.iter().map(|c| format!("{}%", c.name())));
+    let mut t = Table::new(header);
+    for r in rows {
+        let mut cells = vec![
+            r.kind.name().to_string(),
+            fmt_size(r.size),
+            format!("{:.1}", r.latency_ns as f64 / 1e3),
+        ];
+        for c in COMPONENTS {
+            let pct = if r.latency_ns == 0 {
+                0.0
+            } else {
+                r.attr.get(c) as f64 * 100.0 / r.latency_ns as f64
+            };
+            cells.push(format!("{pct:.1}"));
+        }
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// CSV: absolute per-component ns for plotting stacked bars.
+pub fn to_csv(rows: &[ClusterBreakdownRow]) -> Csv {
+    let mut header = vec![
+        "collective".to_string(),
+        "size_bytes".to_string(),
+        "nodes".to_string(),
+        "latency_ns".to_string(),
+    ];
+    header.extend(COMPONENTS.iter().map(|c| format!("{}_ns", c.name())));
+    let mut csv = Csv::new(header);
+    for r in rows {
+        let mut cells = vec![
+            r.kind.name().to_string(),
+            r.size.to_string(),
+            r.nodes.to_string(),
+            r.latency_ns.to_string(),
+        ];
+        cells.extend(COMPONENTS.iter().map(|&c| r.attr.get(c).to_string()));
+        csv.row(cells);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parts_sum_to_latency_for_every_kind() {
+        for kind in [
+            ClusterKind::AllGather,
+            ClusterKind::AllToAll,
+            ClusterKind::ReduceScatter,
+            ClusterKind::AllReduce,
+        ] {
+            // measure() asserts attr.total() == latency internally.
+            let row = measure(kind, 2, 256 * KB);
+            assert!(row.latency_ns > 0);
+            // A multi-node collective always has NIC time on the path.
+            assert!(row.attr.get(crate::obs::Component::Nic) > 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn render_and_csv_shapes() {
+        let rows = fig_cluster_breakdown(Some(vec![64 * KB]));
+        assert_eq!(rows.len(), 4);
+        let s = render(&rows);
+        assert!(s.contains("allgather") && s.contains("nic%"));
+        let csv = to_csv(&rows).render();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("collective,size_bytes,nodes,latency_ns,control_ns"));
+    }
+}

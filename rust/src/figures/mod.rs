@@ -4,6 +4,7 @@
 
 pub mod breakdown;
 pub mod cluster;
+pub mod cluster_breakdown;
 pub mod collectives;
 pub mod power;
 pub mod serving;

@@ -38,6 +38,13 @@
 //!   behind the producing layers' GEMMs
 //!   ([`coordinator::comm::CommCost`]; `ServeMetrics` splits `comm_ns`
 //!   into exposed + hidden).
+//! - [`obs`] — observability: cross-layer tracing threading one span
+//!   hierarchy from serving requests through engine steps, cluster
+//!   collectives and per-phase legs down to the simulator's DMA phases;
+//!   Chrome `trace_event` export for Perfetto (one track per simulated
+//!   resource) and interval-partition critical-path attribution whose
+//!   nine components provably sum to end-to-end latency. Zero-cost when
+//!   no recorder is installed (`dma-latte trace` turns it on).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts.
 //! - [`figures`] — one generator per paper figure/table.
 
@@ -49,6 +56,7 @@ pub mod figures;
 pub mod hip;
 pub mod kvcache;
 pub mod models;
+pub mod obs;
 pub mod rccl;
 pub mod runtime;
 pub mod sim;

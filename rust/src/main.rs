@@ -13,11 +13,20 @@
 //! dma-latte ttft      [--prefill 4096]             # Fig. 16
 //! dma-latte throughput [--requests 200] [--hit 1.0]# Fig. 17
 //! dma-latte selftest                               # quick invariants
+//! dma-latte trace     [--kind allreduce] [--nodes 2] [--size 1M]
+//!                     [--schedule auto|sequential|pipelined|overlapped]
+//!                     [--out results/]
+//! dma-latte trace     --serve [--requests 24] [--nodes 1] [--out results/]
+//!                     # cross-layer trace: Perfetto timeline JSON +
+//!                     # critical-path attribution table; prints a
+//!                     # greppable attribution-sum-check line
 //! ```
 
 use dma_latte::cli::Args;
 use dma_latte::collectives::CollectiveKind;
-use dma_latte::figures::{breakdown, cluster as figcl, collectives as figc, power, serving};
+use dma_latte::figures::{
+    breakdown, cluster as figcl, cluster_breakdown as figcb, collectives as figc, power, serving,
+};
 use dma_latte::models::{zoo, ALL_MODELS};
 use dma_latte::util::bytes::{parse_size, size_sweep, GB, KB, MB};
 
@@ -120,6 +129,13 @@ fn cmd_figures(args: &Args) {
     print!("{}", breakdown::render(&bd));
     breakdown::to_csv(&bd).write(format!("{out}/fig7_breakdown.csv")).unwrap();
 
+    println!("\n# Cluster latency breakdown — critical-path attribution (2 nodes)");
+    let cb = figcb::fig_cluster_breakdown(if quick { Some(vec![64 * KB, MB]) } else { None });
+    print!("{}", figcb::render(&cb));
+    figcb::to_csv(&cb)
+        .write(format!("{out}/cluster_breakdown.csv"))
+        .unwrap();
+
     println!("\n# Fig 15 — power");
     let pw = power::fig15(if quick {
         Some(vec![64 * KB, MB, 16 * MB, 64 * MB])
@@ -170,6 +186,136 @@ fn cmd_throughput(args: &Args) {
     print!("{}", serving::render_fig17(&rows));
 }
 
+fn cmd_trace(args: &Args) {
+    use dma_latte::cluster::{
+        run_hier, run_hier_ar, run_hier_rs, select_allreduce, select_cluster, ClusterChoice,
+        ClusterKind, ClusterTopology, HierRunOptions, InterSchedule,
+    };
+    use dma_latte::coordinator::{Request, ServeConfig, VirtualEngine};
+    use dma_latte::kvcache::fetch::FetchImpl;
+    use dma_latte::obs::{attribute, record, write_chrome_trace};
+
+    let out = args.get("out", "results");
+    std::fs::create_dir_all(&out).expect("mkdir results");
+
+    let (label, wall_ns, trace) = if args.has("serve") {
+        let n: u64 = args.get_num("requests", 24);
+        let nodes: usize = args.get_num("nodes", 1);
+        let prefill: u64 = args.get_num("prefill", 512);
+        let decode: u64 = args.get_num("decode", 16);
+        let model = &zoo::QWEN25_0_5B;
+        let mut cfg = ServeConfig::new(model, FetchImpl::DmaB2b);
+        cfg.num_nodes = nodes;
+        let layout = dma_latte::kvcache::BlockLayout::new(model, cfg.block_tokens);
+        cfg.gpu_blocks = layout.blocks_for(prefill + decode) * (cfg.max_batch as u64 + 8);
+        record::start();
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..n {
+            eng.submit(Request::new(i, prefill, decode, 0), true);
+        }
+        let m = eng.run_to_completion().clone();
+        let trace = record::finish().expect("recorder installed above");
+        println!(
+            "# serving trace — {} · {n} reqs · {nodes} node(s)",
+            model.name
+        );
+        println!("{}", m.summary());
+        ("serving".to_string(), m.wall_ns, trace)
+    } else {
+        let kind = match args.get("kind", "allreduce").as_str() {
+            "allgather" | "all-gather" | "ag" => ClusterKind::AllGather,
+            "alltoall" | "all-to-all" | "aa" => ClusterKind::AllToAll,
+            "reduce-scatter" | "reduce_scatter" | "reducescatter" | "rs" => {
+                ClusterKind::ReduceScatter
+            }
+            "allreduce" | "all-reduce" | "ar" => ClusterKind::AllReduce,
+            other => {
+                eprintln!("bad --kind {other:?} (need allgather|alltoall|reduce-scatter|allreduce)");
+                std::process::exit(2);
+            }
+        };
+        let nodes: usize = args.get_num("nodes", 2);
+        if !(1..=dma_latte::cluster::hier::MAX_NODES).contains(&nodes) {
+            eprintln!(
+                "bad --nodes {nodes} (need 1..={})",
+                dma_latte::cluster::hier::MAX_NODES
+            );
+            std::process::exit(2);
+        }
+        let schedule = match args.get("schedule", "auto").as_str() {
+            "auto" => None,
+            "sequential" | "seq" => Some(InterSchedule::Sequential),
+            "pipelined" | "pipe" => Some(InterSchedule::Pipelined),
+            "overlapped" | "overlap" | "ovl" => Some(InterSchedule::Overlapped),
+            other => {
+                eprintln!("bad --schedule {other:?} (need auto|sequential|pipelined|overlapped)");
+                std::process::exit(2);
+            }
+        };
+        let topo = ClusterTopology::mi300x(nodes);
+        let size = topo.pad_size(parse_size(&args.get("size", "1M")).expect("bad --size"));
+        let opts = HierRunOptions {
+            trace: true,
+            ..Default::default()
+        };
+        let force = |mut c: ClusterChoice| {
+            if nodes > 1 {
+                if let Some(s) = schedule {
+                    c.inter = s;
+                }
+            }
+            c
+        };
+        record::start();
+        let res = match kind {
+            ClusterKind::AllGather | ClusterKind::AllToAll => {
+                let choice = force(select_cluster(kind, &topo, size));
+                run_hier(kind.transport(), choice, &topo, size, &opts)
+            }
+            ClusterKind::ReduceScatter => {
+                let choice = force(select_cluster(kind, &topo, size));
+                run_hier_rs(choice, &topo, size, &opts)
+            }
+            ClusterKind::AllReduce => {
+                let (rs, ag) = select_allreduce(&topo, size);
+                run_hier_ar(force(rs), force(ag), &topo, size, &opts)
+            }
+        };
+        let trace = record::finish().expect("recorder installed above");
+        println!(
+            "# collective trace — {} · {} · {nodes} node(s) · {} ns",
+            kind.name(),
+            dma_latte::util::bytes::fmt_size(size),
+            res.latency_ns
+        );
+        (
+            format!("{}_{}n", kind.name(), nodes),
+            res.latency_ns,
+            trace,
+        )
+    };
+
+    let attr = attribute(&trace);
+    print!("{}", attr.render());
+    if attr.total() == wall_ns {
+        println!(
+            "attribution-sum-check: OK ({} ns attributed == {} ns end-to-end)",
+            attr.total(),
+            wall_ns
+        );
+    } else {
+        println!(
+            "attribution-sum-check: FAIL ({} ns attributed != {} ns end-to-end)",
+            attr.total(),
+            wall_ns
+        );
+        std::process::exit(1);
+    }
+    let path = format!("{out}/trace_{label}.json");
+    std::fs::write(&path, write_chrome_trace(&trace)).expect("write trace json");
+    println!("perfetto timeline: {path} ({} spans)", trace.spans.len());
+}
+
 fn cmd_selftest() {
     use dma_latte::collectives::{run_collective, select_variant, RunOptions};
     use dma_latte::sim::SimConfig;
@@ -205,12 +351,13 @@ fn main() {
         Some("ttft") => cmd_ttft(&args),
         Some("throughput") => cmd_throughput(&args),
         Some("selftest") => cmd_selftest(),
+        Some("trace") => cmd_trace(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!(
-                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|selftest> [--flags]"
+                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|trace|selftest> [--flags]"
             );
             std::process::exit(2);
         }

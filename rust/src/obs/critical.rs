@@ -1,0 +1,305 @@
+//! Critical-path attribution: partition every measured latency window into
+//! nine components that provably sum to the end-to-end latency.
+//!
+//! The algorithm is an interval-partition sweep, not a span-duration sum:
+//! spans legitimately overlap (a Copy span covers its Wire sub-span; a
+//! pipelined NIC leg overlaps the intra rounds), so summing durations
+//! over-counts. Instead, every elementary time segment of each
+//! [`SpanKind::Measure`](super::span::SpanKind::Measure) window is
+//! assigned to exactly one component — the highest-priority component
+//! with a span active over that segment, or [`Component::Idle`] when none
+//! is. A partition of the window sums to the window width by
+//! construction (integer ns, no rounding), which
+//! [`attribute`] asserts.
+
+use super::span::{ObsTrace, SpanKind};
+
+/// Attribution components, in display order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Component {
+    /// CPU command creation / framework API time.
+    Control,
+    /// Doorbell → engine wake/fetch.
+    Schedule,
+    /// DMA decode/setup/data movement (incl. the PCIe fetch track).
+    Copy,
+    /// Completion atomics + host observe.
+    Sync,
+    /// CU reduction passes.
+    CuReduce,
+    /// NIC port occupancy + message flight.
+    Nic,
+    /// Collective time the serving engine could not hide.
+    ExposedComm,
+    /// Serving-step GEMM compute.
+    Gemm,
+    /// No component active (trigger gaps, barrier waits).
+    Idle,
+}
+
+/// All components in display order ([`Attribution::parts`] indexing).
+pub const COMPONENTS: [Component; 9] = [
+    Component::Control,
+    Component::Schedule,
+    Component::Copy,
+    Component::Sync,
+    Component::CuReduce,
+    Component::Nic,
+    Component::ExposedComm,
+    Component::Gemm,
+    Component::Idle,
+];
+
+impl Component {
+    /// Short stable name (table headers, CSV columns, CI greps).
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::Control => "control",
+            Component::Schedule => "schedule",
+            Component::Copy => "copy",
+            Component::Sync => "sync",
+            Component::CuReduce => "cu-reduce",
+            Component::Nic => "nic",
+            Component::ExposedComm => "exposed-comm",
+            Component::Gemm => "gemm",
+            Component::Idle => "idle",
+        }
+    }
+
+    /// Index into [`Attribution::parts`].
+    pub fn index(self) -> usize {
+        COMPONENTS.iter().position(|&c| c == self).unwrap()
+    }
+
+    /// Sweep priority (lower rank wins a contended segment): compute
+    /// first — a segment where the GEMM runs is compute-bound no matter
+    /// what else overlaps — then data movement, then reduction/NIC, then
+    /// control-plane phases.
+    fn rank(self) -> u8 {
+        match self {
+            Component::Gemm => 0,
+            Component::ExposedComm => 1,
+            Component::Copy => 2,
+            Component::CuReduce => 3,
+            Component::Nic => 4,
+            Component::Schedule => 5,
+            Component::Sync => 6,
+            Component::Control => 7,
+            Component::Idle => 8,
+        }
+    }
+}
+
+/// Component a span kind contributes to (None for structural kinds —
+/// roots, measures, requests and rounds shape the tree, not the sweep).
+pub fn component_of(kind: SpanKind) -> Option<Component> {
+    match kind {
+        SpanKind::Control | SpanKind::HostApi => Some(Component::Control),
+        SpanKind::Schedule => Some(Component::Schedule),
+        SpanKind::Copy | SpanKind::Wire => Some(Component::Copy),
+        SpanKind::Sync => Some(Component::Sync),
+        SpanKind::CuReduce => Some(Component::CuReduce),
+        SpanKind::Nic | SpanKind::NicFlight => Some(Component::Nic),
+        SpanKind::Gemm => Some(Component::Gemm),
+        SpanKind::ExposedComm => Some(Component::ExposedComm),
+        SpanKind::Root | SpanKind::Measure | SpanKind::Request | SpanKind::Round => None,
+    }
+}
+
+/// Result of [`attribute`]: per-component ns over the measured windows.
+#[derive(Debug, Clone, Default)]
+pub struct Attribution {
+    /// Per-component ns in [`COMPONENTS`] order.
+    pub parts: [u64; 9],
+    /// Total measured window width — equals `parts.sum()` exactly.
+    pub window_ns: u64,
+}
+
+impl Attribution {
+    /// Sum of all components (== `window_ns` == end-to-end latency).
+    pub fn total(&self) -> u64 {
+        self.parts.iter().sum()
+    }
+
+    /// Component value by name-safe accessor.
+    pub fn get(&self, c: Component) -> u64 {
+        self.parts[c.index()]
+    }
+
+    /// Render the attribution as an aligned two-column table with
+    /// percentages of the measured window.
+    pub fn render(&self) -> String {
+        let mut t = crate::util::table::Table::new(vec!["component", "ns", "pct"]);
+        for c in COMPONENTS {
+            let v = self.get(c);
+            let pct = if self.window_ns == 0 {
+                0.0
+            } else {
+                100.0 * v as f64 / self.window_ns as f64
+            };
+            t.row(vec![c.name().to_string(), v.to_string(), format!("{pct:.1}%")]);
+        }
+        t.row(vec![
+            "total".to_string(),
+            self.total().to_string(),
+            "100.0%".to_string(),
+        ]);
+        t.render()
+    }
+}
+
+/// Attribute every measure window of `trace`; see the module docs.
+///
+/// Panics if the measure windows overlap (the recorder's frontier makes
+/// that impossible for recorder-built traces) or if the partition does not
+/// sum to the window width (internal invariant).
+pub fn attribute(trace: &ObsTrace) -> Attribution {
+    let mut windows: Vec<(u64, u64)> = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Measure)
+        .map(|s| (s.start_ns, s.end_ns))
+        .collect();
+    windows.sort_unstable();
+    for w in windows.windows(2) {
+        assert!(
+            w[1].0 >= w[0].1,
+            "measure windows overlap: {:?} vs {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    let mut out = Attribution::default();
+    for (ws, we) in windows {
+        sweep_window(trace, ws, we, &mut out.parts);
+        out.window_ns += we - ws;
+    }
+    assert_eq!(
+        out.total(),
+        out.window_ns,
+        "attribution must partition the measured windows exactly"
+    );
+    out
+}
+
+/// Sweep one window: event list over clipped component spans, each
+/// elementary segment charged to the highest-priority active component.
+fn sweep_window(trace: &ObsTrace, ws: u64, we: u64, parts: &mut [u64; 9]) {
+    // (time, component display index, +1/-1), clipped to [ws, we].
+    let mut evs: Vec<(u64, usize, i64)> = Vec::new();
+    for s in &trace.spans {
+        let Some(c) = component_of(s.kind) else {
+            continue;
+        };
+        let (a, b) = (s.start_ns.max(ws), s.end_ns.min(we));
+        if a < b {
+            evs.push((a, c.index(), 1));
+            evs.push((b, c.index(), -1));
+        }
+    }
+    evs.sort_unstable();
+    let mut counts = [0i64; 9];
+    let mut t = ws;
+    let mut i = 0;
+    while t < we {
+        while i < evs.len() && evs[i].0 <= t {
+            counts[evs[i].1] += evs[i].2;
+            i += 1;
+        }
+        let next = if i < evs.len() { evs[i].0.min(we) } else { we };
+        let winner = COMPONENTS
+            .iter()
+            .copied()
+            .filter(|c| *c != Component::Idle && counts[c.index()] > 0)
+            .min_by_key(|c| c.rank())
+            .unwrap_or(Component::Idle);
+        parts[winner.index()] += next - t;
+        t = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Track;
+
+    fn dma() -> Track {
+        Track::Dma {
+            node: 0,
+            gpu: 0,
+            engine: 0,
+        }
+    }
+
+    #[test]
+    fn partition_sums_to_window_with_gaps_and_overlap() {
+        let mut t = ObsTrace::default();
+        t.push(None, "m".into(), SpanKind::Measure, Track::Episode, 0, 100);
+        // Copy [10,40) overlapping Sync [30,60); gap [60,80); Control [80,90).
+        t.push(None, "c".into(), SpanKind::Copy, dma(), 10, 40);
+        t.push(None, "s".into(), SpanKind::Sync, dma(), 30, 60);
+        t.push(None, "ctl".into(), SpanKind::Control, Track::NodeHost { node: 0 }, 80, 90);
+        let a = attribute(&t);
+        assert_eq!(a.total(), 100);
+        assert_eq!(a.get(Component::Copy), 30); // [10,40) — copy outranks sync
+        assert_eq!(a.get(Component::Sync), 20); // [40,60)
+        assert_eq!(a.get(Component::Control), 10); // [80,90)
+        assert_eq!(a.get(Component::Idle), 40); // [0,10) + [60,80) + [90,100)
+    }
+
+    #[test]
+    fn spans_outside_the_window_are_clipped() {
+        let mut t = ObsTrace::default();
+        t.push(None, "m".into(), SpanKind::Measure, Track::Episode, 50, 150);
+        t.push(None, "c".into(), SpanKind::Copy, dma(), 0, 100);
+        let a = attribute(&t);
+        assert_eq!(a.get(Component::Copy), 50);
+        assert_eq!(a.get(Component::Idle), 50);
+        assert_eq!(a.total(), 100);
+    }
+
+    #[test]
+    fn two_windows_accumulate() {
+        let mut t = ObsTrace::default();
+        t.push(None, "m1".into(), SpanKind::Measure, Track::Episode, 0, 50);
+        t.push(None, "m2".into(), SpanKind::Measure, Track::Episode, 50, 120);
+        t.push(None, "c".into(), SpanKind::Copy, dma(), 0, 120);
+        let a = attribute(&t);
+        assert_eq!(a.get(Component::Copy), 120);
+        assert_eq!(a.total(), 120);
+        assert_eq!(a.window_ns, 120);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn overlapping_windows_rejected() {
+        let mut t = ObsTrace::default();
+        t.push(None, "m1".into(), SpanKind::Measure, Track::Episode, 0, 60);
+        t.push(None, "m2".into(), SpanKind::Measure, Track::Episode, 40, 100);
+        attribute(&t);
+    }
+
+    #[test]
+    fn gemm_outranks_everything() {
+        let mut t = ObsTrace::default();
+        t.push(None, "m".into(), SpanKind::Measure, Track::Episode, 0, 10);
+        t.push(None, "g".into(), SpanKind::Gemm, Track::Gpu, 0, 10);
+        t.push(None, "x".into(), SpanKind::ExposedComm, Track::Comm, 0, 10);
+        t.push(None, "c".into(), SpanKind::Copy, dma(), 0, 10);
+        let a = attribute(&t);
+        assert_eq!(a.get(Component::Gemm), 10);
+        assert_eq!(a.total(), 10);
+    }
+
+    #[test]
+    fn render_lists_all_components() {
+        let mut t = ObsTrace::default();
+        t.push(None, "m".into(), SpanKind::Measure, Track::Episode, 0, 10);
+        let a = attribute(&t);
+        let s = a.render();
+        for c in COMPONENTS {
+            assert!(s.contains(c.name()), "missing {}", c.name());
+        }
+        assert!(s.contains("total"));
+    }
+}

@@ -1,0 +1,156 @@
+//! Cross-layer tracing and critical-path attribution.
+//!
+//! One span hierarchy threads through the whole stack — serving request →
+//! engine step → cluster collective → per-phase legs (intra DMA rounds, CU
+//! reductions, NIC exchanges, fused AG chunks) → the single-node
+//! [`crate::sim::trace`] DMA phases:
+//!
+//! - [`span`] — the span/track model (stable parent/child IDs, one track
+//!   per simulated resource: DMA engines, engine wire, CUs, NIC ports,
+//!   hosts, serving GPU/comm/PCIe).
+//! - [`record`] — the thread-local scoped recorder and the episode
+//!   open/join/close protocol. Zero-cost when inactive: instrumented
+//!   layers check [`record::active`] once per episode.
+//! - [`perfetto`] — Chrome `trace_event` JSON writer
+//!   (Perfetto / `chrome://tracing` loadable, `dma-latte trace`).
+//! - [`critical`] — interval-partition attribution whose nine components
+//!   (control / schedule / copy / sync / cu-reduce / nic / exposed-comm /
+//!   gemm / idle) provably sum to the measured end-to-end latency.
+//!
+//! Typical use (what `dma-latte trace` does):
+//!
+//! ```
+//! use dma_latte::cluster::{self, ClusterTopology};
+//! use dma_latte::collectives::CollectiveKind;
+//! use dma_latte::obs::{critical, perfetto, record};
+//!
+//! let cluster_topo = ClusterTopology::mi300x(2);
+//! let choice = cluster::select_cluster(CollectiveKind::AllGather, &cluster_topo, 16 << 10);
+//! record::start();
+//! let res = cluster::run_hier(
+//!     CollectiveKind::AllGather,
+//!     choice,
+//!     &cluster_topo,
+//!     16 << 10,
+//!     &cluster::HierRunOptions { trace: true, ..Default::default() },
+//! );
+//! let trace = record::finish().unwrap();
+//! let attr = critical::attribute(&trace);
+//! assert_eq!(attr.total(), res.latency_ns);
+//! let json = perfetto::write_chrome_trace(&trace);
+//! assert!(json.contains("traceEvents"));
+//! ```
+
+pub mod critical;
+pub mod perfetto;
+pub mod record;
+pub mod span;
+
+pub use critical::{attribute, Attribution, Component, COMPONENTS};
+pub use perfetto::write_chrome_trace;
+pub use span::{ObsTrace, Span, SpanId, SpanKind, Track};
+
+use crate::sim::trace::{Phase, Trace};
+
+/// Lift one per-node DES trace ([`crate::sim::trace::Trace`]) into the
+/// recorder: Fig. 6 phase spans land on the node's per-resource tracks
+/// (host command creation on the rank host, engine wake/copy/fence on the
+/// engine track, host observes on the node host, wire sub-spans on the
+/// exclusive wire track). Sim timestamps are already absolute within the
+/// episode timeline, so they pass through the recorder's offset untouched.
+pub fn lift_sim_trace(rec: &mut record::Recorder, node: u8, trace: &Trace) {
+    for s in &trace.spans {
+        let (kind, track) = match (s.phase, s.engine) {
+            (Phase::Control, Some(e)) => (SpanKind::Control, Track::RankHost { node, gpu: e.gpu }),
+            (Phase::Control, None) => (SpanKind::Control, Track::NodeHost { node }),
+            (Phase::Schedule, Some(e)) => (
+                SpanKind::Schedule,
+                Track::Dma {
+                    node,
+                    gpu: e.gpu,
+                    engine: e.idx,
+                },
+            ),
+            (Phase::Schedule, None) => (SpanKind::Schedule, Track::NodeHost { node }),
+            (Phase::Copy, Some(e)) => (
+                SpanKind::Copy,
+                Track::Dma {
+                    node,
+                    gpu: e.gpu,
+                    engine: e.idx,
+                },
+            ),
+            (Phase::Copy, None) => (SpanKind::Copy, Track::NodeHost { node }),
+            (Phase::Sync, Some(e)) => (
+                SpanKind::Sync,
+                Track::Dma {
+                    node,
+                    gpu: e.gpu,
+                    engine: e.idx,
+                },
+            ),
+            (Phase::Sync, None) => (SpanKind::Sync, Track::NodeHost { node }),
+        };
+        let name = match kind {
+            SpanKind::Copy => format!("copy#{}", s.cmd_seq),
+            _ => kind.name().to_string(),
+        };
+        rec.span(name, kind, track, s.start, s.end);
+    }
+    for w in &trace.wire {
+        rec.span(
+            format!("wire#{}", w.cmd_seq),
+            SpanKind::Wire,
+            Track::DmaWire {
+                node,
+                gpu: w.engine.gpu,
+                engine: w.engine.idx,
+            },
+            w.start,
+            w.end,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EngineId;
+
+    #[test]
+    fn lift_maps_phases_to_tracks() {
+        let mut t = Trace::default();
+        let e = EngineId { gpu: 3, idx: 1 };
+        t.record(Some(e), 0, Phase::Control, 0, 10);
+        t.record(Some(e), 0, Phase::Schedule, 10, 12);
+        t.record(Some(e), 0, Phase::Copy, 12, 40);
+        t.record(None, 0, Phase::Sync, 40, 45);
+        t.record_wire(e, 0, 20, 40);
+        let mut rec = record::Recorder::default();
+        rec.offset_ns = 100;
+        lift_sim_trace(&mut rec, 2, &t);
+        let spans = &rec.trace.spans;
+        assert_eq!(spans.len(), 5);
+        assert_eq!(spans[0].track, Track::RankHost { node: 2, gpu: 3 });
+        assert_eq!(
+            spans[2].track,
+            Track::Dma {
+                node: 2,
+                gpu: 3,
+                engine: 1
+            }
+        );
+        assert_eq!(spans[3].track, Track::NodeHost { node: 2 });
+        assert_eq!(
+            spans[4].track,
+            Track::DmaWire {
+                node: 2,
+                gpu: 3,
+                engine: 1
+            }
+        );
+        // Offset applied to lifted spans.
+        assert_eq!((spans[0].start_ns, spans[0].end_ns), (100, 110));
+        assert_eq!(spans[4].kind, SpanKind::Wire);
+    }
+}

@@ -1,0 +1,158 @@
+//! Chrome `trace_event` JSON writer (Perfetto / `chrome://tracing`).
+//!
+//! Emits the object-format document `{"displayTimeUnit":"ns",
+//! "traceEvents":[...]}` with:
+//!
+//! - two `"M"` (metadata) events per distinct track — a `process_name`
+//!   for its pid and a `thread_name` for its (pid, tid) — so the UI
+//!   groups tracks by node and labels every resource;
+//! - one `"X"` (complete) event per span. `ts`/`dur` are microseconds;
+//!   they are written with three decimals, so integer-ns instants
+//!   round-trip exactly (`(ts_us * 1000).round() == start_ns`).
+//!
+//! The output parses with [`crate::util::json`] (schema-checked plus
+//! golden-tested in `tests/obs_trace.rs`).
+
+use super::span::ObsTrace;
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Nanoseconds → trace_event microseconds with exact ns resolution.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Serialize `trace` as a Chrome trace_event JSON document.
+pub fn write_chrome_trace(trace: &ObsTrace) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |out: &mut String, ev: String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str("  ");
+        out.push_str(&ev);
+    };
+    for tr in trace.tracks() {
+        push(
+            &mut out,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{},\"name\":\"process_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                tr.pid(),
+                esc(&tr.process_label())
+            ),
+        );
+        push(
+            &mut out,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{},\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                tr.pid(),
+                tr.tid(),
+                esc(&tr.label())
+            ),
+        );
+    }
+    for s in &trace.spans {
+        let parent = s
+            .parent
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| "null".to_string());
+        push(
+            &mut out,
+            format!(
+                "{{\"ph\":\"X\",\"name\":\"{}\",\"cat\":\"{}\",\"pid\":{},\"tid\":{},\
+                 \"ts\":{},\"dur\":{},\
+                 \"args\":{{\"kind\":\"{}\",\"id\":{},\"parent\":{}}}}}",
+                esc(&s.name),
+                s.kind.name(),
+                s.track.pid(),
+                s.track.tid(),
+                us(s.start_ns),
+                us(s.dur_ns()),
+                s.kind.name(),
+                s.id,
+                parent
+            ),
+        );
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{SpanKind, Track};
+    use crate::util::json::Json;
+
+    #[test]
+    fn us_has_exact_ns_resolution() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(1), "0.001");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn document_parses_and_counts_match() {
+        let mut t = ObsTrace::default();
+        let r = t.push(None, "root".into(), SpanKind::Root, Track::Episode, 0, 100);
+        t.push(
+            Some(r),
+            "copy \"q\"".into(),
+            SpanKind::Copy,
+            Track::Dma {
+                node: 0,
+                gpu: 1,
+                engine: 2,
+            },
+            10,
+            60,
+        );
+        let doc = write_chrome_trace(&t);
+        let j = Json::parse(&doc).expect("emitted trace must parse");
+        assert_eq!(j.get("displayTimeUnit").unwrap().str(), Some("ns"));
+        let evs = j.get("traceEvents").unwrap().arr().unwrap();
+        // 2 distinct tracks → 4 M events, plus 2 X events.
+        assert_eq!(evs.len(), 6);
+        let xs: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        // ns-exact round trip through the µs encoding.
+        let copy = xs[1];
+        let ts = copy.get("ts").unwrap().num().unwrap();
+        let dur = copy.get("dur").unwrap().num().unwrap();
+        assert_eq!((ts * 1000.0).round() as u64, 10);
+        assert_eq!((dur * 1000.0).round() as u64, 50);
+        assert_eq!(copy.get("args").unwrap().get("parent").unwrap().u64(), Some(0));
+        assert_eq!(copy.get("name").unwrap().str(), Some("copy \"q\""));
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid_json() {
+        let doc = write_chrome_trace(&ObsTrace::default());
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("traceEvents").unwrap().arr().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Scoped span recorder.
+//!
+//! Tracing is opt-in per call tree: [`start`] installs a thread-local
+//! recorder, the instrumented layers emit spans only when one is active
+//! (checked once per episode via [`active`], never per DES event), and
+//! [`finish`] removes it and returns the completed [`ObsTrace`]. No
+//! function signature in the `sim`/`cluster`/`coordinator` layers changes,
+//! and with no recorder installed every instrumentation site reduces to
+//! one thread-local load — the determinism/bit-identity guarantees of the
+//! untraced paths are untouched.
+//!
+//! ## Episode protocol
+//!
+//! The first layer to call [`Recorder::open_episode`] becomes the episode
+//! *owner* (an all-reduce owns the episode its reduce-scatter joins).
+//! Every emitting layer parents its spans to the episode root; a layer
+//! that measured a latency window appends a [`SpanKind::Measure`] child
+//! via [`Recorder::measure`] — the attribution denominators. Only the
+//! owner calls [`Recorder::close_episode`], which re-parents contained
+//! spans under their measure window and sizes the root. Sequential phase
+//! compositions call [`Recorder::rebase_to_end`] between phases so each
+//! phase's private `t0`-anchored timeline lands after the previous one.
+
+use std::cell::RefCell;
+
+use super::span::{ObsTrace, SpanId, SpanKind, Track};
+
+/// Open-episode bookkeeping handed to the owner.
+#[derive(Debug, Clone, Copy)]
+pub struct Episode {
+    /// The episode's root span.
+    pub root: SpanId,
+    /// Absolute ns at which the episode opened (offset at open time).
+    pub base_ns: u64,
+}
+
+/// Thread-local trace builder; see the module docs for the protocol.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    /// The trace under construction.
+    pub trace: ObsTrace,
+    /// Offset added to every emitted span (phase stacking).
+    pub offset_ns: u64,
+    episode: Option<Episode>,
+    /// End of the last measure window — windows never overlap.
+    frontier_ns: u64,
+}
+
+impl Recorder {
+    /// Open (or join) the current episode. Returns the episode and whether
+    /// the caller is the owner (responsible for closing it).
+    pub fn open_episode(&mut self, name: &str) -> (Episode, bool) {
+        if let Some(ep) = self.episode {
+            return (ep, false);
+        }
+        let base = self.offset_ns;
+        let root = self
+            .trace
+            .push(None, name.to_string(), SpanKind::Root, Track::Episode, base, base);
+        let ep = Episode { root, base_ns: base };
+        self.episode = Some(ep);
+        self.frontier_ns = base;
+        (ep, true)
+    }
+
+    /// Emit one span at `offset + [start, end)`, parented to the episode
+    /// root (or free-standing when no episode is open).
+    pub fn span(
+        &mut self,
+        name: String,
+        kind: SpanKind,
+        track: Track,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> SpanId {
+        let parent = self.episode.map(|e| e.root);
+        self.trace.push(
+            parent,
+            name,
+            kind,
+            track,
+            self.offset_ns + start_ns,
+            self.offset_ns + end_ns,
+        )
+    }
+
+    /// Append a measure (latency) window `offset + [start, end)` — one
+    /// attribution denominator. If the proposed window would overlap the
+    /// previous one it is shifted right, preserving its width, so the
+    /// windows always partition cleanly (their widths are what must sum to
+    /// the composite latency).
+    pub fn measure(&mut self, name: &str, start_ns: u64, end_ns: u64) -> SpanId {
+        let width = end_ns - start_ns;
+        let start = (self.offset_ns + start_ns).max(self.frontier_ns);
+        let end = start + width;
+        self.frontier_ns = end;
+        let parent = self.episode.map(|e| e.root);
+        self.trace
+            .push(parent, name.to_string(), SpanKind::Measure, Track::Episode, start, end)
+    }
+
+    /// Close the episode: size the root over everything recorded since it
+    /// opened, and re-parent each root-child contained in a measure window
+    /// to that window (building the root → measure → span hierarchy).
+    pub fn close_episode(&mut self) {
+        let Some(ep) = self.episode.take() else {
+            return;
+        };
+        let root_end = self
+            .trace
+            .spans
+            .iter()
+            .skip(ep.root as usize)
+            .map(|s| s.end_ns)
+            .max()
+            .unwrap_or(ep.base_ns);
+        self.trace.set_interval(ep.root, ep.base_ns, root_end);
+        let measures: Vec<(SpanId, u64, u64)> = self
+            .trace
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Measure && s.parent == Some(ep.root))
+            .map(|s| (s.id, s.start_ns, s.end_ns))
+            .collect();
+        for s in &mut self.trace.spans {
+            if s.parent != Some(ep.root) || s.kind == SpanKind::Measure {
+                continue;
+            }
+            if let Some(&(m, _, _)) = measures
+                .iter()
+                .find(|&&(_, ms, me)| s.start_ns >= ms && s.end_ns <= me)
+            {
+                s.parent = Some(m);
+            }
+        }
+        self.offset_ns = self.trace.max_end_ns();
+    }
+
+    /// Advance the emission offset past everything recorded so far: the
+    /// next phase's `t0`-anchored spans stack strictly after this phase's
+    /// (sequential all-reduce composing reduce-scatter then all-gather).
+    pub fn rebase_to_end(&mut self) {
+        self.offset_ns = self.offset_ns.max(self.trace.max_end_ns());
+    }
+}
+
+thread_local! {
+    static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Install a fresh recorder on this thread (replacing any active one).
+pub fn start() {
+    RECORDER.with(|r| *r.borrow_mut() = Some(Recorder::default()));
+}
+
+/// True when a recorder is installed — THE zero-cost gate: instrumented
+/// layers check this once per episode and skip all span work when false.
+pub fn active() -> bool {
+    RECORDER.with(|r| r.borrow().is_some())
+}
+
+/// Remove the recorder and return its trace (None when none is active).
+pub fn finish() -> Option<ObsTrace> {
+    RECORDER.with(|r| r.borrow_mut().take()).map(|rec| rec.trace)
+}
+
+/// Run `f` against the active recorder (no-op returning None when
+/// inactive). Never nest `with` calls — the recorder is RefCell-borrowed
+/// for the duration of `f`.
+pub fn with<R>(f: impl FnOnce(&mut Recorder) -> R) -> Option<R> {
+    RECORDER.with(|r| r.borrow_mut().as_mut().map(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_is_a_noop() {
+        assert!(!active());
+        assert!(with(|_| ()).is_none());
+        assert!(finish().is_none());
+    }
+
+    #[test]
+    fn episode_open_join_close() {
+        start();
+        let (ep, owned) = with(|r| r.open_episode("collective:allreduce")).unwrap();
+        assert!(owned);
+        let (ep2, owned2) = with(|r| r.open_episode("collective:reduce-scatter")).unwrap();
+        assert!(!owned2, "second open joins, never owns");
+        assert_eq!(ep.root, ep2.root);
+        with(|r| {
+            r.span(
+                "copy".into(),
+                SpanKind::Copy,
+                Track::Dma {
+                    node: 0,
+                    gpu: 0,
+                    engine: 0,
+                },
+                100,
+                300,
+            );
+            r.measure("measure", 50, 400);
+            r.close_episode();
+        });
+        let t = finish().unwrap();
+        assert!(!active());
+        // Root sized over everything; copy re-parented under the measure.
+        let root = &t.spans[ep.root as usize];
+        assert_eq!((root.start_ns, root.end_ns), (0, 450));
+        let copy = t.spans.iter().find(|s| s.kind == SpanKind::Copy).unwrap();
+        let m = t.spans.iter().find(|s| s.kind == SpanKind::Measure).unwrap();
+        assert_eq!(copy.parent, Some(m.id));
+        assert_eq!(m.parent, Some(root.id));
+    }
+
+    #[test]
+    fn measures_never_overlap_and_keep_width() {
+        start();
+        with(|r| {
+            r.open_episode("e");
+            r.measure("a", 0, 100);
+            // Proposed [60, 160) overlaps [0, 100) → shifted to [100, 200).
+            r.measure("b", 60, 160);
+            r.close_episode();
+        });
+        let t = finish().unwrap();
+        let ms: Vec<_> = t
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Measure)
+            .collect();
+        assert_eq!(ms.len(), 2);
+        assert_eq!((ms[0].start_ns, ms[0].end_ns), (0, 100));
+        assert_eq!((ms[1].start_ns, ms[1].end_ns), (100, 200));
+    }
+
+    #[test]
+    fn rebase_stacks_phases() {
+        start();
+        with(|r| {
+            r.open_episode("ar");
+            r.span(
+                "rs-copy".into(),
+                SpanKind::Copy,
+                Track::Dma {
+                    node: 0,
+                    gpu: 0,
+                    engine: 0,
+                },
+                0,
+                500,
+            );
+            r.measure("rs", 0, 500);
+            r.rebase_to_end();
+            // Phase 2 re-anchors at its own t0=0; lands at 500 absolute.
+            r.span(
+                "ag-copy".into(),
+                SpanKind::Copy,
+                Track::Dma {
+                    node: 0,
+                    gpu: 0,
+                    engine: 0,
+                },
+                0,
+                300,
+            );
+            r.measure("ag", 0, 300);
+            r.close_episode();
+        });
+        let t = finish().unwrap();
+        let ag = t.spans.iter().find(|s| s.name == "ag-copy").unwrap();
+        assert_eq!((ag.start_ns, ag.end_ns), (500, 800));
+        let widths: u64 = t
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Measure)
+            .map(|s| s.dur_ns())
+            .sum();
+        assert_eq!(widths, 800);
+    }
+}

@@ -1,0 +1,351 @@
+//! Span model: one interval tree per traced episode, with stable IDs and a
+//! track (simulated resource) per span. The track determines the
+//! Perfetto process/thread placement ([`Track::pid`] / [`Track::tid`]) and
+//! whether overlapping spans on it indicate a model bug
+//! ([`Track::exclusive`]).
+
+/// Stable span identifier, assigned in push order (monotonic within one
+/// [`ObsTrace`]). At push time a parent's ID is always smaller than its
+/// child's; closing an episode may re-parent earlier spans under a
+/// later-pushed measure window, so don't rely on ordering after that.
+pub type SpanId = u32;
+
+/// What a span represents — drives the critical-path component mapping
+/// ([`crate::obs::critical::component_of`]) and the Perfetto `args.kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Episode root (whole collective / whole serving run), structural.
+    Root,
+    /// Measured latency window (attribution denominator), structural.
+    Measure,
+    /// One serving request's arrival → completion window, structural.
+    Request,
+    /// One intra-node round grouping, structural.
+    Round,
+    /// CPU command creation + enqueue (paper Fig. 6 Control).
+    Control,
+    /// Doorbell → engine wake/fetch (Fig. 6 Schedule).
+    Schedule,
+    /// DMA decode + setup + data movement (Fig. 6 Copy).
+    Copy,
+    /// Completion atomics + host observe (Fig. 6 Sync).
+    Sync,
+    /// Bus-occupancy sub-window of a Copy (engine data path busy).
+    Wire,
+    /// CU reduction pass (hierarchical RS/AR folds).
+    CuReduce,
+    /// NIC port occupancy (post + payload serialization).
+    Nic,
+    /// NIC message in flight (propagation; pipelines across messages).
+    NicFlight,
+    /// Serving-step GEMM compute.
+    Gemm,
+    /// Collective time the serving engine could not hide behind compute.
+    ExposedComm,
+    /// Framework / runtime API time on the scheduler host.
+    HostApi,
+}
+
+impl SpanKind {
+    /// Short stable name (Perfetto `args.kind`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Root => "root",
+            SpanKind::Measure => "measure",
+            SpanKind::Request => "request",
+            SpanKind::Round => "round",
+            SpanKind::Control => "control",
+            SpanKind::Schedule => "schedule",
+            SpanKind::Copy => "copy",
+            SpanKind::Sync => "sync",
+            SpanKind::Wire => "wire",
+            SpanKind::CuReduce => "cu-reduce",
+            SpanKind::Nic => "nic",
+            SpanKind::NicFlight => "nic-flight",
+            SpanKind::Gemm => "gemm",
+            SpanKind::ExposedComm => "exposed-comm",
+            SpanKind::HostApi => "host-api",
+        }
+    }
+}
+
+/// The simulated resource a span occupies — one Perfetto track each.
+///
+/// Process grouping: pid 0 holds the episode/measure tracks, pid 1 the
+/// serving-engine tracks, pid `10 + k` the per-node cluster tracks of node
+/// `k` (so multi-node timelines group by node in the Perfetto UI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Track {
+    /// Episode root + measure windows.
+    Episode,
+    /// Serving scheduler host (admission, framework API).
+    SchedHost,
+    /// Serving GPU compute (step GEMMs).
+    Gpu,
+    /// Serving collective-communication track (exposed remainders).
+    Comm,
+    /// Serving PCIe/fetch track (KV-cache DMA).
+    Pcie,
+    /// Per-request lifetime spans.
+    Requests,
+    /// Per-rank host thread of node `node`, GPU `gpu` (command creation).
+    RankHost { node: u8, gpu: u8 },
+    /// Node-level host thread (trigger writes, completion observes).
+    NodeHost { node: u8 },
+    /// DMA engine front-end + copy track.
+    Dma { node: u8, gpu: u8, engine: u8 },
+    /// DMA engine wire (bus-occupancy) track — exclusive by construction.
+    DmaWire { node: u8, gpu: u8, engine: u8 },
+    /// CU reduction track of node `node`.
+    Cu { node: u8 },
+    /// NIC port of node `node` — exclusive (posts+payloads serialize).
+    Nic { node: u8 },
+    /// NIC in-flight track of the *destination* node (flights pipeline, so
+    /// overlap here is expected).
+    NicFlight { node: u8 },
+}
+
+impl Track {
+    /// Perfetto process id.
+    pub fn pid(self) -> u64 {
+        match self {
+            Track::Episode => 0,
+            Track::SchedHost | Track::Gpu | Track::Comm | Track::Pcie | Track::Requests => 1,
+            Track::RankHost { node, .. }
+            | Track::NodeHost { node }
+            | Track::Dma { node, .. }
+            | Track::DmaWire { node, .. }
+            | Track::Cu { node }
+            | Track::Nic { node }
+            | Track::NicFlight { node } => 10 + node as u64,
+        }
+    }
+
+    /// Perfetto thread id (unique within the track's pid).
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Episode => 0,
+            Track::SchedHost => 1,
+            Track::Gpu => 2,
+            Track::Comm => 3,
+            Track::Pcie => 4,
+            Track::Requests => 5,
+            Track::NodeHost { .. } => 1,
+            Track::Cu { .. } => 2,
+            Track::Nic { .. } => 3,
+            Track::NicFlight { .. } => 4,
+            Track::RankHost { gpu, .. } => 10 + gpu as u64,
+            Track::Dma { gpu, engine, .. } => 1000 + gpu as u64 * 100 + engine as u64 * 2,
+            Track::DmaWire { gpu, engine, .. } => 1001 + gpu as u64 * 100 + engine as u64 * 2,
+        }
+    }
+
+    /// Human name for the Perfetto `thread_name` metadata event.
+    pub fn label(self) -> String {
+        match self {
+            Track::Episode => "episode".into(),
+            Track::SchedHost => "sched.host".into(),
+            Track::Gpu => "gpu.compute".into(),
+            Track::Comm => "comm.exposed".into(),
+            Track::Pcie => "pcie.fetch".into(),
+            Track::Requests => "requests".into(),
+            Track::RankHost { node, gpu } => format!("node{node}.gpu{gpu}.host"),
+            Track::NodeHost { node } => format!("node{node}.host"),
+            Track::Dma { node, gpu, engine } => format!("node{node}.gpu{gpu}.sdma{engine}"),
+            Track::DmaWire { node, gpu, engine } => {
+                format!("node{node}.gpu{gpu}.sdma{engine}.wire")
+            }
+            Track::Cu { node } => format!("node{node}.cu"),
+            Track::Nic { node } => format!("node{node}.nic"),
+            Track::NicFlight { node } => format!("node{node}.nic.flight"),
+        }
+    }
+
+    /// Human name for the Perfetto `process_name` metadata event.
+    pub fn process_label(self) -> String {
+        match self.pid() {
+            0 => "episodes".into(),
+            1 => "serving".into(),
+            p => format!("node{}", p - 10),
+        }
+    }
+
+    /// Tracks on which overlapping spans would indicate a broken model:
+    /// the NIC port serializes posts+payloads, and an engine's data path
+    /// chains through `data_free_at`. (Hosts, CUs and flight tracks
+    /// legitimately carry concurrent work.)
+    pub fn exclusive(self) -> bool {
+        matches!(self, Track::Nic { .. } | Track::DmaWire { .. })
+    }
+}
+
+/// One recorded span on the absolute episode timeline (ns).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: SpanId,
+    pub parent: Option<SpanId>,
+    pub name: String,
+    pub kind: SpanKind,
+    pub track: Track,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Span {
+    /// Span duration in ns.
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+/// A completed trace: flat span list with tree structure via parent IDs.
+#[derive(Debug, Clone, Default)]
+pub struct ObsTrace {
+    pub spans: Vec<Span>,
+}
+
+impl ObsTrace {
+    /// Append a span; IDs are assigned in push order so `parent < id`
+    /// always holds (debug-asserted).
+    pub fn push(
+        &mut self,
+        parent: Option<SpanId>,
+        name: String,
+        kind: SpanKind,
+        track: Track,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> SpanId {
+        let id = self.spans.len() as SpanId;
+        debug_assert!(end_ns >= start_ns, "span '{name}' ends before it starts");
+        debug_assert!(parent.map_or(true, |p| p < id), "parent must precede child");
+        self.spans.push(Span {
+            id,
+            parent,
+            name,
+            kind,
+            track,
+            start_ns,
+            end_ns,
+        });
+        id
+    }
+
+    /// Rewrite a structural span's interval once it is known (episode
+    /// roots and measure windows are opened before their extent exists).
+    pub fn set_interval(&mut self, id: SpanId, start_ns: u64, end_ns: u64) {
+        debug_assert!(end_ns >= start_ns);
+        let s = &mut self.spans[id as usize];
+        s.start_ns = start_ns;
+        s.end_ns = end_ns;
+    }
+
+    /// Distinct tracks in first-seen order (Perfetto metadata emission).
+    pub fn tracks(&self) -> Vec<Track> {
+        let mut seen = Vec::new();
+        for s in &self.spans {
+            if !seen.contains(&s.track) {
+                seen.push(s.track);
+            }
+        }
+        seen
+    }
+
+    /// All spans on `track`, in recorded order.
+    pub fn on_track(&self, track: Track) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.track == track)
+    }
+
+    /// Latest span end (0 for an empty trace).
+    pub fn max_end_ns(&self) -> u64 {
+        self.spans.iter().map(|s| s.end_ns).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_assigns_monotonic_ids() {
+        let mut t = ObsTrace::default();
+        let a = t.push(None, "root".into(), SpanKind::Root, Track::Episode, 0, 0);
+        let b = t.push(
+            Some(a),
+            "copy".into(),
+            SpanKind::Copy,
+            Track::Dma {
+                node: 0,
+                gpu: 1,
+                engine: 0,
+            },
+            5,
+            9,
+        );
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(t.spans[b as usize].parent, Some(a));
+        assert_eq!(t.spans[b as usize].dur_ns(), 4);
+    }
+
+    #[test]
+    fn track_ids_are_unique_per_pid() {
+        let node_tracks = [
+            Track::NodeHost { node: 2 },
+            Track::Cu { node: 2 },
+            Track::Nic { node: 2 },
+            Track::NicFlight { node: 2 },
+            Track::RankHost { node: 2, gpu: 0 },
+            Track::RankHost { node: 2, gpu: 7 },
+            Track::Dma {
+                node: 2,
+                gpu: 0,
+                engine: 0,
+            },
+            Track::DmaWire {
+                node: 2,
+                gpu: 0,
+                engine: 0,
+            },
+            Track::Dma {
+                node: 2,
+                gpu: 3,
+                engine: 1,
+            },
+        ];
+        let mut tids: Vec<u64> = node_tracks.iter().map(|t| t.tid()).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), node_tracks.len(), "tid collision within pid");
+        assert!(node_tracks.iter().all(|t| t.pid() == 12));
+    }
+
+    #[test]
+    fn exclusivity_flags() {
+        assert!(Track::Nic { node: 0 }.exclusive());
+        assert!(Track::DmaWire {
+            node: 0,
+            gpu: 0,
+            engine: 0
+        }
+        .exclusive());
+        assert!(!Track::NicFlight { node: 0 }.exclusive());
+        assert!(!Track::Cu { node: 0 }.exclusive());
+        assert!(!Track::Dma {
+            node: 0,
+            gpu: 0,
+            engine: 0
+        }
+        .exclusive());
+    }
+
+    #[test]
+    fn tracks_first_seen_order() {
+        let mut t = ObsTrace::default();
+        t.push(None, "r".into(), SpanKind::Root, Track::Episode, 0, 10);
+        t.push(None, "n".into(), SpanKind::Nic, Track::Nic { node: 1 }, 0, 5);
+        t.push(None, "n2".into(), SpanKind::Nic, Track::Nic { node: 1 }, 5, 9);
+        assert_eq!(t.tracks(), vec![Track::Episode, Track::Nic { node: 1 }]);
+        assert_eq!(t.on_track(Track::Nic { node: 1 }).count(), 2);
+        assert_eq!(t.max_end_ns(), 10);
+    }
+}

@@ -608,6 +608,9 @@ impl Sim {
         if self.cfg.trace {
             self.trace
                 .record(Some(eid), seq, Phase::Copy, decode_start, done);
+            // Wire sub-span: bus occupancy only (Copy minus decode/setup),
+            // consumed by the obs layer's per-engine exclusive wire track.
+            self.trace.record_wire(eid, seq, data_start, done);
         }
         self.events.push(decode_end, Event::EngineAdvance(eid));
     }

@@ -28,20 +28,48 @@ pub struct Span {
     pub end: SimTime,
 }
 
+/// The wire (data-movement) portion of a Copy span: from the moment the
+/// engine starts pushing bytes (`data_start`) to completion. The Copy span
+/// itself starts at decode, so its prefix is decode + setup, not bus time.
+/// The observability layer ([`crate::obs`]) uses these to render a
+/// per-engine exclusive "wire" track — consecutive wire spans on one engine
+/// never overlap because the engine's data path is serialized.
+#[derive(Debug, Clone)]
+pub struct WireSpan {
+    pub engine: EngineId,
+    pub cmd_seq: u64,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
 /// Phase-span recorder (enabled per `SimConfig::trace`).
 #[derive(Debug, Default)]
 pub struct Trace {
     pub spans: Vec<Span>,
     /// Timestamp-command slots (engine-recorded times).
     pub stamps: Vec<(u32, SimTime)>,
+    /// Wire sub-spans of data moves (subset of the Copy spans' windows).
+    pub wire: Vec<WireSpan>,
 }
 
 impl Trace {
-    /// Drop all recorded spans and stamps, keeping the allocations
-    /// ([`crate::sim::Sim::reset`]).
+    /// Drop all recorded spans, stamps and wire spans, keeping the
+    /// allocations ([`crate::sim::Sim::reset`]).
     pub fn clear(&mut self) {
         self.spans.clear();
         self.stamps.clear();
+        self.wire.clear();
+    }
+
+    /// Record the wire (bus-occupancy) window of a data move.
+    pub fn record_wire(&mut self, engine: EngineId, cmd_seq: u64, start: SimTime, end: SimTime) {
+        debug_assert!(end >= start);
+        self.wire.push(WireSpan {
+            engine,
+            cmd_seq,
+            start,
+            end,
+        });
     }
 
     /// Record a phase span.
@@ -96,5 +124,16 @@ mod tests {
         assert_eq!(t.phase_total(Phase::Control), 10);
         assert_eq!(t.phase_total(Phase::Copy), 150);
         assert_eq!(t.breakdown(), [10, 0, 150, 0]);
+    }
+
+    #[test]
+    fn clear_drops_wire_spans() {
+        let mut t = Trace::default();
+        t.record(None, 0, Phase::Copy, 0, 10);
+        t.record_wire(EngineId { gpu: 0, idx: 0 }, 0, 4, 10);
+        assert_eq!(t.wire.len(), 1);
+        t.clear();
+        assert!(t.spans.is_empty());
+        assert!(t.wire.is_empty());
     }
 }

@@ -52,6 +52,23 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Percentile via the nearest-rank method (the SLO-reporting convention:
+/// the value reported is always an observed sample, never interpolated).
+///
+/// `rank = ceil(p/100 * n)`, clamped to `[1, n]`; returns `sorted[rank-1]`.
+/// NaN for empty input. Shared by `ServeMetrics` (TTFT / per-token
+/// percentiles) and the bench timer's p95/p99.
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    v[rank.clamp(1, n) - 1]
+}
+
 /// Median (p50).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
@@ -108,6 +125,37 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [1.0, 2.0];
         assert!((percentile(&xs, 50.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_known_distributions() {
+        // 1..=10: p50 -> ceil(5.0) = rank 5 -> 5; p95/p99 -> rank 10 -> 10.
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 5.0);
+        assert_eq!(percentile_nearest_rank(&xs, 95.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&xs, 99.0), 10.0);
+        // The classic worked example: {15,20,35,40,50}, p30 -> rank 2 -> 20.
+        let ys = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile_nearest_rank(&ys, 30.0), 20.0);
+        assert_eq!(percentile_nearest_rank(&ys, 100.0), 50.0);
+        // p0 clamps to rank 1 (the minimum), not an out-of-range index.
+        assert_eq!(percentile_nearest_rank(&ys, 0.0), 15.0);
+    }
+
+    #[test]
+    fn nearest_rank_empty_and_singleton() {
+        assert!(percentile_nearest_rank(&[], 50.0).is_nan());
+        assert_eq!(percentile_nearest_rank(&[7.5], 99.0), 7.5);
+        assert_eq!(percentile_nearest_rank(&[7.5], 1.0), 7.5);
+    }
+
+    #[test]
+    fn nearest_rank_always_returns_a_sample() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6];
+        for p in [1.0, 10.0, 33.0, 50.0, 66.0, 90.0, 95.0, 99.0, 100.0] {
+            let v = percentile_nearest_rank(&xs, p);
+            assert!(xs.contains(&v), "p{p} gave {v}, not an observed sample");
+        }
     }
 
     #[test]

@@ -146,8 +146,8 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         iters,
         mean_ns: stats::mean(&samples),
         median_ns: stats::median(&samples),
-        p95_ns: stats::percentile(&samples, 95.0),
-        p99_ns: stats::percentile(&samples, 99.0),
+        p95_ns: stats::percentile_nearest_rank(&samples, 95.0),
+        p99_ns: stats::percentile_nearest_rank(&samples, 99.0),
         min_ns: stats::min(&samples),
     }
 }

@@ -92,9 +92,33 @@ fn interleaved_episodes_do_not_contaminate_replay() {
         .latency_ns
     };
     let want = probe(&mut runner);
+    // Traced twin: the replay must also reproduce the exact trace shape —
+    // the phase span count AND the wire sub-spans recorded for the
+    // observability layer (guards `Trace::clear` / `Sim::reset` over the
+    // `wire` field: stale spans from a churned episode would change the
+    // counts).
+    let topts = RunOptions {
+        sim: SimConfig::mi300x().traced(),
+        verify: false,
+    };
+    let mut traced = CollectiveRunner::new(&topts);
+    let tprobe = |r: &mut CollectiveRunner| {
+        let lat = r
+            .run(
+                CollectiveKind::AllGather,
+                Variant::new(Strategy::Pcpy, true),
+                256 * KB,
+            )
+            .latency_ns;
+        (lat, r.sim().trace.spans.len(), r.sim().trace.wire.len())
+    };
+    let twant = tprobe(&mut traced);
+    assert!(twant.2 > 0, "traced runs record wire sub-spans");
     for v in Variant::all_for(CollectiveKind::AllToAll) {
         runner.run(CollectiveKind::AllToAll, v, 32 * KB);
         assert_eq!(probe(&mut runner), want, "after {}", v.name());
+        traced.run(CollectiveKind::AllToAll, v, 32 * KB);
+        assert_eq!(tprobe(&mut traced), twant, "traced after {}", v.name());
     }
 }
 

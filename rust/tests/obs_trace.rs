@@ -1,0 +1,269 @@
+//! Integration tests for the cross-layer tracing subsystem: critical-path
+//! attribution partitions end-to-end latency exactly for every
+//! hierarchical collective × schedule and for a serving run; the Perfetto
+//! writer emits schema-valid Chrome `trace_event` JSON; and the span tree
+//! obeys its structural invariants over randomized shapes.
+
+use dma_latte::cluster::{
+    run_hier, run_hier_ar, run_hier_rs, select_allreduce, select_cluster, ClusterChoice,
+    ClusterKind, ClusterTopology, HierRunOptions, InterSchedule,
+};
+use dma_latte::coordinator::{Request, ServeConfig, VirtualEngine};
+use dma_latte::kvcache::fetch::FetchImpl;
+use dma_latte::kvcache::BlockLayout;
+use dma_latte::models::zoo;
+use dma_latte::obs::{attribute, record, write_chrome_trace, Component, ObsTrace, SpanKind, Track};
+use dma_latte::util::bytes::KB;
+use dma_latte::util::json::Json;
+use dma_latte::util::proptest;
+
+/// Run one traced hierarchical collective and hand back (latency, trace).
+fn run_traced(
+    kind: ClusterKind,
+    sched: InterSchedule,
+    nodes: usize,
+    size: u64,
+) -> (u64, ObsTrace) {
+    let topo = ClusterTopology::mi300x(nodes);
+    let size = topo.pad_size(size);
+    let opts = HierRunOptions {
+        trace: true,
+        ..Default::default()
+    };
+    let force = |mut c: ClusterChoice| {
+        if nodes > 1 {
+            c.inter = sched;
+        }
+        c
+    };
+    record::start();
+    let res = match kind {
+        ClusterKind::AllGather | ClusterKind::AllToAll => {
+            let choice = force(select_cluster(kind, &topo, size));
+            run_hier(kind.transport(), choice, &topo, size, &opts)
+        }
+        ClusterKind::ReduceScatter => {
+            let choice = force(select_cluster(kind, &topo, size));
+            run_hier_rs(choice, &topo, size, &opts)
+        }
+        ClusterKind::AllReduce => {
+            let (rs, ag) = select_allreduce(&topo, size);
+            run_hier_ar(force(rs), force(ag), &topo, size, &opts)
+        }
+    };
+    let trace = record::finish().expect("recorder installed");
+    (res.latency_ns, trace)
+}
+
+const ALL_KINDS: [ClusterKind; 4] = [
+    ClusterKind::AllGather,
+    ClusterKind::AllToAll,
+    ClusterKind::ReduceScatter,
+    ClusterKind::AllReduce,
+];
+
+const ALL_SCHEDULES: [InterSchedule; 3] = [
+    InterSchedule::Sequential,
+    InterSchedule::Pipelined,
+    InterSchedule::Overlapped,
+];
+
+/// The headline invariant: the nine attribution components sum to the
+/// modeled end-to-end latency *exactly* for every collective × schedule.
+#[test]
+fn attribution_partitions_every_kind_and_schedule() {
+    for kind in ALL_KINDS {
+        for sched in ALL_SCHEDULES {
+            let (latency, trace) = run_traced(kind, sched, 2, 128 * KB);
+            assert!(latency > 0);
+            let attr = attribute(&trace);
+            assert_eq!(attr.total(), latency, "{kind:?}/{sched:?}");
+            // Cross-node runs always put NIC time on the path, and the
+            // intra rounds always move bytes.
+            assert!(attr.get(Component::Nic) > 0, "{kind:?}/{sched:?}: nic");
+            assert!(attr.get(Component::Copy) > 0, "{kind:?}/{sched:?}: copy");
+        }
+    }
+}
+
+/// Serving attribution partitions the wall clock of a full run, and the
+/// per-request spans land on the request track.
+#[test]
+fn serving_attribution_partitions_wall() {
+    let n = 16u64;
+    let (prefill, decode) = (512u64, 16u64);
+    let mut cfg = ServeConfig::new(&zoo::QWEN25_0_5B, FetchImpl::DmaB2b);
+    let layout = BlockLayout::new(cfg.model, cfg.block_tokens);
+    cfg.gpu_blocks = layout.blocks_for(prefill + decode) * (cfg.max_batch as u64 + 8);
+    record::start();
+    let mut eng = VirtualEngine::new(cfg);
+    for i in 0..n {
+        eng.submit(Request::new(i, prefill, decode, 0), true);
+    }
+    let m = eng.run_to_completion();
+    let (wall, finished) = (m.wall_ns, m.finished);
+    assert_eq!(finished, n);
+    let trace = record::finish().expect("recorder installed");
+    let attr = attribute(&trace);
+    assert_eq!(attr.total(), wall, "serving attribution must sum to wall");
+    assert!(attr.get(Component::Gemm) > 0, "decode GEMMs on the path");
+    assert!(attr.get(Component::Control) > 0, "framework overhead visible");
+    let req_spans = trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Request)
+        .count();
+    assert_eq!(req_spans as u64, n, "one span per finished request");
+    assert!(trace
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Request)
+        .all(|s| s.track == Track::Requests));
+}
+
+/// Golden test: a 2-node overlapped all-reduce round-trips through the
+/// Chrome trace writer — valid JSON, one "X" event per span, one metadata
+/// pair per distinct track, nothing else.
+#[test]
+fn perfetto_golden_overlapped_allreduce() {
+    let (latency, trace) = run_traced(
+        ClusterKind::AllReduce,
+        InterSchedule::Overlapped,
+        2,
+        128 * KB,
+    );
+    assert!(latency > 0);
+    assert!(!trace.spans.is_empty());
+    let json = write_chrome_trace(&trace);
+    let doc = Json::parse(&json).expect("writer must emit valid JSON");
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(|v| v.str()),
+        Some("ns")
+    );
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.arr())
+        .expect("traceEvents array");
+    let ph = |e: &Json| e.get("ph").and_then(|p| p.str()).map(|s| s.to_string());
+    let x_events: Vec<&Json> = events
+        .iter()
+        .filter(|e| ph(e).as_deref() == Some("X"))
+        .collect();
+    let m_events = events
+        .iter()
+        .filter(|e| ph(e).as_deref() == Some("M"))
+        .count();
+    assert_eq!(x_events.len(), trace.spans.len(), "one X per span");
+    assert_eq!(
+        m_events,
+        2 * trace.tracks().len(),
+        "process+thread metadata per distinct track"
+    );
+    assert_eq!(events.len(), x_events.len() + m_events, "no other events");
+    for e in &x_events {
+        for key in ["name", "ts", "dur", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "X event missing {key}");
+        }
+        let kind = e
+            .get("args")
+            .and_then(|a| a.get("kind"))
+            .and_then(|k| k.str());
+        assert!(kind.is_some(), "X event args carry the span kind");
+    }
+}
+
+/// Randomized structural invariants of the span tree: parents resolve,
+/// children nest inside their parent's interval, and exclusive resource
+/// tracks never overlap.
+#[test]
+fn span_tree_properties() {
+    proptest::run(
+        "obs-span-tree",
+        proptest::Config {
+            cases: 8,
+            base_seed: 0x0B5_7FACE,
+        },
+        |rng| {
+            let kind = ALL_KINDS[rng.below(4) as usize];
+            let sched = ALL_SCHEDULES[rng.below(3) as usize];
+            let nodes = 2 + rng.below(2) as usize;
+            let size = (16 + rng.below(240)) * KB;
+            let (latency, trace) = run_traced(kind, sched, nodes, size);
+            assert!(latency > 0);
+            for s in &trace.spans {
+                assert!(s.end_ns >= s.start_ns, "span {} inverted", s.id);
+                if let Some(p) = s.parent {
+                    // Parents resolve (measure windows adopt earlier spans
+                    // at close, so parent ids may exceed child ids).
+                    let parent = trace
+                        .spans
+                        .iter()
+                        .find(|x| x.id == p)
+                        .unwrap_or_else(|| panic!("span {}: dangling parent {p}", s.id));
+                    assert!(
+                        parent.start_ns <= s.start_ns && s.end_ns <= parent.end_ns,
+                        "span {} [{}, {}] escapes parent {} [{}, {}]",
+                        s.id,
+                        s.start_ns,
+                        s.end_ns,
+                        parent.id,
+                        parent.start_ns,
+                        parent.end_ns
+                    );
+                }
+            }
+            for track in trace.tracks() {
+                if !track.exclusive() {
+                    continue;
+                }
+                // Known model gap: the fused all-reduce's RS-leg and
+                // gather-leg NIC port spans share Track::Nic{node} and may
+                // overlap (inter-leg port contention is unmodeled). The
+                // wire track is checked unconditionally.
+                if matches!(track, Track::Nic { .. })
+                    && kind == ClusterKind::AllReduce
+                    && sched == InterSchedule::Overlapped
+                {
+                    continue;
+                }
+                let mut spans: Vec<(u64, u64)> = trace
+                    .on_track(track)
+                    .map(|s| (s.start_ns, s.end_ns))
+                    .collect();
+                spans.sort_unstable();
+                for w in spans.windows(2) {
+                    assert!(
+                        w[0].1 <= w[1].0,
+                        "{track:?}: [{}, {}] overlaps [{}, {}] ({kind:?}/{sched:?})",
+                        w[0].0,
+                        w[0].1,
+                        w[1].0,
+                        w[1].1
+                    );
+                }
+            }
+        },
+    );
+}
+
+/// With no recorder installed the instrumented paths are inert: runs
+/// succeed, `finish` has nothing, and a traced run afterwards still works
+/// (no poisoned thread-local).
+#[test]
+fn no_recorder_is_a_no_op() {
+    assert!(!record::active());
+    let topo = ClusterTopology::mi300x(2);
+    let size = topo.pad_size(64 * KB);
+    let choice = select_cluster(ClusterKind::AllGather, &topo, size);
+    let opts = HierRunOptions {
+        trace: true,
+        ..Default::default()
+    };
+    let res = run_hier(ClusterKind::AllGather.transport(), choice, &topo, size, &opts);
+    assert!(res.latency_ns > 0);
+    assert!(record::finish().is_none(), "nothing recorded");
+    // And the same episode traced afterwards matches its own latency.
+    let (latency, trace) = run_traced(ClusterKind::AllGather, InterSchedule::Pipelined, 2, 64 * KB);
+    assert_eq!(attribute(&trace).total(), latency);
+    assert!(!record::active(), "finish uninstalls the recorder");
+}
