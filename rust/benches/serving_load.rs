@@ -1,0 +1,232 @@
+//! BENCH — §Serving load (PR 7): trace-driven production-traffic serving
+//! under seeded arrival processes, emitted as `BENCH_PR7.json`.
+//!
+//! All rows are **modeled virtual-time** outputs of the deterministic
+//! serving engine — identical on every machine. Units vary per row and
+//! are documented in the JSON `note` field:
+//!
+//! - `{poisson,bursty,trace}_ttft_p{50,95,99}_1n` — TTFT percentiles (ns)
+//!   for each workload shape at 0.6× the measured closed-loop capacity,
+//!   default two-tenant mix (chat SLO'd + bulk best-effort).
+//! - `{poisson,bursty,trace}_slo_attainment_1n` — SLO attainment percent
+//!   at the same operating point (stored in the ns-named fields).
+//! - `sustained_rps_slo_{1,2}n` — highest probed offered rate (req/s)
+//!   holding ≥ 90% SLO attainment.
+//! - `p99_ttft_knee_{1,2}n` — before = p99 TTFT (ns) at 0.4× capacity,
+//!   after = p99 TTFT at 4× capacity: the saturation knee. The bench
+//!   asserts super-linear growth and prints a greppable
+//!   `knee check Nn: OK` line per node count.
+//! - `serving_load_overlap_2n` — overloaded 2-node bursty wall time with
+//!   comm overlap off (before) vs on (after).
+//!
+//! JSON lands at `../BENCH_PR7.json` (repo root when run via cargo),
+//! overridable with `DMA_LATTE_BENCH_JSON=path` (`=0` disables).
+
+use dma_latte::coordinator::workload::default_tenants;
+use dma_latte::figures::serving_load as sl;
+use dma_latte::models::zoo::QWEN25_0_5B;
+use dma_latte::util::timer::{bench_json, BenchComparison, BenchResult};
+
+const SEED: u64 = 7;
+
+/// Wrap one deterministic modeled value as a BenchResult (no spread).
+fn modeled(name: &str, value: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: value,
+        median_ns: value,
+        p95_ns: value,
+        p99_ns: value,
+        min_ns: value,
+    }
+}
+
+/// Single-value row.
+fn value_row(path: &str, name: &str, value: f64) -> BenchComparison {
+    BenchComparison {
+        path: path.to_string(),
+        before: None,
+        after: modeled(name, value),
+    }
+}
+
+fn report(row: &BenchComparison, unit: &str) {
+    match &row.before {
+        Some(b) => println!(
+            "row {:<28} before {:>14.1} after {:>14.1} {unit}",
+            row.path, b.median_ns, row.after.median_ns
+        ),
+        None => println!(
+            "row {:<28} value {:>14.1} {unit}",
+            row.path, row.after.median_ns
+        ),
+    }
+}
+
+fn main() {
+    let smoke = dma_latte::util::bench_smoke();
+    println!("== serving load: arrival processes, SLOs, saturation (BENCH_PR7) ==\n");
+    let classes = default_tenants();
+    let mut rows: Vec<BenchComparison> = Vec::new();
+
+    // Closed-loop service capacity per node count — the yardstick every
+    // offered rate below is expressed against.
+    let n_cap = if smoke { 96 } else { 256 };
+    let cfg1 = sl::serve_config(&QWEN25_0_5B, 1, true);
+    let cfg2 = sl::serve_config(&QWEN25_0_5B, 2, true);
+    let cap1 = sl::estimate_capacity_rps(&cfg1, &classes, n_cap, SEED);
+    let cap2 = sl::estimate_capacity_rps(&cfg2, &classes, n_cap, SEED);
+    println!("closed-loop capacity: {cap1:.0} req/s at 1n, {cap2:.0} req/s at 2n\n");
+
+    // 1) Per-workload-shape latency distributions at a moderate operating
+    //    point (0.6x capacity), 1 node.
+    let n_pct = if smoke { 128 } else { 512 };
+    for kind in ["poisson", "bursty", "trace"] {
+        let p = sl::measure(&cfg1, &classes, kind, cap1 * 0.6, n_pct, SEED);
+        assert_eq!(p.finished, n_pct, "{kind}: all requests must finish");
+        assert!(p.attainment.is_finite());
+        println!(
+            "{kind} @ {:.0} req/s: ttft p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, slo {:.1}%",
+            p.rate_rps,
+            p.ttft_p50_ms,
+            p.ttft_p95_ms,
+            p.ttft_p99_ms,
+            p.attainment * 100.0
+        );
+        for (pct, ms) in [
+            ("p50", p.ttft_p50_ms),
+            ("p95", p.ttft_p95_ms),
+            ("p99", p.ttft_p99_ms),
+        ] {
+            rows.push(value_row(
+                &format!("{kind}_ttft_{pct}_1n"),
+                &format!("{kind} ttft {pct}, 0.6x cap"),
+                ms * 1e6,
+            ));
+            report(rows.last().unwrap(), "ns");
+        }
+        rows.push(value_row(
+            &format!("{kind}_slo_attainment_1n"),
+            &format!("{kind} slo attainment, 0.6x cap"),
+            p.attainment * 100.0,
+        ));
+        report(rows.last().unwrap(), "%");
+        println!();
+    }
+
+    // 2) Sustained rate at >= 90% SLO attainment: probe a fixed grid of
+    //    capacity fractions, keep the highest passing rate.
+    let n_probe = if smoke { 128 } else { 384 };
+    for (nodes, cfg, cap) in [(1usize, &cfg1, cap1), (2, &cfg2, cap2)] {
+        let mut sustained = 0.0f64;
+        for frac in [0.3, 0.5, 0.7, 0.9, 1.1] {
+            let p = sl::measure(cfg, &classes, "poisson", cap * frac, n_probe, SEED);
+            let ok = p.attainment >= 0.9;
+            println!(
+                "  {nodes}n @ {:.2}x cap ({:.0} req/s): slo {:.1}% {}",
+                frac,
+                p.rate_rps,
+                p.attainment * 100.0,
+                if ok { "PASS" } else { "fail" }
+            );
+            if ok && p.rate_rps > sustained {
+                sustained = p.rate_rps;
+            }
+        }
+        assert!(sustained > 0.0, "{nodes}n: no probed rate met the SLO");
+        rows.push(value_row(
+            &format!("sustained_rps_slo_{nodes}n"),
+            &format!("{nodes}n sustained req/s at >=90% slo"),
+            sustained,
+        ));
+        report(rows.last().unwrap(), "req/s");
+        println!();
+    }
+
+    // 3) Saturation knee: p99 TTFT far under vs far over capacity. The
+    //    overload point is sized so the terminal backlog dominates p99 —
+    //    super-linear growth is the acceptance bound (10x the rate must
+    //    cost much more than 10x... at minimum >3x the p99).
+    for (nodes, cfg, cap) in [(1usize, &cfg1, cap1), (2, &cfg2, cap2)] {
+        let scale = if smoke { 0.25 } else { 0.5 };
+        let n_knee = ((cap * scale) as u64).clamp(96, 4096);
+        let sust = sl::measure(cfg, &classes, "poisson", cap * 0.4, n_knee, SEED);
+        let over = sl::measure(cfg, &classes, "poisson", cap * 4.0, n_knee, SEED);
+        let ratio = over.ttft_p99_ms / sust.ttft_p99_ms;
+        assert!(
+            ratio > 3.0,
+            "{nodes}n knee too soft: p99 {:.1}ms -> {:.1}ms ({ratio:.1}x)",
+            sust.ttft_p99_ms,
+            over.ttft_p99_ms
+        );
+        println!(
+            "knee check {nodes}n: OK (p99 ttft {:.1}ms -> {:.1}ms, {ratio:.1}x for 10x rate)",
+            sust.ttft_p99_ms, over.ttft_p99_ms
+        );
+        rows.push(BenchComparison {
+            path: format!("p99_ttft_knee_{nodes}n"),
+            before: Some(modeled(
+                &format!("{nodes}n p99 ttft at 0.4x cap"),
+                sust.ttft_p99_ms * 1e6,
+            )),
+            after: modeled(
+                &format!("{nodes}n p99 ttft at 4x cap"),
+                over.ttft_p99_ms * 1e6,
+            ),
+        });
+        report(rows.last().unwrap(), "ns");
+        println!();
+    }
+
+    // 4) Comm overlap under overloaded 2-node bursty traffic: charging
+    //    only the exposed collective remainder must not lose wall time.
+    let n_ovl = if smoke { 96 } else { 256 };
+    let cfg2_serial = sl::serve_config(&QWEN25_0_5B, 2, false);
+    let fused = sl::measure(&cfg2, &classes, "bursty", cap2 * 1.5, n_ovl, SEED);
+    let serial = sl::measure(&cfg2_serial, &classes, "bursty", cap2 * 1.5, n_ovl, SEED);
+    assert_eq!(fused.finished, n_ovl);
+    assert_eq!(serial.finished, n_ovl);
+    assert!(
+        fused.wall_s <= serial.wall_s,
+        "overlap lost wall time: {} vs {}",
+        fused.wall_s,
+        serial.wall_s
+    );
+    println!(
+        "2n bursty overload: wall {:.2}s serialized -> {:.2}s overlapped",
+        serial.wall_s, fused.wall_s
+    );
+    rows.push(BenchComparison {
+        path: "serving_load_overlap_2n".to_string(),
+        before: Some(modeled("2n bursty wall, serialized comm", serial.wall_s * 1e9)),
+        after: modeled("2n bursty wall, overlapped comm", fused.wall_s * 1e9),
+    });
+    report(rows.last().unwrap(), "ns");
+    println!();
+
+    // Machine-readable trajectory file.
+    let dest = std::env::var("DMA_LATTE_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_PR7.json".to_string());
+    if dest != "0" {
+        let meta = [
+            ("pr", "PR7".to_string()),
+            ("mode", if smoke { "smoke" } else { "full" }.to_string()),
+            (
+                "note",
+                "modeled virtual-time serving under seeded arrival processes; \
+                 ttft/knee/overlap rows are ns, slo_attainment rows are percent, \
+                 sustained rows are req/s (stored in the ns-named fields)"
+                    .to_string(),
+            ),
+        ];
+        let doc = bench_json("serving_load", &meta, &rows);
+        if let Err(e) = std::fs::write(&dest, doc) {
+            // Fatal: CI asserts the file was regenerated; a silent miss
+            // would let a stale checked-in copy masquerade as fresh.
+            eprintln!("could not write {dest}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {dest}");
+    }
+}

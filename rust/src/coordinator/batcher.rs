@@ -34,17 +34,24 @@ impl Default for BatchPolicy {
 }
 
 /// Pick admissions FCFS under batch-slot and block-budget constraints.
-pub fn plan_admissions(
+///
+/// `waiting` is any iterator over queued requests in FCFS order (the
+/// scheduler passes a bounded borrow of its queue head — no per-round
+/// snapshot clone).
+pub fn plan_admissions<'a, I>(
     policy: &BatchPolicy,
     layout: &BlockLayout,
-    waiting: &[Request],
+    waiting: I,
     running_now: usize,
     free_blocks: u64,
-) -> Admission {
+) -> Admission
+where
+    I: IntoIterator<Item = &'a Request>,
+{
     let mut adm = Admission::default();
     let mut slots = policy.max_batch.saturating_sub(running_now);
     let mut budget = free_blocks.min(policy.max_blocks_per_round);
-    for (i, req) in waiting.iter().enumerate() {
+    for (i, req) in waiting.into_iter().enumerate() {
         if slots == 0 {
             break;
         }

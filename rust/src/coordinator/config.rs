@@ -38,6 +38,10 @@ pub struct ServeConfig {
     /// paper's whole point; disable to model a strictly serialized engine
     /// (the pre-PR-4 accounting, kept as the overlap bench baseline).
     pub comm_overlap: bool,
+    /// Max queue-depth timeline samples kept in `ServeMetrics::queue_depth`
+    /// (the engine halves resolution once full — deterministic decimation);
+    /// < 2 disables the timeline (the exact peak is still tracked).
+    pub queue_sample_cap: usize,
 }
 
 impl ServeConfig {
@@ -56,6 +60,7 @@ impl ServeConfig {
             seed: 0xC0FFEE,
             num_nodes: 1,
             comm_overlap: true,
+            queue_sample_cap: 2048,
         }
     }
 
@@ -93,6 +98,7 @@ mod tests {
         assert_eq!(c.num_nodes, 1);
         assert_eq!(c.world_size(), 8);
         assert!(c.comm_overlap);
+        assert!(c.queue_sample_cap >= 2);
         assert!(!c.with_comm_overlap(false).comm_overlap);
     }
 

@@ -8,6 +8,12 @@
 //! - **gpu**: decode/prefill steps serialize here; kernel-based fetch also
 //!   consumes GPU time (the contention DMA offload avoids, §2.4).
 //! - **pcie**: DMA fetch wire time serializes here FIFO.
+//!
+//! Requests need not all be present at t=0: a time-ordered arrival queue
+//! ([`VirtualEngine::submit_workload`], fed by
+//! [`super::workload::WorkloadSpec::generate`]) is ingested as the
+//! virtual clock reaches each event, interleaving arrivals with decode
+//! steps — open-loop serving with real queueing behavior.
 
 use crate::kvcache::fetch::{run_fetch, CopySpec, FetchImpl, FetchOutcome};
 use crate::kvcache::BlockLayout;
@@ -16,15 +22,24 @@ use crate::sim::{Sim, SimConfig};
 
 use super::comm::CollectiveComm;
 use super::config::ServeConfig;
-use super::metrics::{RequestSpan, ServeMetrics};
+use super::metrics::{ClassStats, RequestSpan, ServeMetrics};
 use super::request::{Request, RequestState};
 use super::scheduler::{AdmitAction, Scheduler};
+use super::workload::{session_cache_key, ArrivalEvent, TenantClass};
 
 /// A request being fetched/prefilled, ready at `ready_ns`.
 #[derive(Debug)]
 struct Pending {
     req: Request,
     ready_ns: u64,
+}
+
+/// A future arrival (time-ordered; `warm` pre-populates the CPU tier at
+/// ingest time).
+#[derive(Debug)]
+struct ArrivalSlot {
+    req: Request,
+    warm: bool,
 }
 
 /// Virtual-time serving engine.
@@ -37,6 +52,8 @@ pub struct VirtualEngine {
     host_free: u64,
     gpu_free: u64,
     pcie_free: u64,
+    /// Future arrivals, time-ordered (front = next).
+    arrivals: std::collections::VecDeque<ArrivalSlot>,
     pending: Vec<Pending>,
     running: Vec<Request>,
     pub metrics: ServeMetrics,
@@ -45,6 +62,9 @@ pub struct VirtualEngine {
     /// Cluster-aware collective sizing (free on a single node; routed
     /// through `cluster::select_cluster` when `cfg.num_nodes > 1`).
     comm: CollectiveComm,
+    /// Queue-depth timeline decimation state (see `record_queue_depth`).
+    queue_tick: u64,
+    queue_stride: u64,
 }
 
 impl VirtualEngine {
@@ -70,21 +90,114 @@ impl VirtualEngine {
             host_free: 0,
             gpu_free: 0,
             pcie_free: 0,
+            arrivals: std::collections::VecDeque::new(),
             pending: Vec::new(),
             running: Vec::new(),
             metrics: ServeMetrics::default(),
             fetch_cache: std::collections::HashMap::new(),
             comm: CollectiveComm::new(&cfg),
+            queue_tick: 0,
+            queue_stride: 1,
             cfg,
         }
     }
 
-    /// Submit a request (optionally pre-warming its KV in the CPU tier).
+    /// Initialize per-tenant-class accounting: one [`ClassStats`] slot per
+    /// workload class, carrying the class name and SLO into the metrics.
+    pub fn configure_classes(&mut self, classes: &[TenantClass]) {
+        self.metrics.per_class = classes
+            .iter()
+            .map(|c| ClassStats::new(c.name.clone(), c.slo))
+            .collect();
+    }
+
+    /// Submit a request immediately (optionally pre-warming its KV in the
+    /// CPU tier) — the all-at-t=0 path the fixed-set benchmarks use.
     pub fn submit(&mut self, req: Request, warm: bool) {
+        self.metrics.submitted += 1;
         if warm {
             self.sched.warm_cpu_cache(&req);
         }
         self.sched.submit(req);
+    }
+
+    /// Enqueue a future arrival; the engine ingests it once the virtual
+    /// clock reaches `req.arrival_ns`. Arrivals must be enqueued in
+    /// time order.
+    pub fn enqueue(&mut self, req: Request, warm: bool) {
+        if let Some(back) = self.arrivals.back() {
+            assert!(
+                req.arrival_ns >= back.req.arrival_ns,
+                "arrivals must be time-ordered"
+            );
+        }
+        self.arrivals.push_back(ArrivalSlot { req, warm });
+    }
+
+    /// Enqueue a generated arrival stream ([`super::workload`]): each
+    /// event becomes a request tagged with its tenant class, keyed into
+    /// the CPU tier by session so conversation turns share a prefix
+    /// entry.
+    pub fn submit_workload(&mut self, events: &[ArrivalEvent]) {
+        let base = self.metrics.submitted + self.arrivals.len() as u64;
+        for (i, e) in events.iter().enumerate() {
+            let req = Request::new(
+                base + i as u64,
+                e.prompt_tokens,
+                e.output_tokens,
+                e.at_ns,
+            )
+            .with_class(e.class)
+            .with_cache_key(session_cache_key(e.session));
+            self.enqueue(req, e.warm);
+        }
+    }
+
+    /// Move every arrival whose time has come into the scheduler.
+    fn ingest_arrivals(&mut self) {
+        while let Some(front) = self.arrivals.front() {
+            if front.req.arrival_ns > self.now {
+                break;
+            }
+            let slot = self.arrivals.pop_front().unwrap();
+            self.metrics.submitted += 1;
+            if slot.warm {
+                self.sched.warm_cpu_cache(&slot.req);
+            }
+            self.sched.submit(slot.req);
+        }
+    }
+
+    /// Sample the queue-depth signal (waiting + admitted-but-not-decoding)
+    /// into a bounded timeline: when the sample vector reaches
+    /// `cfg.queue_sample_cap`, resolution halves (every other sample is
+    /// dropped, the sampling stride doubles) — deterministic decimation,
+    /// O(cap) memory for arbitrarily long runs. The peak is tracked
+    /// exactly, independent of decimation.
+    fn record_queue_depth(&mut self) {
+        let depth = (self.sched.backlog() + self.pending.len()) as u64;
+        self.metrics.queue_peak = self.metrics.queue_peak.max(depth);
+        let cap = self.cfg.queue_sample_cap;
+        if cap < 2 {
+            return;
+        }
+        let tick = self.queue_tick;
+        self.queue_tick += 1;
+        if tick % self.queue_stride != 0 {
+            return;
+        }
+        if self.metrics.queue_depth.len() >= cap {
+            let mut keep = false;
+            self.metrics.queue_depth.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.queue_stride *= 2;
+            if tick % self.queue_stride != 0 {
+                return;
+            }
+        }
+        self.metrics.queue_depth.push((self.now, depth));
     }
 
     /// Measure the fetch cost of `copies` (memoized by count — every block
@@ -116,30 +229,39 @@ impl VirtualEngine {
             None
         };
         loop {
+            self.ingest_arrivals();
             self.admit();
             self.absorb_ready();
-            if self.running.is_empty() {
-                if self.pending.is_empty() {
-                    if self.sched.backlog() == 0 {
-                        break;
-                    }
-                    // Backlog exists but nothing admitted (e.g. waiting for
-                    // blocks): jump to the next release point.
-                    if let Some(t) = self.pending.iter().map(|p| p.ready_ns).min() {
-                        self.now = self.now.max(t);
-                    } else {
-                        // Nothing in flight: host-time driven admission gap.
-                        self.now = self.now.max(self.host_free).max(self.gpu_free);
-                        continue;
-                    }
-                } else {
-                    // Idle GPU: advance to the first ready request.
-                    let t = self.pending.iter().map(|p| p.ready_ns).min().unwrap();
-                    self.now = self.now.max(t);
-                    continue;
-                }
+            self.record_queue_depth();
+            if !self.running.is_empty() {
+                self.decode_step();
+                continue;
             }
-            self.decode_step();
+            // Nothing decoding: advance the virtual clock to the next
+            // event — a fetch/prefill completion, a future arrival, or
+            // (admission stalled with nothing in flight) the host catching
+            // up — then re-plan.
+            let next_arrival = self.arrivals.front().map(|a| a.req.arrival_ns);
+            if let Some(ready) = self.pending.iter().map(|p| p.ready_ns).min() {
+                let t = match next_arrival {
+                    Some(a) => ready.min(a),
+                    None => ready,
+                };
+                self.now = self.now.max(t);
+            } else if self.sched.backlog() == 0 {
+                match next_arrival {
+                    Some(a) => self.now = self.now.max(a),
+                    None => break,
+                }
+            } else {
+                // Backlog but nothing in flight: host-time driven
+                // admission gap — but never sleep past the next arrival.
+                let mut t = self.host_free.max(self.gpu_free);
+                if let Some(a) = next_arrival {
+                    t = t.min(a);
+                }
+                self.now = self.now.max(t);
+            }
         }
         self.metrics.wall_ns = self.now;
         self.metrics.host_busy_ns = self.host_free.min(self.now);
@@ -370,7 +492,11 @@ impl VirtualEngine {
             r.on_token(now);
             self.metrics.tokens_out += 1;
             if r.generated == 1 {
-                self.metrics.ttft_ns.push(r.ttft_ns().unwrap() as f64);
+                let ttft = r.ttft_ns().unwrap() as f64;
+                self.metrics.ttft_ns.push(ttft);
+                if let Some(cs) = self.metrics.per_class.get_mut(r.class as usize) {
+                    cs.ttft_ns.push(ttft);
+                }
             }
             if r.state == RequestState::Finished {
                 finished.push(r.id);
@@ -380,9 +506,20 @@ impl VirtualEngine {
                     first_token_ns: r.first_token_ns.unwrap(),
                     finish_ns: r.finished_ns.unwrap(),
                     tokens: r.generated,
+                    class: r.class,
                 };
                 if let Some(tpot) = span.tpot_ns() {
                     self.metrics.tpot_ns.push(tpot);
+                }
+                if let Some(cs) = self.metrics.per_class.get_mut(r.class as usize) {
+                    cs.finished += 1;
+                    cs.tokens_out += r.generated;
+                    if let Some(tpot) = span.tpot_ns() {
+                        cs.tpot_ns.push(tpot);
+                    }
+                    if cs.slo.map_or(true, |slo| slo.met_by(&span)) {
+                        cs.slo_met += 1;
+                    }
                 }
                 self.metrics.requests.push(span);
                 if emitting {
@@ -559,6 +696,90 @@ mod tests {
         assert!(fused.wall_ns < serial.wall_ns);
         assert!(fused.tps() > serial.tps());
         assert!(fused.comm_hidden_frac() > 0.0);
+    }
+
+    /// Event-driven arrivals: a request enqueued for a future instant is
+    /// invisible until the virtual clock reaches it — the engine idles
+    /// across the gap and measures TTFT from the arrival, not from t=0.
+    #[test]
+    fn arrivals_respect_the_virtual_clock() {
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        let mut eng = VirtualEngine::new(cfg);
+        let gap_ns = 10_000_000_000; // 10 virtual seconds
+        eng.enqueue(Request::new(0, 1024, 8, 0), true);
+        eng.enqueue(Request::new(1, 1024, 8, gap_ns), true);
+        let m = eng.run_to_completion().clone();
+        assert_eq!(m.submitted, 2);
+        assert_eq!(m.finished, 2);
+        assert!(m.wall_ns > gap_ns, "wall must cover the idle gap");
+        let late = m.requests.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(late.arrival_ns, gap_ns);
+        assert!(late.first_token_ns > gap_ns);
+        // Both requests saw an idle engine: TTFTs are measured from their
+        // own arrivals and stay far below the gap.
+        assert!(m.ttft_ns.iter().all(|&t| t < 1e9));
+    }
+
+    /// Workload-driven runs populate the per-class breakdowns, the SLO
+    /// attainment counters and the bounded queue-depth timeline.
+    #[test]
+    fn workload_run_tracks_classes_slo_and_queue() {
+        use crate::coordinator::workload::{drive, WorkloadSpec};
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        let spec = WorkloadSpec::poisson(400.0, 96, 11);
+        let m = drive(&cfg, &spec);
+        assert_eq!(m.submitted, 96);
+        assert_eq!(m.finished, 96);
+        assert_eq!(m.per_class.len(), 2);
+        let by_class: u64 = m.per_class.iter().map(|c| c.finished).sum();
+        assert_eq!(by_class, 96);
+        // "chat" carries an SLO; "bulk" is best-effort — every finished
+        // request counts as met.
+        assert!(m.per_class[0].slo.is_some());
+        assert!(m.per_class[1].slo.is_none());
+        assert_eq!(m.per_class[1].slo_met, m.per_class[1].finished);
+        assert!((0.0..=1.0).contains(&m.slo_attainment()));
+        assert!(m.goodput_rps() > 0.0);
+        assert!(!m.queue_depth.is_empty());
+        // Bounded by the decimation cap (ServeConfig::queue_sample_cap).
+        assert!(m.queue_depth.len() <= 2048);
+        let sampled_max = m.queue_depth.iter().map(|&(_, d)| d).max().unwrap();
+        assert!(m.queue_peak >= sampled_max);
+        assert!(m.requests.iter().any(|r| r.class == 1));
+    }
+
+    /// An impossible SLO scores zero attainment for its class while the
+    /// best-effort class stays at 100% — per-class gating is real.
+    #[test]
+    fn impossible_slo_scores_zero() {
+        use crate::coordinator::metrics::SloTarget;
+        use crate::coordinator::workload::{drive, LenDist, TenantClass, WorkloadSpec};
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        let mut strict =
+            TenantClass::simple("strict", 0.5, LenDist::Fixed(512), LenDist::Fixed(8));
+        // TTFT can never beat the 1.8ms framework overhead alone.
+        strict.slo = Some(SloTarget {
+            ttft_ms: 0.0001,
+            tpot_ms: 1000.0,
+        });
+        let easy = TenantClass::simple("easy", 0.5, LenDist::Fixed(512), LenDist::Fixed(8));
+        let spec = WorkloadSpec {
+            process: crate::coordinator::workload::ArrivalProcess::Poisson { rate_rps: 200.0 },
+            classes: vec![strict, easy],
+            requests: 32,
+            seed: 5,
+        };
+        let m = drive(&cfg, &spec);
+        assert_eq!(m.finished, 32);
+        assert_eq!(m.per_class[0].slo_met, 0);
+        assert!((m.per_class[0].attainment() - 0.0).abs() < 1e-12);
+        assert!((m.per_class[1].attainment() - 1.0).abs() < 1e-12);
+        let expect =
+            m.per_class[1].finished as f64 / m.finished as f64;
+        assert!((m.slo_attainment() - expect).abs() < 1e-12);
     }
 
     #[test]

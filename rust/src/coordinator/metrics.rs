@@ -1,13 +1,16 @@
 //! Serving metrics: TTFT / per-token latency distributions (nearest-rank
 //! percentiles), throughput, utilization counters, per-request span
-//! records and cross-episode cache hit rates.
+//! records, cross-episode cache hit rates — and, for workload-driven runs
+//! ([`crate::coordinator::workload`]), per-tenant-class percentile
+//! breakdowns, SLO attainment fractions, goodput and a bounded
+//! queue-depth timeline.
 
 use crate::util::stats;
 
 /// One finished request's lifetime on the serving timeline (ns) — the
 /// record behind the per-request Perfetto spans and the percentile
 /// distributions.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestSpan {
     pub id: u64,
     /// Submission instant.
@@ -18,6 +21,8 @@ pub struct RequestSpan {
     pub finish_ns: u64,
     /// Tokens generated.
     pub tokens: u64,
+    /// Tenant class index (0 for single-class workloads).
+    pub class: u8,
 }
 
 impl RequestSpan {
@@ -28,6 +33,79 @@ impl RequestSpan {
             return None;
         }
         Some((self.finish_ns - self.first_token_ns) as f64 / (self.tokens - 1) as f64)
+    }
+
+    /// Time-to-first-token (ns).
+    pub fn ttft_ns(&self) -> u64 {
+        self.first_token_ns - self.arrival_ns
+    }
+}
+
+/// Per-tenant latency service-level objective. A finished request meets
+/// its SLO when TTFT ≤ `ttft_ms` AND (when it produced ≥ 2 tokens) its
+/// mean per-token latency ≤ `tpot_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+impl SloTarget {
+    /// Does `span` meet this objective?
+    pub fn met_by(&self, span: &RequestSpan) -> bool {
+        span.ttft_ns() as f64 <= self.ttft_ms * 1e6
+            && span
+                .tpot_ns()
+                .map_or(true, |t| t <= self.tpot_ms * 1e6)
+    }
+}
+
+/// Per-tenant-class serving statistics (one entry per workload class).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStats {
+    pub name: String,
+    /// The class's latency objective; `None` = best-effort (every
+    /// finished request counts as SLO-met).
+    pub slo: Option<SloTarget>,
+    pub finished: u64,
+    pub tokens_out: u64,
+    pub ttft_ns: Vec<f64>,
+    pub tpot_ns: Vec<f64>,
+    /// Finished requests that met the class SLO.
+    pub slo_met: u64,
+}
+
+impl ClassStats {
+    /// Fresh stats for a named class.
+    pub fn new(name: String, slo: Option<SloTarget>) -> Self {
+        ClassStats {
+            name,
+            slo,
+            finished: 0,
+            tokens_out: 0,
+            ttft_ns: Vec::new(),
+            tpot_ns: Vec::new(),
+            slo_met: 0,
+        }
+    }
+
+    /// Nearest-rank TTFT percentile in ms.
+    pub fn ttft_pct_ms(&self, p: f64) -> f64 {
+        stats::percentile_nearest_rank(&self.ttft_ns, p) / 1e6
+    }
+
+    /// Nearest-rank per-token latency percentile in ms/token.
+    pub fn tpot_pct_ms(&self, p: f64) -> f64 {
+        stats::percentile_nearest_rank(&self.tpot_ns, p) / 1e6
+    }
+
+    /// Fraction of finished requests meeting the class SLO (NaN before
+    /// anything finishes).
+    pub fn attainment(&self) -> f64 {
+        if self.finished == 0 {
+            return f64::NAN;
+        }
+        self.slo_met as f64 / self.finished as f64
     }
 }
 
@@ -40,6 +118,8 @@ pub struct ServeMetrics {
     pub tpot_ns: Vec<f64>,
     /// One record per finished request, in finish order.
     pub requests: Vec<RequestSpan>,
+    /// Requests handed to the scheduler (arrival events ingested).
+    pub submitted: u64,
     pub finished: u64,
     pub tokens_out: u64,
     pub wall_ns: u64,
@@ -68,6 +148,15 @@ pub struct ServeMetrics {
     /// Hierarchical rounds-cache (hit, miss) delta over this run
     /// ([`crate::cluster::rounds_cache_stats`]).
     pub rounds_cache: (u64, u64),
+    /// Per-tenant-class breakdowns; empty unless the engine was driven by
+    /// a multi-class workload (`VirtualEngine::configure_classes`).
+    pub per_class: Vec<ClassStats>,
+    /// `(virtual time ns, waiting + admitted-but-not-decoding)` samples;
+    /// decimated to a bounded length (`ServeConfig::queue_sample_cap`).
+    pub queue_depth: Vec<(u64, u64)>,
+    /// Peak of the queue-depth signal over the whole run (exact — not
+    /// subject to timeline decimation).
+    pub queue_peak: u64,
 }
 
 impl ServeMetrics {
@@ -109,6 +198,31 @@ impl ServeMetrics {
         stats::percentile_nearest_rank(&self.tpot_ns, p) / 1e6
     }
 
+    /// Requests that met their class SLO (all finished requests for
+    /// class-less runs and best-effort classes).
+    pub fn slo_met(&self) -> u64 {
+        if self.per_class.is_empty() {
+            return self.finished;
+        }
+        self.per_class.iter().map(|c| c.slo_met).sum()
+    }
+
+    /// Overall SLO attainment fraction (NaN before anything finishes).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.finished == 0 {
+            return f64::NAN;
+        }
+        self.slo_met() as f64 / self.finished as f64
+    }
+
+    /// Goodput: SLO-meeting finished requests per second.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.slo_met() as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
     /// Fraction of collective time hidden behind compute (0 when no
     /// collectives ran).
     pub fn comm_hidden_frac(&self) -> f64 {
@@ -145,6 +259,14 @@ impl ServeMetrics {
                 ", tpot p50 {:.2}ms p99 {:.2}ms",
                 self.tpot_pct_ms(50.0),
                 self.tpot_pct_ms(99.0)
+            ));
+        }
+        if !self.per_class.is_empty() {
+            s.push_str(&format!(
+                ", slo {:.1}% ({:.1} good req/s), queue peak {}",
+                self.slo_attainment() * 100.0,
+                self.goodput_rps(),
+                self.queue_peak
             ));
         }
         let (ph, pm) = self.plan_cache;
@@ -185,6 +307,8 @@ mod tests {
         assert_eq!(m.tps(), 0.0);
         assert_eq!(m.gpu_util(), 0.0);
         assert_eq!(m.comm_hidden_frac(), 0.0);
+        assert_eq!(m.goodput_rps(), 0.0);
+        assert!(m.slo_attainment().is_nan());
         // Percentiles of an empty distribution are NaN, never a panic.
         assert!(m.ttft_p99_ms().is_nan());
     }
@@ -209,10 +333,71 @@ mod tests {
             first_token_ns: 1_100,
             finish_ns: 5_100,
             tokens: 5,
+            class: 0,
         };
         assert_eq!(r.tpot_ns(), Some(1_000.0));
+        assert_eq!(r.ttft_ns(), 1_000);
         let single = RequestSpan { tokens: 1, ..r };
         assert_eq!(single.tpot_ns(), None);
+    }
+
+    #[test]
+    fn slo_target_gating() {
+        let span = RequestSpan {
+            id: 0,
+            arrival_ns: 0,
+            first_token_ns: 2_000_000, // TTFT 2ms
+            finish_ns: 10_000_000,     // TPOT 2ms over 4 intervals
+            tokens: 5,
+            class: 0,
+        };
+        let ok = SloTarget {
+            ttft_ms: 5.0,
+            tpot_ms: 5.0,
+        };
+        let tight_ttft = SloTarget {
+            ttft_ms: 1.0,
+            tpot_ms: 5.0,
+        };
+        let tight_tpot = SloTarget {
+            ttft_ms: 5.0,
+            tpot_ms: 1.0,
+        };
+        assert!(ok.met_by(&span));
+        assert!(!tight_ttft.met_by(&span));
+        assert!(!tight_tpot.met_by(&span));
+        // Single-token spans are gated by TTFT only.
+        let single = RequestSpan { tokens: 1, ..span };
+        assert!(tight_tpot.met_by(&single));
+    }
+
+    #[test]
+    fn per_class_attainment_and_goodput() {
+        let mut m = ServeMetrics {
+            finished: 4,
+            wall_ns: 2_000_000_000,
+            ..Default::default()
+        };
+        let mut a = ClassStats::new(
+            "chat".to_string(),
+            Some(SloTarget {
+                ttft_ms: 1.0,
+                tpot_ms: 1.0,
+            }),
+        );
+        a.finished = 2;
+        a.slo_met = 1;
+        let mut b = ClassStats::new("bulk".to_string(), None);
+        b.finished = 2;
+        b.slo_met = 2; // best-effort: every finish counts
+        m.per_class = vec![a, b];
+        assert_eq!(m.slo_met(), 3);
+        assert!((m.slo_attainment() - 0.75).abs() < 1e-12);
+        assert!((m.goodput_rps() - 1.5).abs() < 1e-12);
+        assert!((m.per_class[0].attainment() - 0.5).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("slo 75.0%"));
+        assert!(s.contains("queue peak"));
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //! only the **exposed** part of each step's all-reduces — the rest hides
 //! behind per-layer compute ([`comm::CommCost`]); single-node deployments
 //! keep the paper's flat behavior.
+//!
+//! Production-shaped load comes from [`workload`]: seeded arrival
+//! processes (Poisson / bursty / diurnal trace), multi-tenant request
+//! classes with per-class SLOs, and conversation replays — ingested
+//! event-driven on the engine's virtual clock, with per-class percentile
+//! breakdowns, SLO attainment, goodput and a queue-depth timeline in
+//! [`metrics::ServeMetrics`].
 
 pub mod batcher;
 pub mod comm;
@@ -26,8 +33,11 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod workload;
 
 pub use comm::{CollectiveComm, CommCost};
 pub use config::ServeConfig;
 pub use engine::VirtualEngine;
+pub use metrics::{ClassStats, ServeMetrics, SloTarget};
 pub use request::{Request, RequestState};
+pub use workload::{ArrivalProcess, TenantClass, WorkloadSpec};

@@ -36,6 +36,13 @@ pub struct Request {
     pub first_token_ns: Option<u64>,
     /// Time the request finished (ns).
     pub finished_ns: Option<u64>,
+    /// Tenant class index into the workload's class table (0 for
+    /// single-class workloads; see `coordinator::workload::TenantClass`).
+    pub class: u8,
+    /// CPU-tier cache key. Defaults to `id`; conversation replays share a
+    /// per-session key so follow-up turns hit the prefix stored by earlier
+    /// turns (in real vLLM this is the token-prefix hash).
+    pub cache_key: u64,
 }
 
 impl Request {
@@ -50,7 +57,21 @@ impl Request {
             generated: 0,
             first_token_ns: None,
             finished_ns: None,
+            class: 0,
+            cache_key: id,
         }
+    }
+
+    /// Tag with a tenant class index (builder style).
+    pub fn with_class(mut self, class: u8) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Override the CPU-tier cache key (builder style).
+    pub fn with_cache_key(mut self, key: u64) -> Self {
+        self.cache_key = key;
+        self
     }
 
     /// Current context length (prompt + generated).
@@ -84,6 +105,8 @@ mod tests {
     fn lifecycle() {
         let mut r = Request::new(1, 4096, 2, 100);
         assert_eq!(r.state, RequestState::Queued);
+        assert_eq!(r.class, 0);
+        assert_eq!(r.cache_key, 1); // defaults to the request id
         assert_eq!(r.context(), 4096);
         r.on_token(500);
         assert_eq!(r.ttft_ns(), Some(400));
@@ -92,5 +115,12 @@ mod tests {
         r.on_token(900);
         assert_eq!(r.state, RequestState::Finished);
         assert_eq!(r.finished_ns, Some(900));
+    }
+
+    #[test]
+    fn builders_override_class_and_key() {
+        let r = Request::new(9, 128, 4, 0).with_class(2).with_cache_key(77);
+        assert_eq!(r.class, 2);
+        assert_eq!(r.cache_key, 77);
     }
 }

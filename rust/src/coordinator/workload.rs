@@ -1,0 +1,604 @@
+//! Workload generation: deterministic, seeded arrival processes and
+//! multi-tenant request classes for production-traffic serving runs.
+//!
+//! The generators produce a time-sorted stream of [`ArrivalEvent`]s that
+//! [`super::engine::VirtualEngine::submit_workload`] ingests on the
+//! virtual clock — the engine no longer assumes every request is present
+//! at t=0. Three arrival shapes cover the usual production regimes:
+//!
+//! - **Poisson** — memoryless open-loop traffic at a fixed offered rate;
+//! - **Bursty** — a Markov-modulated on/off process (exponential dwell
+//!   times); arrivals only occur during on-dwells, at `rate_on_rps`;
+//! - **Trace** — diurnal-trace replay: a non-homogeneous Poisson process
+//!   thinned against a fixed 24-bin day profile ([`DIURNAL`]).
+//!
+//! Tenant classes ([`TenantClass`]) model prefill-heavy vs decode-heavy
+//! mixes with per-class prompt/output length distributions, optional
+//! per-class [`SloTarget`]s, and multi-turn conversation replays whose
+//! follow-up turns share a per-session CPU-tier cache key — the
+//! prefix-cache hit path of [`super::scheduler::Scheduler`].
+//!
+//! Everything is a pure function of `(spec, seed)`: the same spec always
+//! yields the same event stream, byte for byte, on every platform
+//! (pinned by `tests/prop_workload.rs` and `tests/determinism.rs`).
+
+use super::config::ServeConfig;
+use super::engine::VirtualEngine;
+use super::metrics::{ServeMetrics, SloTarget};
+use crate::util::rng::Rng;
+
+/// Relative load per hour-of-day, normalized to a 1.0 peak (hour 13).
+/// The shape follows the usual consumer-serving diurnal curve: a deep
+/// overnight trough, a morning ramp, an early-afternoon peak and a slow
+/// evening decay.
+pub const DIURNAL: [f64; 24] = [
+    0.35, 0.28, 0.22, 0.18, 0.16, 0.18, 0.25, 0.40, 0.55, 0.70, 0.82, 0.90, 0.95, 1.00, 0.98,
+    0.92, 0.88, 0.85, 0.80, 0.75, 0.65, 0.55, 0.48, 0.40,
+];
+
+/// Mean of the [`DIURNAL`] profile (the average-to-peak rate ratio).
+pub fn diurnal_mean() -> f64 {
+    DIURNAL.iter().sum::<f64>() / DIURNAL.len() as f64
+}
+
+/// Seeded arrival process on the virtual-ns timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `rate_rps` requests/second.
+    Poisson { rate_rps: f64 },
+    /// Markov-modulated on/off (interrupted Poisson) process: exponential
+    /// on-dwells (mean `on_ms`) emitting arrivals at `rate_on_rps`,
+    /// separated by silent exponential off-dwells (mean `off_ms`).
+    Bursty {
+        rate_on_rps: f64,
+        on_ms: f64,
+        off_ms: f64,
+    },
+    /// Diurnal-trace replay: Poisson candidates at `peak_rps` thinned by
+    /// the [`DIURNAL`] profile over a (possibly compressed) day of
+    /// `day_s` virtual seconds.
+    Trace { peak_rps: f64, day_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Long-run average arrival rate (requests/second).
+    pub fn mean_rate_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => *rate_rps,
+            ArrivalProcess::Bursty {
+                rate_on_rps,
+                on_ms,
+                off_ms,
+            } => rate_on_rps * on_ms / (on_ms + off_ms),
+            ArrivalProcess::Trace { peak_rps, .. } => peak_rps * diurnal_mean(),
+        }
+    }
+
+    /// The same process shape with the rate scaled by `factor`.
+    pub fn scaled(&self, factor: f64) -> ArrivalProcess {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => ArrivalProcess::Poisson {
+                rate_rps: rate_rps * factor,
+            },
+            ArrivalProcess::Bursty {
+                rate_on_rps,
+                on_ms,
+                off_ms,
+            } => ArrivalProcess::Bursty {
+                rate_on_rps: rate_on_rps * factor,
+                on_ms,
+                off_ms,
+            },
+            ArrivalProcess::Trace { peak_rps, day_s } => ArrivalProcess::Trace {
+                peak_rps: peak_rps * factor,
+                day_s,
+            },
+        }
+    }
+
+    /// Build the process named by the CLI `--workload` flag with a
+    /// long-run average of `rate_rps`. For `trace`, the day profile is
+    /// compressed into `horizon_s` virtual seconds so a finite run sweeps
+    /// the full diurnal curve. Returns `None` for unknown kinds.
+    pub fn for_kind(kind: &str, rate_rps: f64, horizon_s: f64) -> Option<ArrivalProcess> {
+        match kind {
+            "poisson" => Some(ArrivalProcess::Poisson { rate_rps }),
+            // 25% duty cycle: 4× the average rate inside bursts.
+            "bursty" => Some(ArrivalProcess::Bursty {
+                rate_on_rps: rate_rps * 4.0,
+                on_ms: 200.0,
+                off_ms: 600.0,
+            }),
+            "trace" | "diurnal" => Some(ArrivalProcess::Trace {
+                peak_rps: rate_rps / diurnal_mean(),
+                day_s: horizon_s.max(1e-3),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Token-length distribution for prompts/outputs/turn counts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LenDist {
+    Fixed(u64),
+    /// Uniform over `[lo, hi]` inclusive.
+    Uniform { lo: u64, hi: u64 },
+}
+
+impl LenDist {
+    /// Draw one value.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match *self {
+            LenDist::Fixed(v) => v,
+            LenDist::Uniform { lo, hi } => {
+                assert!(lo <= hi, "LenDist::Uniform lo > hi");
+                lo + rng.below(hi - lo + 1)
+            }
+        }
+    }
+
+    /// Expected value.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LenDist::Fixed(v) => v as f64,
+            LenDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+        }
+    }
+}
+
+/// One tenant request class: a slice of the traffic with its own length
+/// distributions, cache affinity, conversation shape and (optionally) a
+/// latency SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Relative share of sessions (normalized over all classes).
+    pub weight: f64,
+    /// First-turn prompt length (tokens).
+    pub prompt: LenDist,
+    /// Output length per turn (tokens).
+    pub output: LenDist,
+    /// Fraction of first turns whose prefix is pre-resident in the CPU
+    /// tier (follow-up turns are always warm — their prefix is the
+    /// conversation so far).
+    pub warm_frac: f64,
+    /// Latency objective; `None` = best-effort.
+    pub slo: Option<SloTarget>,
+    /// Conversation turns per session (values < 1 are clamped to 1).
+    pub turns: LenDist,
+    /// Mean think time between turns (exponential, ms).
+    pub think_ms: f64,
+    /// New user tokens appended per follow-up turn.
+    pub followup: LenDist,
+}
+
+impl TenantClass {
+    /// A single-turn class with no SLO — the minimal useful tenant.
+    pub fn simple(name: &str, weight: f64, prompt: LenDist, output: LenDist) -> Self {
+        TenantClass {
+            name: name.to_string(),
+            weight,
+            prompt,
+            output,
+            warm_frac: 1.0,
+            slo: None,
+            turns: LenDist::Fixed(1),
+            think_ms: 0.0,
+            followup: LenDist::Fixed(0),
+        }
+    }
+}
+
+/// The default two-tenant production mix: an interactive chat class
+/// (decode-heavy, multi-turn, tight SLO) and a bulk ingestion class
+/// (prefill-heavy, single-turn, best-effort).
+pub fn default_tenants() -> Vec<TenantClass> {
+    vec![
+        TenantClass {
+            name: "chat".to_string(),
+            weight: 0.7,
+            prompt: LenDist::Uniform { lo: 256, hi: 768 },
+            output: LenDist::Uniform { lo: 32, hi: 128 },
+            warm_frac: 0.8,
+            slo: Some(SloTarget {
+                ttft_ms: 250.0,
+                tpot_ms: 50.0,
+            }),
+            turns: LenDist::Uniform { lo: 1, hi: 4 },
+            think_ms: 500.0,
+            followup: LenDist::Uniform { lo: 16, hi: 64 },
+        },
+        TenantClass {
+            name: "bulk".to_string(),
+            weight: 0.3,
+            prompt: LenDist::Uniform { lo: 2048, hi: 6144 },
+            output: LenDist::Uniform { lo: 128, hi: 384 },
+            warm_frac: 0.2,
+            slo: None,
+            turns: LenDist::Fixed(1),
+            think_ms: 0.0,
+            followup: LenDist::Fixed(0),
+        },
+    ]
+}
+
+/// Parse the CLI `--tenants` spec: `default`, or a comma-separated list
+/// of `name:weight:prompt:output[:ttft_ms[:tpot_ms]]` entries (fixed
+/// lengths, single-turn; an SLO is attached when `ttft_ms` is present,
+/// with `tpot_ms` defaulting to 50). Returns `None` on malformed input.
+pub fn parse_tenants(spec: &str) -> Option<Vec<TenantClass>> {
+    if spec == "default" {
+        return Some(default_tenants());
+    }
+    let mut classes = Vec::new();
+    for entry in spec.split(',') {
+        let f: Vec<&str> = entry.split(':').collect();
+        if !(4..=6).contains(&f.len()) {
+            return None;
+        }
+        let weight: f64 = f[1].parse().ok()?;
+        let prompt: u64 = f[2].parse().ok()?;
+        let output: u64 = f[3].parse().ok()?;
+        if weight <= 0.0 || prompt == 0 || output == 0 {
+            return None;
+        }
+        let mut class = TenantClass::simple(
+            f[0],
+            weight,
+            LenDist::Fixed(prompt),
+            LenDist::Fixed(output),
+        );
+        if f.len() >= 5 {
+            let ttft_ms: f64 = f[4].parse().ok()?;
+            let tpot_ms: f64 = if f.len() == 6 { f[5].parse().ok()? } else { 50.0 };
+            class.slo = Some(SloTarget { ttft_ms, tpot_ms });
+        }
+        classes.push(class);
+    }
+    if classes.is_empty() {
+        return None;
+    }
+    Some(classes)
+}
+
+/// One generated arrival: a conversation turn of one session, timestamped
+/// on the virtual clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalEvent {
+    /// Arrival instant (virtual ns).
+    pub at_ns: u64,
+    /// Index into the spec's class table.
+    pub class: u8,
+    /// Session (conversation) id; turns of one session share it.
+    pub session: u64,
+    /// Turn number within the session (0-based, strictly ordered in time).
+    pub turn: u32,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+    /// Prefix resident in the CPU tier at arrival (always true for
+    /// follow-up turns).
+    pub warm: bool,
+}
+
+/// CPU-tier cache key for a session's conversation prefix. The high bit
+/// keeps session keys disjoint from the per-request default keys
+/// (`Request::cache_key = id`) when workload and direct submissions mix.
+pub fn session_cache_key(session: u64) -> u64 {
+    (1u64 << 63) | session
+}
+
+/// A complete workload: arrival process × tenant mix × size × seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Offered-load shape. Its rate is the **request** (turn) rate; the
+    /// generator divides by the mix's mean turns-per-session to get the
+    /// session start rate.
+    pub process: ArrivalProcess,
+    pub classes: Vec<TenantClass>,
+    /// Total arrival events to generate (conversation turns count
+    /// individually).
+    pub requests: u64,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Poisson workload over the default tenant mix.
+    pub fn poisson(rate_rps: f64, requests: u64, seed: u64) -> Self {
+        WorkloadSpec {
+            process: ArrivalProcess::Poisson { rate_rps },
+            classes: default_tenants(),
+            requests,
+            seed,
+        }
+    }
+
+    /// A closed-loop variant of `classes`: everything arrives (nearly) at
+    /// once, conversations flattened to one turn — measures pure service
+    /// capacity with no arrival-process or think-time slack.
+    pub fn closed_loop(classes: &[TenantClass], requests: u64, seed: u64) -> Self {
+        let flat = classes
+            .iter()
+            .map(|c| TenantClass {
+                turns: LenDist::Fixed(1),
+                think_ms: 0.0,
+                ..c.clone()
+            })
+            .collect();
+        WorkloadSpec {
+            process: ArrivalProcess::Poisson { rate_rps: 1e9 },
+            classes: flat,
+            requests,
+            seed,
+        }
+    }
+
+    /// Mean conversation turns per session over the class mix.
+    fn mean_turns(&self) -> f64 {
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let weighted: f64 = self
+            .classes
+            .iter()
+            .map(|c| c.weight * c.turns.mean().max(1.0))
+            .sum();
+        weighted / total_w
+    }
+
+    /// Generate the arrival stream: `requests` events sorted by arrival
+    /// time. Pure function of the spec (same spec ⇒ identical stream).
+    pub fn generate(&self) -> Vec<ArrivalEvent> {
+        assert!(!self.classes.is_empty(), "workload needs ≥ 1 class");
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        assert!(total_w > 0.0, "class weights must sum > 0");
+        // Session starts are the process thinned to the per-session rate.
+        let session_process = self.process.scaled(1.0 / self.mean_turns());
+        let mut gen = ArrivalGen::new(&session_process, Rng::new(self.seed ^ ARRIVAL_STREAM));
+        let mut rng = Rng::new(self.seed);
+        let mut events: Vec<ArrivalEvent> = Vec::with_capacity(self.requests as usize);
+        let mut session = 0u64;
+        while events.len() < self.requests as usize {
+            let t0 = gen.next_ns();
+            let class = pick_weighted(&mut rng, &self.classes, total_w);
+            let cl = &self.classes[class];
+            let turns = cl.turns.sample(&mut rng).max(1);
+            let mut at = t0;
+            let mut context = 0u64;
+            for turn in 0..turns {
+                let (prompt, warm) = if turn == 0 {
+                    (cl.prompt.sample(&mut rng).max(1), rng.chance(cl.warm_frac))
+                } else {
+                    // The follow-up prompt is the conversation so far plus
+                    // the user's new tokens; its prefix is warm by
+                    // construction (the previous turn's KV).
+                    (context + cl.followup.sample(&mut rng).max(1), true)
+                };
+                let output = cl.output.sample(&mut rng).max(1);
+                events.push(ArrivalEvent {
+                    at_ns: at,
+                    class: class as u8,
+                    session,
+                    turn: turn as u32,
+                    prompt_tokens: prompt,
+                    output_tokens: output,
+                    warm,
+                });
+                context = prompt + output;
+                at += 1 + exp_ns(&mut rng, cl.think_ms * 1e6) as u64;
+            }
+            session += 1;
+        }
+        // Time-sort across sessions. Within a session `at_ns` is strictly
+        // increasing, so (at, session, turn) keeps turn order globally and
+        // truncation only ever drops the latest turns.
+        events.sort_by_key(|e| (e.at_ns, e.session, e.turn));
+        events.truncate(self.requests as usize);
+        events
+    }
+}
+
+/// Run `spec` through a fresh [`VirtualEngine`] for `cfg` and return the
+/// serving metrics (per-class breakdowns included).
+pub fn drive(cfg: &ServeConfig, spec: &WorkloadSpec) -> ServeMetrics {
+    let events = spec.generate();
+    let mut eng = VirtualEngine::new(cfg.clone());
+    eng.configure_classes(&spec.classes);
+    eng.submit_workload(&events);
+    eng.run_to_completion().clone()
+}
+
+/// Stream separator: arrival instants draw from their own RNG stream so
+/// adding per-request draws never perturbs the timeline.
+const ARRIVAL_STREAM: u64 = 0xA5A5_5A5A_0F0F_F0F0;
+
+/// Exponential variate with the given mean (returns 0.0 mean as 0.0).
+fn exp_ns(rng: &mut Rng, mean_ns: f64) -> f64 {
+    if mean_ns <= 0.0 {
+        return 0.0;
+    }
+    // f64() ∈ [0,1) ⇒ 1-u ∈ (0,1] ⇒ ln finite and ≤ 0.
+    -mean_ns * (1.0 - rng.f64()).ln()
+}
+
+/// Weighted class pick.
+fn pick_weighted(rng: &mut Rng, classes: &[TenantClass], total_w: f64) -> usize {
+    let mut x = rng.f64() * total_w;
+    for (i, c) in classes.iter().enumerate() {
+        x -= c.weight;
+        if x < 0.0 {
+            return i;
+        }
+    }
+    classes.len() - 1
+}
+
+/// Stateful arrival-instant generator over the virtual-ns timeline.
+struct ArrivalGen<'a> {
+    process: &'a ArrivalProcess,
+    rng: Rng,
+    /// Current time, kept in f64 ns so long streams accumulate precisely.
+    t_ns: f64,
+    /// Bursty only: end of the current on-dwell.
+    on_until_ns: f64,
+}
+
+impl<'a> ArrivalGen<'a> {
+    fn new(process: &'a ArrivalProcess, mut rng: Rng) -> Self {
+        let on_until_ns = match process {
+            ArrivalProcess::Bursty { on_ms, .. } => exp_ns(&mut rng, on_ms * 1e6),
+            _ => 0.0,
+        };
+        ArrivalGen {
+            process,
+            rng,
+            t_ns: 0.0,
+            on_until_ns,
+        }
+    }
+
+    /// Next arrival instant (ns); strictly non-decreasing.
+    fn next_ns(&mut self) -> u64 {
+        match *self.process {
+            ArrivalProcess::Poisson { rate_rps } => {
+                self.t_ns += exp_ns(&mut self.rng, 1e9 / rate_rps);
+                self.t_ns as u64
+            }
+            ArrivalProcess::Bursty {
+                rate_on_rps,
+                on_ms,
+                off_ms,
+            } => loop {
+                let gap = exp_ns(&mut self.rng, 1e9 / rate_on_rps);
+                if self.t_ns + gap <= self.on_until_ns {
+                    self.t_ns += gap;
+                    return self.t_ns as u64;
+                }
+                // The on-dwell expires before the candidate arrival: the
+                // memoryless property lets us jump through an off-dwell
+                // into a fresh on-dwell and redraw.
+                self.t_ns = self.on_until_ns + exp_ns(&mut self.rng, off_ms * 1e6);
+                self.on_until_ns = self.t_ns + exp_ns(&mut self.rng, on_ms * 1e6);
+            },
+            ArrivalProcess::Trace { peak_rps, day_s } => loop {
+                self.t_ns += exp_ns(&mut self.rng, 1e9 / peak_rps);
+                if self.rng.f64() < diurnal_at(self.t_ns, day_s) {
+                    return self.t_ns as u64;
+                }
+            },
+        }
+    }
+}
+
+/// The diurnal profile value at virtual instant `t_ns` for a day of
+/// `day_s` seconds (cyclic).
+fn diurnal_at(t_ns: f64, day_s: f64) -> f64 {
+    let day_frac = (t_ns / (day_s * 1e9)).fract();
+    let bin = ((day_frac * 24.0) as usize).min(23);
+    DIURNAL[bin]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn len_dist_bounds_and_mean() {
+        let mut rng = Rng::new(1);
+        let d = LenDist::Uniform { lo: 10, hi: 20 };
+        for _ in 0..1000 {
+            let v = d.sample(&mut rng);
+            assert!((10..=20).contains(&v));
+        }
+        assert_eq!(d.mean(), 15.0);
+        assert_eq!(LenDist::Fixed(7).sample(&mut rng), 7);
+    }
+
+    #[test]
+    fn process_mean_rates() {
+        let p = ArrivalProcess::Poisson { rate_rps: 100.0 };
+        assert_eq!(p.mean_rate_rps(), 100.0);
+        let b = ArrivalProcess::Bursty {
+            rate_on_rps: 400.0,
+            on_ms: 200.0,
+            off_ms: 600.0,
+        };
+        assert!((b.mean_rate_rps() - 100.0).abs() < 1e-9);
+        let t = ArrivalProcess::Trace {
+            peak_rps: 100.0,
+            day_s: 60.0,
+        };
+        assert!((t.mean_rate_rps() - 100.0 * diurnal_mean()).abs() < 1e-9);
+        assert!((p.scaled(2.0).mean_rate_rps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn for_kind_matches_requested_average() {
+        for kind in ["poisson", "bursty", "trace"] {
+            let p = ArrivalProcess::for_kind(kind, 150.0, 10.0).unwrap();
+            assert!(
+                (p.mean_rate_rps() - 150.0).abs() < 1e-6,
+                "{kind}: {}",
+                p.mean_rate_rps()
+            );
+        }
+        assert!(ArrivalProcess::for_kind("nope", 1.0, 1.0).is_none());
+    }
+
+    #[test]
+    fn generate_is_sorted_and_sized() {
+        let spec = WorkloadSpec::poisson(500.0, 200, 42);
+        let ev = spec.generate();
+        assert_eq!(ev.len(), 200);
+        assert!(ev.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        // Both default classes show up in a 200-event stream.
+        assert!(ev.iter().any(|e| e.class == 0));
+        assert!(ev.iter().any(|e| e.class == 1));
+    }
+
+    #[test]
+    fn closed_loop_arrives_at_once() {
+        let spec = WorkloadSpec::closed_loop(&default_tenants(), 64, 3);
+        let ev = spec.generate();
+        assert_eq!(ev.len(), 64);
+        // 64 draws at 1e9 req/s land within a few µs.
+        assert!(ev.last().unwrap().at_ns < 1_000_000);
+        assert!(ev.iter().all(|e| e.turn == 0));
+    }
+
+    #[test]
+    fn parse_tenants_roundtrip() {
+        let t = parse_tenants("default").unwrap();
+        assert_eq!(t.len(), 2);
+        let t = parse_tenants("chat:0.7:512:64:250:40,bulk:0.3:4096:256").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].name, "chat");
+        assert_eq!(
+            t[0].slo,
+            Some(SloTarget {
+                ttft_ms: 250.0,
+                tpot_ms: 40.0
+            })
+        );
+        assert_eq!(t[0].prompt, LenDist::Fixed(512));
+        assert!(t[1].slo.is_none());
+        assert!(parse_tenants("").is_none());
+        assert!(parse_tenants("a:b:c:d").is_none());
+        assert!(parse_tenants("a:1:0:8").is_none());
+    }
+
+    #[test]
+    fn session_keys_have_high_bit() {
+        assert_ne!(session_cache_key(0), 0);
+        assert_eq!(session_cache_key(5) & !(1u64 << 63), 5);
+    }
+
+    #[test]
+    fn diurnal_profile_is_normalized() {
+        assert!(DIURNAL.iter().all(|&v| v > 0.0 && v <= 1.0));
+        assert_eq!(DIURNAL.iter().cloned().fold(0.0, f64::max), 1.0);
+        assert!(diurnal_mean() > 0.3 && diurnal_mean() < 1.0);
+        // Cyclic lookup: hour 13 of any day is the peak.
+        let day_ns = 60.0 * 1e9;
+        assert_eq!(diurnal_at(13.5 / 24.0 * day_ns, 60.0), 1.0);
+        assert_eq!(diurnal_at(day_ns + 13.5 / 24.0 * day_ns, 60.0), 1.0);
+    }
+}

@@ -8,3 +8,4 @@ pub mod cluster_breakdown;
 pub mod collectives;
 pub mod power;
 pub mod serving;
+pub mod serving_load;

@@ -1,0 +1,304 @@
+//! Latency-vs-offered-load curves: production-traffic serving under the
+//! seeded arrival processes of [`crate::coordinator::workload`].
+//!
+//! One [`LoadPoint`] per (workload shape, node count, offered rate):
+//! aggregate and per-class TTFT/TPOT percentiles, SLO attainment, goodput
+//! and queue peak. The `serving_load` bench sweeps these into
+//! `BENCH_PR7.json`; the CLI `serve` subcommand renders them as tables
+//! and `results/serving_load.csv`.
+
+use crate::coordinator::workload::{drive, ArrivalProcess, TenantClass, WorkloadSpec};
+use crate::coordinator::{ServeConfig, ServeMetrics};
+use crate::kvcache::fetch::FetchImpl;
+use crate::models::ModelConfig;
+
+/// Per-tenant-class slice of one load point.
+#[derive(Debug, Clone)]
+pub struct ClassPoint {
+    pub name: String,
+    pub finished: u64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// SLO attainment (1.0 for best-effort classes; NaN with 0 finishes).
+    pub attainment: f64,
+}
+
+/// One measured point on the latency-vs-offered-load curve.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    /// Workload shape (`poisson` / `bursty` / `trace`).
+    pub workload: String,
+    pub nodes: usize,
+    /// Offered (average) arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Arrival events offered.
+    pub offered: u64,
+    pub finished: u64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// Overall SLO attainment fraction.
+    pub attainment: f64,
+    /// SLO-meeting requests per second.
+    pub goodput_rps: f64,
+    pub queue_peak: u64,
+    /// Virtual wall time of the run (seconds).
+    pub wall_s: f64,
+    pub classes: Vec<ClassPoint>,
+}
+
+/// The standard serving config for load curves: b2b DMA fetch, a KV pool
+/// sized for the batch (not the backlog), `nodes` nodes, overlap on/off.
+pub fn serve_config(model: &'static ModelConfig, nodes: usize, overlap: bool) -> ServeConfig {
+    let mut cfg = ServeConfig::new(model, FetchImpl::DmaB2b)
+        .with_nodes(nodes)
+        .with_comm_overlap(overlap);
+    cfg.gpu_blocks = 1 << 18;
+    cfg
+}
+
+/// Condense run metrics into a [`LoadPoint`].
+pub fn point_from_metrics(
+    workload: &str,
+    nodes: usize,
+    rate_rps: f64,
+    offered: u64,
+    m: &ServeMetrics,
+) -> LoadPoint {
+    LoadPoint {
+        workload: workload.to_string(),
+        nodes,
+        rate_rps,
+        offered,
+        finished: m.finished,
+        ttft_p50_ms: m.ttft_p50_ms(),
+        ttft_p95_ms: m.ttft_p95_ms(),
+        ttft_p99_ms: m.ttft_p99_ms(),
+        tpot_p50_ms: m.tpot_pct_ms(50.0),
+        tpot_p99_ms: m.tpot_pct_ms(99.0),
+        attainment: m.slo_attainment(),
+        goodput_rps: m.goodput_rps(),
+        queue_peak: m.queue_peak,
+        wall_s: m.wall_ns as f64 / 1e9,
+        classes: m
+            .per_class
+            .iter()
+            .map(|c| ClassPoint {
+                name: c.name.clone(),
+                finished: c.finished,
+                ttft_p50_ms: c.ttft_pct_ms(50.0),
+                ttft_p95_ms: c.ttft_pct_ms(95.0),
+                ttft_p99_ms: c.ttft_pct_ms(99.0),
+                tpot_p50_ms: c.tpot_pct_ms(50.0),
+                tpot_p99_ms: c.tpot_pct_ms(99.0),
+                attainment: c.attainment(),
+            })
+            .collect(),
+    }
+}
+
+/// Run one workload at one offered rate and measure a [`LoadPoint`].
+/// For `trace` workloads the diurnal day is compressed into the run's
+/// expected span, so every run sweeps the full profile.
+pub fn measure(
+    cfg: &ServeConfig,
+    classes: &[TenantClass],
+    kind: &str,
+    rate_rps: f64,
+    requests: u64,
+    seed: u64,
+) -> LoadPoint {
+    assert!(rate_rps > 0.0, "offered rate must be positive");
+    let horizon_s = requests as f64 / rate_rps;
+    let process = ArrivalProcess::for_kind(kind, rate_rps, horizon_s)
+        .unwrap_or_else(|| panic!("unknown workload kind: {kind}"));
+    let spec = WorkloadSpec {
+        process,
+        classes: classes.to_vec(),
+        requests,
+        seed,
+    };
+    let m = drive(cfg, &spec);
+    point_from_metrics(kind, cfg.num_nodes, rate_rps, requests, &m)
+}
+
+/// Closed-loop service capacity of `cfg` under this tenant mix
+/// (requests/second with every arrival at t≈0 and conversations
+/// flattened — no arrival-process slack).
+pub fn estimate_capacity_rps(
+    cfg: &ServeConfig,
+    classes: &[TenantClass],
+    requests: u64,
+    seed: u64,
+) -> f64 {
+    let m = drive(cfg, &WorkloadSpec::closed_loop(classes, requests, seed));
+    assert!(m.wall_ns > 0 && m.finished > 0);
+    m.finished as f64 / (m.wall_ns as f64 / 1e9)
+}
+
+/// Sweep offered load over `rates` for one workload shape.
+pub fn sweep(
+    cfg: &ServeConfig,
+    classes: &[TenantClass],
+    kind: &str,
+    rates: &[f64],
+    requests: u64,
+    seed: u64,
+) -> Vec<LoadPoint> {
+    rates
+        .iter()
+        .map(|&r| measure(cfg, classes, kind, r, requests, seed))
+        .collect()
+}
+
+/// Render the aggregate latency-vs-load table.
+pub fn render(points: &[LoadPoint]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "workload",
+        "nodes",
+        "rate_rps",
+        "reqs",
+        "ttft_p50_ms",
+        "ttft_p95_ms",
+        "ttft_p99_ms",
+        "tpot_p99_ms",
+        "slo%",
+        "goodput_rps",
+        "queue_peak",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.workload.clone(),
+            p.nodes.to_string(),
+            format!("{:.0}", p.rate_rps),
+            p.finished.to_string(),
+            format!("{:.1}", p.ttft_p50_ms),
+            format!("{:.1}", p.ttft_p95_ms),
+            format!("{:.1}", p.ttft_p99_ms),
+            format!("{:.2}", p.tpot_p99_ms),
+            format!("{:.1}", p.attainment * 100.0),
+            format!("{:.0}", p.goodput_rps),
+            p.queue_peak.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Render the per-class breakdown of every point.
+pub fn render_classes(points: &[LoadPoint]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "workload",
+        "rate_rps",
+        "class",
+        "reqs",
+        "ttft_p50_ms",
+        "ttft_p95_ms",
+        "ttft_p99_ms",
+        "tpot_p50_ms",
+        "tpot_p99_ms",
+        "slo%",
+    ]);
+    for p in points {
+        for c in &p.classes {
+            t.row(vec![
+                p.workload.clone(),
+                format!("{:.0}", p.rate_rps),
+                c.name.clone(),
+                c.finished.to_string(),
+                format!("{:.1}", c.ttft_p50_ms),
+                format!("{:.1}", c.ttft_p95_ms),
+                format!("{:.1}", c.ttft_p99_ms),
+                format!("{:.2}", c.tpot_p50_ms),
+                format!("{:.2}", c.tpot_p99_ms),
+                format!("{:.1}", c.attainment * 100.0),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// CSV of the aggregate curve (one row per point).
+pub fn to_csv(points: &[LoadPoint]) -> crate::util::csv::Csv {
+    let mut c = crate::util::csv::Csv::new(vec![
+        "workload",
+        "nodes",
+        "rate_rps",
+        "offered",
+        "finished",
+        "ttft_p50_ms",
+        "ttft_p95_ms",
+        "ttft_p99_ms",
+        "tpot_p50_ms",
+        "tpot_p99_ms",
+        "slo_attainment",
+        "goodput_rps",
+        "queue_peak",
+        "wall_s",
+    ]);
+    for p in points {
+        c.row(vec![
+            p.workload.clone(),
+            p.nodes.to_string(),
+            format!("{:.2}", p.rate_rps),
+            p.offered.to_string(),
+            p.finished.to_string(),
+            format!("{:.3}", p.ttft_p50_ms),
+            format!("{:.3}", p.ttft_p95_ms),
+            format!("{:.3}", p.ttft_p99_ms),
+            format!("{:.4}", p.tpot_p50_ms),
+            format!("{:.4}", p.tpot_p99_ms),
+            format!("{:.4}", p.attainment),
+            format!("{:.2}", p.goodput_rps),
+            p.queue_peak.to_string(),
+            format!("{:.3}", p.wall_s),
+        ]);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::default_tenants;
+    use crate::models::zoo::QWEN25_0_5B;
+
+    #[test]
+    fn capacity_is_positive_and_saturation_hurts_p99() {
+        let cfg = serve_config(&QWEN25_0_5B, 1, true);
+        let classes = default_tenants();
+        let cap = estimate_capacity_rps(&cfg, &classes, 96, 7);
+        assert!(cap > 0.0, "capacity {cap}");
+        // Far under capacity vs far over: p99 TTFT must rise sharply.
+        let light = measure(&cfg, &classes, "poisson", cap * 0.3, 96, 7);
+        let heavy = measure(&cfg, &classes, "poisson", cap * 3.0, 96, 7);
+        assert_eq!(light.finished, 96);
+        assert_eq!(heavy.finished, 96);
+        assert!(
+            heavy.ttft_p99_ms > 2.0 * light.ttft_p99_ms,
+            "light {:.1}ms vs heavy {:.1}ms",
+            light.ttft_p99_ms,
+            heavy.ttft_p99_ms
+        );
+        assert!(light.attainment >= heavy.attainment);
+    }
+
+    #[test]
+    fn render_and_csv_cover_every_point() {
+        let cfg = serve_config(&QWEN25_0_5B, 1, true);
+        let classes = default_tenants();
+        let pts = sweep(&cfg, &classes, "bursty", &[200.0, 400.0], 48, 3);
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.classes.len() == 2));
+        let table = render(&pts);
+        assert!(table.contains("bursty"));
+        let classes_table = render_classes(&pts);
+        assert!(classes_table.contains("chat") && classes_table.contains("bulk"));
+        let csv = to_csv(&pts).render();
+        assert_eq!(csv.lines().count(), 3); // header + 2 points
+    }
+}

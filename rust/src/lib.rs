@@ -37,7 +37,13 @@
 //!   **exposed** part of each step's all-reduces — the remainder hides
 //!   behind the producing layers' GEMMs
 //!   ([`coordinator::comm::CommCost`]; `ServeMetrics` splits `comm_ns`
-//!   into exposed + hidden).
+//!   into exposed + hidden). Production-shaped load comes from
+//!   [`coordinator::workload`]: seeded Poisson / bursty / diurnal-trace
+//!   arrival processes, multi-tenant classes with per-class SLOs, and
+//!   conversation replays hitting the CPU-tier prefix cache — ingested
+//!   event-driven on the engine's virtual clock, reported as per-class
+//!   percentiles / SLO attainment / goodput (`dma-latte serve`,
+//!   `benches/serving_load.rs`, `BENCH_PR7.json`).
 //! - [`obs`] — observability: cross-layer tracing threading one span
 //!   hierarchy from serving requests through engine steps, cluster
 //!   collectives and per-phase legs down to the simulator's DMA phases;

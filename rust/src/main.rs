@@ -12,6 +12,12 @@
 //! dma-latte power                                  # Fig. 15
 //! dma-latte ttft      [--prefill 4096]             # Fig. 16
 //! dma-latte throughput [--requests 200] [--hit 1.0]# Fig. 17
+//! dma-latte serve     [--workload poisson|bursty|trace] [--rate R|R1,R2,..]
+//!                     [--requests 512] [--nodes 1] [--seed 7]
+//!                     [--tenants default|name:w:prompt:output[:ttft[:tpot]],..]
+//!                     [--no-overlap] [--out results/]
+//!                     # trace-driven serving: sweep offered load, report
+//!                     # per-class TTFT/TPOT percentiles + SLO attainment
 //! dma-latte selftest                               # quick invariants
 //! dma-latte trace     [--kind allreduce] [--nodes 2] [--size 1M]
 //!                     [--schedule auto|sequential|pipelined|overlapped]
@@ -316,6 +322,73 @@ fn cmd_trace(args: &Args) {
     println!("perfetto timeline: {path} ({} spans)", trace.spans.len());
 }
 
+fn cmd_serve(args: &Args) {
+    use dma_latte::coordinator::workload::{parse_tenants, ArrivalProcess};
+    use dma_latte::figures::serving_load as sl;
+
+    let kind = args.get("workload", "poisson");
+    if ArrivalProcess::for_kind(&kind, 1.0, 1.0).is_none() {
+        eprintln!("bad --workload {kind:?} (need poisson|bursty|trace)");
+        std::process::exit(2);
+    }
+    let nodes: usize = args.get_num("nodes", 1);
+    let requests: u64 = args.get_num("requests", 512);
+    let seed: u64 = args.get_num("seed", 7);
+    let overlap = !args.has("no-overlap");
+    let classes = match parse_tenants(&args.get("tenants", "default")) {
+        Some(c) => c,
+        None => {
+            eprintln!(
+                "bad --tenants (need `default` or \
+                 name:weight:prompt:output[:ttft_ms[:tpot_ms]],...)"
+            );
+            std::process::exit(2);
+        }
+    };
+    let model = &zoo::QWEN25_0_5B;
+    let cfg = sl::serve_config(model, nodes, overlap);
+
+    let parse_rate = |tok: &str| -> f64 {
+        match tok.trim().parse::<f64>() {
+            Ok(r) if r > 0.0 => r,
+            _ => {
+                eprintln!("bad --rate entry {tok:?} (need a positive req/s number)");
+                std::process::exit(2);
+            }
+        }
+    };
+    // A single --rate anchors a sweep; a comma list is used verbatim; no
+    // --rate sweeps around the measured closed-loop capacity.
+    const SWEEP: [f64; 7] = [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0];
+    let rates: Vec<f64> = match args.opt("rate") {
+        Some(spec) if spec.contains(',') => spec.split(',').map(parse_rate).collect(),
+        Some(one) => {
+            let r = parse_rate(one);
+            SWEEP.iter().map(|m| m * r).collect()
+        }
+        None => {
+            let probe = requests.clamp(32, 128);
+            let cap = sl::estimate_capacity_rps(&cfg, &classes, probe, seed);
+            println!("# closed-loop capacity ≈ {cap:.0} req/s — sweeping 0.25–2.0×");
+            SWEEP.iter().map(|m| m * cap).collect()
+        }
+    };
+
+    println!(
+        "# serving load — {} · {kind} · {nodes} node(s) · {requests} reqs/point · overlap {}",
+        model.name,
+        if overlap { "on" } else { "off" }
+    );
+    let pts = sl::sweep(&cfg, &classes, &kind, &rates, requests, seed);
+    print!("{}", sl::render(&pts));
+    println!("\nper-class breakdown:");
+    print!("{}", sl::render_classes(&pts));
+    let out = args.get("out", "results");
+    let path = format!("{out}/serving_load.csv");
+    sl::to_csv(&pts).write(&path).expect("write serving_load.csv");
+    println!("\ncsv: {path}");
+}
+
 fn cmd_selftest() {
     use dma_latte::collectives::{run_collective, select_variant, RunOptions};
     use dma_latte::sim::SimConfig;
@@ -350,6 +423,7 @@ fn main() {
         Some("power") => print!("{}", power::render(&power::fig15(None))),
         Some("ttft") => cmd_ttft(&args),
         Some("throughput") => cmd_throughput(&args),
+        Some("serve") => cmd_serve(&args),
         Some("selftest") => cmd_selftest(),
         Some("trace") => cmd_trace(&args),
         other => {
@@ -357,7 +431,7 @@ fn main() {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!(
-                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|trace|selftest> [--flags]"
+                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|serve|trace|selftest> [--flags]"
             );
             std::process::exit(2);
         }

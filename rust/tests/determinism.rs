@@ -200,6 +200,69 @@ fn overlapped_allreduce_replays_bit_identically() {
     assert_eq!(vfirst_sum, mem_sum(&vsecond_sims), "overlapped replay memory checksum");
 }
 
+/// A trace-driven production-traffic serving run replays bit-identically
+/// across collective-cache churn: same virtual wall clock, same
+/// per-request spans, same per-class SLO counters, same queue timeline.
+/// Guards the workload generator's purity AND the engine's event-driven
+/// admission path against cross-episode state leaks (the plan/rounds
+/// cache hit-miss deltas are the one intentional difference).
+#[test]
+fn trace_driven_serving_replays_bit_identically() {
+    use dma_latte::coordinator::workload::{default_tenants, drive, ArrivalProcess, WorkloadSpec};
+    use dma_latte::figures::serving_load::serve_config;
+    use dma_latte::models::zoo::QWEN25_0_5B;
+
+    let cfg = serve_config(&QWEN25_0_5B, 2, true);
+    let spec = WorkloadSpec {
+        process: ArrivalProcess::Trace {
+            peak_rps: 800.0,
+            day_s: 0.5,
+        },
+        classes: default_tenants(),
+        requests: 96,
+        seed: 21,
+    };
+    let first = drive(&cfg, &spec);
+    assert_eq!(first.submitted, 96);
+    assert_eq!(first.finished, 96);
+    assert_eq!(
+        first.per_class.iter().map(|c| c.finished).sum::<u64>(),
+        96,
+        "every finish lands in a class bucket"
+    );
+
+    // Churn the cross-episode collective caches with other shapes.
+    let choice = ClusterChoice {
+        intra: Variant::new(Strategy::Pcpy, true),
+        inter: InterSchedule::Overlapped,
+    };
+    run_hier_ar_full(
+        choice,
+        choice,
+        &ClusterTopology::mi300x(4),
+        256 * KB,
+        &HierRunOptions::default(),
+    );
+
+    let second = drive(&cfg, &spec);
+    assert_eq!(first.wall_ns, second.wall_ns, "serving wall clock");
+    assert_eq!(first.requests, second.requests, "per-request spans");
+    assert_eq!(first.ttft_ns, second.ttft_ns, "ttft distribution");
+    assert_eq!(first.tpot_ns, second.tpot_ns, "tpot distribution");
+    assert_eq!(first.submitted, second.submitted);
+    assert_eq!(first.finished, second.finished);
+    assert_eq!(first.tokens_out, second.tokens_out);
+    assert_eq!(first.comm_ns, second.comm_ns, "comm total");
+    assert_eq!(first.comm_exposed_ns, second.comm_exposed_ns, "comm exposed");
+    assert_eq!(first.comm_hidden_ns, second.comm_hidden_ns, "comm hidden");
+    assert_eq!(first.fetch_bytes, second.fetch_bytes);
+    assert_eq!(first.cache_hits, second.cache_hits);
+    assert_eq!(first.cache_misses, second.cache_misses);
+    assert_eq!(first.per_class, second.per_class, "per-class counters");
+    assert_eq!(first.queue_depth, second.queue_depth, "queue timeline");
+    assert_eq!(first.queue_peak, second.queue_peak);
+}
+
 /// The hierarchical executor's cached node rounds replay identically:
 /// first call builds, later calls (and other node counts in between) hit
 /// the cache and must reproduce the same modeled latency split.

@@ -1,0 +1,198 @@
+//! Property tests over the workload generators
+//! (`coordinator::workload`): seed-purity of the event streams, the
+//! statistical contracts of each arrival process, and conversation-replay
+//! ordering invariants.
+
+use dma_latte::coordinator::workload::{
+    default_tenants, ArrivalProcess, LenDist, TenantClass, WorkloadSpec,
+};
+use dma_latte::util::proptest::{run as prop_run, Config};
+use dma_latte::util::rng::Rng;
+use std::collections::HashMap;
+
+/// One deterministic single-turn class: the process statistics are then
+/// exactly the request statistics (no turn-rate scaling, no think gaps).
+fn single_turn() -> Vec<TenantClass> {
+    vec![TenantClass::simple(
+        "uni",
+        1.0,
+        LenDist::Fixed(256),
+        LenDist::Fixed(32),
+    )]
+}
+
+/// The same spec always generates the identical stream, byte for byte;
+/// changing only the seed changes it.
+#[test]
+fn prop_same_seed_same_stream() {
+    prop_run(
+        "workload-seed-purity",
+        Config {
+            cases: 24,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let process = match rng.below(3) {
+                0 => ArrivalProcess::Poisson {
+                    rate_rps: 50.0 + rng.f64() * 950.0,
+                },
+                1 => ArrivalProcess::Bursty {
+                    rate_on_rps: 500.0 + rng.f64() * 1500.0,
+                    on_ms: 10.0 + rng.f64() * 40.0,
+                    off_ms: 10.0 + rng.f64() * 40.0,
+                },
+                _ => ArrivalProcess::Trace {
+                    peak_rps: 200.0 + rng.f64() * 800.0,
+                    day_s: 0.2 + rng.f64(),
+                },
+            };
+            let spec = WorkloadSpec {
+                process,
+                classes: default_tenants(),
+                requests: 64 + rng.below(128),
+                seed: rng.next_u64(),
+            };
+            assert_eq!(spec.generate(), spec.generate(), "replay must be exact");
+            let other = WorkloadSpec {
+                seed: spec.seed.wrapping_add(1),
+                ..spec.clone()
+            };
+            assert_ne!(spec.generate(), other.generate(), "seed must matter");
+        },
+    );
+}
+
+/// Poisson arrivals: the measured rate over a long stream matches the
+/// requested rate (mean inter-arrival ≈ 1/λ, well within 10%).
+#[test]
+fn prop_poisson_mean_rate() {
+    prop_run(
+        "poisson-mean-rate",
+        Config {
+            cases: 16,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let rate = 100.0 + rng.f64() * 900.0;
+            let n = 3000u64;
+            let spec = WorkloadSpec {
+                process: ArrivalProcess::Poisson { rate_rps: rate },
+                classes: single_turn(),
+                requests: n,
+                seed: rng.next_u64(),
+            };
+            let ev = spec.generate();
+            let span_s = ev.last().unwrap().at_ns as f64 / 1e9;
+            let measured = n as f64 / span_s;
+            assert!(
+                (measured / rate - 1.0).abs() < 0.10,
+                "requested {rate:.0} rps, measured {measured:.0} rps"
+            );
+        },
+    );
+}
+
+/// Bursty (on/off) arrivals: the long-run rate matches the duty cycle —
+/// `rate_on × on/(on+off)` — and arrivals really cluster (the stream is
+/// not just a slower Poisson).
+#[test]
+fn prop_bursty_duty_cycle() {
+    prop_run(
+        "bursty-duty-cycle",
+        Config {
+            cases: 12,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let (on_ms, off_ms) = *rng.pick(&[(10.0, 30.0), (20.0, 20.0), (30.0, 10.0)]);
+            let rate_on = 2000.0 + rng.f64() * 2000.0;
+            let duty = on_ms / (on_ms + off_ms);
+            let n = 4000u64;
+            let spec = WorkloadSpec {
+                process: ArrivalProcess::Bursty {
+                    rate_on_rps: rate_on,
+                    on_ms,
+                    off_ms,
+                },
+                classes: single_turn(),
+                requests: n,
+                seed: rng.next_u64(),
+            };
+            let ev = spec.generate();
+            let span_s = ev.last().unwrap().at_ns as f64 / 1e9;
+            let measured = n as f64 / span_s;
+            let expected = rate_on * duty;
+            assert!(
+                measured > expected * 0.5 && measured < expected * 2.0,
+                "duty {duty:.2}: expected ~{expected:.0} rps, measured {measured:.0}"
+            );
+            // Clustering: the within-burst gap is 1/rate_on, far below the
+            // long-run mean gap — so the median gap sits well under it.
+            let mut gaps: Vec<u64> = ev.windows(2).map(|w| w[1].at_ns - w[0].at_ns).collect();
+            gaps.sort_unstable();
+            let median = gaps[gaps.len() / 2] as f64;
+            let mean_gap = span_s * 1e9 / n as f64;
+            assert!(
+                median < mean_gap * 0.75,
+                "median gap {median:.0}ns not bursty vs mean {mean_gap:.0}ns"
+            );
+        },
+    );
+}
+
+/// Conversation replays: turns of one session keep their order under the
+/// global time-sort and truncation (contiguous indices from 0, strictly
+/// increasing timestamps), share the class, grow the prompt with the
+/// accumulated context, and are always warm after the first turn.
+#[test]
+fn prop_conversations_never_reorder() {
+    prop_run(
+        "conversation-ordering",
+        Config {
+            cases: 16,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let spec = WorkloadSpec {
+                process: ArrivalProcess::Poisson {
+                    rate_rps: 100.0 + rng.f64() * 900.0,
+                },
+                classes: default_tenants(),
+                requests: 300,
+                seed: rng.next_u64(),
+            };
+            let ev = spec.generate();
+            assert!(
+                ev.windows(2).all(|w| w[0].at_ns <= w[1].at_ns),
+                "stream must be time-sorted"
+            );
+            let mut sessions: HashMap<u64, Vec<usize>> = HashMap::new();
+            for (i, e) in ev.iter().enumerate() {
+                sessions.entry(e.session).or_default().push(i);
+            }
+            let mut multi_turn = 0usize;
+            for (session, idx) in &sessions {
+                if idx.len() > 1 {
+                    multi_turn += 1;
+                }
+                for (k, &i) in idx.iter().enumerate() {
+                    let e = &ev[i];
+                    assert_eq!(e.turn as usize, k, "session {session}: turn gap");
+                    assert_eq!(e.class, ev[idx[0]].class, "session {session}: class");
+                    if k > 0 {
+                        let prev = &ev[idx[k - 1]];
+                        assert!(e.at_ns > prev.at_ns, "session {session}: time order");
+                        assert!(e.warm, "session {session}: follow-ups are warm");
+                        assert!(
+                            e.prompt_tokens > prev.prompt_tokens,
+                            "session {session}: context must grow"
+                        );
+                    }
+                }
+            }
+            // The default chat class is multi-turn: conversations must
+            // actually appear, or this property tests nothing.
+            assert!(multi_turn > 0, "no multi-turn session generated");
+        },
+    );
+}
