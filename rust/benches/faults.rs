@@ -1,0 +1,261 @@
+//! BENCH — §Fault injection (PR 8): degraded fleets, retry-with-backoff
+//! pricing, and SLO-aware graceful degradation, emitted as `BENCH_PR8.json`.
+//!
+//! All rows are **modeled virtual-time** outputs of the deterministic
+//! fault subsystem except the scale smoke (host time). Units per row:
+//!
+//! - `faults_healthy_replay` — 1.0 iff a config carrying an empty
+//!   (all-healthy) fault plan replays the no-faults serving run bit for
+//!   bit (the zero-perturbation contract); prints a greppable
+//!   `faults: healthy-replay OK` line.
+//! - `chat_slo_aware_vs_blind_2n` — chat-class SLO attainment percent
+//!   under a single-node NIC derate (`nic=1:0.05`) at 2 nodes: before =
+//!   degradation-blind baseline, after = degradation-aware policy
+//!   (re-select + drain + shed + preempt). The bench asserts the aware
+//!   policy is strictly higher — the PR's acceptance gate.
+//! - `selector_flip_degraded_2n` — 2 MB all-gather latency (ns) on the
+//!   derated topology: before = the healthy selector's (stale) schedule,
+//!   after = the degradation-aware re-pick (Sequential → Pipelined flip).
+//! - `retry_backoff_latency_4n` — 4-node all-reduce latency (ns): before
+//!   = healthy links, after = every NIC link flapping at p=0.9 with the
+//!   retry-with-backoff model priced in (asserts retries > 0).
+//! - `serve_scale_smoke_1n` — host ns to simulate a thousands-of-requests
+//!   serving run (wall-clock sanity bound, not a virtual-time claim).
+//!
+//! JSON lands at `../BENCH_PR8.json` (repo root when run via cargo),
+//! overridable with `DMA_LATTE_BENCH_JSON=path` (`=0` disables).
+
+use dma_latte::cluster::{
+    run_hier, run_hier_ar, select_allreduce, select_cluster, select_cluster_degraded, ClusterKind,
+    ClusterTopology, FaultPlan, FaultSpec, HierRunOptions, LinkHealth,
+};
+use dma_latte::coordinator::config::DegradePolicy;
+use dma_latte::coordinator::workload::{default_tenants, drive, ArrivalProcess, WorkloadSpec};
+use dma_latte::figures::faults as ff;
+use dma_latte::figures::serving_load as sl;
+use dma_latte::models::zoo::QWEN25_0_5B;
+use dma_latte::util::bytes::MB;
+use dma_latte::util::timer::{bench_json, BenchComparison, BenchResult};
+
+const SEED: u64 = 7;
+
+/// Wrap one deterministic modeled value as a BenchResult (no spread).
+fn modeled(name: &str, value: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: value,
+        median_ns: value,
+        p95_ns: value,
+        p99_ns: value,
+        min_ns: value,
+    }
+}
+
+/// Single-value row.
+fn value_row(path: &str, name: &str, value: f64) -> BenchComparison {
+    BenchComparison {
+        path: path.to_string(),
+        before: None,
+        after: modeled(name, value),
+    }
+}
+
+fn report(row: &BenchComparison, unit: &str) {
+    match &row.before {
+        Some(b) => println!(
+            "row {:<28} before {:>14.1} after {:>14.1} {unit}",
+            row.path, b.median_ns, row.after.median_ns
+        ),
+        None => println!(
+            "row {:<28} value {:>14.1} {unit}",
+            row.path, row.after.median_ns
+        ),
+    }
+}
+
+fn main() {
+    let smoke = dma_latte::util::bench_smoke();
+    println!("== fault injection: degraded fleets, retries, SLO shedding (BENCH_PR8) ==\n");
+    let classes = default_tenants();
+    let mut rows: Vec<BenchComparison> = Vec::new();
+
+    // 1) Zero-perturbation contract: an empty fault plan replays the
+    //    no-faults serving run bit for bit.
+    let n_replay = if smoke { 48 } else { 128 };
+    let replay_ok = ff::healthy_replay_ok(&QWEN25_0_5B, 2, n_replay, SEED);
+    assert!(replay_ok, "empty fault plan perturbed the healthy run");
+    println!("faults: healthy-replay OK ({n_replay} requests, 2 nodes)");
+    rows.push(value_row(
+        "faults_healthy_replay",
+        "empty plan replays healthy run (1.0 = bit-identical)",
+        1.0,
+    ));
+    report(rows.last().unwrap(), "bool");
+    println!();
+
+    // 2) The acceptance gate: under a single-node NIC derate the aware
+    //    policy must keep strictly more of the chat class inside its SLO
+    //    than the blind baseline. Blind keeps both nodes and pays 20x
+    //    slower inter-node all-reduces on every step; aware drains the
+    //    sick node (flat intra-node comm, 2x compute) and sheds/preempts
+    //    best-effort work under SLO pressure.
+    let n_cap = if smoke { 96 } else { 256 };
+    let cfg2 = sl::serve_config(&QWEN25_0_5B, 2, true);
+    let cap2 = sl::estimate_capacity_rps(&cfg2, &classes, n_cap, SEED);
+    let spec = FaultSpec::parse("nic=1:0.05").expect("literal spec");
+    let n_slo = if smoke { 160 } else { 448 };
+    let wl = WorkloadSpec {
+        process: ArrivalProcess::Poisson {
+            rate_rps: 0.4 * cap2,
+        },
+        classes: classes.clone(),
+        requests: n_slo,
+        seed: SEED,
+    };
+    let blind_cfg = cfg2
+        .clone()
+        .with_faults(spec.clone())
+        .with_degrade(DegradePolicy::blind());
+    let aware_cfg = cfg2
+        .clone()
+        .with_faults(spec)
+        .with_degrade(DegradePolicy::aware());
+    let mb = drive(&blind_cfg, &wl);
+    let ma = drive(&aware_cfg, &wl);
+    let chat_blind = ff::chat_attainment(&mb) * 100.0;
+    let chat_aware = ff::chat_attainment(&ma) * 100.0;
+    println!(
+        "2n nic=1:0.05 @ {:.0} req/s: chat slo {chat_blind:.1}% blind -> {chat_aware:.1}% aware \
+         (aware drained {}, shed {}, preempted {})",
+        0.4 * cap2,
+        ma.drained_nodes,
+        ma.shed,
+        ma.preemptions
+    );
+    assert!(
+        chat_aware > chat_blind,
+        "degradation-aware policy must beat blind on chat SLO attainment \
+         ({chat_aware:.1}% vs {chat_blind:.1}%)"
+    );
+    rows.push(BenchComparison {
+        path: "chat_slo_aware_vs_blind_2n".to_string(),
+        before: Some(modeled("chat slo %, degradation-blind", chat_blind)),
+        after: modeled("chat slo %, degradation-aware", chat_aware),
+    });
+    report(rows.last().unwrap(), "%");
+    println!();
+
+    // 3) Degradation-aware re-selection: at 2 MB the healthy AG schedule
+    //    (Sequential) is stale on a 4x-derated NIC; the aware re-pick
+    //    (Pipelined) must not lose on the derated topology it was picked
+    //    for.
+    let c2 = ClusterTopology::mi300x(2);
+    let flip_spec = FaultSpec::parse("nic=1:0.25").expect("literal spec");
+    let flip_plan = FaultPlan::generate(&flip_spec, 2, SEED);
+    let derated = flip_plan.derate_cluster(&c2, None);
+    let flip_size = derated.pad_size(2 * MB);
+    let stale = select_cluster(ClusterKind::AllGather, &c2, flip_size);
+    let repick = select_cluster_degraded(ClusterKind::AllGather, &c2, flip_size, &flip_plan);
+    assert_ne!(stale.inter, repick.inter, "2 MB AG must flip under nic=1:0.25");
+    let opts = HierRunOptions::default();
+    let kind = ClusterKind::AllGather;
+    let stale_run = run_hier(kind.transport(), stale, &derated, flip_size, &opts);
+    let repick_run = run_hier(kind.transport(), repick, &derated, flip_size, &opts);
+    assert!(
+        repick_run.latency_ns <= stale_run.latency_ns,
+        "re-picked schedule lost on the topology it was picked for"
+    );
+    println!(
+        "selector flip 2n/2MB AG: {:?} -> {:?}, {} -> {} ns on derated links",
+        stale.inter, repick.inter, stale_run.latency_ns, repick_run.latency_ns
+    );
+    rows.push(BenchComparison {
+        path: "selector_flip_degraded_2n".to_string(),
+        before: Some(modeled("2MB AG, stale healthy schedule", stale_run.latency_ns as f64)),
+        after: modeled("2MB AG, degradation-aware re-pick", repick_run.latency_ns as f64),
+    });
+    report(rows.last().unwrap(), "ns");
+    println!();
+
+    // 4) Retry-with-backoff pricing: flapping every NIC link makes the
+    //    4-node all-reduce strictly slower and counts retries; the
+    //    healthy run never enters the fault path.
+    let c4 = ClusterTopology::mi300x(4);
+    let ar_size = c4.pad_size(8 * MB);
+    let (rs, ag) = select_allreduce(&c4, ar_size);
+    let healthy_run = run_hier_ar(rs, ag, &c4, ar_size, &HierRunOptions::default());
+    let flappy = HierRunOptions {
+        link_faults: Some(LinkHealth::uniform(4, 0.9, SEED)),
+        ..HierRunOptions::default()
+    };
+    let (rs2, ag2) = select_allreduce(&c4, ar_size);
+    let flapped_run = run_hier_ar(rs2, ag2, &c4, ar_size, &flappy);
+    assert_eq!(healthy_run.faults.retries, 0);
+    assert!(flapped_run.faults.retries > 0, "p=0.9 flaps must retry");
+    assert!(
+        flapped_run.latency_ns > healthy_run.latency_ns,
+        "retries must be priced into the critical path"
+    );
+    println!(
+        "retry backoff 4n/8MB AR: {} -> {} ns ({} retries, {} timeouts)",
+        healthy_run.latency_ns,
+        flapped_run.latency_ns,
+        flapped_run.faults.retries,
+        flapped_run.faults.timeouts
+    );
+    rows.push(BenchComparison {
+        path: "retry_backoff_latency_4n".to_string(),
+        before: Some(modeled("8MB AR, healthy links", healthy_run.latency_ns as f64)),
+        after: modeled("8MB AR, p=0.9 flaps + retries", flapped_run.latency_ns as f64),
+    });
+    report(rows.last().unwrap(), "ns");
+    println!();
+
+    // 5) Scale smoke: a thousands-of-requests serving run must stay cheap
+    //    in host time (the DES is event-driven, not token-stepped).
+    let n_scale = if smoke { 2048 } else { 8192 };
+    let cfg1 = sl::serve_config(&QWEN25_0_5B, 1, true);
+    let cap1 = sl::estimate_capacity_rps(&cfg1, &classes, n_cap, SEED);
+    let t0 = std::time::Instant::now();
+    let p = sl::measure(&cfg1, &classes, "poisson", cap1 * 0.8, n_scale, SEED);
+    let host_s = t0.elapsed().as_secs_f64();
+    assert_eq!(p.finished, n_scale, "scale smoke: all requests must finish");
+    assert!(
+        host_s < 120.0,
+        "scale smoke too slow: {n_scale} requests took {host_s:.1}s host time"
+    );
+    println!("scale smoke 1n: {n_scale} requests in {host_s:.2}s host time");
+    rows.push(value_row(
+        "serve_scale_smoke_1n",
+        "host ns to simulate the scale run",
+        host_s * 1e9,
+    ));
+    report(rows.last().unwrap(), "ns");
+    println!();
+
+    // Machine-readable trajectory file.
+    let dest = std::env::var("DMA_LATTE_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_PR8.json".to_string());
+    if dest != "0" {
+        let meta = [
+            ("pr", "PR8".to_string()),
+            ("mode", if smoke { "smoke" } else { "full" }.to_string()),
+            (
+                "note",
+                "modeled virtual-time fault subsystem; latency rows are ns, \
+                 chat_slo row is percent, healthy-replay row is a boolean, \
+                 scale-smoke row is host ns (all stored in the ns-named fields)"
+                    .to_string(),
+            ),
+        ];
+        let doc = bench_json("faults", &meta, &rows);
+        if let Err(e) = std::fs::write(&dest, doc) {
+            // Fatal: CI asserts the file was regenerated; a silent miss
+            // would let a stale checked-in copy masquerade as fresh.
+            eprintln!("could not write {dest}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {dest}");
+    }
+}

@@ -54,10 +54,12 @@ use crate::sim::{Sim, SimConfig, SimTime};
 
 use std::sync::Arc;
 
+use super::faults::FaultStats;
 use super::hier::{
     aa_stage_base, cached_node_rounds, count_nic_messages, emit_nic_msg_spans, exchange_ag,
-    nic_exchange_arrivals, nic_exchange_messages, prelaunch_t0, queue_node_scripts, run_hier,
-    HierResult, HierRunOptions, MAX_NODES, ROUND_MARKS,
+    nic_exchange_arrivals, nic_exchange_arrivals_faulted, nic_exchange_messages,
+    nic_exchange_messages_faulted, prelaunch_t0, queue_node_scripts, run_hier, HierResult,
+    HierRunOptions, MAX_NODES, ROUND_MARKS,
 };
 use super::selector::{ClusterChoice, InterSchedule};
 use super::topology::ClusterTopology;
@@ -325,6 +327,7 @@ pub fn run_hier_rs_timed(
     let t0 = prelaunch_t0(&rounds[0], gpn, &opts.latency, prelaunch);
     let data_cmds = rounds[0].iter().map(|p| p.total_data_cmds()).sum::<usize>() * n;
     let nic_messages = count_nic_messages(cluster);
+    let mut fault_stats = FaultStats::default();
 
     if opts.verify {
         for (k, sim) in sims.iter_mut().enumerate() {
@@ -398,7 +401,15 @@ pub fn run_hier_rs_timed(
         // intra + reduce phase (sequential); same vectored-message
         // accounting as the hierarchical AA inter leg.
         let ready: Vec<f64> = partial_ready.iter().map(|&pr| pr as f64).collect();
-        let last_arrival = nic_exchange_arrivals(&nic, choice.inter, &ready, c, observe);
+        let last_arrival = match &opts.link_faults {
+            None => nic_exchange_arrivals(&nic, choice.inter, &ready, c, observe),
+            Some(h) => {
+                let (arr, fs) =
+                    nic_exchange_arrivals_faulted(&nic, choice.inter, &ready, c, observe, h);
+                fault_stats.absorb(fs);
+                arr
+            }
+        };
         // CU pass 2 on each destination node: wait for the last incoming
         // partial AND the own-node partial, then fold n chunks.
         let reduce_inter = cu_reduce_ns(c, n as u8);
@@ -411,7 +422,12 @@ pub fn run_hier_rs_timed(
         let latency = done - t0;
         let intra_span = *partial_ready.iter().max().unwrap() - t0;
         if emitting {
-            let msgs = nic_exchange_messages(&nic, choice.inter, &ready, c, observe);
+            let msgs = match &opts.link_faults {
+                None => nic_exchange_messages(&nic, choice.inter, &ready, c, observe),
+                Some(h) => {
+                    nic_exchange_messages_faulted(&nic, choice.inter, &ready, c, observe, h).0
+                }
+            };
             record::with(|r| {
                 for (k, sim) in sims.iter().enumerate() {
                     obs::lift_sim_trace(r, k as u8, &sim.trace);
@@ -468,6 +484,7 @@ pub fn run_hier_rs_timed(
             data_cmds,
             nic_messages,
             verified,
+            faults: fault_stats,
         },
         sims,
         RsChunkTimes {
@@ -545,6 +562,9 @@ pub fn run_hier_ar_full(
             latency: opts.latency.clone(),
             verify: false,
             trace: opts.trace,
+            // The AG inter leg is derate-only (chunk sends ride `leg_ns`,
+            // no per-message flap model) — see `run_hier_full`.
+            link_faults: None,
         },
     );
     if matches!(episode, Some((_, true))) {
@@ -560,6 +580,8 @@ pub fn run_hier_ar_full(
 
     let latency_ns = rs_res.latency_ns + ag_res.latency_ns;
     let inter_ns = rs_res.inter_ns + ag_res.inter_ns;
+    let mut faults = rs_res.faults;
+    faults.absorb(ag_res.faults);
     (
         HierResult {
             latency_ns,
@@ -568,6 +590,7 @@ pub fn run_hier_ar_full(
             data_cmds: rs_res.data_cmds + ag_res.data_cmds,
             nic_messages: rs_res.nic_messages + ag_res.nic_messages,
             verified,
+            faults,
         },
         sims,
     )

@@ -1,0 +1,690 @@
+//! Seeded fault injection: degraded DMA engines, derated/flapping NIC
+//! links, compute stragglers — and the health view the cluster executors
+//! and the serving coordinator consume to degrade gracefully.
+//!
+//! The paper's core finding is that DMA collective performance is fragile
+//! at the margins: command scheduling and synchronization costs dominate
+//! exactly when resources misbehave. This module makes misbehavior a
+//! first-class, **deterministic** input:
+//!
+//! - [`FaultSpec`] — intensity knobs (how many nodes, how hard), parsed
+//!   from the CLI `--faults` spec ([`FaultSpec::parse`]) or one of the
+//!   canned presets ([`FaultSpec::preset`]).
+//! - [`FaultPlan`] — the materialized per-node health table, a **pure
+//!   function of `(spec, num_nodes, seed)`** exactly like
+//!   `WorkloadSpec::generate`: the same seed always yields the same sick
+//!   nodes, derate windows and flap schedule. A healthy spec yields an
+//!   empty plan, and an empty plan perturbs **nothing** — the healthy
+//!   code path never consults it (pinned by `tests/determinism.rs` and
+//!   `tests/prop_faults.rs`).
+//! - [`FaultPlan::derate_cluster`] — applies the plan to a
+//!   [`ClusterTopology`] through the *existing* link tables: stuck sDMA
+//!   engines shrink `engines_per_gpu`, engine bandwidth derates scale the
+//!   xGMI links, NIC derates scale [`NicModel::bw_bytes_per_ns`]. Because
+//!   the hierarchical planners require homogeneous nodes and the lockstep
+//!   collectives gate on the slowest participant anyway, per-node derates
+//!   are applied at the **fleet-worst** value (worst-node semantics ==
+//!   fleet-wide semantics for the modeled latency).
+//! - [`LinkHealth`] / [`RetryPolicy`] / [`FaultStats`] — the inter-leg
+//!   flap model: each NIC message draws its transient-failure count as a
+//!   pure function of `(seed, sender, dest)`; the hierarchical executors'
+//!   timeout watchdog detects each loss after [`RetryPolicy::timeout_ns`]
+//!   and retransmits with exponential backoff
+//!   (`cluster::hier::nic_exchange_arrivals_faulted`), all in virtual
+//!   time. Flaps delay messages, they never drop bytes — retried
+//!   collectives stay byte-identical to the flat reference
+//!   (`tests/prop_cluster.rs`).
+//!
+//! The serving coordinator layers its graceful-degradation policy on top
+//! (`coordinator::config::DegradePolicy`): node drain, SLO-aware shedding
+//! and priority preemption all key off the plan built here.
+
+use crate::sim::topology::{NodeId, Topology};
+use crate::util::rng::Rng;
+
+use super::topology::{ClusterTopology, NicModel};
+
+/// Dedicated RNG stream for fault placement, xor-folded into the user
+/// seed so fault draws never alias workload or scheduler draws (the same
+/// convention as `coordinator::workload::ARRIVAL_STREAM`).
+pub const FAULT_STREAM: u64 = 0xFA17_0F0F_5EED_C0DE;
+
+/// Floor applied to every bandwidth derate factor: a fully stuck link
+/// would make payload times infinite; 1% of nominal keeps the DES finite
+/// while still modeling a near-dead resource.
+pub const MIN_DERATE_FACTOR: f64 = 0.01;
+
+/// What can go wrong, as intensities. All-defaults == perfectly healthy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Number of nodes whose NIC runs derated (placement drawn from seed).
+    pub nic_nodes: usize,
+    /// NIC bandwidth multiplier on derated nodes, in `(0, 1]`.
+    pub nic_factor: f64,
+    /// Per-message transient flap probability on derated nodes' links.
+    pub flap_prob: f64,
+    /// Stuck sDMA engines per GPU (removed from the engine pool).
+    pub stuck_engines: u8,
+    /// xGMI (intra-node DMA) bandwidth multiplier in `(0, 1]` — models
+    /// uniformly derated engines.
+    pub xgmi_factor: f64,
+    /// Number of compute-straggler nodes (placement drawn from seed).
+    pub straggler_nodes: usize,
+    /// Compute-time multiplier on straggler nodes, `>= 1`.
+    pub straggler_factor: f64,
+    /// NIC derate window length in seconds; `0` = the whole run. Window
+    /// start instants are drawn from the seed.
+    pub window_s: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            nic_nodes: 0,
+            nic_factor: 1.0,
+            flap_prob: 0.0,
+            stuck_engines: 0,
+            xgmi_factor: 1.0,
+            straggler_nodes: 0,
+            straggler_factor: 1.0,
+            window_s: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True iff this spec injects nothing.
+    pub fn is_healthy(&self) -> bool {
+        (self.nic_nodes == 0 || self.nic_factor >= 1.0)
+            && self.flap_prob <= 0.0
+            && self.stuck_engines == 0
+            && self.xgmi_factor >= 1.0
+            && (self.straggler_nodes == 0 || self.straggler_factor <= 1.0)
+    }
+
+    /// Canned scenario by name (the CLI/bench chaos set).
+    pub fn preset(name: &str) -> Option<FaultSpec> {
+        match name {
+            "none" | "healthy" => Some(FaultSpec::default()),
+            // One node's NIC browns out to a quarter of nominal bandwidth.
+            "nic-brownout" => Some(FaultSpec {
+                nic_nodes: 1,
+                nic_factor: 0.25,
+                ..FaultSpec::default()
+            }),
+            // One node's NIC runs at half speed and flaps 15% of messages.
+            "flaky-links" => Some(FaultSpec {
+                nic_nodes: 1,
+                nic_factor: 0.5,
+                flap_prob: 0.15,
+                ..FaultSpec::default()
+            }),
+            // One node computes 1.8x slower (thermal throttling, noisy
+            // neighbor) — the lockstep TP batch gates on it.
+            "straggler" => Some(FaultSpec {
+                straggler_nodes: 1,
+                straggler_factor: 1.8,
+                ..FaultSpec::default()
+            }),
+            // Half the sDMA engines are stuck and the survivors run at
+            // 3/4 bandwidth: the intra leg degrades, the NIC is fine.
+            "engines-stuck" => Some(FaultSpec {
+                stuck_engines: 8,
+                xgmi_factor: 0.75,
+                ..FaultSpec::default()
+            }),
+            _ => None,
+        }
+    }
+
+    /// Parse a `--faults` spec: a preset name, or comma-separated clauses
+    ///
+    /// - `nic=N:F` — N nodes with NIC bandwidth × F (0 < F <= 1)
+    /// - `flap=P` — per-message flap probability on derated nodes
+    /// - `engines=K` — K stuck sDMA engines per GPU
+    /// - `xgmi=F` — intra-node DMA bandwidth × F (0 < F <= 1)
+    /// - `straggler=N:F` — N nodes computing F× slower (F >= 1)
+    /// - `window=S` — NIC derate window length in seconds (0 = whole run)
+    ///
+    /// Errors are descriptive — malformed clauses never fail silently.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty fault spec: want a preset (nic-brownout, flaky-links, \
+                 straggler, engines-stuck, none) or clauses like nic=1:0.25,flap=0.1"
+                .to_string());
+        }
+        if let Some(p) = FaultSpec::preset(spec) {
+            return Ok(p);
+        }
+        let mut out = FaultSpec::default();
+        for clause in spec.split(',') {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause `{clause}` is not key=value"))?;
+            let unit = |v: &str, key: &str| -> Result<f64, String> {
+                let f: f64 = v
+                    .parse()
+                    .map_err(|_| format!("fault clause `{key}`: `{v}` is not a number"))?;
+                if !(f > 0.0 && f <= 1.0) {
+                    return Err(format!(
+                        "fault clause `{key}`: factor {f} out of range (0, 1]"
+                    ));
+                }
+                Ok(f)
+            };
+            match key {
+                "nic" => {
+                    let (n, f) = val.split_once(':').ok_or_else(|| {
+                        format!("fault clause `nic`: want nic=NODES:FACTOR, got `{val}`")
+                    })?;
+                    out.nic_nodes = n
+                        .parse()
+                        .map_err(|_| format!("fault clause `nic`: `{n}` is not a node count"))?;
+                    out.nic_factor = unit(f, "nic")?;
+                }
+                "flap" => {
+                    let p: f64 = val
+                        .parse()
+                        .map_err(|_| format!("fault clause `flap`: `{val}` is not a number"))?;
+                    if !(0.0..1.0).contains(&p) {
+                        return Err(format!(
+                            "fault clause `flap`: probability {p} out of range [0, 1)"
+                        ));
+                    }
+                    out.flap_prob = p;
+                }
+                "engines" => {
+                    out.stuck_engines = val.parse().map_err(|_| {
+                        format!("fault clause `engines`: `{val}` is not an engine count")
+                    })?;
+                }
+                "xgmi" => out.xgmi_factor = unit(val, "xgmi")?,
+                "straggler" => {
+                    let (n, f) = val.split_once(':').ok_or_else(|| {
+                        format!("fault clause `straggler`: want straggler=NODES:FACTOR, got `{val}`")
+                    })?;
+                    out.straggler_nodes = n.parse().map_err(|_| {
+                        format!("fault clause `straggler`: `{n}` is not a node count")
+                    })?;
+                    out.straggler_factor = f.parse().map_err(|_| {
+                        format!("fault clause `straggler`: `{f}` is not a number")
+                    })?;
+                    if out.straggler_factor < 1.0 {
+                        return Err(format!(
+                            "fault clause `straggler`: factor {} must be >= 1 (a multiplier \
+                             on compute time)",
+                            out.straggler_factor
+                        ));
+                    }
+                }
+                "window" => {
+                    out.window_s = val.parse().map_err(|_| {
+                        format!("fault clause `window`: `{val}` is not a number of seconds")
+                    })?;
+                    if out.window_s < 0.0 {
+                        return Err("fault clause `window`: negative window".to_string());
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault clause `{other}` (want nic/flap/engines/xgmi/\
+                         straggler/window or a preset name)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One node's materialized health.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeHealth {
+    /// NIC bandwidth multiplier (1.0 = healthy).
+    pub nic_factor: f64,
+    /// Per-message transient flap probability on this node's sends.
+    pub flap_prob: f64,
+    /// Stuck sDMA engines per GPU.
+    pub stuck_engines: u8,
+    /// xGMI bandwidth multiplier (1.0 = healthy).
+    pub xgmi_factor: f64,
+    /// Compute-time multiplier (1.0 = healthy, > 1 = straggler).
+    pub compute_factor: f64,
+    /// NIC derate window `[start, end)` in virtual ns; `None` = always.
+    pub window_ns: Option<(u64, u64)>,
+}
+
+impl NodeHealth {
+    fn healthy() -> Self {
+        NodeHealth {
+            nic_factor: 1.0,
+            flap_prob: 0.0,
+            stuck_engines: 0,
+            xgmi_factor: 1.0,
+            compute_factor: 1.0,
+            window_ns: None,
+        }
+    }
+
+    /// True iff nothing on this node is degraded.
+    pub fn is_healthy(&self) -> bool {
+        self.nic_factor >= 1.0
+            && self.flap_prob <= 0.0
+            && self.stuck_engines == 0
+            && self.xgmi_factor >= 1.0
+            && self.compute_factor <= 1.0
+    }
+}
+
+/// The materialized fault schedule: a pure function of
+/// `(spec, num_nodes, seed)`. See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed the plan (and its per-message flap draws) derive from.
+    pub seed: u64,
+    /// Per-node health, indexed by node.
+    pub nodes: Vec<NodeHealth>,
+}
+
+impl FaultPlan {
+    /// An all-healthy plan for `num_nodes` nodes.
+    pub fn healthy(num_nodes: usize) -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            nodes: vec![NodeHealth::healthy(); num_nodes.max(1)],
+        }
+    }
+
+    /// Materialize `spec` over `num_nodes` nodes. Deterministic: same
+    /// `(spec, num_nodes, seed)` ⇒ identical plan, bit for bit.
+    pub fn generate(spec: &FaultSpec, num_nodes: usize, seed: u64) -> FaultPlan {
+        let n = num_nodes.max(1);
+        let mut nodes = vec![NodeHealth::healthy(); n];
+        if spec.is_healthy() {
+            return FaultPlan { seed, nodes };
+        }
+        let mut rng = Rng::new(seed ^ FAULT_STREAM);
+        let mut draw_nodes = |rng: &mut Rng, count: usize| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            idx.truncate(count.min(n));
+            idx
+        };
+        // NIC derates (and their flap probability + window) land together.
+        if spec.nic_nodes > 0 && (spec.nic_factor < 1.0 || spec.flap_prob > 0.0) {
+            for k in draw_nodes(&mut rng, spec.nic_nodes) {
+                nodes[k].nic_factor = spec.nic_factor.max(MIN_DERATE_FACTOR);
+                nodes[k].flap_prob = spec.flap_prob;
+                if spec.window_s > 0.0 {
+                    let len = (spec.window_s * 1e9) as u64;
+                    let start = (rng.f64() * spec.window_s * 1e9) as u64;
+                    nodes[k].window_ns = Some((start, start.saturating_add(len)));
+                }
+            }
+        }
+        // Compute stragglers draw independently of the NIC placement.
+        if spec.straggler_nodes > 0 && spec.straggler_factor > 1.0 {
+            for k in draw_nodes(&mut rng, spec.straggler_nodes) {
+                nodes[k].compute_factor = spec.straggler_factor;
+            }
+        }
+        // Engine faults are fleet-wide: the hierarchical planners require
+        // homogeneous nodes, and lockstep collectives gate on the slowest
+        // node anyway, so worst-node and fleet-wide semantics coincide.
+        if spec.stuck_engines > 0 || spec.xgmi_factor < 1.0 {
+            for h in nodes.iter_mut() {
+                h.stuck_engines = spec.stuck_engines;
+                h.xgmi_factor = spec.xgmi_factor.max(MIN_DERATE_FACTOR);
+            }
+        }
+        FaultPlan { seed, nodes }
+    }
+
+    /// Number of nodes the plan covers.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True iff every node is healthy — the zero-perturbation contract:
+    /// callers skip every fault branch when this holds.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.iter().all(NodeHealth::is_healthy)
+    }
+
+    /// Worst NIC derate factor among `nodes[i]` where `keep[i]` (all nodes
+    /// when `keep` is `None`).
+    pub fn worst_nic_factor(&self, keep: Option<&[bool]>) -> f64 {
+        self.fold_kept(keep, 1.0, |acc, h| acc.min(h.nic_factor))
+    }
+
+    /// Worst compute-straggler factor among the kept nodes.
+    pub fn worst_compute_factor(&self, keep: Option<&[bool]>) -> f64 {
+        self.fold_kept(keep, 1.0, |acc, h| acc.max(h.compute_factor))
+    }
+
+    /// Worst per-message flap probability among the kept nodes.
+    pub fn worst_flap_prob(&self, keep: Option<&[bool]>) -> f64 {
+        self.fold_kept(keep, 0.0, |acc, h| acc.max(h.flap_prob))
+    }
+
+    fn fold_kept(
+        &self,
+        keep: Option<&[bool]>,
+        init: f64,
+        f: impl Fn(f64, &NodeHealth) -> f64,
+    ) -> f64 {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| keep.map(|k| k.get(*i).copied().unwrap_or(true)).unwrap_or(true))
+            .fold(init, |acc, (_, h)| f(acc, h))
+    }
+
+    /// Apply the plan to `cluster` through the existing `Topology` / NIC
+    /// link tables: stuck engines shrink the per-GPU engine pool (clamped
+    /// to ≥ 1), xGMI derates scale the intra-node link bandwidth, NIC
+    /// derates scale the NIC model — all at the fleet-worst factor among
+    /// the kept nodes. `keep[i] == false` drops node `i` (a drained
+    /// node); at least one node always survives. An empty plan with no
+    /// drains returns an exact clone (shared `Arc` link tables — the
+    /// healthy path is untouched).
+    pub fn derate_cluster(
+        &self,
+        cluster: &ClusterTopology,
+        keep: Option<&[bool]>,
+    ) -> ClusterTopology {
+        let kept = match keep {
+            Some(k) => (0..cluster.num_nodes())
+                .filter(|i| k.get(*i).copied().unwrap_or(true))
+                .count()
+                .max(1),
+            None => cluster.num_nodes(),
+        };
+        if self.is_empty() && kept == cluster.num_nodes() {
+            return cluster.clone();
+        }
+        let node = cluster.node(0);
+        let g = node.num_gpus;
+        let stuck = self
+            .nodes
+            .iter()
+            .map(|h| h.stuck_engines)
+            .max()
+            .unwrap_or(0);
+        let engines = node.engines_per_gpu.saturating_sub(stuck).max(1);
+        let xgmi_factor = self
+            .fold_kept(keep, 1.0, |acc, h| acc.min(h.xgmi_factor))
+            .max(MIN_DERATE_FACTOR);
+        // Read the nominal bandwidths back off the link tables.
+        let xgmi_gbps = if g >= 2 {
+            node.link(node.link_index(NodeId::Gpu(0), NodeId::Gpu(1)))
+                .bw_bytes_per_ns
+        } else {
+            64.0
+        };
+        let pcie_gbps = node
+            .link(node.link_index(NodeId::Gpu(0), NodeId::Cpu))
+            .bw_bytes_per_ns;
+        let derated = Topology::custom(g, engines, xgmi_gbps * xgmi_factor, pcie_gbps);
+        let nic_factor = self.worst_nic_factor(keep).max(MIN_DERATE_FACTOR);
+        let nic = NicModel {
+            bw_bytes_per_ns: cluster.nic.bw_bytes_per_ns * nic_factor,
+            ..cluster.nic.clone()
+        };
+        ClusterTopology::homogeneous(kept, derated, nic)
+    }
+
+    /// The inter-leg flap view over the kept nodes (compacted to the
+    /// surviving node order), or `None` when no kept node flaps — the
+    /// hierarchical executors take the healthy code path in that case.
+    pub fn link_health(&self, keep: Option<&[bool]>) -> Option<LinkHealth> {
+        let flap: Vec<f64> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| keep.map(|k| k.get(*i).copied().unwrap_or(true)).unwrap_or(true))
+            .map(|(_, h)| h.flap_prob)
+            .collect();
+        if flap.iter().all(|&p| p <= 0.0) {
+            return None;
+        }
+        Some(LinkHealth {
+            flap,
+            retry: RetryPolicy::default(),
+            seed: self.seed,
+        })
+    }
+}
+
+/// Timeout-watchdog + retry policy for flapped NIC messages, in virtual
+/// nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Silence after a send before the watchdog declares it lost
+    /// (a few NIC base latencies: ack round-trip + margin).
+    pub timeout_ns: f64,
+    /// Base backoff before the first retransmit; doubles per attempt.
+    pub backoff_ns: f64,
+    /// Retransmission budget; exhausting it counts a hard timeout (the
+    /// message is escalated and force-delivered so the collective still
+    /// completes — flaps delay bytes, they never drop them).
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            timeout_ns: 10_000.0,
+            backoff_ns: 2_000.0,
+            max_retries: 4,
+        }
+    }
+}
+
+/// Per-sender flap probabilities + the retry policy, consumed by
+/// `cluster::hier::nic_exchange_arrivals_faulted`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkHealth {
+    /// `flap[k]`: probability any single message **sent by** node `k`
+    /// transiently fails and must be retransmitted.
+    pub flap: Vec<f64>,
+    pub retry: RetryPolicy,
+    /// Seed for the per-message draws.
+    pub seed: u64,
+}
+
+impl LinkHealth {
+    /// Uniform flap probability across `n` sender nodes (test/bench
+    /// convenience).
+    pub fn uniform(n: usize, prob: f64, seed: u64) -> LinkHealth {
+        LinkHealth {
+            flap: vec![prob; n],
+            retry: RetryPolicy::default(),
+            seed,
+        }
+    }
+
+    /// Transient-failure count for the `sender → dest` message: a pure
+    /// function of `(seed, sender, dest)` — independent of the order the
+    /// executor walks messages in. Returns `(retransmissions, timed_out)`
+    /// where `timed_out` marks an exhausted retry budget (escalated
+    /// delivery).
+    pub fn flaps(&self, sender: usize, dest: usize) -> (u32, bool) {
+        let p = self.flap.get(sender).copied().unwrap_or(0.0);
+        if p <= 0.0 {
+            return (0, false);
+        }
+        let key = ((sender as u64) << 32 | dest as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(self.seed ^ FAULT_STREAM ^ key);
+        let mut fails = 0u32;
+        while fails < self.retry.max_retries && rng.chance(p) {
+            fails += 1;
+        }
+        (fails, fails == self.retry.max_retries)
+    }
+}
+
+/// Retry/timeout counters accumulated by a faulted collective run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// NIC message retransmissions (each preceded by a watchdog firing
+    /// and an exponential backoff).
+    pub retries: u64,
+    /// Messages that exhausted the retry budget and were escalated.
+    pub timeouts: u64,
+}
+
+impl FaultStats {
+    /// Accumulate another run's counters.
+    pub fn absorb(&mut self, other: FaultStats) {
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_presets_and_clauses() {
+        assert!(FaultSpec::parse("none").unwrap().is_healthy());
+        assert!(FaultSpec::parse("healthy").unwrap().is_healthy());
+        let b = FaultSpec::parse("nic-brownout").unwrap();
+        assert_eq!((b.nic_nodes, b.nic_factor), (1, 0.25));
+        let s = FaultSpec::parse("nic=2:0.5,flap=0.1,engines=4,xgmi=0.8,straggler=1:1.5,window=2")
+            .unwrap();
+        assert_eq!(s.nic_nodes, 2);
+        assert_eq!(s.nic_factor, 0.5);
+        assert_eq!(s.flap_prob, 0.1);
+        assert_eq!(s.stuck_engines, 4);
+        assert_eq!(s.xgmi_factor, 0.8);
+        assert_eq!((s.straggler_nodes, s.straggler_factor), (1, 1.5));
+        assert_eq!(s.window_s, 2.0);
+        assert!(!s.is_healthy());
+    }
+
+    #[test]
+    fn parse_errors_are_descriptive() {
+        for (bad, needle) in [
+            ("", "empty fault spec"),
+            ("bogus", "key=value"),
+            ("nic=1", "nic=NODES:FACTOR"),
+            ("nic=x:0.5", "not a node count"),
+            ("nic=1:1.5", "out of range"),
+            ("nic=1:0", "out of range"),
+            ("flap=1.5", "out of range"),
+            ("straggler=1:0.5", "must be >= 1"),
+            ("window=-1", "negative"),
+            ("teapot=1", "unknown fault clause"),
+        ] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "`{bad}` -> `{err}` missing `{needle}`");
+        }
+    }
+
+    #[test]
+    fn generate_is_pure_and_seed_sensitive() {
+        let spec = FaultSpec::parse("nic=1:0.25,flap=0.1,straggler=1:1.5").unwrap();
+        let a = FaultPlan::generate(&spec, 4, 7);
+        let b = FaultPlan::generate(&spec, 4, 7);
+        assert_eq!(a, b, "same (spec, n, seed) must materialize identically");
+        assert!(!a.is_empty());
+        // Some seed in a small set must move the sick node.
+        let sick = |p: &FaultPlan| p.nodes.iter().position(|h| h.nic_factor < 1.0).unwrap();
+        assert!(
+            (0..16u64).any(|s| sick(&FaultPlan::generate(&spec, 4, s)) != sick(&a)),
+            "fault placement never varies with the seed"
+        );
+    }
+
+    #[test]
+    fn healthy_spec_yields_empty_plan_and_exact_clone() {
+        let plan = FaultPlan::generate(&FaultSpec::default(), 2, 99);
+        assert!(plan.is_empty());
+        let cluster = ClusterTopology::mi300x(2);
+        let same = plan.derate_cluster(&cluster, None);
+        assert_eq!(same.num_nodes(), 2);
+        assert_eq!(same.nic.bw_bytes_per_ns, cluster.nic.bw_bytes_per_ns);
+        assert_eq!(
+            same.node(0).engines_per_gpu,
+            cluster.node(0).engines_per_gpu
+        );
+        assert!(plan.link_health(None).is_none());
+    }
+
+    #[test]
+    fn derate_scales_nic_and_engine_tables() {
+        let spec = FaultSpec::parse("nic=1:0.25,engines=8,xgmi=0.5").unwrap();
+        let plan = FaultPlan::generate(&spec, 2, 3);
+        let cluster = ClusterTopology::mi300x(2);
+        let d = plan.derate_cluster(&cluster, None);
+        assert!((d.nic.bw_bytes_per_ns - 50.0 * 0.25).abs() < 1e-12);
+        assert_eq!(d.node(0).engines_per_gpu, 8);
+        let xgmi = d
+            .node(0)
+            .link(d.node(0).link_index(NodeId::Gpu(0), NodeId::Gpu(1)))
+            .bw_bytes_per_ns;
+        assert!((xgmi - 32.0).abs() < 1e-12);
+        // NIC latency terms are untouched — derates hit bandwidth only.
+        assert_eq!(d.nic.t_latency, cluster.nic.t_latency);
+        assert_eq!(d.nic.t_post_per_msg, cluster.nic.t_post_per_msg);
+    }
+
+    #[test]
+    fn drained_nodes_shrink_and_drop_their_derates() {
+        let spec = FaultSpec::parse("nic=1:0.25,flap=0.2").unwrap();
+        let plan = FaultPlan::generate(&spec, 2, 3);
+        let sick = plan.nodes.iter().position(|h| h.nic_factor < 1.0).unwrap();
+        let keep: Vec<bool> = (0..2).map(|i| i != sick).collect();
+        let cluster = ClusterTopology::mi300x(2);
+        let d = plan.derate_cluster(&cluster, Some(&keep));
+        assert_eq!(d.num_nodes(), 1);
+        // The survivor is healthy, so the NIC model is back to nominal.
+        assert_eq!(d.nic.bw_bytes_per_ns, cluster.nic.bw_bytes_per_ns);
+        assert!(plan.link_health(Some(&keep)).is_none());
+        assert!(plan.link_health(None).is_some());
+    }
+
+    #[test]
+    fn all_nodes_drained_clamps_to_one() {
+        let plan = FaultPlan::healthy(2);
+        let cluster = ClusterTopology::mi300x(2);
+        let d = plan.derate_cluster(&cluster, Some(&[false, false]));
+        assert_eq!(d.num_nodes(), 1);
+    }
+
+    #[test]
+    fn all_engines_stuck_clamps_to_one_engine() {
+        let spec = FaultSpec::parse("engines=255,xgmi=0.5").unwrap();
+        let plan = FaultPlan::generate(&spec, 1, 0);
+        let d = plan.derate_cluster(&ClusterTopology::mi300x(1), None);
+        assert_eq!(d.node(0).engines_per_gpu, 1);
+    }
+
+    #[test]
+    fn flap_draws_are_pure_per_message() {
+        let h = LinkHealth::uniform(4, 0.5, 42);
+        for s in 0..4 {
+            for d in 0..4 {
+                assert_eq!(h.flaps(s, d), h.flaps(s, d));
+            }
+        }
+        // High probability ⇒ some message flaps; zero ⇒ none.
+        let any = (0..4).any(|s| (0..4).any(|d| h.flaps(s, d).0 > 0));
+        assert!(any, "p=0.5 over 16 independent draws must flap something");
+        let quiet = LinkHealth::uniform(4, 0.0, 42);
+        assert_eq!(quiet.flaps(0, 1), (0, false));
+    }
+
+    #[test]
+    fn windows_are_drawn_when_requested() {
+        let spec = FaultSpec::parse("nic=2:0.5,window=1").unwrap();
+        let plan = FaultPlan::generate(&spec, 2, 11);
+        for h in plan.nodes.iter().filter(|h| h.nic_factor < 1.0) {
+            let (s, e) = h.window_ns.expect("derated node must carry a window");
+            assert!(e > s && e - s == 1_000_000_000);
+        }
+    }
+}

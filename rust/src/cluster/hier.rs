@@ -50,6 +50,7 @@ use crate::sim::host::HostOp;
 use crate::sim::topology::{NodeId, Topology};
 use crate::sim::{HostId, LatencyModel, Sim, SimConfig, SimTime, SignalId};
 
+use super::faults::{FaultStats, LinkHealth};
 use super::selector::{ClusterChoice, InterSchedule};
 use super::topology::{ClusterTopology, NicModel, RankPath};
 
@@ -77,6 +78,12 @@ pub struct HierRunOptions {
     /// Record trace spans on the per-node DES instances (determinism tests
     /// compare span counts across cached/fresh episodes).
     pub trace: bool,
+    /// Transient NIC-flap model for the inter leg (fault injection,
+    /// [`crate::cluster::faults`]). `None` — the default, and the only
+    /// value healthy callers ever pass — takes the exact original code
+    /// path: the faulted exchange functions are never called, so the
+    /// healthy timeline stays bit-identical.
+    pub link_faults: Option<LinkHealth>,
 }
 
 /// Outcome of one hierarchical collective.
@@ -95,6 +102,9 @@ pub struct HierResult {
     pub nic_messages: usize,
     /// Functional placement check (None when not requested).
     pub verified: Option<bool>,
+    /// Retry/timeout counters from the flap model (all zero on a healthy
+    /// run — the fault path is never entered).
+    pub faults: FaultStats,
 }
 
 /// Cache key for a node's rebased intra rounds: the flat plan-cache key
@@ -420,6 +430,85 @@ pub(crate) fn nic_exchange_messages(
     msgs
 }
 
+/// [`nic_exchange_messages`] with the transient-flap model layered on:
+/// each message's failure count is a pure draw from `health`
+/// ([`LinkHealth::flaps`] — keyed by `(seed, sender, dest)`, independent
+/// of walk order). Every failed attempt costs the timeout watchdog
+/// ([`crate::cluster::faults::RetryPolicy::timeout_ns`] of silence after
+/// the lost payload clears the port) plus an exponential backoff, and the
+/// retransmission re-serializes through the sender's port — pessimistic
+/// by design: a retry also delays the sender's later messages, which is
+/// what a single-QP RDMA retransmit does. Messages that exhaust the
+/// retry budget are escalated and force-delivered (`timed_out` counted):
+/// flaps delay bytes, they never drop them, so retried collectives stay
+/// byte-identical to the healthy placement. An all-zero flap table
+/// reduces exactly to the healthy timeline (no draws are made).
+pub(crate) fn nic_exchange_messages_faulted(
+    nic: &NicModel,
+    inter: InterSchedule,
+    ready: &[f64],
+    payload: u64,
+    observe: f64,
+    health: &LinkHealth,
+) -> (Vec<NicMsg>, FaultStats) {
+    let n = ready.len();
+    let all_ready = ready.iter().copied().fold(0f64, f64::max);
+    let mut msgs = Vec::with_capacity(n * n.saturating_sub(1));
+    let mut stats = FaultStats::default();
+    for sender in 0..n {
+        let mut port = 0f64;
+        for (j, r) in ready.iter().enumerate() {
+            if j == sender {
+                continue;
+            }
+            let eligible = match inter {
+                InterSchedule::Pipelined | InterSchedule::Overlapped => *r,
+                InterSchedule::Sequential => all_ready,
+            };
+            let start = eligible.max(port);
+            port = start + nic.t_post_per_msg + nic.payload_ns(payload);
+            let (fails, timed_out) = health.flaps(sender, j);
+            for a in 0..fails {
+                let resume =
+                    port + health.retry.timeout_ns + health.retry.backoff_ns * 2f64.powi(a as i32);
+                port = resume + nic.t_post_per_msg + nic.payload_ns(payload);
+                stats.retries += 1;
+            }
+            if timed_out {
+                stats.timeouts += 1;
+            }
+            msgs.push(NicMsg {
+                sender,
+                dest: j,
+                start,
+                port_end: port,
+                arrive: port + nic.t_latency + observe,
+            });
+        }
+    }
+    (msgs, stats)
+}
+
+/// Per-destination last arrivals of the faulted exchange, **defined as
+/// the fold** of [`nic_exchange_messages_faulted`] — one implementation,
+/// so the tracing and latency views cannot drift (the healthy pair needs
+/// a pinning test instead; here fold-consistency holds by construction).
+pub(crate) fn nic_exchange_arrivals_faulted(
+    nic: &NicModel,
+    inter: InterSchedule,
+    ready: &[f64],
+    payload: u64,
+    observe: f64,
+    health: &LinkHealth,
+) -> (Vec<f64>, FaultStats) {
+    let (msgs, stats) = nic_exchange_messages_faulted(nic, inter, ready, payload, observe, health);
+    let mut last = vec![0f64; ready.len()];
+    for m in &msgs {
+        last[m.dest] = last[m.dest].max(m.arrive);
+    }
+    (last, stats)
+}
+
 /// Emit port + flight spans for `msgs` into the active recorder (AA inter
 /// leg, and the RS leg in `cluster::allreduce`). Port spans land on each
 /// sender's exclusive [`Track::Nic`]; flights on the destination's
@@ -620,6 +709,10 @@ pub fn run_hier_full(
     let t0 = prelaunch_t0(&rounds[0], gpn, &opts.latency, prelaunch);
     let data_cmds = rounds[0].iter().map(|p| p.total_data_cmds()).sum::<usize>() * n;
     let nic_messages = count_nic_messages(cluster);
+    // Flap-retry counters; stays zero unless the faulted exchange runs
+    // (the AG inter leg is derate-only: its chunk sends ride `leg_ns`
+    // directly and do not model per-message flaps).
+    let mut fault_stats = FaultStats::default();
 
     if opts.verify {
         init_buffers_cluster(&mut sims, kind, cluster, size, in_place);
@@ -750,10 +843,25 @@ pub fn run_hier_full(
             } else {
                 // Port-serialized sends, one per remote block, scheduled at
                 // block readiness (pipelined) or after the whole intra
-                // phase (sequential).
+                // phase (sequential). With a flap model installed the
+                // faulted exchange models watchdog + backoff retries; the
+                // healthy arm is the untouched original path.
                 let ready: Vec<f64> = round_done.iter().map(|&rd| rd as f64).collect();
-                let last_arrival =
-                    nic_exchange_arrivals(&nic, choice.inter, &ready, intra, observe);
+                let last_arrival = match &opts.link_faults {
+                    None => nic_exchange_arrivals(&nic, choice.inter, &ready, intra, observe),
+                    Some(h) => {
+                        let (arr, fs) = nic_exchange_arrivals_faulted(
+                            &nic,
+                            choice.inter,
+                            &ready,
+                            intra,
+                            observe,
+                            h,
+                        );
+                        fault_stats.absorb(fs);
+                        arr
+                    }
+                };
                 let mut total = 0f64;
                 for (j, arr) in last_arrival.iter().enumerate() {
                     total = total.max(arr.max(round_done[j] as f64));
@@ -761,7 +869,20 @@ pub fn run_hier_full(
                 let latency = ns(total) - t0;
                 let intra_span = round_done.iter().copied().max().unwrap() - t0;
                 if emitting {
-                    let msgs = nic_exchange_messages(&nic, choice.inter, &ready, intra, observe);
+                    let msgs = match &opts.link_faults {
+                        None => nic_exchange_messages(&nic, choice.inter, &ready, intra, observe),
+                        Some(h) => {
+                            nic_exchange_messages_faulted(
+                                &nic,
+                                choice.inter,
+                                &ready,
+                                intra,
+                                observe,
+                                h,
+                            )
+                            .0
+                        }
+                    };
                     record::with(|r| {
                         for (k, sim) in sims.iter().enumerate() {
                             obs::lift_sim_trace(r, k as u8, &sim.trace);
@@ -793,6 +914,7 @@ pub fn run_hier_full(
             data_cmds,
             nic_messages,
             verified,
+            faults: fault_stats,
         },
         sims,
     )
@@ -1174,6 +1296,73 @@ mod tests {
             }
             assert_eq!(arr, folded, "{inter:?}");
         }
+    }
+
+    /// With an all-zero flap table the faulted exchange must reproduce the
+    /// healthy timeline bit-for-bit (same loop, no draws); with flapping
+    /// senders it must only ever delay arrivals, and must count retries.
+    #[test]
+    fn faulted_exchange_reduces_to_healthy_and_only_delays() {
+        let nic = NicModel::default();
+        let ready = [1_000.0, 2_500.0, 1_800.0, 4_000.0];
+        for inter in [
+            InterSchedule::Sequential,
+            InterSchedule::Pipelined,
+            InterSchedule::Overlapped,
+        ] {
+            let healthy = nic_exchange_arrivals(&nic, inter, &ready, 4096, 120.0);
+            let quiet = LinkHealth::uniform(ready.len(), 0.0, 9);
+            let (same, stats) =
+                nic_exchange_arrivals_faulted(&nic, inter, &ready, 4096, 120.0, &quiet);
+            assert_eq!(healthy, same, "{inter:?}: zero flaps must be bit-identical");
+            assert_eq!(stats, FaultStats::default());
+
+            let flappy = LinkHealth::uniform(ready.len(), 0.6, 9);
+            let (delayed, stats) =
+                nic_exchange_arrivals_faulted(&nic, inter, &ready, 4096, 120.0, &flappy);
+            assert!(stats.retries > 0, "{inter:?}: p=0.6 must flap something");
+            for (d, h) in delayed.iter().zip(healthy.iter()) {
+                assert!(d >= h, "{inter:?}: retries may only delay arrivals");
+            }
+            assert!(
+                delayed.iter().sum::<f64>() > healthy.iter().sum::<f64>(),
+                "{inter:?}: retries must show up in the timeline"
+            );
+        }
+    }
+
+    /// Each retry costs at least the watchdog timeout + first backoff, and
+    /// the draw is pure: identical (seed, sender, dest) ⇒ identical
+    /// timeline regardless of how many times we ask.
+    #[test]
+    fn faulted_exchange_is_pure_and_prices_retries() {
+        let nic = NicModel::default();
+        let ready = [0.0, 0.0, 0.0, 0.0];
+        let h = LinkHealth::uniform(4, 0.9, 1234);
+        let run =
+            || nic_exchange_messages_faulted(&nic, InterSchedule::Pipelined, &ready, 1024, 0.0, &h);
+        let (m1, s1) = run();
+        let (m2, s2) = run();
+        assert_eq!(s1, s2);
+        assert_eq!(m1.len(), m2.len());
+        for (a, b) in m1.iter().zip(m2.iter()) {
+            assert_eq!((a.start, a.port_end, a.arrive), (b.start, b.port_end, b.arrive));
+        }
+        // Find a message with k retries: its port occupancy must cover the
+        // base send plus k·(timeout + backoff_i + resend).
+        let healthy_occ = nic.t_post_per_msg + nic.payload_ns(1024);
+        let mut saw_retry = false;
+        for m in &m1 {
+            let (fails, _) = h.flaps(m.sender, m.dest);
+            let mut want = healthy_occ;
+            for a in 0..fails {
+                let backoff = h.retry.backoff_ns * 2f64.powi(a as i32);
+                want += h.retry.timeout_ns + backoff + healthy_occ;
+            }
+            assert!((m.port_end - m.start - want).abs() < 1e-9, "occupancy mismatch");
+            saw_retry |= fails > 0;
+        }
+        assert!(saw_retry, "p=0.9 must produce at least one retry");
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //!   extending `collectives::select_variant`; the serving path routes
 //!   through it via `coordinator::comm` whenever
 //!   `ServeConfig::num_nodes > 1`.
+//! - [`faults`] — seeded fault injection ([`faults::FaultPlan`], a pure
+//!   function of `(spec, seed)`): degraded DMA engines, derated/flapping
+//!   NIC links and compute stragglers, applied through the existing
+//!   link tables; [`selector::select_cluster_degraded`] re-picks
+//!   variant/schedule against the derated topology and the hierarchical
+//!   executors model timeout-watchdog retries with exponential backoff
+//!   in virtual time.
 //!
 //! # Schedule taxonomy ([`InterSchedule`])
 //!
@@ -45,6 +52,32 @@
 //!   eligibility) and coalesces coincident triggers, so it is never
 //!   slower than either barriered composition; the selector picks it for
 //!   every multi-node all-reduce.
+//!
+//! # Health / fault taxonomy ([`faults`])
+//!
+//! Faults are *intensities materialized by seed*: a [`faults::FaultSpec`]
+//! names what can go wrong, [`faults::FaultPlan::generate`] draws which
+//! nodes it happens to. Three fault families, three reaction layers:
+//!
+//! - **Engine faults** (stuck sDMA engines, xGMI bandwidth derates) —
+//!   applied by rebuilding the node [`crate::sim::Topology`] with a
+//!   smaller engine pool / scaled link tables; fleet-wide, because the
+//!   planners require homogeneous nodes and lockstep collectives gate on
+//!   the slowest participant anyway.
+//! - **Link faults** (NIC bandwidth derates, transient message flaps) —
+//!   derates scale [`topology::NicModel::bw_bytes_per_ns`]; flaps are
+//!   per-message seeded draws that the executors recover from with a
+//!   timeout watchdog + retry-with-exponential-backoff
+//!   ([`faults::RetryPolicy`]), all in virtual time. Flaps delay bytes,
+//!   never drop them — retried collectives stay byte-identical.
+//! - **Node faults** (compute stragglers) — per-node compute-time
+//!   multipliers; lockstep TP batches gate on the worst survivor, and
+//!   the serving coordinator may *drain* sick nodes (shrink the world,
+//!   re-route through the selector) instead of gating on them.
+//!
+//! The healthy path is zero-perturbation by contract: an empty plan is
+//! never consulted, pinned bit-identical by `tests/determinism.rs` and
+//! `tests/prop_faults.rs`.
 //!
 //! # NIC link model assumptions ([`topology::NicModel`])
 //!
@@ -65,6 +98,7 @@
 //!   `n−1` messages per rank, not `n·g`.
 
 pub mod allreduce;
+pub mod faults;
 pub mod hier;
 pub mod overlap;
 pub mod selector;
@@ -73,7 +107,11 @@ pub mod topology;
 pub use allreduce::{
     run_hier_ar, run_hier_ar_full, run_hier_rs, run_hier_rs_full, run_hier_rs_timed, RsChunkTimes,
 };
+pub use faults::{FaultPlan, FaultSpec, FaultStats, LinkHealth, NodeHealth, RetryPolicy};
 pub use hier::{rounds_cache_stats, run_hier, run_hier_full, HierResult, HierRunOptions};
 pub use overlap::{overlap_report, run_hier_ar_overlapped, OverlapReport};
-pub use selector::{select_allreduce, select_cluster, ClusterChoice, ClusterKind, InterSchedule};
+pub use selector::{
+    select_allreduce, select_allreduce_degraded, select_cluster, select_cluster_degraded,
+    ClusterChoice, ClusterKind, InterSchedule,
+};
 pub use topology::{ClusterTopology, GlobalRank, NicModel};

@@ -242,6 +242,9 @@ pub fn run_hier_ar_overlapped_full(
             data_cmds: rs_res.data_cmds + ag_data_cmds,
             nic_messages: rs_res.nic_messages + count_nic_messages(cluster),
             verified,
+            // The gather leg is derate-only; all flap retries were paid in
+            // the reduce-scatter exchange.
+            faults: rs_res.faults,
         },
         sims,
     )

@@ -25,6 +25,7 @@
 
 use crate::collectives::{select_variant, CollectiveKind, Variant};
 
+use super::faults::FaultPlan;
 use super::topology::ClusterTopology;
 
 /// Which hierarchical collective — a superset of the single-node
@@ -161,6 +162,44 @@ pub fn select_cluster<K: Into<ClusterKind>>(
         }
     };
     ClusterChoice { intra, inter }
+}
+
+/// Degradation-aware [`select_cluster`]: re-pick (intra variant, inter
+/// schedule) against the topology **as the fault plan derates it** —
+/// slower NICs stretch the per-peer payload time, which moves the
+/// Sequential → Pipelined cutover down by the derate factor (e.g. the
+/// healthy AG cutover sits at `PIPELINE_MIN_BLOCK_NS · bw` = 200 KB per
+/// peer chunk; a 4× NIC derate drags it to 50 KB, so mid-size collectives
+/// that sequenced when healthy now pipeline — `tests/prop_faults.rs`
+/// pins a flip). Stuck-engine derates shrink the per-node engine pool the
+/// intra planner sees. All-reduce keeps [`InterSchedule::Overlapped`]
+/// even degraded: fusion is never slower than the barriered compositions
+/// *on the same (derated) topology* (schedule monotonicity is
+/// bandwidth-independent), so demoting it would only slow the degraded
+/// run further. An empty plan is exactly [`select_cluster`].
+pub fn select_cluster_degraded<K: Into<ClusterKind>>(
+    kind: K,
+    cluster: &ClusterTopology,
+    size: u64,
+    plan: &FaultPlan,
+) -> ClusterChoice {
+    if plan.is_empty() {
+        return select_cluster(kind, cluster, size);
+    }
+    select_cluster(kind, &plan.derate_cluster(cluster, None), size)
+}
+
+/// Degradation-aware [`select_allreduce`]: both phase choices re-picked
+/// against the derated topology (see [`select_cluster_degraded`]).
+pub fn select_allreduce_degraded(
+    cluster: &ClusterTopology,
+    size: u64,
+    plan: &FaultPlan,
+) -> (ClusterChoice, ClusterChoice) {
+    if plan.is_empty() {
+        return select_allreduce(cluster, size);
+    }
+    select_allreduce(&plan.derate_cluster(cluster, None), size)
 }
 
 /// Both phases of a hierarchical all-reduce: the reduce-scatter leg and the
@@ -324,6 +363,53 @@ mod tests {
         let single = select_cluster(ClusterKind::ReduceScatter, &ClusterTopology::mi300x(1), MB);
         assert_eq!(single.inter, InterSchedule::Sequential);
         assert_eq!(single.intra, select_variant(CollectiveKind::AllToAll, MB));
+    }
+
+    /// The degradation-aware selector flips the inter schedule where the
+    /// derated NIC moves the pipelining cutover: healthy per-peer AG
+    /// chunks of 128 KB pay 2.56 µs on the wire (< 4 µs ⇒ Sequential);
+    /// at a 4× NIC derate the same chunk takes 10.2 µs (⇒ Pipelined).
+    #[test]
+    fn degraded_selector_flips_schedule_at_the_derated_cutover() {
+        use crate::cluster::faults::FaultSpec;
+        let c = ClusterTopology::mi300x(2);
+        let size = 2 * MB; // per-peer AG chunk = size/world = 128 KB
+        let healthy = select_cluster(ClusterKind::AllGather, &c, size);
+        assert_eq!(healthy.inter, InterSchedule::Sequential);
+
+        let spec = FaultSpec::parse("nic=1:0.25").unwrap();
+        let plan = FaultPlan::generate(&spec, 2, 7);
+        let degraded = select_cluster_degraded(ClusterKind::AllGather, &c, size, &plan);
+        assert_eq!(
+            degraded.inter,
+            InterSchedule::Pipelined,
+            "4x NIC derate must flip the AG schedule at 2 MB"
+        );
+        // Intra variant is untouched by a NIC-only fault.
+        assert_eq!(degraded.intra, healthy.intra);
+
+        // Empty plan ⇒ exactly the healthy policy.
+        let none = FaultPlan::healthy(2);
+        assert_eq!(
+            select_cluster_degraded(ClusterKind::AllGather, &c, size, &none),
+            healthy
+        );
+    }
+
+    /// All-reduce stays fused under degradation: Overlapped is never
+    /// slower than the barriered compositions on the *derated* topology,
+    /// so the aware policy must not demote it.
+    #[test]
+    fn degraded_allreduce_keeps_overlap() {
+        use crate::cluster::faults::FaultSpec;
+        let c = ClusterTopology::mi300x(2);
+        let spec = FaultSpec::parse("nic=1:0.25,engines=8").unwrap();
+        let plan = FaultPlan::generate(&spec, 2, 7);
+        let ch = select_cluster_degraded(ClusterKind::AllReduce, &c, 32 * MB, &plan);
+        assert_eq!(ch.inter, InterSchedule::Overlapped);
+        let (rs, ag) = select_allreduce_degraded(&c, 32 * MB, &plan);
+        assert_eq!(rs.inter, InterSchedule::Overlapped);
+        assert_eq!(ag.inter, InterSchedule::Overlapped);
     }
 
     #[test]

@@ -276,6 +276,33 @@ mod tests {
     }
 
     #[test]
+    fn all_engines_degraded_topology_composes() {
+        // A fault-derated node — every sDMA engine but one stuck, xGMI at
+        // the 1% derate floor — must still compose into a cluster and
+        // answer sizing queries without panicking.
+        let sick = Topology::custom(8, 1, 64.0 * 0.01, 64.0);
+        let c = ClusterTopology::homogeneous(2, sick, NicModel::default());
+        assert_eq!(c.world_size(), 16);
+        assert_eq!(c.node(0).engines_per_gpu, 1);
+        assert_eq!(c.pad_size(0), 16);
+        assert!(c.node(0).gpu_fanout_bw() > 0.0);
+    }
+
+    #[test]
+    fn derated_nic_stays_finite_on_zero_bytes() {
+        // Zero-byte collectives over a near-dead NIC: the model must
+        // produce finite, latency-dominated times, never NaN/inf.
+        let m = NicModel {
+            bw_bytes_per_ns: 50.0 * 0.01,
+            ..NicModel::default()
+        };
+        assert_eq!(m.payload_ns(0), 0.0);
+        assert!(m.message_ns(0).is_finite() && m.message_ns(0) >= m.t_latency);
+        assert!(m.leg_ns(15, 0).is_finite());
+        assert!(m.payload_ns(1 << 20).is_finite());
+    }
+
+    #[test]
     fn nic_model_timing() {
         let m = NicModel::default();
         // 1 MB at 50 B/ns ≈ 21 µs payload.

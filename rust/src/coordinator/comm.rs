@@ -30,8 +30,8 @@
 use std::collections::HashMap;
 
 use crate::cluster::{
-    hier, run_hier_ar, select_allreduce, ClusterChoice, ClusterTopology, HierRunOptions,
-    InterSchedule,
+    hier, run_hier_ar, select_allreduce, ClusterChoice, ClusterTopology, FaultStats,
+    HierRunOptions, InterSchedule, LinkHealth,
 };
 use crate::models::ModelConfig;
 
@@ -57,15 +57,36 @@ impl CommCost {
 
 /// Per-engine collective cost model: flat (free) on one node, hierarchical
 /// (selector-routed) across nodes.
+///
+/// Under fault injection ([`CollectiveComm::degraded`]) the model splits
+/// into the **actual** cluster — the derated topology every collective
+/// really executes on — and an optional **belief** cluster the selector
+/// consults: a degradation-aware engine selects against the actual
+/// (derated, possibly drain-shrunk) topology, while the degradation-blind
+/// baseline keeps selecting against its healthy belief yet still pays the
+/// actual cluster's derated latencies. A [`LinkHealth`] flap table routes
+/// the executor through its retry-with-backoff path; retry/timeout
+/// counters accumulate in [`CollectiveComm::fault_stats`] per *call* (a
+/// memoized latency still represents one executed collective that pays
+/// its retries each time).
 pub struct CollectiveComm {
-    /// `None` on single-node deployments — the flat path builds no cluster
-    /// topology and charges nothing.
+    /// The topology collectives execute on. `None` on single-node
+    /// deployments — the flat path builds no cluster topology and charges
+    /// nothing.
     cluster: Option<ClusterTopology>,
-    /// Modeled all-reduce latency per (padded size, phase schedules). The
+    /// The topology the selector consults; `None` ⇒ same as `cluster`
+    /// (healthy runs and the degradation-aware policy).
+    belief: Option<ClusterTopology>,
+    /// Inter-leg flap table (fault injection); `None` on healthy runs —
+    /// the executor takes its original code path.
+    link_faults: Option<LinkHealth>,
+    /// Accumulated retry/timeout counters across all calls.
+    stats: FaultStats,
+    /// Modeled all-reduce cost per (padded size, phase schedules). The
     /// schedules are part of the key for the same reason the cluster
     /// rounds cache keys on them: an `Overlapped` episode must never be
     /// served a latency modeled for a barriered composition.
-    cache: HashMap<(u64, InterSchedule, InterSchedule), u64>,
+    cache: HashMap<(u64, InterSchedule, InterSchedule), (u64, FaultStats)>,
 }
 
 impl CollectiveComm {
@@ -88,8 +109,38 @@ impl CollectiveComm {
             .then(|| ClusterTopology::mi300x(cfg.num_nodes.min(hier::MAX_NODES)));
         CollectiveComm {
             cluster,
+            belief: None,
+            link_faults: None,
+            stats: FaultStats::default(),
             cache: HashMap::new(),
         }
+    }
+
+    /// Build a fault-degraded cost model: collectives execute on `actual`
+    /// (the derated, possibly drain-shrunk topology; `None` = flat
+    /// single-node path), the selector consults `belief` when given (the
+    /// degradation-blind engine passes its healthy topology here), and
+    /// `link_faults` routes the inter legs through the retry watchdog.
+    /// A 1-node `actual` should be passed as `None` — a drained-to-one
+    /// world has no NIC leg and its collectives are free, like any
+    /// single-node deployment.
+    pub fn degraded(
+        actual: Option<ClusterTopology>,
+        belief: Option<ClusterTopology>,
+        link_faults: Option<LinkHealth>,
+    ) -> Self {
+        CollectiveComm {
+            cluster: actual,
+            belief,
+            link_faults,
+            stats: FaultStats::default(),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Retry/timeout counters accumulated so far (all zero when healthy).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.stats
     }
 
     /// Whether the hierarchical (multi-node) path is active.
@@ -100,10 +151,13 @@ impl CollectiveComm {
     /// The selector's decision for an all-reduce of `bytes`: the
     /// (reduce-scatter, all-gather) phase choices, or `None` on a
     /// single-node deployment (flat path — no cluster collective is built).
+    /// Selection consults the belief topology when one is installed
+    /// (degradation-blind engines); sizes always pad to the actual world.
     pub fn allreduce_choices(&self, bytes: u64) -> Option<(ClusterChoice, ClusterChoice)> {
-        self.cluster
-            .as_ref()
-            .map(|cl| select_allreduce(cl, cl.pad_size(bytes)))
+        self.cluster.as_ref().map(|cl| {
+            let sel = self.belief.as_ref().unwrap_or(cl);
+            select_allreduce(sel, cl.pad_size(bytes))
+        })
     }
 
     /// Modeled latency of one tensor-parallel all-reduce of `bytes` across
@@ -118,14 +172,21 @@ impl CollectiveComm {
             return 0;
         }
         let size = cl.pad_size(bytes);
-        let (rs, ag) = select_allreduce(cl, size);
+        let sel = self.belief.as_ref().unwrap_or(cl);
+        let (rs, ag) = select_allreduce(sel, size);
         let key = (size, rs.inter, ag.inter);
-        if let Some(&t) = self.cache.get(&key) {
+        if let Some(&(t, fs)) = self.cache.get(&key) {
+            self.stats.absorb(fs);
             return t;
         }
-        let t = run_hier_ar(rs, ag, cl, size, &HierRunOptions::default()).latency_ns;
-        self.cache.insert(key, t);
-        t
+        let opts = HierRunOptions {
+            link_faults: self.link_faults.clone(),
+            ..HierRunOptions::default()
+        };
+        let res = run_hier_ar(rs, ag, cl, size, &opts);
+        self.cache.insert(key, (res.latency_ns, res.faults));
+        self.stats.absorb(res.faults);
+        res.latency_ns
     }
 
     /// Collective time for one model step over `tokens` rows: a bf16

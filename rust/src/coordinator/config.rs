@@ -1,7 +1,61 @@
 //! Serving configuration.
 
+use crate::cluster::FaultSpec;
 use crate::kvcache::fetch::FetchImpl;
 use crate::models::{ModelConfig, PerfModel};
+
+/// How the serving engine reacts when a fault plan degrades the fleet
+/// ([`ServeConfig::faults`]). Each lever is independent so the figures and
+/// benches can compare the degradation-aware engine against a
+/// degradation-blind baseline (and ablate the levers in between):
+///
+/// - `reselect` — re-pick collective variant/schedule against the
+///   *derated* topology (`cluster::select_cluster_degraded`) instead of
+///   the healthy belief.
+/// - `drain` — drop badly degraded nodes from the serving world (NIC
+///   below half speed, or compute ≥ 1.5× slower), shrinking the
+///   collective world to the healthy survivors; compute throughput is
+///   scaled by the lost capacity.
+/// - `shed` — under SLO pressure, drop incoming best-effort (no-SLO)
+///   arrivals instead of queuing them ahead of chat traffic.
+/// - `preempt` — evict a running best-effort request when an SLO'd
+///   request would otherwise wait behind a full batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradePolicy {
+    pub reselect: bool,
+    pub drain: bool,
+    pub shed: bool,
+    pub preempt: bool,
+}
+
+impl DegradePolicy {
+    /// All levers on — the graceful-degradation engine.
+    pub fn aware() -> Self {
+        DegradePolicy {
+            reselect: true,
+            drain: true,
+            shed: true,
+            preempt: true,
+        }
+    }
+
+    /// All levers off — the degradation-blind baseline: the engine keeps
+    /// its healthy beliefs and policies while reality runs derated.
+    pub fn blind() -> Self {
+        DegradePolicy {
+            reselect: false,
+            drain: false,
+            shed: false,
+            preempt: false,
+        }
+    }
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        DegradePolicy::aware()
+    }
+}
 
 /// Configuration for one serving engine (virtual or real).
 #[derive(Debug, Clone)]
@@ -42,6 +96,13 @@ pub struct ServeConfig {
     /// (the engine halves resolution once full — deterministic decimation);
     /// < 2 disables the timeline (the exact peak is still tracked).
     pub queue_sample_cap: usize,
+    /// Fault injection: `None` (the default) is the healthy fleet and
+    /// perturbs **nothing** — the engine never materializes a plan, so
+    /// healthy runs stay bit-identical (`tests/determinism.rs`). `Some`
+    /// materializes a [`crate::cluster::FaultPlan`] from [`ServeConfig::seed`].
+    pub faults: Option<FaultSpec>,
+    /// Reaction policy when `faults` is set (ignored when healthy).
+    pub degrade: DegradePolicy,
 }
 
 impl ServeConfig {
@@ -61,6 +122,8 @@ impl ServeConfig {
             num_nodes: 1,
             comm_overlap: true,
             queue_sample_cap: 2048,
+            faults: None,
+            degrade: DegradePolicy::aware(),
         }
     }
 
@@ -74,6 +137,18 @@ impl ServeConfig {
     /// Toggle collective/compute overlap (see [`ServeConfig::comm_overlap`]).
     pub fn with_comm_overlap(mut self, on: bool) -> Self {
         self.comm_overlap = on;
+        self
+    }
+
+    /// Inject the given fault spec (materialized from [`ServeConfig::seed`]).
+    pub fn with_faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
+    /// Set the degradation-reaction policy (see [`DegradePolicy`]).
+    pub fn with_degrade(mut self, policy: DegradePolicy) -> Self {
+        self.degrade = policy;
         self
     }
 
@@ -99,7 +174,20 @@ mod tests {
         assert_eq!(c.world_size(), 8);
         assert!(c.comm_overlap);
         assert!(c.queue_sample_cap >= 2);
+        assert!(c.faults.is_none(), "default config must be fault-free");
+        assert_eq!(c.degrade, DegradePolicy::aware());
         assert!(!c.with_comm_overlap(false).comm_overlap);
+    }
+
+    #[test]
+    fn fault_builders_compose() {
+        let spec = FaultSpec::parse("nic=1:0.25").unwrap();
+        let c = ServeConfig::new(&LLAMA31_8B, FetchImpl::DmaB2b)
+            .with_faults(spec.clone())
+            .with_degrade(DegradePolicy::blind());
+        assert_eq!(c.faults, Some(spec));
+        assert!(!c.degrade.reselect && !c.degrade.shed);
+        assert!(DegradePolicy::aware().preempt);
     }
 
     #[test]

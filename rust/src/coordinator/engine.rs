@@ -15,6 +15,7 @@
 //! virtual clock reaches each event, interleaving arrivals with decode
 //! steps — open-loop serving with real queueing behavior.
 
+use crate::cluster::{hier, ClusterTopology, FaultPlan};
 use crate::kvcache::fetch::{run_fetch, CopySpec, FetchImpl, FetchOutcome};
 use crate::kvcache::BlockLayout;
 use crate::obs::{record, SpanKind, Track};
@@ -22,7 +23,7 @@ use crate::sim::{Sim, SimConfig};
 
 use super::comm::CollectiveComm;
 use super::config::ServeConfig;
-use super::metrics::{ClassStats, RequestSpan, ServeMetrics};
+use super::metrics::{ClassStats, RequestSpan, ServeMetrics, SloTarget};
 use super::request::{Request, RequestState};
 use super::scheduler::{AdmitAction, Scheduler};
 use super::workload::{session_cache_key, ArrivalEvent, TenantClass};
@@ -40,6 +41,98 @@ struct Pending {
 struct ArrivalSlot {
     req: Request,
     warm: bool,
+}
+
+/// Drain threshold: a node whose NIC runs below half speed degrades the
+/// shared collectives more than the capacity its absence costs.
+const DRAIN_NIC_BELOW: f64 = 0.5;
+/// Drain threshold: a ≥ 1.5× compute straggler slows every lockstep step
+/// more than dropping the node would.
+const DRAIN_COMPUTE_ABOVE: f64 = 1.5;
+/// A queued SLO'd request that has burned this fraction of its TTFT
+/// budget puts the class at risk — best-effort arrivals are shed.
+const SLO_RISK_FRAC: f64 = 0.5;
+/// Bound on the waiting-queue scan of the risk check (O(1) per ingest).
+const SLO_RISK_SCAN: usize = 64;
+
+/// Engine-local fault state, materialized once at construction when
+/// [`ServeConfig::faults`] is set and derates something. Healthy runs
+/// never build one: every fault hook below gates on the `Option`, so the
+/// healthy engine stays bit-identical to the pre-fault code
+/// (`tests/determinism.rs`).
+struct FaultContext {
+    plan: FaultPlan,
+    /// Nodes kept in the serving world after the drain policy (all true
+    /// when draining is off); at least one node always survives.
+    keep: Vec<bool>,
+    /// Compute-time multiplier every decode/prefill step pays: the worst
+    /// straggler among surviving nodes (lockstep TP gates on the slowest
+    /// rank) times the capacity lost to draining (`n / active` — the
+    /// surviving GPUs shoulder the drained nodes' shards).
+    compute_scale: f64,
+}
+
+impl FaultContext {
+    /// Materialize the plan + drain decision for `cfg`; `None` when the
+    /// config is fault-free (including a spec that derates nothing).
+    fn build(cfg: &ServeConfig) -> Option<FaultContext> {
+        let spec = cfg.faults.as_ref()?;
+        // The collective planner clamps worlds to its node limit; the
+        // fault plan must describe the same world the comm model prices.
+        let n = cfg.num_nodes.clamp(1, hier::MAX_NODES);
+        let plan = FaultPlan::generate(spec, n, cfg.seed);
+        if plan.is_empty() {
+            return None;
+        }
+        let mut keep = vec![true; n];
+        if cfg.degrade.drain {
+            for (k, h) in plan.nodes.iter().enumerate() {
+                if h.nic_factor < DRAIN_NIC_BELOW || h.compute_factor >= DRAIN_COMPUTE_ABOVE {
+                    keep[k] = false;
+                }
+            }
+            if keep.iter().all(|&k| !k) {
+                // Never drain the whole fleet: deterministically keep
+                // node 0 and serve degraded rather than not at all.
+                keep[0] = true;
+            }
+        }
+        let active = keep.iter().filter(|&&k| k).count().max(1);
+        let compute_scale = plan.worst_compute_factor(Some(&keep)) * (n as f64 / active as f64);
+        Some(FaultContext {
+            plan,
+            keep,
+            compute_scale,
+        })
+    }
+
+    /// Surviving node count.
+    fn active(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count().max(1)
+    }
+
+    /// Build the fault-aware collective cost model: collectives execute
+    /// on the derated (and, when draining, shrunk) **actual** topology;
+    /// the degradation-blind policy (`reselect` off) additionally
+    /// installs the healthy topology as the selector's belief.
+    fn comm(&self, cfg: &ServeConfig) -> CollectiveComm {
+        let n = self.plan.num_nodes();
+        if n <= 1 {
+            // A single-node world has no NIC leg: flat and free, faulted
+            // or not (compute stragglers are charged via `compute_scale`).
+            return CollectiveComm::degraded(None, None, None);
+        }
+        let healthy = ClusterTopology::mi300x(n);
+        let keep = cfg.degrade.drain.then_some(self.keep.as_slice());
+        let actual = self.plan.derate_cluster(&healthy, keep);
+        if actual.num_nodes() <= 1 {
+            // Drained down to one node: same flat single-node path.
+            return CollectiveComm::degraded(None, None, None);
+        }
+        let link = self.plan.link_health(keep);
+        let belief = (!cfg.degrade.reselect).then_some(healthy);
+        CollectiveComm::degraded(Some(actual), belief, link)
+    }
 }
 
 /// Virtual-time serving engine.
@@ -62,6 +155,9 @@ pub struct VirtualEngine {
     /// Cluster-aware collective sizing (free on a single node; routed
     /// through `cluster::select_cluster` when `cfg.num_nodes > 1`).
     comm: CollectiveComm,
+    /// Fault plan + drain state; `None` on healthy runs (the default) —
+    /// no fault hook then touches the serving path.
+    faults: Option<FaultContext>,
     /// Queue-depth timeline decimation state (see `record_queue_depth`).
     queue_tick: u64,
     queue_stride: u64,
@@ -83,6 +179,15 @@ impl VirtualEngine {
             cfg.seed,
             0,
         );
+        let faults = FaultContext::build(&cfg);
+        let comm = match &faults {
+            Some(ctx) => ctx.comm(&cfg),
+            None => CollectiveComm::new(&cfg),
+        };
+        let mut metrics = ServeMetrics::default();
+        if let Some(ctx) = &faults {
+            metrics.drained_nodes = (ctx.plan.num_nodes() - ctx.active()) as u64;
+        }
         VirtualEngine {
             sched,
             fetch_sim: Sim::new(SimConfig::mi300x()),
@@ -93,9 +198,10 @@ impl VirtualEngine {
             arrivals: std::collections::VecDeque::new(),
             pending: Vec::new(),
             running: Vec::new(),
-            metrics: ServeMetrics::default(),
+            metrics,
             fetch_cache: std::collections::HashMap::new(),
-            comm: CollectiveComm::new(&cfg),
+            comm,
+            faults,
             queue_tick: 0,
             queue_stride: 1,
             cfg,
@@ -153,18 +259,93 @@ impl VirtualEngine {
         }
     }
 
-    /// Move every arrival whose time has come into the scheduler.
+    /// Move every arrival whose time has come into the scheduler. Under
+    /// fault injection with the `shed` lever on, best-effort arrivals are
+    /// refused while queued SLO'd requests are already burning their TTFT
+    /// budget — the degraded fleet's capacity goes to the paying class.
     fn ingest_arrivals(&mut self) {
         while let Some(front) = self.arrivals.front() {
             if front.req.arrival_ns > self.now {
                 break;
             }
             let slot = self.arrivals.pop_front().unwrap();
+            if self.faults.is_some()
+                && self.cfg.degrade.shed
+                && self.class_slo(slot.req.class).is_none()
+                && self.slo_at_risk()
+            {
+                self.metrics.shed += 1;
+                continue;
+            }
             self.metrics.submitted += 1;
             if slot.warm {
                 self.sched.warm_cpu_cache(&slot.req);
             }
             self.sched.submit(slot.req);
+        }
+    }
+
+    /// The SLO of a request's tenant class (`None` = best-effort, and
+    /// always `None` for class-less direct submissions).
+    fn class_slo(&self, class: u8) -> Option<SloTarget> {
+        self.metrics.per_class.get(class as usize).and_then(|c| c.slo)
+    }
+
+    /// Is any queued SLO'd request past [`SLO_RISK_FRAC`] of its TTFT
+    /// budget? Scans at most [`SLO_RISK_SCAN`] waiting entries — under
+    /// sustained overload the at-risk request is near the queue head.
+    fn slo_at_risk(&self) -> bool {
+        self.sched.waiting.iter().take(SLO_RISK_SCAN).any(|r| {
+            self.class_slo(r.class).is_some_and(|slo| {
+                let budget = (slo.ttft_ms * 1e6 * SLO_RISK_FRAC) as u64;
+                self.now.saturating_sub(r.arrival_ns) > budget
+            })
+        })
+    }
+
+    /// Evict one running best-effort request when the head of the queue
+    /// is an SLO'd request stuck behind a full batch (at most one
+    /// eviction per admit round). The victim's GPU blocks are released
+    /// and it is resubmitted from scratch — its generated tokens are lost
+    /// work, but its first-token instant (already streamed) is kept so
+    /// TTFT samples are not double-counted.
+    fn preempt_for_slo(&mut self) {
+        let head_is_slo = self
+            .sched
+            .waiting
+            .front()
+            .is_some_and(|r| self.class_slo(r.class).is_some());
+        if !head_is_slo || self.running.len() + self.pending.len() < self.cfg.max_batch {
+            return;
+        }
+        let Some(idx) = self
+            .running
+            .iter()
+            .rposition(|r| self.class_slo(r.class).is_none())
+        else {
+            return;
+        };
+        let victim = self.running.swap_remove(idx);
+        self.sched.finish(victim.id);
+        self.metrics.preemptions += 1;
+        let mut fresh = Request::new(
+            victim.id,
+            victim.prompt_tokens,
+            victim.max_new_tokens,
+            victim.arrival_ns,
+        )
+        .with_class(victim.class)
+        .with_cache_key(victim.cache_key);
+        fresh.first_token_ns = victim.first_token_ns;
+        self.sched.submit(fresh);
+    }
+
+    /// Apply the fault plan's lockstep compute multiplier (identity on
+    /// healthy runs — the branch never perturbs them).
+    fn scale_compute(&self, t_ns: u64) -> u64 {
+        match &self.faults {
+            Some(ctx) if ctx.compute_scale > 1.0 => (t_ns as f64 * ctx.compute_scale) as u64,
+            _ => t_ns,
         }
     }
 
@@ -265,6 +446,9 @@ impl VirtualEngine {
         }
         self.metrics.wall_ns = self.now;
         self.metrics.host_busy_ns = self.host_free.min(self.now);
+        let fs = self.comm.fault_stats();
+        self.metrics.retries += fs.retries;
+        self.metrics.timeouts += fs.timeouts;
         // Cache counters are process-wide (other threads may bump them
         // concurrently): the deltas are display-only and saturating.
         let plan1 = crate::collectives::cache::stats();
@@ -279,6 +463,26 @@ impl VirtualEngine {
         );
         if emitting {
             let wall = self.metrics.wall_ns;
+            // Fault windows (faulted runs only): one control span per
+            // degraded node on its host track, so the trace shows *when*
+            // and *where* the fleet was sick next to the serving spans.
+            if let Some(ctx) = &self.faults {
+                record::with(|r| {
+                    for (k, h) in ctx.plan.nodes.iter().enumerate() {
+                        if h.is_healthy() {
+                            continue;
+                        }
+                        let (s, e) = h.window_ns.unwrap_or((0, wall));
+                        r.span(
+                            format!("fault window n{k}"),
+                            SpanKind::Control,
+                            Track::NodeHost { node: k as u8 },
+                            s,
+                            e.min(wall).max(s),
+                        );
+                    }
+                });
+            }
             record::with(|r| r.measure("serving", 0, wall));
         }
         if matches!(episode, Some((_, true))) {
@@ -291,6 +495,9 @@ impl VirtualEngine {
     /// pcie / gpu resources per the fetch implementation.
     fn admit(&mut self) {
         let emitting = record::active();
+        if self.faults.is_some() && self.cfg.degrade.preempt {
+            self.preempt_for_slo();
+        }
         let in_flight = self.running.len() + self.pending.len();
         let actions = self.sched.admit_round(in_flight);
         for act in actions {
@@ -380,8 +587,9 @@ impl VirtualEngine {
                 }
                 AdmitAction::Prefill { mut req } => {
                     self.metrics.cache_misses += 1;
-                    let t =
-                        (self.cfg.perf.prefill_s(self.cfg.model, req.prompt_tokens) * 1e9) as u64;
+                    let t = self.scale_compute(
+                        (self.cfg.perf.prefill_s(self.cfg.model, req.prompt_tokens) * 1e9) as u64,
+                    );
                     // Cross-node TP all-reduces of the prompt activations
                     // (0 on a single node — folded into the perf model);
                     // only the part no GEMM window hides lands on the
@@ -450,7 +658,8 @@ impl VirtualEngine {
         debug_assert!(batch > 0);
         let ctx =
             self.running.iter().map(|r| r.context()).sum::<u64>() / batch;
-        let t = (self.cfg.perf.decode_step_s(self.cfg.model, batch, ctx) * 1e9) as u64;
+        let t = self
+            .scale_compute((self.cfg.perf.decode_step_s(self.cfg.model, batch, ctx) * 1e9) as u64);
         // Cross-node TP all-reduces of the step's activations, sized
         // through the cluster selector (0 on a single node); the step pays
         // only the exposed remainder after per-layer overlap.
@@ -489,9 +698,12 @@ impl VirtualEngine {
         let now = self.now;
         let mut finished = Vec::new();
         for r in &mut self.running {
+            // Preempted re-runs keep their original first-token instant;
+            // gate the TTFT sample on it, not on the token count.
+            let had_first = r.first_token_ns.is_some();
             r.on_token(now);
             self.metrics.tokens_out += 1;
-            if r.generated == 1 {
+            if !had_first {
                 let ttft = r.ttft_ns().unwrap() as f64;
                 self.metrics.ttft_ns.push(ttft);
                 if let Some(cs) = self.metrics.per_class.get_mut(r.class as usize) {
@@ -780,6 +992,147 @@ mod tests {
         let expect =
             m.per_class[1].finished as f64 / m.finished as f64;
         assert!((m.slo_attainment() - expect).abs() < 1e-12);
+    }
+
+    /// A fault spec that derates nothing builds no fault context: the run
+    /// replays the no-faults run bit for bit (the zero-perturbation
+    /// contract of the whole subsystem).
+    #[test]
+    fn healthy_fault_spec_is_bit_identical_to_no_faults() {
+        use crate::cluster::FaultSpec;
+        let base = run_small(FetchImpl::DmaB2b, 16, 1.0);
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.hit_rate = 1.0;
+        cfg.gpu_blocks = 1 << 18;
+        cfg.faults = Some(FaultSpec::default());
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..16 {
+            eng.submit(Request::new(i, 1024, 8, 0), true);
+        }
+        let m = eng.run_to_completion().clone();
+        assert_eq!(m.wall_ns, base.wall_ns);
+        assert_eq!(m.ttft_ns, base.ttft_ns);
+        assert_eq!(m.tpot_ns, base.tpot_ns);
+        assert_eq!((m.retries, m.timeouts), (0, 0));
+        assert_eq!((m.shed, m.preemptions, m.drained_nodes), (0, 0, 0));
+    }
+
+    /// A compute straggler gates every lockstep step: the identical
+    /// workload takes strictly longer than on the healthy fleet.
+    #[test]
+    fn straggler_slows_every_step() {
+        use crate::cluster::FaultSpec;
+        let base = run_small(FetchImpl::DmaB2b, 8, 1.0);
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.hit_rate = 1.0;
+        cfg.gpu_blocks = 1 << 18;
+        cfg.faults = Some(FaultSpec::parse("straggler=1:1.4").unwrap());
+        let mut eng = VirtualEngine::new(cfg);
+        for i in 0..8 {
+            eng.submit(Request::new(i, 1024, 8, 0), true);
+        }
+        let m = eng.run_to_completion().clone();
+        assert!(
+            m.wall_ns > base.wall_ns,
+            "straggled {} vs healthy {}",
+            m.wall_ns,
+            base.wall_ns
+        );
+        assert_eq!(m.finished, 8);
+    }
+
+    /// The drain lever: a badly derated NIC node is evicted from the
+    /// serving world (here 2 → 1 nodes, so collectives go flat) while the
+    /// blind policy keeps the full world and pays derated collectives.
+    #[test]
+    fn drain_shrinks_the_world_and_blind_does_not() {
+        use crate::cluster::FaultSpec;
+        use crate::coordinator::config::DegradePolicy;
+        let run = |policy: DegradePolicy| {
+            let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b).with_nodes(2);
+            cfg.gpu_blocks = 1 << 18;
+            cfg.faults = Some(FaultSpec::parse("nic=1:0.1").unwrap());
+            cfg.degrade = policy;
+            let mut eng = VirtualEngine::new(cfg);
+            for i in 0..8 {
+                eng.submit(Request::new(i, 1024, 8, 0), true);
+            }
+            eng.run_to_completion().clone()
+        };
+        let aware = run(DegradePolicy::aware());
+        let blind = run(DegradePolicy::blind());
+        assert_eq!(aware.drained_nodes, 1);
+        assert_eq!(aware.comm_ns, 0, "a drained-to-one world has no NIC leg");
+        assert_eq!(blind.drained_nodes, 0);
+        assert!(blind.comm_ns > 0, "blind still pays the derated collectives");
+        assert_eq!(aware.finished, 8);
+        assert_eq!(blind.finished, 8);
+    }
+
+    /// The preempt lever: a queued SLO'd request stuck behind a full
+    /// batch evicts a running best-effort request and finishes; the
+    /// victim is re-run and finishes too.
+    #[test]
+    fn preempts_best_effort_for_slo_head() {
+        use crate::cluster::FaultSpec;
+        use crate::coordinator::workload::{LenDist, TenantClass};
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        cfg.max_batch = 1;
+        cfg.faults = Some(FaultSpec::parse("straggler=1:1.2").unwrap());
+        let mut eng = VirtualEngine::new(cfg);
+        let mut chat = TenantClass::simple("chat", 0.5, LenDist::Fixed(64), LenDist::Fixed(8));
+        chat.slo = Some(SloTarget {
+            ttft_ms: 50.0,
+            tpot_ms: 50.0,
+        });
+        let bulk = TenantClass::simple("bulk", 0.5, LenDist::Fixed(64), LenDist::Fixed(256));
+        eng.configure_classes(&[chat, bulk]);
+        eng.enqueue(Request::new(0, 64, 256, 0).with_class(1), true);
+        eng.enqueue(Request::new(1, 64, 8, 1_000_000).with_class(0), true);
+        let m = eng.run_to_completion().clone();
+        assert!(m.preemptions >= 1, "the best-effort run must be evicted");
+        assert_eq!(m.finished, 2, "the victim is re-run to completion");
+        assert_eq!(m.ttft_ns.len(), 2, "one TTFT sample per request, not per run");
+        assert_eq!(m.shed, 0);
+    }
+
+    /// The shed lever: once a queued SLO'd request has burned half its
+    /// TTFT budget, an incoming best-effort arrival is refused.
+    #[test]
+    fn sheds_best_effort_under_slo_risk() {
+        use crate::cluster::FaultSpec;
+        use crate::coordinator::config::DegradePolicy;
+        use crate::coordinator::workload::{LenDist, TenantClass};
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        cfg.max_batch = 1;
+        cfg.faults = Some(FaultSpec::parse("straggler=1:1.2").unwrap());
+        cfg.degrade = DegradePolicy {
+            reselect: false,
+            drain: false,
+            shed: true,
+            preempt: false,
+        };
+        let mut eng = VirtualEngine::new(cfg);
+        let mut chat = TenantClass::simple("chat", 0.5, LenDist::Fixed(64), LenDist::Fixed(8));
+        chat.slo = Some(SloTarget {
+            ttft_ms: 2.0,
+            tpot_ms: 50.0,
+        });
+        let bulk = TenantClass::simple("bulk", 0.5, LenDist::Fixed(64), LenDist::Fixed(512));
+        eng.configure_classes(&[chat, bulk]);
+        // Best-effort occupies the single batch slot; the SLO'd request
+        // queues behind it; a later best-effort arrival lands after the
+        // SLO'd wait exceeds half the 2 ms TTFT budget and is shed.
+        eng.enqueue(Request::new(0, 64, 512, 0).with_class(1), true);
+        eng.enqueue(Request::new(1, 64, 8, 100_000).with_class(0), true);
+        eng.enqueue(Request::new(2, 64, 512, 3_000_000).with_class(1), true);
+        let m = eng.run_to_completion().clone();
+        assert_eq!(m.shed, 1, "the late best-effort arrival must be refused");
+        assert_eq!(m.submitted, 2);
+        assert_eq!(m.finished, 2);
+        assert_eq!(m.preemptions, 0);
     }
 
     #[test]

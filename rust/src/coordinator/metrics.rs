@@ -157,6 +157,18 @@ pub struct ServeMetrics {
     /// Peak of the queue-depth signal over the whole run (exact — not
     /// subject to timeline decimation).
     pub queue_peak: u64,
+    /// Collective retry attempts priced by the fault model
+    /// (`crate::cluster::FaultStats`); 0 on healthy runs.
+    pub retries: u64,
+    /// Collective messages that exhausted their retry budget (still
+    /// delivered, after the full backoff ladder).
+    pub timeouts: u64,
+    /// Best-effort arrivals refused by SLO-aware shedding.
+    pub shed: u64,
+    /// Running best-effort requests evicted for a queued SLO'd request.
+    pub preemptions: u64,
+    /// Nodes drained from the serving world by the degradation policy.
+    pub drained_nodes: u64,
 }
 
 impl ServeMetrics {
@@ -274,6 +286,12 @@ impl ServeMetrics {
         if ph + pm + rh + rm > 0 {
             s.push_str(&format!(
                 ", plan cache {ph}h/{pm}m, rounds cache {rh}h/{rm}m"
+            ));
+        }
+        if self.retries + self.timeouts + self.shed + self.preemptions + self.drained_nodes > 0 {
+            s.push_str(&format!(
+                ", faults: {} retries {} timeouts, shed {}, preempted {}, drained {}",
+                self.retries, self.timeouts, self.shed, self.preemptions, self.drained_nodes
             ));
         }
         s
@@ -414,5 +432,24 @@ mod tests {
         assert!(s.contains("tpot"));
         assert!(s.contains("plan cache 3h/1m"));
         assert!(s.contains("rounds cache 2h/2m"));
+        // Fault counters stay out of healthy summaries entirely.
+        assert!(!s.contains("faults:"));
+    }
+
+    #[test]
+    fn summary_reports_fault_counters_only_when_faulted() {
+        let m = ServeMetrics {
+            retries: 7,
+            timeouts: 1,
+            shed: 3,
+            preemptions: 2,
+            drained_nodes: 1,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("faults: 7 retries 1 timeouts"));
+        assert!(s.contains("shed 3"));
+        assert!(s.contains("preempted 2"));
+        assert!(s.contains("drained 1"));
     }
 }

@@ -23,6 +23,14 @@
 //! event-driven on the engine's virtual clock, with per-class percentile
 //! breakdowns, SLO attainment, goodput and a queue-depth timeline in
 //! [`metrics::ServeMetrics`].
+//!
+//! Fault injection ([`ServeConfig::faults`] over
+//! [`crate::cluster::faults`]) degrades the fleet the engine runs on;
+//! [`config::DegradePolicy`] picks the reaction — re-select collectives
+//! against the derated topology, drain sick nodes, shed best-effort
+//! arrivals under SLO pressure, preempt running best-effort work — or
+//! none of it (the degradation-blind baseline the figures compare
+//! against). Healthy configs never materialize any of this.
 
 pub mod batcher;
 pub mod comm;
@@ -36,7 +44,7 @@ pub mod server;
 pub mod workload;
 
 pub use comm::{CollectiveComm, CommCost};
-pub use config::ServeConfig;
+pub use config::{DegradePolicy, ServeConfig};
 pub use engine::VirtualEngine;
 pub use metrics::{ClassStats, ServeMetrics, SloTarget};
 pub use request::{Request, RequestState};

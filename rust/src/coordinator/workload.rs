@@ -226,22 +226,45 @@ pub fn default_tenants() -> Vec<TenantClass> {
 /// Parse the CLI `--tenants` spec: `default`, or a comma-separated list
 /// of `name:weight:prompt:output[:ttft_ms[:tpot_ms]]` entries (fixed
 /// lengths, single-turn; an SLO is attached when `ttft_ms` is present,
-/// with `tpot_ms` defaulting to 50). Returns `None` on malformed input.
-pub fn parse_tenants(spec: &str) -> Option<Vec<TenantClass>> {
+/// with `tpot_ms` defaulting to 50). Malformed input returns a
+/// descriptive error naming the offending entry and field.
+pub fn parse_tenants(spec: &str) -> Result<Vec<TenantClass>, String> {
     if spec == "default" {
-        return Some(default_tenants());
+        return Ok(default_tenants());
+    }
+    if spec.is_empty() {
+        return Err("empty --tenants spec (try `default`)".to_string());
     }
     let mut classes = Vec::new();
     for entry in spec.split(',') {
         let f: Vec<&str> = entry.split(':').collect();
         if !(4..=6).contains(&f.len()) {
-            return None;
+            return Err(format!(
+                "tenant entry `{entry}`: want name:weight:prompt:output[:ttft_ms[:tpot_ms]], \
+                 got {} field(s)",
+                f.len()
+            ));
         }
-        let weight: f64 = f[1].parse().ok()?;
-        let prompt: u64 = f[2].parse().ok()?;
-        let output: u64 = f[3].parse().ok()?;
-        if weight <= 0.0 || prompt == 0 || output == 0 {
-            return None;
+        let weight: f64 = f[1]
+            .parse()
+            .map_err(|_| format!("tenant `{}`: weight `{}` is not a number", f[0], f[1]))?;
+        let prompt: u64 = f[2].parse().map_err(|_| {
+            format!("tenant `{}`: prompt tokens `{}` is not an integer", f[0], f[2])
+        })?;
+        let output: u64 = f[3].parse().map_err(|_| {
+            format!("tenant `{}`: output tokens `{}` is not an integer", f[0], f[3])
+        })?;
+        if weight <= 0.0 {
+            return Err(format!(
+                "tenant `{}`: weight must be > 0, got {weight}",
+                f[0]
+            ));
+        }
+        if prompt == 0 || output == 0 {
+            return Err(format!(
+                "tenant `{}`: prompt and output tokens must be >= 1",
+                f[0]
+            ));
         }
         let mut class = TenantClass::simple(
             f[0],
@@ -250,16 +273,21 @@ pub fn parse_tenants(spec: &str) -> Option<Vec<TenantClass>> {
             LenDist::Fixed(output),
         );
         if f.len() >= 5 {
-            let ttft_ms: f64 = f[4].parse().ok()?;
-            let tpot_ms: f64 = if f.len() == 6 { f[5].parse().ok()? } else { 50.0 };
+            let ttft_ms: f64 = f[4].parse().map_err(|_| {
+                format!("tenant `{}`: ttft_ms `{}` is not a number", f[0], f[4])
+            })?;
+            let tpot_ms: f64 = if f.len() == 6 {
+                f[5].parse().map_err(|_| {
+                    format!("tenant `{}`: tpot_ms `{}` is not a number", f[0], f[5])
+                })?
+            } else {
+                50.0
+            };
             class.slo = Some(SloTarget { ttft_ms, tpot_ms });
         }
         classes.push(class);
     }
-    if classes.is_empty() {
-        return None;
-    }
-    Some(classes)
+    Ok(classes)
 }
 
 /// One generated arrival: a conversation turn of one session, timestamped
@@ -410,13 +438,21 @@ pub fn drive(cfg: &ServeConfig, spec: &WorkloadSpec) -> ServeMetrics {
 /// adding per-request draws never perturbs the timeline.
 const ARRIVAL_STREAM: u64 = 0xA5A5_5A5A_0F0F_F0F0;
 
-/// Exponential variate with the given mean (returns 0.0 mean as 0.0).
+/// Cap on a single inter-arrival gap (~1 virtual day). A zero/NaN rate
+/// sends the exponential mean to infinity; capping degrades that to
+/// "very sparse" instead of hanging generation or overflowing the clock.
+/// Real configs never get near it: at any practical rate the probability
+/// of a 1e14 ns gap is ~e^{-10^5}, so healthy streams are bit-identical.
+const GAP_CAP_NS: f64 = 1e14;
+
+/// Exponential variate with the given mean (returns 0.0 mean as 0.0;
+/// NaN means are treated as 0.0 too — `!(x > 0)` catches both).
 fn exp_ns(rng: &mut Rng, mean_ns: f64) -> f64 {
-    if mean_ns <= 0.0 {
+    if !(mean_ns > 0.0) {
         return 0.0;
     }
     // f64() ∈ [0,1) ⇒ 1-u ∈ (0,1] ⇒ ln finite and ≤ 0.
-    -mean_ns * (1.0 - rng.f64()).ln()
+    (-mean_ns * (1.0 - rng.f64()).ln()).min(GAP_CAP_NS)
 }
 
 /// Weighted class pick.
@@ -468,7 +504,10 @@ impl<'a> ArrivalGen<'a> {
                 off_ms,
             } => loop {
                 let gap = exp_ns(&mut self.rng, 1e9 / rate_on_rps);
-                if self.t_ns + gap <= self.on_until_ns {
+                // The capped-gap escape also ends the dwell loop for
+                // zero/degenerate on-rates (gap can never reach the cap
+                // at any real rate — see `GAP_CAP_NS`).
+                if self.t_ns + gap <= self.on_until_ns || gap >= GAP_CAP_NS {
                     self.t_ns += gap;
                     return self.t_ns as u64;
                 }
@@ -580,9 +619,59 @@ mod tests {
         );
         assert_eq!(t[0].prompt, LenDist::Fixed(512));
         assert!(t[1].slo.is_none());
-        assert!(parse_tenants("").is_none());
-        assert!(parse_tenants("a:b:c:d").is_none());
-        assert!(parse_tenants("a:1:0:8").is_none());
+    }
+
+    /// Satellite fix: malformed `--tenants` specs explain what's wrong
+    /// instead of a bare `None`.
+    #[test]
+    fn parse_tenants_errors_are_descriptive() {
+        let e = parse_tenants("").unwrap_err();
+        assert!(e.contains("empty"), "{e}");
+        let e = parse_tenants("a:1:64").unwrap_err();
+        assert!(e.contains("field") && e.contains("a:1:64"), "{e}");
+        let e = parse_tenants("a:b:c:d").unwrap_err();
+        assert!(e.contains("weight") && e.contains("`b`"), "{e}");
+        let e = parse_tenants("a:1:x:8").unwrap_err();
+        assert!(e.contains("prompt") && e.contains("`x`"), "{e}");
+        let e = parse_tenants("a:1:0:8").unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = parse_tenants("a:-2:64:8").unwrap_err();
+        assert!(e.contains("> 0"), "{e}");
+        let e = parse_tenants("a:1:64:8:fast").unwrap_err();
+        assert!(e.contains("ttft_ms") && e.contains("`fast`"), "{e}");
+        let e = parse_tenants("a:1:64:8:250:soon").unwrap_err();
+        assert!(e.contains("tpot_ms") && e.contains("`soon`"), "{e}");
+    }
+
+    /// Satellite hardening: zero-rate processes degrade to very sparse
+    /// streams (gaps capped at [`GAP_CAP_NS`]) — generation terminates,
+    /// stays sorted, and never panics. The bursty dwell loop is the
+    /// interesting one: with a zero on-rate no candidate ever lands
+    /// inside a dwell.
+    #[test]
+    fn zero_rate_workloads_generate_without_hanging() {
+        for process in [
+            ArrivalProcess::Poisson { rate_rps: 0.0 },
+            ArrivalProcess::Bursty {
+                rate_on_rps: 0.0,
+                on_ms: 1.0,
+                off_ms: 1.0,
+            },
+            ArrivalProcess::Trace {
+                peak_rps: 0.0,
+                day_s: 1.0,
+            },
+        ] {
+            let spec = WorkloadSpec {
+                process,
+                classes: default_tenants(),
+                requests: 4,
+                seed: 1,
+            };
+            let ev = spec.generate();
+            assert_eq!(ev.len(), 4);
+            assert!(ev.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        }
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Degraded-vs-healthy serving: canned fault scenarios replayed under
+//! the degradation-aware policy and the degradation-blind baseline.
+//!
+//! Every scenario is a [`FaultSpec`] preset materialized by the engine
+//! from the serving seed ([`crate::cluster::FaultPlan`]), so one row is
+//! one deterministic run. The figure's claim mirrors the subsystem's
+//! acceptance gate: under a degraded fleet the aware policy (re-select,
+//! drain, shed, preempt) keeps strictly more of the SLO'd chat class
+//! inside its latency budget than the blind baseline, and a healthy
+//! (empty) fault plan replays the no-faults run bit for bit.
+
+use crate::cluster::FaultSpec;
+use crate::coordinator::workload::{default_tenants, drive, ArrivalProcess, WorkloadSpec};
+use crate::coordinator::{DegradePolicy, ServeConfig, ServeMetrics};
+use crate::models::ModelConfig;
+
+use super::serving_load;
+
+/// The canned scenarios the figure (and the chaos smoke) replays: the
+/// healthy baseline plus three degraded fleets.
+pub const SCENARIOS: [&str; 4] = ["healthy", "nic-brownout", "flaky-links", "straggler"];
+
+/// One (scenario, policy) serving run.
+#[derive(Debug, Clone)]
+pub struct FaultPoint {
+    pub scenario: String,
+    /// `-` (healthy), `blind`, or `aware`.
+    pub policy: String,
+    pub rate_rps: f64,
+    pub finished: u64,
+    /// SLO attainment of the chat (SLO'd) class.
+    pub chat_attainment: f64,
+    /// Overall SLO attainment.
+    pub attainment: f64,
+    pub goodput_rps: f64,
+    pub ttft_p99_ms: f64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub shed: u64,
+    pub preemptions: u64,
+    pub drained: u64,
+    pub wall_s: f64,
+}
+
+/// Attainment of the first SLO-carrying class (the chat tenant in the
+/// default mix); NaN when no such class finished anything.
+pub fn chat_attainment(m: &ServeMetrics) -> f64 {
+    m.per_class
+        .iter()
+        .find(|c| c.slo.is_some())
+        .map(|c| c.attainment())
+        .unwrap_or(f64::NAN)
+}
+
+fn run(cfg: &ServeConfig, requests: u64, rate_rps: f64, seed: u64) -> ServeMetrics {
+    let spec = WorkloadSpec {
+        process: ArrivalProcess::Poisson { rate_rps },
+        classes: default_tenants(),
+        requests,
+        seed,
+    };
+    drive(cfg, &spec)
+}
+
+fn point(scenario: &str, policy: &str, rate_rps: f64, m: &ServeMetrics) -> FaultPoint {
+    FaultPoint {
+        scenario: scenario.to_string(),
+        policy: policy.to_string(),
+        rate_rps,
+        finished: m.finished,
+        chat_attainment: chat_attainment(m),
+        attainment: m.slo_attainment(),
+        goodput_rps: m.goodput_rps(),
+        ttft_p99_ms: m.ttft_p99_ms(),
+        retries: m.retries,
+        timeouts: m.timeouts,
+        shed: m.shed,
+        preemptions: m.preemptions,
+        drained: m.drained_nodes,
+        wall_s: m.wall_ns as f64 / 1e9,
+    }
+}
+
+/// Run every scenario: one healthy row, then a blind and an aware row
+/// per degraded scenario, all at the same offered rate (a fixed fraction
+/// of the healthy fleet's closed-loop capacity, so degradation shows up
+/// as lost attainment rather than an empty queue).
+pub fn fig_faults(
+    model: &'static ModelConfig,
+    nodes: usize,
+    requests: u64,
+    seed: u64,
+) -> Vec<FaultPoint> {
+    let cfg = serving_load::serve_config(model, nodes, true);
+    let classes = default_tenants();
+    let cap = serving_load::estimate_capacity_rps(&cfg, &classes, requests.clamp(32, 128), seed);
+    let rate = 0.6 * cap;
+    let mut rows = Vec::new();
+    for name in SCENARIOS {
+        let spec = FaultSpec::preset(name).expect("known scenario");
+        if spec.is_healthy() {
+            rows.push(point("healthy", "-", rate, &run(&cfg, requests, rate, seed)));
+            continue;
+        }
+        let policies = [(DegradePolicy::blind(), "blind"), (DegradePolicy::aware(), "aware")];
+        for (policy, label) in policies {
+            let c = cfg.clone().with_faults(spec.clone()).with_degrade(policy);
+            rows.push(point(name, label, rate, &run(&c, requests, rate, seed)));
+        }
+    }
+    rows
+}
+
+/// The zero-perturbation contract, run live: a config carrying an empty
+/// (all-healthy) fault spec must replay the fault-free run bit for bit.
+pub fn healthy_replay_ok(
+    model: &'static ModelConfig,
+    nodes: usize,
+    requests: u64,
+    seed: u64,
+) -> bool {
+    let cfg = serving_load::serve_config(model, nodes, true);
+    let rate = 400.0;
+    let a = run(&cfg, requests, rate, seed);
+    let faulted = cfg.with_faults(FaultSpec::default());
+    let b = run(&faulted, requests, rate, seed);
+    a.wall_ns == b.wall_ns
+        && a.ttft_ns == b.ttft_ns
+        && a.tpot_ns == b.tpot_ns
+        && b.retries == 0
+        && b.shed == 0
+        && b.drained_nodes == 0
+}
+
+/// Render the degraded-vs-healthy attainment table.
+pub fn render(points: &[FaultPoint]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "scenario",
+        "policy",
+        "rate_rps",
+        "reqs",
+        "chat_slo%",
+        "slo%",
+        "goodput_rps",
+        "ttft_p99_ms",
+        "retries",
+        "shed",
+        "preempted",
+        "drained",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.scenario.clone(),
+            p.policy.clone(),
+            format!("{:.0}", p.rate_rps),
+            p.finished.to_string(),
+            format!("{:.1}", p.chat_attainment * 100.0),
+            format!("{:.1}", p.attainment * 100.0),
+            format!("{:.0}", p.goodput_rps),
+            format!("{:.1}", p.ttft_p99_ms),
+            p.retries.to_string(),
+            p.shed.to_string(),
+            p.preemptions.to_string(),
+            p.drained.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV of every (scenario, policy) run.
+pub fn to_csv(points: &[FaultPoint]) -> crate::util::csv::Csv {
+    let mut c = crate::util::csv::Csv::new(vec![
+        "scenario",
+        "policy",
+        "rate_rps",
+        "finished",
+        "chat_attainment",
+        "attainment",
+        "goodput_rps",
+        "ttft_p99_ms",
+        "retries",
+        "timeouts",
+        "shed",
+        "preemptions",
+        "drained",
+        "wall_s",
+    ]);
+    for p in points {
+        c.row(vec![
+            p.scenario.clone(),
+            p.policy.clone(),
+            format!("{:.2}", p.rate_rps),
+            p.finished.to_string(),
+            format!("{:.4}", p.chat_attainment),
+            format!("{:.4}", p.attainment),
+            format!("{:.2}", p.goodput_rps),
+            format!("{:.3}", p.ttft_p99_ms),
+            p.retries.to_string(),
+            p.timeouts.to_string(),
+            p.shed.to_string(),
+            p.preemptions.to_string(),
+            p.drained.to_string(),
+            format!("{:.3}", p.wall_s),
+        ]);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::QWEN25_0_5B;
+
+    #[test]
+    fn fig_rows_cover_every_scenario_and_replay_holds() {
+        let rows = fig_faults(&QWEN25_0_5B, 2, 48, 7);
+        // One healthy row + (blind, aware) per degraded scenario.
+        assert_eq!(rows.len(), 1 + 2 * (SCENARIOS.len() - 1));
+        assert!(rows.iter().all(|p| p.finished > 0));
+        let healthy = &rows[0];
+        assert_eq!(healthy.scenario, "healthy");
+        assert_eq!((healthy.retries, healthy.shed, healthy.drained), (0, 0, 0));
+        let table = render(&rows);
+        assert!(table.contains("nic-brownout") && table.contains("aware"));
+        let csv = to_csv(&rows).render();
+        assert_eq!(csv.lines().count(), rows.len() + 1);
+        assert!(healthy_replay_ok(&QWEN25_0_5B, 2, 32, 7));
+    }
+}

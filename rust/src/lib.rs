@@ -43,7 +43,16 @@
 //!   conversation replays hitting the CPU-tier prefix cache — ingested
 //!   event-driven on the engine's virtual clock, reported as per-class
 //!   percentiles / SLO attainment / goodput (`dma-latte serve`,
-//!   `benches/serving_load.rs`, `BENCH_PR7.json`).
+//!   `benches/serving_load.rs`, `BENCH_PR7.json`). Fault injection and
+//!   graceful degradation ride the same stack: [`cluster::faults`] turns a
+//!   `FaultSpec` into a seeded per-node health plan (NIC/xGMI derates,
+//!   stuck engines, compute stragglers, transient link flaps priced by a
+//!   retry-with-backoff watchdog in [`cluster::hier`]), and the serving
+//!   engine reacts per [`coordinator::config::DegradePolicy`] — re-pick
+//!   schedules against the derated topology, drain sick nodes, shed
+//!   best-effort arrivals, preempt for SLO'd work (`dma-latte faults`,
+//!   `benches/faults.rs`, `BENCH_PR8.json`). An empty plan is
+//!   bit-identical to the healthy path (`tests/prop_faults.rs`).
 //! - [`obs`] — observability: cross-layer tracing threading one span
 //!   hierarchy from serving requests through engine steps, cluster
 //!   collectives and per-phase legs down to the simulator's DMA phases;

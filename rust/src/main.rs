@@ -15,9 +15,15 @@
 //! dma-latte serve     [--workload poisson|bursty|trace] [--rate R|R1,R2,..]
 //!                     [--requests 512] [--nodes 1] [--seed 7]
 //!                     [--tenants default|name:w:prompt:output[:ttft[:tpot]],..]
+//!                     [--faults SPEC] [--degrade aware|blind]
 //!                     [--no-overlap] [--out results/]
 //!                     # trace-driven serving: sweep offered load, report
-//!                     # per-class TTFT/TPOT percentiles + SLO attainment
+//!                     # per-class TTFT/TPOT percentiles + SLO attainment;
+//!                     # --faults degrades the fleet (preset name or
+//!                     # nic=N:F,flap=P,engines=K,xgmi=F,straggler=N:F,window=S)
+//! dma-latte faults    [--nodes 2] [--requests 256] [--seed 7] [--out results/]
+//!                     # canned fault scenarios: degraded-vs-healthy SLO
+//!                     # attainment, aware vs blind policy, healthy-replay check
 //! dma-latte selftest                               # quick invariants
 //! dma-latte trace     [--kind allreduce] [--nodes 2] [--size 1M]
 //!                     [--schedule auto|sequential|pipelined|overlapped]
@@ -323,6 +329,8 @@ fn cmd_trace(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
+    use dma_latte::cluster::FaultSpec;
+    use dma_latte::coordinator::config::DegradePolicy;
     use dma_latte::coordinator::workload::{parse_tenants, ArrivalProcess};
     use dma_latte::figures::serving_load as sl;
 
@@ -336,17 +344,35 @@ fn cmd_serve(args: &Args) {
     let seed: u64 = args.get_num("seed", 7);
     let overlap = !args.has("no-overlap");
     let classes = match parse_tenants(&args.get("tenants", "default")) {
-        Some(c) => c,
-        None => {
-            eprintln!(
-                "bad --tenants (need `default` or \
-                 name:weight:prompt:output[:ttft_ms[:tpot_ms]],...)"
-            );
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bad --tenants: {e}");
             std::process::exit(2);
         }
     };
     let model = &zoo::QWEN25_0_5B;
-    let cfg = sl::serve_config(model, nodes, overlap);
+    let mut cfg = sl::serve_config(model, nodes, overlap);
+    if let Some(spec) = args.opt("faults") {
+        let fs = match FaultSpec::preset(spec) {
+            Some(p) => p,
+            None => match FaultSpec::parse(spec) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("bad --faults: {e}");
+                    std::process::exit(2);
+                }
+            },
+        };
+        cfg.faults = Some(fs);
+    }
+    match args.get("degrade", "aware").as_str() {
+        "aware" => {}
+        "blind" => cfg.degrade = DegradePolicy::blind(),
+        other => {
+            eprintln!("bad --degrade {other:?} (need aware|blind)");
+            std::process::exit(2);
+        }
+    }
 
     let parse_rate = |tok: &str| -> f64 {
         match tok.trim().parse::<f64>() {
@@ -389,6 +415,40 @@ fn cmd_serve(args: &Args) {
     println!("\ncsv: {path}");
 }
 
+fn cmd_faults(args: &Args) {
+    use dma_latte::figures::faults as ff;
+
+    let nodes: usize = args.get_num("nodes", 2);
+    if !(1..=dma_latte::cluster::hier::MAX_NODES).contains(&nodes) {
+        eprintln!(
+            "bad --nodes {nodes} (need 1..={})",
+            dma_latte::cluster::hier::MAX_NODES
+        );
+        std::process::exit(2);
+    }
+    let requests: u64 = args.get_num("requests", 256);
+    let seed: u64 = args.get_num("seed", 7);
+    let model = &zoo::QWEN25_0_5B;
+
+    println!(
+        "# fault scenarios — {} · {nodes} node(s) · {requests} reqs/run · seed {seed}",
+        model.name
+    );
+    let rows = ff::fig_faults(model, nodes, requests, seed);
+    print!("{}", ff::render(&rows));
+    if ff::healthy_replay_ok(model, nodes, requests.min(64), seed) {
+        println!("faults: healthy-replay OK");
+    } else {
+        println!("faults: healthy-replay FAIL");
+        std::process::exit(1);
+    }
+    let out = args.get("out", "results");
+    std::fs::create_dir_all(&out).expect("mkdir results");
+    let path = format!("{out}/faults.csv");
+    ff::to_csv(&rows).write(&path).expect("write faults.csv");
+    println!("csv: {path}");
+}
+
 fn cmd_selftest() {
     use dma_latte::collectives::{run_collective, select_variant, RunOptions};
     use dma_latte::sim::SimConfig;
@@ -424,6 +484,7 @@ fn main() {
         Some("ttft") => cmd_ttft(&args),
         Some("throughput") => cmd_throughput(&args),
         Some("serve") => cmd_serve(&args),
+        Some("faults") => cmd_faults(&args),
         Some("selftest") => cmd_selftest(),
         Some("trace") => cmd_trace(&args),
         other => {
@@ -431,7 +492,7 @@ fn main() {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!(
-                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|serve|trace|selftest> [--flags]"
+                "usage: dma-latte <figures|sweep|cluster|breakdown|power|ttft|throughput|serve|faults|trace|selftest> [--flags]"
             );
             std::process::exit(2);
         }

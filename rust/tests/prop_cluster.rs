@@ -8,7 +8,7 @@
 use dma_latte::cluster::allreduce::rs_result_base;
 use dma_latte::cluster::{
     run_hier_ar_full, run_hier_full, run_hier_rs_full, select_cluster, ClusterChoice, ClusterKind,
-    ClusterTopology, HierRunOptions, InterSchedule, NicModel,
+    ClusterTopology, HierRunOptions, InterSchedule, LinkHealth, NicModel,
 };
 use dma_latte::collectives::exec::build_plan;
 use dma_latte::collectives::plan::aa_out_base;
@@ -138,6 +138,74 @@ fn prop_hier_matches_flat_placement() {
             let in_place = v.strategy == Strategy::Swap;
             // Input region always; out-of-place AA also compares the
             // output region (the input keeps the untouched diagonal).
+            let mut regions: Vec<(u64, u64)> = vec![(0, size)];
+            if kind == CollectiveKind::AllToAll && !in_place {
+                regions.push((aa_out_base(size), size));
+            }
+            for r in 0..world as u32 {
+                let (node, local) = cluster.locate(r);
+                for &(base, len) in &regions {
+                    assert_eq!(
+                        sims[node].memory.peek(NodeId::Gpu(local), base, len),
+                        flat.peek(NodeId::Gpu(r as u8), base, len),
+                        "{label}: rank {r} region base {base}"
+                    );
+                }
+            }
+        },
+    );
+}
+
+/// Fault injection does not change what a collective computes: with every
+/// NIC link flapping (retry-with-backoff model, `cluster::faults`), the
+/// hierarchical placement still equals the flat reference byte for byte —
+/// flaps delay messages, they never drop or corrupt them.
+#[test]
+fn prop_flapped_hier_matches_flat_placement() {
+    prop_run(
+        "flapped-hier-flat-equivalence",
+        Config {
+            cases: 8,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(2, 4);
+            let g = rng.range(2, 4) as u8;
+            let world = (n * g as usize) as u8;
+            let kind = if rng.chance(0.5) {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let v = *rng.pick(&Variant::all_for(kind));
+            let inter = if rng.chance(0.5) {
+                InterSchedule::Sequential
+            } else {
+                InterSchedule::Pipelined
+            };
+            let size = 256 * rng.range(1, 4) as u64 * world as u64;
+            let cluster = ClusterTopology::homogeneous(
+                n,
+                Topology::custom(g, 16, 64.0, 64.0),
+                NicModel::default(),
+            );
+            let opts = HierRunOptions {
+                verify: true,
+                link_faults: Some(LinkHealth::uniform(n, 0.8, rng.below(1 << 30))),
+                ..Default::default()
+            };
+            let choice = ClusterChoice { intra: v, inter };
+            let (res, sims) = run_hier_full(kind, choice, &cluster, size, &opts);
+            let label = format!(
+                "flapped {} {} {inter:?} n={n} g={g} size={size}",
+                kind.name(),
+                v.name()
+            );
+            assert_eq!(res.verified, Some(true), "{label}");
+
+            let topo = Topology::custom(world, world.max(16), 64.0, 64.0);
+            let flat = flat_placement(kind, v, &topo, size);
+            let in_place = v.strategy == Strategy::Swap;
             let mut regions: Vec<(u64, u64)> = vec![(0, size)];
             if kind == CollectiveKind::AllToAll && !in_place {
                 regions.push((aa_out_base(size), size));

@@ -1,0 +1,239 @@
+//! Property and acceptance tests for the fault-injection subsystem
+//! (PR 8): the fault plan is a pure function of `(spec, nodes, seed)`,
+//! an empty plan replays the healthy serving run bit for bit, flapped
+//! collectives deliver byte-identical placements (flaps delay, never
+//! drop), and the degradation-aware serving policy strictly beats the
+//! degradation-blind baseline on chat-class SLO attainment under a
+//! seeded single-node NIC derate.
+
+use std::cell::Cell;
+
+use dma_latte::cluster::{
+    run_hier_full, ClusterChoice, ClusterTopology, FaultPlan, FaultSpec, HierRunOptions,
+    InterSchedule, LinkHealth, NicModel,
+};
+use dma_latte::collectives::plan::aa_out_base;
+use dma_latte::collectives::{CollectiveKind, Strategy, Variant};
+use dma_latte::coordinator::config::DegradePolicy;
+use dma_latte::coordinator::workload::{default_tenants, drive, ArrivalProcess, WorkloadSpec};
+use dma_latte::figures::faults::chat_attainment;
+use dma_latte::figures::serving_load as sl;
+use dma_latte::models::zoo::QWEN25_0_5B;
+use dma_latte::sim::topology::NodeId;
+use dma_latte::sim::Topology;
+use dma_latte::util::proptest::{run as prop_run, Config};
+use dma_latte::util::rng::Rng;
+
+/// Same `(spec, nodes, seed)` ⇒ bit-identical fault plan, across random
+/// specs; the healthy spec generates the empty plan at every seed.
+#[test]
+fn prop_fault_plan_is_a_pure_function_of_spec_and_seed() {
+    prop_run(
+        "fault-plan-purity",
+        Config {
+            cases: 64,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(1, 16);
+            let spec = FaultSpec {
+                nic_nodes: rng.range(0, n),
+                nic_factor: 0.05 + 0.9 * rng.f64(),
+                flap_prob: 0.5 * rng.f64(),
+                stuck_engines: rng.below(16) as u8,
+                xgmi_factor: 0.25 + 0.75 * rng.f64(),
+                straggler_nodes: rng.range(0, n),
+                straggler_factor: 1.0 + rng.f64(),
+                window_s: if rng.chance(0.5) { 0.0 } else { rng.f64() },
+            };
+            let seed = rng.below(1 << 30);
+            let a = FaultPlan::generate(&spec, n, seed);
+            let b = FaultPlan::generate(&spec, n, seed);
+            assert_eq!(a, b, "same (spec, nodes, seed) must give the same plan");
+            assert_eq!(a.num_nodes(), n);
+            let h = FaultPlan::generate(&FaultSpec::default(), n, seed);
+            assert!(h.is_empty(), "healthy spec must generate the empty plan");
+        },
+    );
+}
+
+/// The zero-perturbation contract end to end: a serving config carrying
+/// an empty (all-healthy) fault spec — under either degradation policy —
+/// replays the no-faults run bit for bit, and never trips a counter.
+#[test]
+fn empty_fault_plan_replays_the_healthy_serving_run_bit_identically() {
+    let base = sl::serve_config(&QWEN25_0_5B, 2, true);
+    let spec = WorkloadSpec {
+        process: ArrivalProcess::Poisson { rate_rps: 600.0 },
+        classes: default_tenants(),
+        requests: 96,
+        seed: 21,
+    };
+    let healthy = drive(&base, &spec);
+    for policy in [DegradePolicy::aware(), DegradePolicy::blind()] {
+        let empty = base
+            .clone()
+            .with_faults(FaultSpec::default())
+            .with_degrade(policy);
+        let replay = drive(&empty, &spec);
+        assert_eq!(healthy.wall_ns, replay.wall_ns, "serving wall clock");
+        assert_eq!(healthy.ttft_ns, replay.ttft_ns, "ttft distribution");
+        assert_eq!(healthy.tpot_ns, replay.tpot_ns, "tpot distribution");
+        assert_eq!(healthy.comm_ns, replay.comm_ns, "comm total");
+        assert_eq!(healthy.per_class, replay.per_class, "per-class counters");
+        assert_eq!(healthy.queue_depth, replay.queue_depth, "queue timeline");
+        assert_eq!(
+            (replay.retries, replay.timeouts, replay.shed),
+            (0, 0, 0),
+            "no fault counter may trip on an empty plan"
+        );
+        assert_eq!(replay.preemptions, 0);
+        assert_eq!(replay.drained_nodes, 0);
+    }
+}
+
+/// A faulted serving run is itself deterministic: same seed, same spec,
+/// same degraded outcome — including every fault counter.
+#[test]
+fn faulted_serving_is_deterministic_for_a_fixed_seed() {
+    let cfg = sl::serve_config(&QWEN25_0_5B, 2, true)
+        .with_faults(FaultSpec::parse("nic=1:0.25,flap=0.1").expect("literal spec"));
+    let spec = WorkloadSpec {
+        process: ArrivalProcess::Poisson { rate_rps: 500.0 },
+        classes: default_tenants(),
+        requests: 96,
+        seed: 11,
+    };
+    let a = drive(&cfg, &spec);
+    let b = drive(&cfg, &spec);
+    assert_eq!(a.wall_ns, b.wall_ns, "faulted wall clock");
+    assert_eq!(a.ttft_ns, b.ttft_ns, "faulted ttft distribution");
+    assert_eq!(a.tpot_ns, b.tpot_ns, "faulted tpot distribution");
+    assert_eq!(a.per_class, b.per_class, "faulted per-class counters");
+    assert_eq!(
+        (a.retries, a.timeouts, a.shed, a.preemptions, a.drained_nodes),
+        (b.retries, b.timeouts, b.shed, b.preemptions, b.drained_nodes),
+        "fault counters must replay"
+    );
+}
+
+/// Flaps delay messages, they never drop or reorder bytes: a flapped
+/// hierarchical collective verifies functionally, lands the exact same
+/// placement as its healthy twin on every rank, and is never faster.
+#[test]
+fn prop_flapped_collectives_deliver_identical_bytes() {
+    let total_retries = Cell::new(0u64);
+    prop_run(
+        "flap-byte-equality",
+        Config {
+            cases: 12,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let n = rng.range(2, 4);
+            let g = rng.range(2, 4) as u8;
+            let world = (n * g as usize) as u8;
+            let kind = if rng.chance(0.5) {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let v = *rng.pick(&Variant::all_for(kind));
+            let inter = if rng.chance(0.5) {
+                InterSchedule::Sequential
+            } else {
+                InterSchedule::Pipelined
+            };
+            let size = 256 * rng.range(1, 4) as u64 * world as u64;
+            let cluster = ClusterTopology::homogeneous(
+                n,
+                Topology::custom(g, 16, 64.0, 64.0),
+                NicModel::default(),
+            );
+            let choice = ClusterChoice { intra: v, inter };
+            let label = format!("{} {} {inter:?} n={n} g={g} size={size}", kind.name(), v.name());
+
+            let healthy_opts = HierRunOptions {
+                verify: true,
+                ..Default::default()
+            };
+            let (healthy, healthy_sims) =
+                run_hier_full(kind, choice, &cluster, size, &healthy_opts);
+            let flap_opts = HierRunOptions {
+                verify: true,
+                link_faults: Some(LinkHealth::uniform(n, 0.9, rng.below(1 << 30))),
+                ..Default::default()
+            };
+            let (flapped, flapped_sims) = run_hier_full(kind, choice, &cluster, size, &flap_opts);
+
+            assert_eq!(healthy.verified, Some(true), "{label}");
+            assert_eq!(flapped.verified, Some(true), "{label}: flapped placement");
+            assert_eq!(healthy.faults.retries, 0, "{label}: healthy run never retries");
+            assert!(
+                flapped.latency_ns >= healthy.latency_ns,
+                "{label}: flaps may only delay"
+            );
+            total_retries.set(total_retries.get() + flapped.faults.retries);
+
+            let in_place = v.strategy == Strategy::Swap;
+            let mut regions: Vec<(u64, u64)> = vec![(0, size)];
+            if kind == CollectiveKind::AllToAll && !in_place {
+                regions.push((aa_out_base(size), size));
+            }
+            for r in 0..world as u32 {
+                let (node, local) = cluster.locate(r);
+                for &(base, len) in &regions {
+                    assert_eq!(
+                        flapped_sims[node].memory.peek(NodeId::Gpu(local), base, len),
+                        healthy_sims[node].memory.peek(NodeId::Gpu(local), base, len),
+                        "{label}: rank {r} region base {base}"
+                    );
+                }
+            }
+        },
+    );
+    // p=0.9 per message over 12 cases × ≥2 inter-node messages each: the
+    // retry path is exercised with near-certainty.
+    assert!(total_retries.get() > 0, "no case exercised the retry path");
+}
+
+/// PR 8 acceptance: with a seeded single-node NIC derate (20× slower),
+/// the degradation-aware policy (re-select + drain + shed + preempt)
+/// achieves strictly higher chat-class SLO attainment than the
+/// degradation-blind baseline at the same offered load.
+#[test]
+fn degradation_aware_serving_beats_blind_on_chat_slo_under_nic_derate() {
+    let classes = default_tenants();
+    let base = sl::serve_config(&QWEN25_0_5B, 2, true);
+    let cap = sl::estimate_capacity_rps(&base, &classes, 96, 7);
+    let spec = FaultSpec::parse("nic=1:0.05").expect("literal spec");
+    let wl = WorkloadSpec {
+        process: ArrivalProcess::Poisson {
+            rate_rps: 0.4 * cap,
+        },
+        classes,
+        requests: 160,
+        seed: 7,
+    };
+    let blind_cfg = base
+        .clone()
+        .with_faults(spec.clone())
+        .with_degrade(DegradePolicy::blind());
+    let aware_cfg = base.with_faults(spec).with_degrade(DegradePolicy::aware());
+    let blind = drive(&blind_cfg, &wl);
+    let aware = drive(&aware_cfg, &wl);
+
+    // Blind keeps the full (sick) world; aware drains the derated node.
+    assert_eq!(blind.drained_nodes, 0, "blind must not drain");
+    assert_eq!(aware.drained_nodes, 1, "aware must drain the derated node");
+
+    let chat_blind = chat_attainment(&blind);
+    let chat_aware = chat_attainment(&aware);
+    assert!(
+        chat_aware > chat_blind,
+        "degradation-aware must beat blind on chat SLO attainment: \
+         aware {:.3} vs blind {:.3}",
+        chat_aware,
+        chat_blind
+    );
+}
