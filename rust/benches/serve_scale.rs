@@ -1,0 +1,236 @@
+//! BENCH — §Serving at scale (PR 9): streaming arrival generation and
+//! bounded-memory serving at 10k / 100k / 1M requests, emitted as
+//! `BENCH_PR9.json`.
+//!
+//! Unlike the virtual-time serving benches, the headline rows here are
+//! **host-side** measurements (they time the generator / engine process
+//! itself, so absolute values vary by machine; the asserted *ratios* do
+//! not):
+//!
+//! - `arrivals_sec_{10k,100k,1m}` — host arrival throughput of a full
+//!   [`WorkloadSpec::stream`] drain (arrivals/second, stored in the
+//!   ns-named fields).
+//! - `first_arrivals_1m` — host ns until the first 10k schedulable
+//!   arrivals exist, from a 1M-request spec: before = the legacy
+//!   materialize-then-sort `generate()` path (which must draw all 1M
+//!   events first), after = the lazy stream. The bench asserts the
+//!   stream is ≥ 10× faster and prints a greppable `scale check: OK`
+//!   line.
+//! - `resident_arrivals_{10k,100k,1m}` — peak arrival events resident in
+//!   memory: before = the materialized vector (= N), after = the
+//!   stream's session heap (O(active sessions)); the 1M peak must stay
+//!   within 10× of the 10k peak (sublinear growth).
+//! - `engine_stream_drive` — host wall ns for a full
+//!   `drive()` episode fed by the stream (smoke: 5k requests; full:
+//!   100k, which also pushes the TTFT/TPOT series past the exact-phase
+//!   cap and exercises the sketch).
+//!
+//! JSON lands at `../BENCH_PR9.json` (repo root when run via cargo),
+//! overridable with `DMA_LATTE_BENCH_JSON=path` (`=0` disables).
+
+use dma_latte::coordinator::workload::{drive, WorkloadSpec};
+use dma_latte::figures::serving_load as sl;
+use dma_latte::models::zoo::QWEN25_0_5B;
+use dma_latte::util::timer::{bench, bench_json, black_box, BenchComparison, BenchResult};
+
+const SEED: u64 = 9;
+/// Offered rate for every spec below (the arrival horizon scales with the
+/// request count; the active-session population does not).
+const RATE_RPS: f64 = 4000.0;
+/// Arrival prefix the first-arrivals gate times — the events a serving
+/// process actually waits on before it can schedule anything.
+const FIRST_K: usize = 10_000;
+
+/// Wrap one deterministic value as a BenchResult (no spread).
+fn modeled(name: &str, value: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_ns: value,
+        median_ns: value,
+        p95_ns: value,
+        p99_ns: value,
+        min_ns: value,
+    }
+}
+
+/// Single-value row.
+fn value_row(path: &str, name: &str, value: f64) -> BenchComparison {
+    BenchComparison {
+        path: path.to_string(),
+        before: None,
+        after: modeled(name, value),
+    }
+}
+
+fn report(row: &BenchComparison, unit: &str) {
+    match &row.before {
+        Some(b) => println!(
+            "row {:<24} before {:>14.1} after {:>14.1} {unit}",
+            row.path, b.median_ns, row.after.median_ns
+        ),
+        None => println!(
+            "row {:<24} value {:>14.1} {unit}",
+            row.path, row.after.median_ns
+        ),
+    }
+}
+
+fn spec(requests: u64) -> WorkloadSpec {
+    WorkloadSpec::poisson(RATE_RPS, requests, SEED)
+}
+
+const SIZES: [(&str, u64); 3] = [("10k", 10_000), ("100k", 100_000), ("1m", 1_000_000)];
+
+fn main() {
+    let smoke = dma_latte::util::bench_smoke();
+    let (warmup, iters) = if smoke { (0, 1) } else { (1, 3) };
+    println!("== serve scale: streaming arrivals, bounded memory (BENCH_PR9) ==\n");
+    let mut rows: Vec<BenchComparison> = Vec::new();
+
+    // Equality oracle on the bench's own spec (the property tests cover
+    // random specs): the stream is the materialized reference, lazily.
+    let s10k = spec(10_000);
+    assert_eq!(s10k.stream().collect::<Vec<_>>(), s10k.generate());
+
+    // 1) Full-drain host arrival throughput at every size.
+    for (label, n) in SIZES {
+        let sp = spec(n);
+        let r = bench(&format!("stream drain {label}"), warmup, iters, || {
+            let mut count = 0u64;
+            for e in sp.stream() {
+                count += 1;
+                black_box(e.at_ns);
+            }
+            assert_eq!(count, n);
+        });
+        let per_sec = n as f64 / (r.median_ns / 1e9);
+        rows.push(value_row(
+            &format!("arrivals_sec_{label}"),
+            &format!("streamed arrivals/sec, {label} requests"),
+            per_sec,
+        ));
+        report(rows.last().unwrap(), "arrivals/s");
+    }
+    println!();
+
+    // 2) The scale gate: host time until the first FIRST_K schedulable
+    //    arrivals from a 1M-request spec. The legacy path draws and sorts
+    //    all 1M events before the engine can see event #1; the stream
+    //    hands events over as sessions start.
+    let big = spec(1_000_000);
+    let legacy = bench(
+        "first 10k arrivals, materialize+sort 1M",
+        warmup,
+        iters,
+        || {
+            let events = big.generate();
+            black_box(events[FIRST_K - 1].at_ns);
+        },
+    );
+    let streaming = bench("first 10k arrivals, streamed", warmup, iters, || {
+        let mut st = big.stream();
+        let mut last = 0;
+        for _ in 0..FIRST_K {
+            last = st.next().expect("1M-request stream").at_ns;
+        }
+        black_box(last);
+    });
+    let speedup = legacy.median_ns / streaming.median_ns;
+    assert!(
+        speedup >= 10.0,
+        "streaming must reach the first arrivals >=10x sooner: {speedup:.1}x"
+    );
+    println!(
+        "scale check: OK (first {FIRST_K} arrivals from a 1M-request spec: {speedup:.0}x faster streamed)"
+    );
+    rows.push(BenchComparison {
+        path: "first_arrivals_1m".to_string(),
+        before: Some(legacy),
+        after: streaming,
+    });
+    report(rows.last().unwrap(), "ns");
+    println!();
+
+    // 3) Peak resident arrival events: materialized = N, streamed =
+    //    session heap. Growth across 100x more requests must stay within
+    //    10x (the population tracks active sessions, not episode length).
+    let mut peaks = Vec::new();
+    for (label, n) in SIZES {
+        let sp = spec(n);
+        let mut st = sp.stream();
+        let mut count = 0u64;
+        while st.next().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, n);
+        let peak = st.peak_resident() as f64;
+        peaks.push(peak);
+        rows.push(BenchComparison {
+            path: format!("resident_arrivals_{label}"),
+            before: Some(modeled(&format!("materialized events, {label}"), n as f64)),
+            after: modeled(&format!("peak resident streamed events, {label}"), peak),
+        });
+        report(rows.last().unwrap(), "events");
+    }
+    assert!(
+        peaks[2] <= 10.0 * peaks[0].max(1.0),
+        "resident arrivals must grow sublinearly: {peaks:?}"
+    );
+    println!("peak resident events across 10k/100k/1m: {peaks:?} (sublinear)\n");
+
+    // 4) End-to-end: one engine episode fed by the stream. The full run
+    //    pushes 100k samples into the TTFT/TPOT series — past the exact
+    //    phase — so bounded-memory percentiles are exercised, not just
+    //    unit-tested.
+    let n_drive: u64 = if smoke { 5_000 } else { 100_000 };
+    let cfg = sl::serve_config(&QWEN25_0_5B, 1, true);
+    let sp = spec(n_drive);
+    let t0 = std::time::Instant::now();
+    let m = drive(&cfg, &sp);
+    let host_ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(m.finished, n_drive, "every streamed request must finish");
+    assert!(m.queue_depth.len() <= cfg.queue_sample_cap);
+    assert!(m.ttft_pct_ms(99.0).is_finite() && m.tpot_pct_ms(99.0).is_finite());
+    println!(
+        "engine drive: {} streamed requests in {:.2}s host wall ({:.1}s virtual, ttft p99 {:.1}ms)",
+        m.finished,
+        host_ns / 1e9,
+        m.wall_ns as f64 / 1e9,
+        m.ttft_pct_ms(99.0)
+    );
+    rows.push(value_row(
+        "engine_stream_drive",
+        &format!("drive() over {n_drive} streamed requests, host wall"),
+        host_ns,
+    ));
+    report(rows.last().unwrap(), "ns");
+    println!();
+
+    // Machine-readable trajectory file.
+    let dest = std::env::var("DMA_LATTE_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_PR9.json".to_string());
+    if dest != "0" {
+        let meta = [
+            ("pr", "PR9".to_string()),
+            ("mode", if smoke { "smoke" } else { "full" }.to_string()),
+            (
+                "note",
+                "host-side scale measurements (machine-dependent absolutes, \
+                 asserted ratios): arrivals_sec rows are arrivals/s, \
+                 resident rows are event counts (both stored in the \
+                 ns-named fields), first_arrivals/engine_stream_drive rows \
+                 are host ns"
+                    .to_string(),
+            ),
+        ];
+        let doc = bench_json("serve_scale", &meta, &rows);
+        if let Err(e) = std::fs::write(&dest, doc) {
+            // Fatal: CI asserts the file was regenerated; a silent miss
+            // would let a stale checked-in copy masquerade as fresh.
+            eprintln!("could not write {dest}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {dest}");
+    }
+}

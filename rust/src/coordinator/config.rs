@@ -96,6 +96,14 @@ pub struct ServeConfig {
     /// (the engine halves resolution once full — deterministic decimation);
     /// < 2 disables the timeline (the exact peak is still tracked).
     pub queue_sample_cap: usize,
+    /// Exact-sample cap for the latency series and `RequestSpan` reservoir
+    /// in `ServeMetrics`. Episodes at or below this many samples per
+    /// series report bit-exact percentiles (same numbers as the historical
+    /// unbounded vectors); beyond it the TTFT/TPOT series degrade to a
+    /// log-bucketed sketch with a ≤ 1 % relative-error bound and the spans
+    /// to a seeded uniform reservoir — memory stays O(cap) at any episode
+    /// size ([`crate::util::stats::LatHist`]).
+    pub metrics_sample_cap: usize,
     /// Fault injection: `None` (the default) is the healthy fleet and
     /// perturbs **nothing** — the engine never materializes a plan, so
     /// healthy runs stay bit-identical (`tests/determinism.rs`). `Some`
@@ -122,6 +130,7 @@ impl ServeConfig {
             num_nodes: 1,
             comm_overlap: true,
             queue_sample_cap: 2048,
+            metrics_sample_cap: crate::util::stats::LATHIST_DEFAULT_CAP,
             faults: None,
             degrade: DegradePolicy::aware(),
         }
@@ -174,6 +183,9 @@ mod tests {
         assert_eq!(c.world_size(), 8);
         assert!(c.comm_overlap);
         assert!(c.queue_sample_cap >= 2);
+        // Existing tests/benches push far fewer samples than this, so the
+        // exact phase covers them and no modeled number moves.
+        assert!(c.metrics_sample_cap >= 4096);
         assert!(c.faults.is_none(), "default config must be fault-free");
         assert_eq!(c.degrade, DegradePolicy::aware());
         assert!(!c.with_comm_overlap(false).comm_overlap);

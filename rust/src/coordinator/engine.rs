@@ -13,20 +13,25 @@
 //! ([`VirtualEngine::submit_workload`], fed by
 //! [`super::workload::WorkloadSpec::generate`]) is ingested as the
 //! virtual clock reaches each event, interleaving arrivals with decode
-//! steps — open-loop serving with real queueing behavior.
+//! steps — open-loop serving with real queueing behavior. At scale,
+//! [`VirtualEngine::submit_workload_stream`] attaches the lazy
+//! [`super::workload::WorkloadSpec::stream`] source instead: events are
+//! drawn on demand as the clock advances, so the resident arrival set
+//! stays O(active sessions) no matter how long the episode runs.
 
 use crate::cluster::{hier, ClusterTopology, FaultPlan};
-use crate::kvcache::fetch::{run_fetch, CopySpec, FetchImpl, FetchOutcome};
+use crate::kvcache::fetch::{run_fetch, FetchImpl, FetchOutcome};
 use crate::kvcache::BlockLayout;
 use crate::obs::{record, SpanKind, Track};
 use crate::sim::{Sim, SimConfig};
+use crate::util::stats::{LatHist, Reservoir};
 
 use super::comm::CollectiveComm;
 use super::config::ServeConfig;
 use super::metrics::{ClassStats, RequestSpan, ServeMetrics, SloTarget};
 use super::request::{Request, RequestState};
 use super::scheduler::{AdmitAction, Scheduler};
-use super::workload::{session_cache_key, ArrivalEvent, TenantClass};
+use super::workload::{session_cache_key, ArrivalEvent, ArrivalStream, TenantClass, WorkloadSpec};
 
 /// A request being fetched/prefilled, ready at `ready_ns`.
 #[derive(Debug)]
@@ -52,6 +57,10 @@ const DRAIN_COMPUTE_ABOVE: f64 = 1.5;
 /// A queued SLO'd request that has burned this fraction of its TTFT
 /// budget puts the class at risk — best-effort arrivals are shed.
 const SLO_RISK_FRAC: f64 = 0.5;
+/// XOR'd into [`ServeConfig::seed`] for the span reservoir's RNG, so its
+/// sampling decisions are decorrelated from the workload/scheduler draws
+/// that consume the bare seed.
+const SPAN_RESERVOIR_STREAM: u64 = 0x5EA1_ED5A_3B1E_55ED;
 /// Bound on the waiting-queue scan of the risk check (O(1) per ingest).
 const SLO_RISK_SCAN: usize = 64;
 
@@ -147,6 +156,14 @@ pub struct VirtualEngine {
     pcie_free: u64,
     /// Future arrivals, time-ordered (front = next).
     arrivals: std::collections::VecDeque<ArrivalSlot>,
+    /// Lazy arrival source ([`WorkloadSpec::stream`]); `None` when unused
+    /// or exhausted. Merged with `arrivals` inside `ingest_arrivals`.
+    stream: Option<ArrivalStream>,
+    /// One-slot lookahead into `stream` — the engine must know the next
+    /// arrival instant without consuming the event.
+    stream_peek: Option<ArrivalSlot>,
+    /// Id assigned to the next stream-built request.
+    stream_next_id: u64,
     pending: Vec<Pending>,
     running: Vec<Request>,
     pub metrics: ServeMetrics,
@@ -185,6 +202,13 @@ impl VirtualEngine {
             None => CollectiveComm::new(&cfg),
         };
         let mut metrics = ServeMetrics::default();
+        // Bounded-memory series: exact (bit-identical to the historical
+        // unbounded vectors) up to `metrics_sample_cap` samples, sketch /
+        // reservoir beyond it.
+        let cap = cfg.metrics_sample_cap;
+        metrics.ttft_ns = LatHist::with_cap(cap);
+        metrics.tpot_ns = LatHist::with_cap(cap);
+        metrics.requests = Reservoir::with_cap(cap, cfg.seed ^ SPAN_RESERVOIR_STREAM);
         if let Some(ctx) = &faults {
             metrics.drained_nodes = (ctx.plan.num_nodes() - ctx.active()) as u64;
         }
@@ -196,6 +220,9 @@ impl VirtualEngine {
             gpu_free: 0,
             pcie_free: 0,
             arrivals: std::collections::VecDeque::new(),
+            stream: None,
+            stream_peek: None,
+            stream_next_id: 0,
             pending: Vec::new(),
             running: Vec::new(),
             metrics,
@@ -213,7 +240,7 @@ impl VirtualEngine {
     pub fn configure_classes(&mut self, classes: &[TenantClass]) {
         self.metrics.per_class = classes
             .iter()
-            .map(|c| ClassStats::new(c.name.clone(), c.slo))
+            .map(|c| ClassStats::with_cap(c.name.clone(), c.slo, self.cfg.metrics_sample_cap))
             .collect();
     }
 
@@ -259,30 +286,98 @@ impl VirtualEngine {
         }
     }
 
-    /// Move every arrival whose time has come into the scheduler. Under
-    /// fault injection with the `shed` lever on, best-effort arrivals are
-    /// refused while queued SLO'd requests are already burning their TTFT
-    /// budget — the degraded fleet's capacity goes to the paying class.
-    fn ingest_arrivals(&mut self) {
-        while let Some(front) = self.arrivals.front() {
-            if front.req.arrival_ns > self.now {
-                break;
+    /// Attach a lazy arrival source ([`WorkloadSpec::stream`]): events are
+    /// drawn on demand as the virtual clock advances, so the resident
+    /// arrival set stays O(active sessions) instead of O(total requests).
+    /// Feeds the scheduler the same requests, in the same order, as
+    /// [`VirtualEngine::submit_workload`] over [`WorkloadSpec::generate`]
+    /// (`tests/determinism.rs` pins the two paths field for field).
+    pub fn submit_workload_stream(&mut self, spec: &WorkloadSpec) {
+        assert!(
+            self.stream.is_none() && self.stream_peek.is_none(),
+            "one arrival stream per engine"
+        );
+        self.stream_next_id = self.metrics.submitted + self.arrivals.len() as u64;
+        self.stream = Some(spec.stream());
+        self.refill_stream_peek();
+    }
+
+    /// Pull the next stream event (if any) into the one-slot peek buffer,
+    /// materializing it as a request exactly like [`Self::submit_workload`].
+    fn refill_stream_peek(&mut self) {
+        debug_assert!(self.stream_peek.is_none());
+        let Some(stream) = self.stream.as_mut() else {
+            return;
+        };
+        match stream.next() {
+            Some(e) => {
+                let req = Request::new(
+                    self.stream_next_id,
+                    e.prompt_tokens,
+                    e.output_tokens,
+                    e.at_ns,
+                )
+                .with_class(e.class)
+                .with_cache_key(session_cache_key(e.session));
+                self.stream_next_id += 1;
+                self.stream_peek = Some(ArrivalSlot { req, warm: e.warm });
             }
-            let slot = self.arrivals.pop_front().unwrap();
-            if self.faults.is_some()
-                && self.cfg.degrade.shed
-                && self.class_slo(slot.req.class).is_none()
-                && self.slo_at_risk()
-            {
-                self.metrics.shed += 1;
-                continue;
-            }
-            self.metrics.submitted += 1;
-            if slot.warm {
-                self.sched.warm_cpu_cache(&slot.req);
-            }
-            self.sched.submit(slot.req);
+            None => self.stream = None,
         }
+    }
+
+    /// Earliest future arrival instant across both sources (the enqueued
+    /// deque and the stream lookahead).
+    fn next_arrival_ns(&self) -> Option<u64> {
+        let q = self.arrivals.front().map(|s| s.req.arrival_ns);
+        let s = self.stream_peek.as_ref().map(|s| s.req.arrival_ns);
+        match (q, s) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Move every arrival whose time has come into the scheduler, merging
+    /// the time-ordered deque with the lazy stream source (ties go to the
+    /// deque; either source may be absent).
+    fn ingest_arrivals(&mut self) {
+        loop {
+            let q = self.arrivals.front().map(|s| s.req.arrival_ns);
+            let s = self.stream_peek.as_ref().map(|s| s.req.arrival_ns);
+            let from_queue = match (q, s) {
+                (Some(a), _) if a <= self.now && s.map_or(true, |b| a <= b) => true,
+                (_, Some(b)) if b <= self.now => false,
+                _ => break,
+            };
+            let slot = if from_queue {
+                self.arrivals.pop_front().unwrap()
+            } else {
+                let slot = self.stream_peek.take().unwrap();
+                self.refill_stream_peek();
+                slot
+            };
+            self.deliver(slot);
+        }
+    }
+
+    /// Hand one due arrival to the scheduler. Under fault injection with
+    /// the `shed` lever on, best-effort arrivals are refused while queued
+    /// SLO'd requests are already burning their TTFT budget — the degraded
+    /// fleet's capacity goes to the paying class.
+    fn deliver(&mut self, slot: ArrivalSlot) {
+        if self.faults.is_some()
+            && self.cfg.degrade.shed
+            && self.class_slo(slot.req.class).is_none()
+            && self.slo_at_risk()
+        {
+            self.metrics.shed += 1;
+            return;
+        }
+        self.metrics.submitted += 1;
+        if slot.warm {
+            self.sched.warm_cpu_cache(&slot.req);
+        }
+        self.sched.submit(slot.req);
     }
 
     /// The SLO of a request's tenant class (`None` = best-effort, and
@@ -368,11 +463,7 @@ impl VirtualEngine {
             return;
         }
         if self.metrics.queue_depth.len() >= cap {
-            let mut keep = false;
-            self.metrics.queue_depth.retain(|_| {
-                keep = !keep;
-                keep
-            });
+            decimate_in_place(&mut self.metrics.queue_depth);
             self.queue_stride *= 2;
             if tick % self.queue_stride != 0 {
                 return;
@@ -381,14 +472,18 @@ impl VirtualEngine {
         self.metrics.queue_depth.push((self.now, depth));
     }
 
-    /// Measure the fetch cost of `copies` (memoized by count — every block
-    /// has identical size, so the DES outcome depends only on the count).
-    fn fetch_cost(&mut self, copies: &[CopySpec]) -> FetchOutcome {
-        if let Some(o) = self.fetch_cache.get(&copies.len()) {
+    /// Measure the fetch cost of moving `n` blocks (memoized by count —
+    /// every block has identical size and engines are assigned by copy
+    /// index, so the DES outcome depends only on the count, never on the
+    /// addresses; see [`BlockLayout::synth_copies`]). Equal-shape copies
+    /// are materialized only on a memo miss.
+    fn fetch_cost(&mut self, n: u64) -> FetchOutcome {
+        if let Some(o) = self.fetch_cache.get(&(n as usize)) {
             return *o;
         }
-        let out = run_fetch(&mut self.fetch_sim, self.cfg.fetch, copies);
-        self.fetch_cache.insert(copies.len(), out);
+        let copies = self.sched.layout.synth_copies(self.sched.gpu, n);
+        let out = run_fetch(&mut self.fetch_sim, self.cfg.fetch, &copies);
+        self.fetch_cache.insert(n as usize, out);
         out
     }
 
@@ -422,7 +517,7 @@ impl VirtualEngine {
             // event — a fetch/prefill completion, a future arrival, or
             // (admission stalled with nothing in flight) the host catching
             // up — then re-plan.
-            let next_arrival = self.arrivals.front().map(|a| a.req.arrival_ns);
+            let next_arrival = self.next_arrival_ns();
             if let Some(ready) = self.pending.iter().map(|p| p.ready_ns).min() {
                 let t = match next_arrival {
                     Some(a) => ready.min(a),
@@ -517,10 +612,10 @@ impl VirtualEngine {
                 });
             }
             match act {
-                AdmitAction::Fetch { mut req, copies } => {
+                AdmitAction::Fetch { mut req, fetch_blocks } => {
                     self.metrics.cache_hits += 1;
-                    self.metrics.fetch_bytes += copies.iter().map(|c| c.2).sum::<u64>();
-                    let cost = self.fetch_cost(&copies);
+                    self.metrics.fetch_bytes += fetch_blocks * self.sched.layout.block_bytes;
+                    let cost = self.fetch_cost(fetch_blocks);
                     // API calls serialize on the host thread.
                     let api_start = self.host_free;
                     let api_end = self.host_free + cost.host_ns;
@@ -696,61 +791,66 @@ impl VirtualEngine {
             });
         }
         let now = self.now;
-        let mut finished = Vec::new();
-        for r in &mut self.running {
+        let mut i = 0;
+        while i < self.running.len() {
+            let r = &mut self.running[i];
             // Preempted re-runs keep their original first-token instant;
             // gate the TTFT sample on it, not on the token count.
             let had_first = r.first_token_ns.is_some();
             r.on_token(now);
+            let done = r.state == RequestState::Finished;
+            let ttft = (!had_first).then(|| r.ttft_ns().unwrap() as f64);
+            let class = r.class;
             self.metrics.tokens_out += 1;
-            if !had_first {
-                let ttft = r.ttft_ns().unwrap() as f64;
+            if let Some(ttft) = ttft {
                 self.metrics.ttft_ns.push(ttft);
-                if let Some(cs) = self.metrics.per_class.get_mut(r.class as usize) {
+                if let Some(cs) = self.metrics.per_class.get_mut(class as usize) {
                     cs.ttft_ns.push(ttft);
                 }
             }
-            if r.state == RequestState::Finished {
-                finished.push(r.id);
-                let span = RequestSpan {
-                    id: r.id,
-                    arrival_ns: r.arrival_ns,
-                    first_token_ns: r.first_token_ns.unwrap(),
-                    finish_ns: r.finished_ns.unwrap(),
-                    tokens: r.generated,
-                    class: r.class,
-                };
+            if !done {
+                i += 1;
+                continue;
+            }
+            // O(1) removal: swap-remove the finished request; `i` is not
+            // advanced, so the swapped-in tail element is processed on the
+            // next iteration of this same step.
+            let r = self.running.swap_remove(i);
+            let span = RequestSpan {
+                id: r.id,
+                arrival_ns: r.arrival_ns,
+                first_token_ns: r.first_token_ns.unwrap(),
+                finish_ns: r.finished_ns.unwrap(),
+                tokens: r.generated,
+                class: r.class,
+            };
+            if let Some(tpot) = span.tpot_ns() {
+                self.metrics.tpot_ns.push(tpot);
+            }
+            if let Some(cs) = self.metrics.per_class.get_mut(r.class as usize) {
+                cs.finished += 1;
+                cs.tokens_out += r.generated;
                 if let Some(tpot) = span.tpot_ns() {
-                    self.metrics.tpot_ns.push(tpot);
+                    cs.tpot_ns.push(tpot);
                 }
-                if let Some(cs) = self.metrics.per_class.get_mut(r.class as usize) {
-                    cs.finished += 1;
-                    cs.tokens_out += r.generated;
-                    if let Some(tpot) = span.tpot_ns() {
-                        cs.tpot_ns.push(tpot);
-                    }
-                    if cs.slo.map_or(true, |slo| slo.met_by(&span)) {
-                        cs.slo_met += 1;
-                    }
-                }
-                self.metrics.requests.push(span);
-                if emitting {
-                    record::with(|rec| {
-                        rec.span(
-                            format!("req{}", span.id),
-                            SpanKind::Request,
-                            Track::Requests,
-                            span.arrival_ns,
-                            span.finish_ns,
-                        );
-                    });
+                if cs.slo.map_or(true, |slo| slo.met_by(&span)) {
+                    cs.slo_met += 1;
                 }
             }
-        }
-        self.running.retain(|r| r.state != RequestState::Finished);
-        for id in finished {
-            self.sched.finish(id);
+            self.metrics.requests.push(span);
+            self.sched.finish(r.id);
             self.metrics.finished += 1;
+            if emitting {
+                record::with(|rec| {
+                    rec.span(
+                        format!("req{}", span.id),
+                        SpanKind::Request,
+                        Track::Requests,
+                        span.arrival_ns,
+                        span.finish_ns,
+                    );
+                });
+            }
         }
     }
 
@@ -768,6 +868,19 @@ impl VirtualEngine {
         let ttft_gpu = ttft_total.saturating_sub(cfg.framework_overhead_ns);
         (ttft_gpu, ttft_total)
     }
+}
+
+/// Halve a sample timeline in place, keeping every other entry (indices
+/// 0, 2, 4, …) — the same survivors as the historical `retain`-toggle
+/// scan, via O(len/2) forward index compaction instead of a
+/// closure-driven full-vector shift (`decimation_compacts_like_retain`
+/// pins the equivalence).
+fn decimate_in_place(v: &mut Vec<(u64, u64)>) {
+    let keep = v.len().div_ceil(2);
+    for i in 1..keep {
+        v[i] = v[2 * i];
+    }
+    v.truncate(keep);
 }
 
 #[cfg(test)]
@@ -1133,6 +1246,71 @@ mod tests {
         assert_eq!(m.submitted, 2);
         assert_eq!(m.finished, 2);
         assert_eq!(m.preemptions, 0);
+    }
+
+    /// The in-place timeline decimation keeps exactly the samples the
+    /// historical `retain`-toggle scan kept (indices 0, 2, 4, …), at
+    /// every length including the empty and odd cases.
+    #[test]
+    fn decimation_compacts_like_retain() {
+        for len in 0..9u64 {
+            let v: Vec<(u64, u64)> = (0..len).map(|i| (i, 100 + i)).collect();
+            let mut fast = v.clone();
+            decimate_in_place(&mut fast);
+            let mut reference = v;
+            let mut keep = false;
+            reference.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            assert_eq!(fast, reference, "len {len}");
+        }
+    }
+
+    /// Degenerate workloads: a zero-request spec terminates immediately
+    /// with empty metrics, and a single-arrival stream yields size-1
+    /// series — no panics anywhere in the streaming path.
+    #[test]
+    fn degenerate_workloads_do_not_panic() {
+        use crate::coordinator::workload::{drive, WorkloadSpec};
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        let empty = drive(&cfg, &WorkloadSpec::poisson(500.0, 0, 7));
+        assert_eq!((empty.submitted, empty.finished), (0, 0));
+        assert!(empty.ttft_ns.is_empty() && empty.tpot_ns.is_empty());
+        assert!(empty.requests.is_empty());
+        assert_eq!(empty.wall_ns, 0);
+        let one = drive(&cfg, &WorkloadSpec::poisson(500.0, 1, 7));
+        assert_eq!(one.finished, 1);
+        assert_eq!(one.ttft_ns.len(), 1);
+        assert_eq!(one.requests.len(), 1);
+        assert!(one.ttft_pct_ms(99.0) > 0.0);
+    }
+
+    /// The lazy stream source feeds the engine the exact same requests as
+    /// the materialized `generate()` + `submit_workload` path: every
+    /// serving metric replays bit for bit.
+    #[test]
+    fn streaming_drive_matches_materialized_submission() {
+        use crate::coordinator::workload::WorkloadSpec;
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b);
+        cfg.gpu_blocks = 1 << 18;
+        let spec = WorkloadSpec::poisson(600.0, 64, 17);
+        let mut a = VirtualEngine::new(cfg.clone());
+        a.configure_classes(&spec.classes);
+        a.submit_workload_stream(&spec);
+        let ma = a.run_to_completion().clone();
+        let mut b = VirtualEngine::new(cfg);
+        b.configure_classes(&spec.classes);
+        b.submit_workload(&spec.generate());
+        let mb = b.run_to_completion().clone();
+        assert_eq!(ma.wall_ns, mb.wall_ns);
+        assert_eq!(ma.ttft_ns, mb.ttft_ns);
+        assert_eq!(ma.tpot_ns, mb.tpot_ns);
+        assert_eq!(ma.requests, mb.requests);
+        assert_eq!(ma.queue_depth, mb.queue_depth);
+        assert_eq!((ma.submitted, ma.finished), (mb.submitted, mb.finished));
+        assert_eq!((ma.cache_hits, ma.fetch_bytes), (mb.cache_hits, mb.fetch_bytes));
     }
 
     #[test]

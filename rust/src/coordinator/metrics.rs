@@ -4,8 +4,14 @@
 //! ([`crate::coordinator::workload`]), per-tenant-class percentile
 //! breakdowns, SLO attainment fractions, goodput and a bounded
 //! queue-depth timeline.
+//!
+//! All latency series are [`LatHist`] accumulators and the per-request
+//! spans a [`Reservoir`], so memory stays bounded at million-request
+//! episode sizes: exact (bit-identical to the historical `Vec`s) up to
+//! `ServeConfig::metrics_sample_cap` samples, a ≤ 1 % relative-error
+//! sketch / uniform sample beyond it.
 
-use crate::util::stats;
+use crate::util::stats::{LatHist, Reservoir};
 
 /// One finished request's lifetime on the serving timeline (ns) — the
 /// record behind the per-request Perfetto spans and the percentile
@@ -69,34 +75,44 @@ pub struct ClassStats {
     pub slo: Option<SloTarget>,
     pub finished: u64,
     pub tokens_out: u64,
-    pub ttft_ns: Vec<f64>,
-    pub tpot_ns: Vec<f64>,
+    pub ttft_ns: LatHist,
+    pub tpot_ns: LatHist,
     /// Finished requests that met the class SLO.
     pub slo_met: u64,
 }
 
 impl ClassStats {
-    /// Fresh stats for a named class.
+    /// Fresh stats for a named class (default exact-sample cap).
     pub fn new(name: String, slo: Option<SloTarget>) -> Self {
         ClassStats {
             name,
             slo,
             finished: 0,
             tokens_out: 0,
-            ttft_ns: Vec::new(),
-            tpot_ns: Vec::new(),
+            ttft_ns: LatHist::default(),
+            tpot_ns: LatHist::default(),
             slo_met: 0,
+        }
+    }
+
+    /// Fresh stats with an explicit exact-sample cap per latency series
+    /// (`ServeConfig::metrics_sample_cap`).
+    pub fn with_cap(name: String, slo: Option<SloTarget>, cap: usize) -> Self {
+        ClassStats {
+            ttft_ns: LatHist::with_cap(cap),
+            tpot_ns: LatHist::with_cap(cap),
+            ..ClassStats::new(name, slo)
         }
     }
 
     /// Nearest-rank TTFT percentile in ms.
     pub fn ttft_pct_ms(&self, p: f64) -> f64 {
-        stats::percentile_nearest_rank(&self.ttft_ns, p) / 1e6
+        self.ttft_ns.percentile(p) / 1e6
     }
 
     /// Nearest-rank per-token latency percentile in ms/token.
     pub fn tpot_pct_ms(&self, p: f64) -> f64 {
-        stats::percentile_nearest_rank(&self.tpot_ns, p) / 1e6
+        self.tpot_ns.percentile(p) / 1e6
     }
 
     /// Fraction of finished requests meeting the class SLO (NaN before
@@ -112,12 +128,14 @@ impl ClassStats {
 /// Aggregated serving metrics (times in ns unless noted).
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
-    pub ttft_ns: Vec<f64>,
+    /// TTFT samples (ns) — exact up to the configured cap, sketched above.
+    pub ttft_ns: LatHist,
     /// Per-request mean inter-token latency samples (ns/token), one per
     /// finished request that generated ≥ 2 tokens.
-    pub tpot_ns: Vec<f64>,
-    /// One record per finished request, in finish order.
-    pub requests: Vec<RequestSpan>,
+    pub tpot_ns: LatHist,
+    /// Per-finished-request records in finish order; a bounded uniform
+    /// sample past the cap (`Reservoir::len` still counts every finish).
+    pub requests: Reservoir<RequestSpan>,
     /// Requests handed to the scheduler (arrival events ingested).
     pub submitted: u64,
     pub finished: u64,
@@ -182,12 +200,12 @@ impl ServeMetrics {
 
     /// Mean TTFT in ms.
     pub fn ttft_mean_ms(&self) -> f64 {
-        stats::mean(&self.ttft_ns) / 1e6
+        self.ttft_ns.mean() / 1e6
     }
 
     /// Nearest-rank TTFT percentile in ms.
     pub fn ttft_pct_ms(&self, p: f64) -> f64 {
-        stats::percentile_nearest_rank(&self.ttft_ns, p) / 1e6
+        self.ttft_ns.percentile(p) / 1e6
     }
 
     /// p50 TTFT in ms (nearest rank).
@@ -207,7 +225,7 @@ impl ServeMetrics {
 
     /// Nearest-rank per-token latency percentile in ms/token.
     pub fn tpot_pct_ms(&self, p: f64) -> f64 {
-        stats::percentile_nearest_rank(&self.tpot_ns, p) / 1e6
+        self.tpot_ns.percentile(p) / 1e6
     }
 
     /// Requests that met their class SLO (all finished requests for
@@ -305,7 +323,7 @@ mod tests {
     #[test]
     fn tps_and_ttft() {
         let m = ServeMetrics {
-            ttft_ns: vec![1e6, 2e6, 3e6],
+            ttft_ns: vec![1e6, 2e6, 3e6].into(),
             finished: 3,
             tokens_out: 300,
             wall_ns: 2_000_000_000,
@@ -421,8 +439,8 @@ mod tests {
     #[test]
     fn summary_includes_percentiles_and_caches() {
         let m = ServeMetrics {
-            ttft_ns: vec![1e6; 4],
-            tpot_ns: vec![5e5; 4],
+            ttft_ns: vec![1e6; 4].into(),
+            tpot_ns: vec![5e5; 4].into(),
             plan_cache: (3, 1),
             rounds_cache: (2, 2),
             ..Default::default()
@@ -434,6 +452,24 @@ mod tests {
         assert!(s.contains("rounds cache 2h/2m"));
         // Fault counters stay out of healthy summaries entirely.
         assert!(!s.contains("faults:"));
+    }
+
+    /// Past the exact cap the series spill to the sketch but keep serving
+    /// percentiles within the 1 % bound — no caller-visible change of
+    /// shape, just bounded memory.
+    #[test]
+    fn bounded_metrics_survive_spill() {
+        let mut m = ServeMetrics::default();
+        let mut c = ClassStats::with_cap("chat".to_string(), None, 8);
+        for i in 1..=100u64 {
+            m.ttft_ns.push(i as f64 * 1e6);
+            c.ttft_ns.push(i as f64 * 1e6);
+        }
+        assert!(c.ttft_ns.spilled(), "cap 8 must spill at 100 samples");
+        assert!(!m.ttft_ns.spilled(), "default cap must hold 100 samples");
+        assert!((c.ttft_pct_ms(50.0) - 50.0).abs() / 50.0 <= 0.01);
+        assert_eq!(m.ttft_p99_ms(), 99.0);
+        assert_eq!(m.ttft_ns.len(), 100);
     }
 
     #[test]

@@ -9,7 +9,6 @@
 
 use std::collections::VecDeque;
 
-use crate::kvcache::fetch::CopySpec;
 use crate::kvcache::{BlockAllocator, BlockLayout, CpuStore};
 use crate::util::rng::Rng;
 
@@ -19,8 +18,14 @@ use super::request::{Request, RequestId, RequestState};
 /// What the engine must do for one admitted request.
 #[derive(Debug)]
 pub enum AdmitAction {
-    /// CPU-cache hit: fetch these KV blocks (CPU → GPU), then decode.
-    Fetch { req: Request, copies: Vec<CopySpec> },
+    /// CPU-cache hit: fetch `fetch_blocks` KV blocks (CPU → GPU), then
+    /// decode. Only the count travels — fetch cost is address-independent
+    /// (equal-sized blocks, engines assigned by copy index), so the engine
+    /// synthesizes concrete copies via
+    /// [`BlockLayout::synth_copies`](crate::kvcache::BlockLayout::synth_copies)
+    /// only when it actually simulates the fetch. This drops three
+    /// per-admission `Vec` allocations from the hot path.
+    Fetch { req: Request, fetch_blocks: u64 },
     /// Miss: run prefill on the GPU, then decode.
     Prefill { req: Request },
 }
@@ -144,35 +149,25 @@ impl Scheduler {
             let need = self
                 .layout
                 .blocks_for(req.prompt_tokens + req.max_new_tokens);
-            let gpu_blocks = match self.alloc.alloc(req.id, need) {
-                Ok(b) => b.to_vec(),
-                Err(_) => {
-                    self.rejected_oom += 1;
-                    self.waiting.push_front(req);
-                    break;
-                }
-            };
+            // The allocation is tracked per request id; admission only
+            // needs to know it succeeded (no per-request copy of the
+            // block list — addresses are synthesized at fetch time).
+            if self.alloc.alloc(req.id, need).is_err() {
+                self.rejected_oom += 1;
+                self.waiting.push_front(req);
+                break;
+            }
             self.admitted += 1;
             let hit = self.cpu.lookup(req.cache_key).is_some() && self.hit_draw(req.id);
             if hit {
                 self.hits += 1;
                 req.state = RequestState::Fetching;
                 let cpu_entry = self.cpu.lookup(req.cache_key).unwrap();
-                let n_fetch = self
+                let fetch_blocks = self
                     .layout
                     .blocks_for(req.prompt_tokens)
                     .min(cpu_entry.cpu_blocks.len() as u64);
-                let cpu_blocks = cpu_entry.cpu_blocks.clone();
-                let copies: Vec<CopySpec> = (0..n_fetch)
-                    .map(|i| {
-                        (
-                            self.layout.cpu_block_addr(cpu_blocks[i as usize]),
-                            self.layout.gpu_block_addr(self.gpu, gpu_blocks[i as usize]),
-                            self.layout.block_bytes,
-                        )
-                    })
-                    .collect();
-                actions.push(AdmitAction::Fetch { req, copies });
+                actions.push(AdmitAction::Fetch { req, fetch_blocks });
             } else {
                 self.misses += 1;
                 req.state = RequestState::Prefilling;
@@ -226,13 +221,16 @@ mod tests {
         assert_eq!(acts.len(), 4);
         for a in &acts {
             match a {
-                AdmitAction::Fetch { copies, .. } => {
-                    assert_eq!(copies.len(), 256); // 4096/16
-                    assert_eq!(copies[0].2, s.layout.block_bytes);
+                AdmitAction::Fetch { fetch_blocks, .. } => {
+                    assert_eq!(*fetch_blocks, 256); // 4096/16
                 }
                 _ => panic!("expected fetch"),
             }
         }
+        // The synthesized copies carry the layout's block size.
+        let copies = s.layout.synth_copies(s.gpu, 256);
+        assert_eq!(copies.len(), 256);
+        assert_eq!(copies[0].2, s.layout.block_bytes);
         assert_eq!(s.hits, 4);
     }
 

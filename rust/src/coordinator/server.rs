@@ -130,11 +130,13 @@ impl Server {
                 for act in sched.admit_round(running.len()) {
                     let started = Instant::now();
                     match act {
-                        AdmitAction::Fetch { req, copies } => {
+                        AdmitAction::Fetch { req, fetch_blocks } => {
                             metrics.cache_hits += 1;
                             metrics.fetch_bytes +=
-                                copies.iter().map(|c| c.2).sum::<u64>();
-                            // Functional DMA fetch through the simulator.
+                                fetch_blocks * cfg.layout.block_bytes;
+                            // Functional DMA fetch through the simulator
+                            // (equal-shape copies; see `synth_copies`).
+                            let copies = cfg.layout.synth_copies(0, fetch_blocks);
                             run_fetch(&mut kv_sim, cfg.fetch, &copies);
                             let prompt = prompts.remove(&req.id).unwrap_or_default();
                             // With KV resident, the "prefill" is one step

@@ -2,9 +2,15 @@
 //! multi-tenant request classes for production-traffic serving runs.
 //!
 //! The generators produce a time-sorted stream of [`ArrivalEvent`]s that
-//! [`super::engine::VirtualEngine::submit_workload`] ingests on the
-//! virtual clock — the engine no longer assumes every request is present
-//! at t=0. Three arrival shapes cover the usual production regimes:
+//! the engine ingests on the virtual clock — the engine no longer assumes
+//! every request is present at t=0. Two equivalent forms exist:
+//! [`WorkloadSpec::generate`] materializes the whole sorted vector (kept
+//! as the reference and legacy path), while [`WorkloadSpec::stream`]
+//! yields the **same events in the same order lazily** through a k-way
+//! heap merge keyed `(at_ns, session, turn)`, so
+//! [`super::engine::VirtualEngine::submit_workload_stream`] holds only
+//! O(active sessions) arrivals resident — the million-request path.
+//! Three arrival shapes cover the usual production regimes:
 //!
 //! - **Poisson** — memoryless open-loop traffic at a fixed offered rate;
 //! - **Bursty** — a Markov-modulated on/off process (exponential dwell
@@ -26,6 +32,8 @@ use super::config::ServeConfig;
 use super::engine::VirtualEngine;
 use super::metrics::{ServeMetrics, SloTarget};
 use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Relative load per hour-of-day, normalized to a 1.0 peak (hour 13).
 /// The shape follows the usual consumer-serving diurnal curve: a deep
@@ -380,7 +388,7 @@ impl WorkloadSpec {
         assert!(total_w > 0.0, "class weights must sum > 0");
         // Session starts are the process thinned to the per-session rate.
         let session_process = self.process.scaled(1.0 / self.mean_turns());
-        let mut gen = ArrivalGen::new(&session_process, Rng::new(self.seed ^ ARRIVAL_STREAM));
+        let mut gen = ArrivalGen::new(session_process, Rng::new(self.seed ^ ARRIVAL_STREAM));
         let mut rng = Rng::new(self.seed);
         let mut events: Vec<ArrivalEvent> = Vec::with_capacity(self.requests as usize);
         let mut session = 0u64;
@@ -422,15 +430,48 @@ impl WorkloadSpec {
         events.truncate(self.requests as usize);
         events
     }
+
+    /// Lazy equivalent of [`WorkloadSpec::generate`]: an iterator yielding
+    /// the **byte-identical event sequence** while keeping only the
+    /// undrained turns of already-started sessions resident (a k-way heap
+    /// merge keyed `(at_ns, session, turn)` — O(active sessions) memory
+    /// instead of O(requests)). Pinned against `generate` by
+    /// `tests/prop_workload.rs`.
+    pub fn stream(&self) -> ArrivalStream {
+        assert!(!self.classes.is_empty(), "workload needs ≥ 1 class");
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+        assert!(total_w > 0.0, "class weights must sum > 0");
+        let session_process = self.process.scaled(1.0 / self.mean_turns());
+        let mut gen = ArrivalGen::new(session_process, Rng::new(self.seed ^ ARRIVAL_STREAM));
+        // Lookahead session start. Arrival instants draw from their own
+        // RNG stream (ARRIVAL_STREAM), so pre-drawing the next t0 never
+        // perturbs any per-request draw; for `requests == 0` this draws
+        // one instant `generate` would not, which is equally harmless.
+        let next_t0 = gen.next_ns();
+        ArrivalStream {
+            classes: self.classes.clone(),
+            total_w,
+            requests: self.requests,
+            gen,
+            rng: Rng::new(self.seed),
+            heap: BinaryHeap::new(),
+            next_t0,
+            next_session: 0,
+            generated: 0,
+            emitted: 0,
+            peak_resident: 0,
+        }
+    }
 }
 
 /// Run `spec` through a fresh [`VirtualEngine`] for `cfg` and return the
-/// serving metrics (per-class breakdowns included).
+/// serving metrics (per-class breakdowns included). Arrivals are pulled
+/// lazily via [`WorkloadSpec::stream`], so episode memory is bounded by
+/// active sessions, not by `spec.requests`.
 pub fn drive(cfg: &ServeConfig, spec: &WorkloadSpec) -> ServeMetrics {
-    let events = spec.generate();
     let mut eng = VirtualEngine::new(cfg.clone());
     eng.configure_classes(&spec.classes);
-    eng.submit_workload(&events);
+    eng.submit_workload_stream(spec);
     eng.run_to_completion().clone()
 }
 
@@ -467,9 +508,11 @@ fn pick_weighted(rng: &mut Rng, classes: &[TenantClass], total_w: f64) -> usize 
     classes.len() - 1
 }
 
-/// Stateful arrival-instant generator over the virtual-ns timeline.
-struct ArrivalGen<'a> {
-    process: &'a ArrivalProcess,
+/// Stateful arrival-instant generator over the virtual-ns timeline. Owns
+/// its process so [`ArrivalStream`] can carry one without a lifetime.
+#[derive(Debug, Clone)]
+struct ArrivalGen {
+    process: ArrivalProcess,
     rng: Rng,
     /// Current time, kept in f64 ns so long streams accumulate precisely.
     t_ns: f64,
@@ -477,9 +520,9 @@ struct ArrivalGen<'a> {
     on_until_ns: f64,
 }
 
-impl<'a> ArrivalGen<'a> {
-    fn new(process: &'a ArrivalProcess, mut rng: Rng) -> Self {
-        let on_until_ns = match process {
+impl ArrivalGen {
+    fn new(process: ArrivalProcess, mut rng: Rng) -> Self {
+        let on_until_ns = match &process {
             ArrivalProcess::Bursty { on_ms, .. } => exp_ns(&mut rng, on_ms * 1e6),
             _ => 0.0,
         };
@@ -493,7 +536,7 @@ impl<'a> ArrivalGen<'a> {
 
     /// Next arrival instant (ns); strictly non-decreasing.
     fn next_ns(&mut self) -> u64 {
-        match *self.process {
+        match self.process {
             ArrivalProcess::Poisson { rate_rps } => {
                 self.t_ns += exp_ns(&mut self.rng, 1e9 / rate_rps);
                 self.t_ns as u64
@@ -534,6 +577,152 @@ fn diurnal_at(t_ns: f64, day_s: f64) -> f64 {
     let bin = ((day_frac * 24.0) as usize).min(23);
     DIURNAL[bin]
 }
+
+/// Heap entry ordering [`ArrivalEvent`]s by the global sort key
+/// `(at_ns, session, turn)` — the exact comparator `generate` sorts by.
+/// Keys are unique (one event per session × turn), so equality under this
+/// order coincides with key equality.
+#[derive(Debug, Clone)]
+struct OrderedEvent(ArrivalEvent);
+
+impl OrderedEvent {
+    fn key(&self) -> (u64, u64, u32) {
+        (self.0.at_ns, self.0.session, self.0.turn)
+    }
+}
+
+impl PartialEq for OrderedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for OrderedEvent {}
+impl PartialOrd for OrderedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrderedEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// Lazy, heap-merged arrival stream — the iterator behind
+/// [`WorkloadSpec::stream`].
+///
+/// Sessions start in `t0` order (the arrival-instant RNG stream); starting
+/// a session draws its **entire** conversation into a min-heap keyed
+/// `(at_ns, session, turn)`, exactly the draws `generate` performs at the
+/// same point of the per-request RNG stream. The heap min is emitted once
+/// no unstarted session could precede it: future sessions start at
+/// `>= next_t0` and carry larger session ids, so a resident key at or
+/// before `(next_t0, ..)` is globally next. Emitting exactly `requests`
+/// events therefore reproduces `generate`'s sort + truncate byte for
+/// byte, while residency stays bounded by the turns of in-flight sessions
+/// ([`ArrivalStream::peak_resident`]).
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    classes: Vec<TenantClass>,
+    total_w: f64,
+    requests: u64,
+    gen: ArrivalGen,
+    rng: Rng,
+    heap: BinaryHeap<Reverse<OrderedEvent>>,
+    /// First-turn instant of the next (unstarted) session.
+    next_t0: u64,
+    next_session: u64,
+    /// Events drawn into the heap so far (emitted + resident).
+    generated: u64,
+    emitted: u64,
+    peak_resident: usize,
+}
+
+impl ArrivalStream {
+    /// Draw the next session's every turn into the heap.
+    fn start_session(&mut self) {
+        let t0 = self.next_t0;
+        let class = pick_weighted(&mut self.rng, &self.classes, self.total_w);
+        let cl = &self.classes[class];
+        let turns = cl.turns.sample(&mut self.rng).max(1);
+        let mut at = t0;
+        let mut context = 0u64;
+        for turn in 0..turns {
+            let (prompt, warm) = if turn == 0 {
+                (
+                    cl.prompt.sample(&mut self.rng).max(1),
+                    self.rng.chance(cl.warm_frac),
+                )
+            } else {
+                (context + cl.followup.sample(&mut self.rng).max(1), true)
+            };
+            let output = cl.output.sample(&mut self.rng).max(1);
+            self.heap.push(Reverse(OrderedEvent(ArrivalEvent {
+                at_ns: at,
+                class: class as u8,
+                session: self.next_session,
+                turn: turn as u32,
+                prompt_tokens: prompt,
+                output_tokens: output,
+                warm,
+            })));
+            context = prompt + output;
+            at += 1 + exp_ns(&mut self.rng, cl.think_ms * 1e6) as u64;
+        }
+        self.generated += turns;
+        self.next_session += 1;
+        self.next_t0 = self.gen.next_ns();
+        self.peak_resident = self.peak_resident.max(self.heap.len());
+    }
+
+    /// Arrivals currently resident (drawn but not yet emitted).
+    pub fn resident(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// High-water mark of resident arrivals over the stream's lifetime —
+    /// the O(active sessions) bound `BENCH_PR9.json` tracks.
+    pub fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = ArrivalEvent;
+
+    fn next(&mut self) -> Option<ArrivalEvent> {
+        if self.emitted == self.requests {
+            return None;
+        }
+        loop {
+            // Once `generate` would have stopped starting sessions, the
+            // remaining output is purely the heap drained in key order.
+            if self.generated >= self.requests {
+                break;
+            }
+            if let Some(Reverse(min)) = self.heap.peek() {
+                if min.0.at_ns <= self.next_t0 {
+                    // Ties on at_ns break by session id; every resident
+                    // session precedes every unstarted one.
+                    break;
+                }
+            }
+            self.start_session();
+        }
+        // Invariant: heap len == generated - emitted, and both break arms
+        // guarantee generated > emitted here.
+        let Reverse(OrderedEvent(e)) = self.heap.pop().expect("resident arrival");
+        self.emitted += 1;
+        Some(e)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.requests - self.emitted) as usize;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for ArrivalStream {}
 
 #[cfg(test)]
 mod tests {
@@ -672,6 +861,66 @@ mod tests {
             assert_eq!(ev.len(), 4);
             assert!(ev.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
         }
+    }
+
+    /// Tentpole determinism pin: the lazy heap merge yields byte-for-byte
+    /// the sorted vector, for every arrival shape (the property-test
+    /// version over random specs lives in `tests/prop_workload.rs`).
+    #[test]
+    fn stream_is_byte_identical_to_generate() {
+        for process in [
+            ArrivalProcess::Poisson { rate_rps: 800.0 },
+            ArrivalProcess::Bursty {
+                rate_on_rps: 2000.0,
+                on_ms: 20.0,
+                off_ms: 30.0,
+            },
+            ArrivalProcess::Trace {
+                peak_rps: 600.0,
+                day_s: 0.5,
+            },
+        ] {
+            let spec = WorkloadSpec {
+                process,
+                classes: default_tenants(),
+                requests: 500,
+                seed: 42,
+            };
+            let streamed: Vec<ArrivalEvent> = spec.stream().collect();
+            assert_eq!(streamed, spec.generate());
+        }
+    }
+
+    /// Satellite hardening: zero- and single-request streams terminate
+    /// cleanly through the merge path.
+    #[test]
+    fn stream_degenerate_sizes() {
+        let mut spec = WorkloadSpec::poisson(500.0, 0, 9);
+        assert_eq!(spec.stream().next(), None);
+        assert_eq!(spec.stream().len(), 0);
+        spec.requests = 1;
+        let one: Vec<ArrivalEvent> = spec.stream().collect();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one, spec.generate());
+    }
+
+    /// The memory claim itself: residency tracks active sessions (turns
+    /// in flight), not total requests. 4000 requests at a modest rate
+    /// keeps well under a quarter of the stream resident.
+    #[test]
+    fn stream_residency_is_bounded_by_active_sessions() {
+        let spec = WorkloadSpec::poisson(500.0, 4000, 11);
+        let mut s = spec.stream();
+        let mut n = 0u64;
+        while s.next().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 4000);
+        assert!(
+            s.peak_resident() < 1000,
+            "peak resident {} for 4000 requests",
+            s.peak_resident()
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::kvcache::fetch::FetchImpl;
 use crate::models::ModelConfig;
 
 /// Per-tenant-class slice of one load point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClassPoint {
     pub name: String,
     pub finished: u64,
@@ -27,7 +27,7 @@ pub struct ClassPoint {
 }
 
 /// One measured point on the latency-vs-offered-load curve.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LoadPoint {
     /// Workload shape (`poisson` / `bursty` / `trace`).
     pub workload: String,
@@ -142,6 +142,14 @@ pub fn estimate_capacity_rps(
 }
 
 /// Sweep offered load over `rates` for one workload shape.
+///
+/// Load points are independent virtual-time runs (each [`measure`] call is
+/// a pure function of its arguments), so the sweep fans them out across
+/// `std::thread` workers — one dispenser index per point, results written
+/// into per-point slots — and returns them in `rates` order. The output is
+/// identical to the serial loop whatever the worker count or completion
+/// order (`parallel_sweep_matches_serial` pins this); single-point or
+/// single-core sweeps skip thread setup entirely.
 pub fn sweep(
     cfg: &ServeConfig,
     classes: &[TenantClass],
@@ -150,9 +158,32 @@ pub fn sweep(
     requests: u64,
     seed: u64,
 ) -> Vec<LoadPoint> {
-    rates
-        .iter()
-        .map(|&r| measure(cfg, classes, kind, r, requests, seed))
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(rates.len());
+    if workers <= 1 {
+        return rates
+            .iter()
+            .map(|&r| measure(cfg, classes, kind, r, requests, seed))
+            .collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<LoadPoint>>> =
+        rates.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let Some(&r) = rates.get(i) else { break };
+                let p = measure(cfg, classes, kind, r, requests, seed);
+                *slots[i].lock().unwrap() = Some(p);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every load point measured"))
         .collect()
 }
 
@@ -285,6 +316,26 @@ mod tests {
             heavy.ttft_p99_ms
         );
         assert!(light.attainment >= heavy.attainment);
+    }
+
+    /// The threaded sweep returns exactly what the serial loop returns, in
+    /// `rates` order — parallelism changes wall-clock only, never results.
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let cfg = serve_config(&QWEN25_0_5B, 1, true);
+        let classes = default_tenants();
+        let rates = [150.0, 300.0, 450.0, 600.0, 750.0];
+        let serial: Vec<LoadPoint> = rates
+            .iter()
+            .map(|&r| measure(&cfg, &classes, "poisson", r, 48, 9))
+            .collect();
+        let parallel = sweep(&cfg, &classes, "poisson", &rates, 48, 9);
+        assert_eq!(parallel, serial);
+        // Slot-indexed writes pin output order to `rates`, not to worker
+        // completion order.
+        for (p, &r) in parallel.iter().zip(rates.iter()) {
+            assert_eq!(p.rate_rps, r);
+        }
     }
 
     #[test]

@@ -45,6 +45,20 @@ impl BlockLayout {
     pub fn cpu_block_addr(&self, idx: u64) -> Addr {
         Addr::new(NodeId::Cpu, self.cpu_pool_base + idx * self.block_bytes)
     }
+
+    /// Synthesize `n` disjoint CPU→GPU block copies onto `gpu`.
+    ///
+    /// Fetch cost in the DES depends only on the copy **count and sizes**
+    /// (engines are assigned round-robin by copy index; all blocks are
+    /// `block_bytes`), never on which pool slots are involved — so the
+    /// admission path can carry a bare block count
+    /// (`AdmitAction::Fetch::fetch_blocks`) and materialize equal-shape
+    /// copies here only when a fetch is actually simulated.
+    pub fn synth_copies(&self, gpu: u8, n: u64) -> Vec<crate::kvcache::fetch::CopySpec> {
+        (0..n)
+            .map(|i| (self.cpu_block_addr(i), self.gpu_block_addr(gpu, i), self.block_bytes))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -67,6 +81,19 @@ mod tests {
         assert_eq!(l.blocks_for(4097), 257);
         assert_eq!(l.blocks_for(1), 1);
         assert_eq!(l.blocks_for(0), 0);
+    }
+
+    #[test]
+    fn synth_copies_are_disjoint_block_sized_pairs() {
+        let l = BlockLayout::new(&QWEN25_0_5B, 16);
+        let copies = l.synth_copies(2, 4);
+        assert_eq!(copies.len(), 4);
+        for (i, (src, dst, bytes)) in copies.iter().enumerate() {
+            assert_eq!(*src, l.cpu_block_addr(i as u64));
+            assert_eq!(*dst, l.gpu_block_addr(2, i as u64));
+            assert_eq!(*bytes, l.block_bytes);
+        }
+        assert!(l.synth_copies(0, 0).is_empty());
     }
 
     #[test]

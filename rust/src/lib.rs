@@ -43,7 +43,16 @@
 //!   conversation replays hitting the CPU-tier prefix cache — ingested
 //!   event-driven on the engine's virtual clock, reported as per-class
 //!   percentiles / SLO attainment / goodput (`dma-latte serve`,
-//!   `benches/serving_load.rs`, `BENCH_PR7.json`). Fault injection and
+//!   `benches/serving_load.rs`, `BENCH_PR7.json`). The arrival path
+//!   scales to millions of requests per episode: the lazy
+//!   `WorkloadSpec::stream()` (k-way merge over per-session generators,
+//!   O(active-sessions) resident, event-identical to `generate()`) feeds
+//!   the engine's streaming submission slot, latency series live in
+//!   [`util::stats::LatHist`] (exact below `metrics_sample_cap`, ≤ 1 %
+//!   log-bucket sketch above) with request spans in a seeded
+//!   [`util::stats::Reservoir`], and load sweeps fan independent points
+//!   across host threads (`benches/serve_scale.rs`, `BENCH_PR9.json`).
+//!   Fault injection and
 //!   graceful degradation ride the same stack: [`cluster::faults`] turns a
 //!   `FaultSpec` into a seeded per-node health plan (NIC/xGMI derates,
 //!   stuck engines, compute stragglers, transient link flaps priced by a

@@ -17,9 +17,11 @@
 //!                     [--tenants default|name:w:prompt:output[:ttft[:tpot]],..]
 //!                     [--faults SPEC] [--degrade aware|blind]
 //!                     [--no-overlap] [--out results/]
-//!                     # trace-driven serving: sweep offered load, report
-//!                     # per-class TTFT/TPOT percentiles + SLO attainment;
-//!                     # --faults degrades the fleet (preset name or
+//!                     # trace-driven serving: sweep offered load (points
+//!                     # run in parallel across host cores, results
+//!                     # order-independent), report per-class TTFT/TPOT
+//!                     # percentiles + SLO attainment; --faults degrades
+//!                     # the fleet (preset name or
 //!                     # nic=N:F,flap=P,engines=K,xgmi=F,straggler=N:F,window=S)
 //! dma-latte faults    [--nodes 2] [--requests 256] [--seed 7] [--out results/]
 //!                     # canned fault scenarios: degraded-vs-healthy SLO
@@ -401,9 +403,10 @@ fn cmd_serve(args: &Args) {
     };
 
     println!(
-        "# serving load — {} · {kind} · {nodes} node(s) · {requests} reqs/point · overlap {}",
+        "# serving load — {} · {kind} · {nodes} node(s) · {requests} reqs/point · overlap {} · {} points across host threads",
         model.name,
-        if overlap { "on" } else { "off" }
+        if overlap { "on" } else { "off" },
+        rates.len(),
     );
     let pts = sl::sweep(&cfg, &classes, &kind, &rates, requests, seed);
     print!("{}", sl::render(&pts));

@@ -1,5 +1,8 @@
 //! Summary statistics used throughout the evaluation harness:
-//! geomean (the paper reports geomean speedups), percentiles, mean/stddev.
+//! geomean (the paper reports geomean speedups), percentiles, mean/stddev —
+//! plus the bounded-memory streaming accumulators behind `ServeMetrics`
+//! ([`LatHist`], [`Reservoir`]) so million-request serving episodes do not
+//! keep a per-request `Vec` alive.
 
 /// Geometric mean of positive values. Returns NaN for an empty slice.
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -84,6 +87,272 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Exact-phase sample cap for [`LatHist`] / [`Reservoir`] defaults. Every
+/// serving episode below this many samples per series reports the same
+/// bit-exact numbers as the pre-streaming unbounded vectors did.
+pub const LATHIST_DEFAULT_CAP: usize = 65_536;
+/// Log-bucket growth factor. The sketch's worst-case relative error is
+/// `sqrt(gamma) - 1` ≈ 0.995 % — just under the documented 1 % bound.
+pub const LATHIST_GAMMA: f64 = 1.02;
+/// Smallest bucketed value (1 ns — latencies below that underflow to min).
+pub const LATHIST_MIN: f64 = 1.0;
+/// Hard bucket-count ceiling: `ln(1e17) / ln(1.02)` ≈ 1976 buckets span
+/// 1 ns .. ~3 years, so 2048 bounds the sketch at ~16 KiB regardless of
+/// input range.
+pub const LATHIST_MAX_BUCKETS: usize = 2048;
+
+/// Bounded-memory latency accumulator: **exact** nearest-rank percentiles
+/// while at most `cap` samples have been pushed, a log-bucketed sketch with
+/// a ≤ 1 % relative-error bound beyond that.
+///
+/// Below the cap the accumulator is just a `Vec<f64>` in push order —
+/// `percentile` delegates to [`percentile_nearest_rank`], `mean` performs
+/// the same left-to-right summation as [`mean`], and [`std::ops::Index`] /
+/// `iter` expose the raw samples — so every existing caller sees
+/// bit-identical numbers. When sample `cap + 1` arrives the exact buffer is
+/// folded into γ = 1.02 log buckets and dropped; from then on memory is
+/// O(`LATHIST_MAX_BUCKETS`) and percentiles come from a counting walk whose
+/// answer lands in the bucket containing the true nearest-rank sample
+/// (bucket counts are exact), hence relative error ≤ √γ − 1 for values
+/// ≥ 1 ns. Values below 1 ns (or NaN) land in an underflow bucket reported
+/// as the running minimum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatHist {
+    /// Raw samples in push order; drained (and left empty) once spilled.
+    exact: Vec<f64>,
+    cap: usize,
+    /// Lazily-sized log buckets; empty until the exact phase spills.
+    buckets: Vec<u64>,
+    underflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatHist {
+    fn default() -> Self {
+        LatHist::with_cap(LATHIST_DEFAULT_CAP)
+    }
+}
+
+impl LatHist {
+    /// Accumulator holding up to `cap` exact samples before sketching.
+    pub fn with_cap(cap: usize) -> LatHist {
+        LatHist {
+            exact: Vec::new(),
+            cap,
+            buckets: Vec::new(),
+            underflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample.
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.count <= self.cap as u64 {
+            self.exact.push(v);
+        } else {
+            if !self.exact.is_empty() {
+                let drained = std::mem::take(&mut self.exact);
+                for x in drained {
+                    self.bucket_add(x);
+                }
+            }
+            self.bucket_add(v);
+        }
+    }
+
+    fn bucket_add(&mut self, v: f64) {
+        // `!(v >= ..)` also routes NaN to the underflow bucket.
+        if !(v >= LATHIST_MIN) {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((v / LATHIST_MIN).ln() / LATHIST_GAMMA.ln()).floor() as usize;
+        let idx = idx.min(LATHIST_MAX_BUCKETS - 1);
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+    }
+
+    /// Total samples pushed (not the resident count).
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    /// True iff no sample has been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// True once the exact phase has been folded into the sketch.
+    pub fn spilled(&self) -> bool {
+        self.count > self.cap as u64
+    }
+
+    /// The exact-phase samples in push order (empty after spilling).
+    pub fn iter(&self) -> std::slice::Iter<'_, f64> {
+        self.exact.iter()
+    }
+
+    /// Arithmetic mean of every sample ever pushed (exact in both phases;
+    /// same summation order as [`mean`]). NaN when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Nearest-rank percentile, `p` in `[0, 100]`. Exact below the cap,
+    /// ≤ 1 % relative error above it. NaN when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if !self.spilled() {
+            return percentile_nearest_rank(&self.exact, p);
+        }
+        let n = self.count;
+        let rank = (((p / 100.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut acc = self.underflow;
+        if rank <= acc {
+            return self.min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if rank <= acc {
+                // Geometric bucket midpoint; clamping to the observed range
+                // keeps the extremes exact.
+                let rep = LATHIST_MIN * LATHIST_GAMMA.powi(i as i32) * LATHIST_GAMMA.sqrt();
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+impl From<Vec<f64>> for LatHist {
+    fn from(xs: Vec<f64>) -> LatHist {
+        let mut h = LatHist::default();
+        for x in xs {
+            h.push(x);
+        }
+        h
+    }
+}
+
+impl std::ops::Index<usize> for LatHist {
+    type Output = f64;
+    /// Exact-phase sample by push index (panics after spilling, like
+    /// indexing the drained `Vec` it replaced).
+    fn index(&self, i: usize) -> &f64 {
+        &self.exact[i]
+    }
+}
+
+/// Default seed for [`Reservoir::default`]; instances that need replayable
+/// samples should pass their own seed via [`Reservoir::with_cap`].
+pub const RESERVOIR_DEFAULT_SEED: u64 = 0x5EED_0F5A_17C0_FFEE;
+
+/// Seeded Algorithm-R reservoir sample: keeps every item in push order up
+/// to `cap`, then replaces uniformly at random so the resident set stays a
+/// uniform sample of everything seen, in O(cap) memory.
+///
+/// `len()` reports the **logical** count (items ever pushed) so callers
+/// that previously sized a `Vec` keep working; `kept()` / `iter()` expose
+/// the bounded sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reservoir<T> {
+    kept: Vec<T>,
+    cap: usize,
+    seen: u64,
+    state: u64,
+}
+
+impl<T> Default for Reservoir<T> {
+    fn default() -> Self {
+        Reservoir::with_cap(LATHIST_DEFAULT_CAP, RESERVOIR_DEFAULT_SEED)
+    }
+}
+
+impl<T> Reservoir<T> {
+    /// Reservoir keeping at most `cap` items, replacement driven by `seed`.
+    pub fn with_cap(cap: usize, seed: u64) -> Reservoir<T> {
+        Reservoir {
+            kept: Vec::new(),
+            cap,
+            seen: 0,
+            state: seed,
+        }
+    }
+
+    /// splitmix64 — self-contained so the reservoir's stream never couples
+    /// to any other consumer of [`crate::util::rng::Rng`].
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Offer one item to the sample.
+    pub fn push(&mut self, item: T) {
+        self.seen += 1;
+        if self.kept.len() < self.cap {
+            self.kept.push(item);
+        } else if self.cap > 0 {
+            // Modulo bias is ~2^-40 at the caps used here — irrelevant for
+            // a diagnostic sample, and it keeps the replacement stream to
+            // one splitmix64 step per item.
+            let j = self.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.kept[j as usize] = item;
+            }
+        }
+    }
+
+    /// Items ever offered (logical length, not the resident count).
+    pub fn len(&self) -> usize {
+        self.seen as usize
+    }
+
+    /// True iff nothing has been offered.
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// The resident sample (push order until the cap is hit).
+    pub fn kept(&self) -> &[T] {
+        &self.kept
+    }
+
+    /// Iterate the resident sample.
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.kept.iter()
+    }
+}
+
+impl<T> From<Vec<T>> for Reservoir<T> {
+    fn from(xs: Vec<T>) -> Reservoir<T> {
+        let mut r = Reservoir::default();
+        for x in xs {
+            r.push(x);
+        }
+        r
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +432,122 @@ mod tests {
         let xs = [3.0, 1.0, 2.0];
         assert_eq!(min(&xs), 1.0);
         assert_eq!(max(&xs), 3.0);
+    }
+
+    #[test]
+    fn lathist_exact_phase_is_bit_identical_to_vec_stats() {
+        let xs: Vec<f64> = (0..200).map(|i| ((i * 37) % 101) as f64 * 1e6 + 0.25).collect();
+        let h: LatHist = xs.clone().into();
+        assert!(!h.spilled());
+        assert_eq!(h.len(), xs.len());
+        for p in [0.0, 1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), percentile_nearest_rank(&xs, p), "p{p}");
+        }
+        assert_eq!(h.mean(), mean(&xs));
+        assert_eq!(h[0], xs[0]);
+        assert_eq!(h.iter().copied().collect::<Vec<_>>(), xs);
+    }
+
+    #[test]
+    fn lathist_empty_and_singleton() {
+        let h = LatHist::default();
+        assert!(h.is_empty());
+        assert!(h.percentile(99.0).is_nan());
+        assert!(h.mean().is_nan());
+        let mut h = LatHist::with_cap(1);
+        h.push(42.0);
+        assert_eq!(h.percentile(50.0), 42.0);
+        assert_eq!(h.percentile(99.9), 42.0);
+        assert_eq!(h.mean(), 42.0);
+    }
+
+    #[test]
+    fn lathist_spill_bounds_memory_and_keeps_extremes() {
+        let mut h = LatHist::with_cap(16);
+        for i in 1..=1000u64 {
+            h.push(i as f64 * 1e3);
+        }
+        assert!(h.spilled());
+        assert_eq!(h.len(), 1000);
+        assert_eq!(h.iter().len(), 0, "exact buffer must drain on spill");
+        assert!(h.buckets.len() <= LATHIST_MAX_BUCKETS);
+        // p0/p100 clamp to the exact observed range.
+        assert_eq!(h.percentile(0.0), 1e3);
+        assert_eq!(h.percentile(100.0), 1e6);
+        // The mean is exact in both phases.
+        assert!((h.mean() - 500.5e3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lathist_underflow_reports_min() {
+        let mut h = LatHist::with_cap(2);
+        for v in [0.25, 0.5, 2e6, 3e6, 4e6] {
+            h.push(v);
+        }
+        assert!(h.spilled());
+        // Ranks 1-2 sit in the underflow bucket -> reported as the min.
+        assert_eq!(h.percentile(1.0), 0.25);
+        assert_eq!(h.percentile(100.0), 4e6);
+    }
+
+    #[test]
+    fn lathist_sketch_error_bound_property() {
+        // Satellite: pinned <= 1 % relative error past the cap, over random
+        // log-uniform latency distributions spanning ns..minutes.
+        use crate::util::proptest::{run as prop_run, Config};
+        prop_run(
+            "lathist_sketch_error_bound",
+            Config { cases: 24, ..Default::default() },
+            |rng| {
+                let n = 1500 + rng.below(1500) as usize;
+                let mut h = LatHist::with_cap(32);
+                let mut all = Vec::with_capacity(n);
+                for _ in 0..n {
+                    // log-uniform over [1e2, 1e11) ns.
+                    let v = 10f64.powf(2.0 + rng.f64() * 9.0);
+                    h.push(v);
+                    all.push(v);
+                }
+                assert!(h.spilled());
+                for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+                    let approx = h.percentile(p);
+                    let exact = percentile_nearest_rank(&all, p);
+                    let rel = (approx - exact).abs() / exact;
+                    assert!(
+                        rel <= 0.01,
+                        "p{p}: approx {approx} vs exact {exact} (rel err {rel:.4})"
+                    );
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn reservoir_below_cap_keeps_push_order() {
+        let mut r: Reservoir<u64> = Reservoir::with_cap(8, 9);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.kept(), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_deterministic_and_samples_input() {
+        let mk = || {
+            let mut r: Reservoir<u64> = Reservoir::with_cap(32, 1234);
+            for i in 0..5000 {
+                r.push(i);
+            }
+            r
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "same seed must keep the same sample");
+        assert_eq!(a.len(), 5000);
+        assert_eq!(a.kept().len(), 32);
+        assert!(a.iter().all(|&x| x < 5000));
+        // Replacement actually happened: the sample is not just 0..32.
+        assert!(a.iter().any(|&x| x >= 32));
     }
 }

@@ -263,6 +263,52 @@ fn trace_driven_serving_replays_bit_identically() {
     assert_eq!(first.queue_peak, second.queue_peak);
 }
 
+/// The lazy arrival stream (`submit_workload_stream`, the path `drive`
+/// uses since PR 9) and the historical materialized path
+/// (`generate()` + `submit_workload`) produce bit-identical serving
+/// metrics, field for field — so the streamed engine inherits every
+/// modeled number the BENCH_PR7/PR8 trajectories were recorded against.
+#[test]
+fn streamed_serving_matches_materialized_bit_identically() {
+    use dma_latte::coordinator::workload::{default_tenants, drive, ArrivalProcess, WorkloadSpec};
+    use dma_latte::coordinator::VirtualEngine;
+    use dma_latte::figures::serving_load::serve_config;
+    use dma_latte::models::zoo::QWEN25_0_5B;
+
+    let cfg = serve_config(&QWEN25_0_5B, 2, true);
+    let spec = WorkloadSpec {
+        process: ArrivalProcess::Trace {
+            peak_rps: 800.0,
+            day_s: 0.5,
+        },
+        classes: default_tenants(),
+        requests: 96,
+        seed: 21,
+    };
+    let streamed = drive(&cfg, &spec);
+    let mut eng = VirtualEngine::new(cfg.clone());
+    eng.configure_classes(&spec.classes);
+    eng.submit_workload(&spec.generate());
+    let materialized = eng.run_to_completion().clone();
+
+    assert_eq!(streamed.wall_ns, materialized.wall_ns, "serving wall clock");
+    assert_eq!(streamed.requests, materialized.requests, "per-request spans");
+    assert_eq!(streamed.ttft_ns, materialized.ttft_ns, "ttft distribution");
+    assert_eq!(streamed.tpot_ns, materialized.tpot_ns, "tpot distribution");
+    assert_eq!(streamed.submitted, materialized.submitted);
+    assert_eq!(streamed.finished, materialized.finished);
+    assert_eq!(streamed.tokens_out, materialized.tokens_out);
+    assert_eq!(streamed.comm_ns, materialized.comm_ns, "comm total");
+    assert_eq!(streamed.comm_exposed_ns, materialized.comm_exposed_ns, "comm exposed");
+    assert_eq!(streamed.comm_hidden_ns, materialized.comm_hidden_ns, "comm hidden");
+    assert_eq!(streamed.fetch_bytes, materialized.fetch_bytes);
+    assert_eq!(streamed.cache_hits, materialized.cache_hits);
+    assert_eq!(streamed.cache_misses, materialized.cache_misses);
+    assert_eq!(streamed.per_class, materialized.per_class, "per-class counters");
+    assert_eq!(streamed.queue_depth, materialized.queue_depth, "queue timeline");
+    assert_eq!(streamed.queue_peak, materialized.queue_peak);
+}
+
 /// The hierarchical executor's cached node rounds replay identically:
 /// first call builds, later calls (and other node counts in between) hit
 /// the cache and must reproduce the same modeled latency split.

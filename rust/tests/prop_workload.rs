@@ -62,6 +62,51 @@ fn prop_same_seed_same_stream() {
     );
 }
 
+/// The lazy stream ([`WorkloadSpec::stream`]) is the materialized
+/// reference ([`WorkloadSpec::generate`]), event for event, over random
+/// specs covering all three arrival processes, multi-turn sessions and
+/// degenerate request counts (including 0) — the exact-equality contract
+/// the engine's O(active-sessions) arrival path rests on.
+#[test]
+fn prop_stream_matches_materialized() {
+    prop_run(
+        "stream-vs-materialized",
+        Config {
+            cases: 24,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let process = match rng.below(3) {
+                0 => ArrivalProcess::Poisson {
+                    rate_rps: 50.0 + rng.f64() * 950.0,
+                },
+                1 => ArrivalProcess::Bursty {
+                    rate_on_rps: 500.0 + rng.f64() * 1500.0,
+                    on_ms: 10.0 + rng.f64() * 40.0,
+                    off_ms: 10.0 + rng.f64() * 40.0,
+                },
+                _ => ArrivalProcess::Trace {
+                    peak_rps: 200.0 + rng.f64() * 800.0,
+                    day_s: 0.2 + rng.f64(),
+                },
+            };
+            let spec = WorkloadSpec {
+                process,
+                classes: default_tenants(),
+                requests: rng.below(160),
+                seed: rng.next_u64(),
+            };
+            let streamed: Vec<_> = spec.stream().collect();
+            assert_eq!(
+                streamed,
+                spec.generate(),
+                "stream must replay generate() exactly (requests={})",
+                spec.requests
+            );
+        },
+    );
+}
+
 /// Poisson arrivals: the measured rate over a long stream matches the
 /// requested rate (mean inter-arrival ≈ 1/λ, well within 10%).
 #[test]
