@@ -57,6 +57,64 @@ impl Default for DegradePolicy {
     }
 }
 
+/// Disaggregated deployment shape: `prefill_nodes` nodes run prefill
+/// only, `decode_nodes` nodes run decode only, and every admitted request
+/// migrates its KV cache prefill→decode over the NIC
+/// ([`crate::kvcache::migrate`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DisaggSpec {
+    /// Nodes dedicated to prefill (≥ 1).
+    pub prefill_nodes: usize,
+    /// Nodes dedicated to decode (≥ 1).
+    pub decode_nodes: usize,
+    /// KV migration schedule (layer-pipelined by default).
+    pub schedule: crate::kvcache::MigrateSchedule,
+}
+
+impl DisaggSpec {
+    /// `P` prefill + `D` decode nodes with the pipelined schedule.
+    pub fn new(prefill_nodes: usize, decode_nodes: usize) -> Self {
+        assert!(prefill_nodes >= 1 && decode_nodes >= 1);
+        DisaggSpec {
+            prefill_nodes,
+            decode_nodes,
+            schedule: crate::kvcache::MigrateSchedule::LayerPipelined,
+        }
+    }
+
+    /// Use the blocking bulk-transfer schedule (the comparison baseline).
+    pub fn blocking(mut self) -> Self {
+        self.schedule = crate::kvcache::MigrateSchedule::Blocking;
+        self
+    }
+
+    /// Total nodes in the deployment.
+    pub fn total_nodes(&self) -> usize {
+        self.prefill_nodes + self.decode_nodes
+    }
+
+    /// Parse a `P:D` ratio, e.g. `3:1` (the `--disagg` CLI syntax).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (p, d) = s
+            .split_once(':')
+            .ok_or_else(|| format!("expected P:D (e.g. 3:1), got {s:?}"))?;
+        let prefill: usize = p
+            .trim()
+            .parse()
+            .map_err(|e| format!("bad prefill node count {p:?}: {e}"))?;
+        let decode: usize = d
+            .trim()
+            .parse()
+            .map_err(|e| format!("bad decode node count {d:?}: {e}"))?;
+        if prefill == 0 || decode == 0 {
+            return Err(format!(
+                "need at least one node on each side, got {prefill}:{decode}"
+            ));
+        }
+        Ok(DisaggSpec::new(prefill, decode))
+    }
+}
+
 /// Configuration for one serving engine (virtual or real).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -111,6 +169,12 @@ pub struct ServeConfig {
     pub faults: Option<FaultSpec>,
     /// Reaction policy when `faults` is set (ignored when healthy).
     pub degrade: DegradePolicy,
+    /// Disaggregated prefill/decode deployment: `None` (the default) is
+    /// colocated serving and perturbs nothing — the engine takes the
+    /// existing single-pool path bit-identically. `Some` routes prefill
+    /// and decode to separate node pools and charges each request a KV
+    /// migration over the NIC (`num_nodes` is overridden to P+D).
+    pub disagg: Option<DisaggSpec>,
 }
 
 impl ServeConfig {
@@ -133,7 +197,16 @@ impl ServeConfig {
             metrics_sample_cap: crate::util::stats::LATHIST_DEFAULT_CAP,
             faults: None,
             degrade: DegradePolicy::aware(),
+            disagg: None,
         }
+    }
+
+    /// Disaggregate into `prefill_nodes` + `decode_nodes` pools (also
+    /// sizes `num_nodes` to the total).
+    pub fn with_disagg(mut self, spec: DisaggSpec) -> Self {
+        self.num_nodes = spec.total_nodes();
+        self.disagg = Some(spec);
+        self
     }
 
     /// Deploy across `num_nodes` 8-GPU nodes.
@@ -206,5 +279,49 @@ mod tests {
     fn multi_node_world_size() {
         let c = ServeConfig::new(&LLAMA31_8B, FetchImpl::DmaB2b).with_nodes(4);
         assert_eq!(c.world_size(), 32);
+    }
+
+    #[test]
+    fn disagg_parse_accepts_ratios() {
+        let d = DisaggSpec::parse("3:1").unwrap();
+        assert_eq!((d.prefill_nodes, d.decode_nodes), (3, 1));
+        assert_eq!(d.total_nodes(), 4);
+        assert_eq!(d.schedule, crate::kvcache::MigrateSchedule::LayerPipelined);
+        assert_eq!(
+            DisaggSpec::parse(" 1 : 2 ").unwrap().total_nodes(),
+            3,
+            "whitespace around the ratio is tolerated"
+        );
+        assert_eq!(
+            DisaggSpec::parse("2:2").unwrap().blocking().schedule,
+            crate::kvcache::MigrateSchedule::Blocking
+        );
+    }
+
+    #[test]
+    fn disagg_parse_rejects_garbage_with_reasons() {
+        // PR 8 style: every rejection is a Result with a descriptive
+        // message, never a panic — the CLI surfaces these verbatim.
+        let e = DisaggSpec::parse("3").unwrap_err();
+        assert!(e.contains("P:D"), "{e}");
+        let e = DisaggSpec::parse("a:1").unwrap_err();
+        assert!(e.contains("prefill"), "{e}");
+        let e = DisaggSpec::parse("1:b").unwrap_err();
+        assert!(e.contains("decode"), "{e}");
+        let e = DisaggSpec::parse("0:2").unwrap_err();
+        assert!(e.contains("at least one node"), "{e}");
+        assert!(DisaggSpec::parse("1:0").is_err());
+        assert!(DisaggSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn with_disagg_sizes_the_world() {
+        let c = ServeConfig::new(&LLAMA31_8B, FetchImpl::DmaB2b)
+            .with_disagg(DisaggSpec::parse("3:1").unwrap());
+        assert_eq!(c.num_nodes, 4);
+        assert_eq!(c.world_size(), 32);
+        assert!(c.disagg.is_some());
+        // Default stays colocated.
+        assert!(ServeConfig::new(&LLAMA31_8B, FetchImpl::DmaB2b).disagg.is_none());
     }
 }

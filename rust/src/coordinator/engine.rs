@@ -19,15 +19,16 @@
 //! drawn on demand as the clock advances, so the resident arrival set
 //! stays O(active sessions) no matter how long the episode runs.
 
+use crate::cluster::topology::NicModel;
 use crate::cluster::{hier, ClusterTopology, FaultPlan};
 use crate::kvcache::fetch::{run_fetch, FetchImpl, FetchOutcome};
-use crate::kvcache::BlockLayout;
+use crate::kvcache::{BlockLayout, MigrateOutcome, MigrateSchedule, Migrator};
 use crate::obs::{record, SpanKind, Track};
 use crate::sim::{Sim, SimConfig};
 use crate::util::stats::{LatHist, Reservoir};
 
 use super::comm::CollectiveComm;
-use super::config::ServeConfig;
+use super::config::{DisaggSpec, ServeConfig};
 use super::metrics::{ClassStats, RequestSpan, ServeMetrics, SloTarget};
 use super::request::{Request, RequestState};
 use super::scheduler::{AdmitAction, Scheduler};
@@ -144,6 +145,48 @@ impl FaultContext {
     }
 }
 
+/// Disaggregated-serving state, built once at construction when
+/// [`ServeConfig::disagg`] is set. Colocated runs never build one — every
+/// disagg hook below gates on the `Option`, so the colocated engine stays
+/// bit-identical to the pre-disagg code (`tests/determinism.rs`).
+///
+/// Resource model: each prefill node is an independent lane (its own GPU
+/// frontier — prefill TP stays node-local, folded into the perf model
+/// like a 1-node deployment) with its own NIC send port; admitted misses
+/// prefill on the least-loaded lane, then migrate their KV to the decode
+/// pool through the lane's port ([`crate::kvcache::migrate`]). The
+/// engine's shared `gpu_free` / `comm` become the *decode pool's*
+/// resources (`comm` is sized for `decode_nodes`).
+struct DisaggContext {
+    spec: DisaggSpec,
+    /// Per-prefill-lane GPU compute frontier.
+    prefill_free: Vec<u64>,
+    /// Per-prefill-lane NIC send-port frontier (posts + payloads
+    /// serialize per port, as everywhere in the cluster layer).
+    nic_free: Vec<u64>,
+    /// NIC link between the pools (cluster default: 400 Gb/s RoCE).
+    nic: NicModel,
+    /// Persistent prefill-side + decode-side DES pair for migration legs.
+    migrator: Migrator,
+    /// Memoized migration cost per (schedule, block count) — like
+    /// `fetch_cache`, the DES outcome depends only on copy counts/sizes.
+    mig_cache: std::collections::HashMap<(MigrateSchedule, u64), MigrateOutcome>,
+}
+
+impl DisaggContext {
+    fn build(cfg: &ServeConfig) -> Option<DisaggContext> {
+        let spec = cfg.disagg?;
+        Some(DisaggContext {
+            spec,
+            prefill_free: vec![0; spec.prefill_nodes],
+            nic_free: vec![0; spec.prefill_nodes],
+            nic: NicModel::default(),
+            migrator: Migrator::new(),
+            mig_cache: std::collections::HashMap::new(),
+        })
+    }
+}
+
 /// Virtual-time serving engine.
 pub struct VirtualEngine {
     pub cfg: ServeConfig,
@@ -167,14 +210,20 @@ pub struct VirtualEngine {
     pending: Vec<Pending>,
     running: Vec<Request>,
     pub metrics: ServeMetrics,
-    /// Memoized fetch cost per copy-count (all blocks are equal-sized).
-    fetch_cache: std::collections::HashMap<usize, FetchOutcome>,
+    /// Memoized fetch cost per (implementation, copy-count). All blocks
+    /// are equal-sized, so the count pins the copy shape — but the cost
+    /// is implementation-specific, so [`FetchImpl`] must be in the key or
+    /// a config change could replay stale outcomes.
+    fetch_cache: std::collections::HashMap<(FetchImpl, usize), FetchOutcome>,
     /// Cluster-aware collective sizing (free on a single node; routed
     /// through `cluster::select_cluster` when `cfg.num_nodes > 1`).
     comm: CollectiveComm,
     /// Fault plan + drain state; `None` on healthy runs (the default) —
     /// no fault hook then touches the serving path.
     faults: Option<FaultContext>,
+    /// Disaggregated prefill/decode state; `None` on colocated runs (the
+    /// default) — no disagg hook then touches the serving path.
+    disagg: Option<DisaggContext>,
     /// Queue-depth timeline decimation state (see `record_queue_depth`).
     queue_tick: u64,
     queue_stride: u64,
@@ -197,9 +246,19 @@ impl VirtualEngine {
             0,
         );
         let faults = FaultContext::build(&cfg);
-        let comm = match &faults {
-            Some(ctx) => ctx.comm(&cfg),
-            None => CollectiveComm::new(&cfg),
+        let disagg = DisaggContext::build(&cfg);
+        let comm = if let Some(ctx) = &faults {
+            // Fault plans describe the full fleet; disaggregation assumes
+            // a healthy one (the fault context wins the comm model).
+            ctx.comm(&cfg)
+        } else if let Some(d) = &cfg.disagg {
+            // Per-step TP collectives run inside the decode pool only —
+            // prefill lanes are node-local (D == 1 makes decode comm-free).
+            let mut decode_cfg = cfg.clone();
+            decode_cfg.num_nodes = d.decode_nodes;
+            CollectiveComm::new(&decode_cfg)
+        } else {
+            CollectiveComm::new(&cfg)
         };
         let mut metrics = ServeMetrics::default();
         // Bounded-memory series: exact (bit-identical to the historical
@@ -229,6 +288,7 @@ impl VirtualEngine {
             fetch_cache: std::collections::HashMap::new(),
             comm,
             faults,
+            disagg,
             queue_tick: 0,
             queue_stride: 1,
             cfg,
@@ -472,19 +532,140 @@ impl VirtualEngine {
         self.metrics.queue_depth.push((self.now, depth));
     }
 
-    /// Measure the fetch cost of moving `n` blocks (memoized by count —
-    /// every block has identical size and engines are assigned by copy
-    /// index, so the DES outcome depends only on the count, never on the
-    /// addresses; see [`BlockLayout::synth_copies`]). Equal-shape copies
-    /// are materialized only on a memo miss.
+    /// Measure the fetch cost of moving `n` blocks, memoized by
+    /// `(FetchImpl, count)` — every block has identical size and engines
+    /// are assigned by copy index, so the DES outcome depends only on the
+    /// implementation and the count, never on the addresses (see
+    /// [`BlockLayout::synth_copies`]). Keying by count alone would replay
+    /// stale outcomes if `cfg.fetch` changes mid-engine. Equal-shape
+    /// copies are materialized only on a memo miss, where the layout
+    /// invariant the memo rests on is asserted.
     fn fetch_cost(&mut self, n: u64) -> FetchOutcome {
-        if let Some(o) = self.fetch_cache.get(&(n as usize)) {
+        let key = (self.cfg.fetch, n as usize);
+        if let Some(o) = self.fetch_cache.get(&key) {
             return *o;
         }
         let copies = self.sched.layout.synth_copies(self.sched.gpu, n);
+        assert!(
+            copies.iter().all(|c| c.2 == self.sched.layout.block_bytes),
+            "fetch memo requires equal-size blocks"
+        );
         let out = run_fetch(&mut self.fetch_sim, self.cfg.fetch, &copies);
-        self.fetch_cache.insert(n as usize, out);
+        self.fetch_cache.insert(key, out);
         out
+    }
+
+    /// Disaggregated prefill: run the prompt on the least-loaded prefill
+    /// lane (node-local TP — no cross-node collective), then migrate the
+    /// request's KV blocks to the decode pool through that lane's NIC
+    /// port. Returns the instant the request can join the decode batch.
+    ///
+    /// With the layer-pipelined schedule the decode side may start step 0
+    /// while the tail layers are still in flight: the request is ready at
+    /// `max(first_ready, total - step0)` after the migration starts — by
+    /// the time step 0's compute reaches layer `l`, chunk `l` has landed.
+    /// The blocking schedule has `first_ready == total`, so the same
+    /// formula charges it the full transfer — the streamed ready instant
+    /// is never later, which is the structural form of the "never slower"
+    /// acceptance bound.
+    fn disagg_prefill(&mut self, prompt_tokens: u64, t_prefill: u64, emitting: bool) -> u64 {
+        let n_blocks = self.sched.layout.blocks_for(prompt_tokens);
+        let step0 =
+            (self.cfg.perf.decode_step_s(self.cfg.model, 1, prompt_tokens) * 1e9) as u64;
+        let host_done = self.host_free;
+        let layers = self.cfg.model.layers;
+        let fetch = self.cfg.fetch;
+        let layout = &self.sched.layout;
+        let ctx = self.disagg.as_mut().expect("disagg context");
+        let key = (ctx.spec.schedule, n_blocks);
+        let out = match ctx.mig_cache.get(&key) {
+            Some(o) => *o,
+            None => {
+                let o = ctx.migrator.cost(
+                    layout,
+                    layers,
+                    fetch,
+                    &ctx.nic,
+                    n_blocks,
+                    ctx.spec.schedule,
+                );
+                ctx.mig_cache.insert(key, o);
+                o
+            }
+        };
+        // Least-loaded lane (ties to the lowest index — deterministic).
+        let lane = ctx
+            .prefill_free
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &f)| f)
+            .map(|(i, _)| i)
+            .unwrap();
+        let start = ctx.prefill_free[lane].max(host_done);
+        let prefill_done = start + t_prefill;
+        ctx.prefill_free[lane] = prefill_done;
+        // The lane's NIC port serializes across this lane's migrations:
+        // if the port is still draining an earlier cache, everything past
+        // the port-open instant shifts by the wait.
+        let open_abs = prefill_done + out.nic_open_ns;
+        let delay = ctx.nic_free[lane].saturating_sub(open_abs);
+        ctx.nic_free[lane] = prefill_done + delay + out.nic_close_ns;
+        let ready_rel = out
+            .first_ready_ns
+            .max(out.total_ns.saturating_sub(step0));
+        let ready = prefill_done + delay + ready_rel;
+        self.metrics.gpu_busy_ns += t_prefill;
+        self.metrics.migrations += 1;
+        self.metrics.migrated_bytes += out.bytes;
+        self.metrics.migration_ns += delay + out.total_ns;
+        self.metrics.migration_nic_busy_ns += out.nic_busy_ns;
+        if emitting {
+            let node = lane as u8;
+            let nic_s = prefill_done + delay + out.nic_open_ns;
+            let nic_e = prefill_done + delay + out.nic_close_ns;
+            let mig_end = prefill_done + delay + out.total_ns;
+            record::with(|r| {
+                // Prefill compute on the lane's node-local track.
+                r.span(
+                    "prefill".to_string(),
+                    SpanKind::Gemm,
+                    Track::Cu { node },
+                    start,
+                    prefill_done,
+                );
+                // D2H save leg on the lane's DMA track.
+                r.span(
+                    "kv save d2h".to_string(),
+                    SpanKind::Copy,
+                    Track::Dma {
+                        node,
+                        gpu: 0,
+                        engine: 0,
+                    },
+                    prefill_done,
+                    prefill_done + out.save_ns,
+                );
+                // NIC port occupancy — exclusive track, serialized by
+                // `nic_free` above.
+                r.span(
+                    "kv migrate".to_string(),
+                    SpanKind::Nic,
+                    Track::Nic { node },
+                    nic_s,
+                    nic_e.max(nic_s),
+                );
+                // H2D fetch leg on the decode pool's PCIe track
+                // (contiguous-tail approximation of the chunked leg).
+                r.span(
+                    "kv migrate h2d".to_string(),
+                    SpanKind::Copy,
+                    Track::Pcie,
+                    mig_end.saturating_sub(out.fetch_ns),
+                    mig_end,
+                );
+            });
+        }
+        ready
     }
 
     /// Run until all submitted requests finish; returns the metrics.
@@ -685,47 +866,54 @@ impl VirtualEngine {
                     let t = self.scale_compute(
                         (self.cfg.perf.prefill_s(self.cfg.model, req.prompt_tokens) * 1e9) as u64,
                     );
-                    // Cross-node TP all-reduces of the prompt activations
-                    // (0 on a single node — folded into the perf model);
-                    // only the part no GEMM window hides lands on the
-                    // critical path.
-                    let comm = self.comm.step_allreduce_split(
-                        self.cfg.model,
-                        req.prompt_tokens,
-                        t,
-                        self.cfg.comm_overlap,
-                    );
-                    let start = self.gpu_free.max(self.host_free);
-                    self.gpu_free = start + t + comm.exposed_ns;
-                    self.metrics.gpu_busy_ns += t;
-                    self.metrics.comm_ns += comm.total_ns;
-                    self.metrics.comm_exposed_ns += comm.exposed_ns;
-                    self.metrics.comm_hidden_ns += comm.hidden_ns();
-                    if emitting {
-                        let exposed = comm.exposed_ns;
-                        record::with(|r| {
-                            r.span(
-                                "prefill".to_string(),
-                                SpanKind::Gemm,
-                                Track::Gpu,
-                                start,
-                                start + t,
-                            );
-                            if exposed > 0 {
+                    let ready = if self.disagg.is_some() {
+                        // Disaggregated: prefill on a dedicated lane, then
+                        // migrate the KV cache to the decode pool.
+                        self.disagg_prefill(req.prompt_tokens, t, emitting)
+                    } else {
+                        // Cross-node TP all-reduces of the prompt
+                        // activations (0 on a single node — folded into
+                        // the perf model); only the part no GEMM window
+                        // hides lands on the critical path.
+                        let comm = self.comm.step_allreduce_split(
+                            self.cfg.model,
+                            req.prompt_tokens,
+                            t,
+                            self.cfg.comm_overlap,
+                        );
+                        let start = self.gpu_free.max(self.host_free);
+                        self.gpu_free = start + t + comm.exposed_ns;
+                        self.metrics.gpu_busy_ns += t;
+                        self.metrics.comm_ns += comm.total_ns;
+                        self.metrics.comm_exposed_ns += comm.exposed_ns;
+                        self.metrics.comm_hidden_ns += comm.hidden_ns();
+                        if emitting {
+                            let exposed = comm.exposed_ns;
+                            record::with(|r| {
                                 r.span(
-                                    "tp allreduce".to_string(),
-                                    SpanKind::ExposedComm,
-                                    Track::Comm,
+                                    "prefill".to_string(),
+                                    SpanKind::Gemm,
+                                    Track::Gpu,
+                                    start,
                                     start + t,
-                                    start + t + exposed,
                                 );
-                            }
-                        });
-                    }
+                                if exposed > 0 {
+                                    r.span(
+                                        "tp allreduce".to_string(),
+                                        SpanKind::ExposedComm,
+                                        Track::Comm,
+                                        start + t,
+                                        start + t + exposed,
+                                    );
+                                }
+                            });
+                        }
+                        self.gpu_free
+                    };
                     req.state = RequestState::Prefilling;
                     self.pending.push(Pending {
                         req,
-                        ready_ns: self.gpu_free,
+                        ready_ns: ready,
                     });
                 }
             }
@@ -1311,6 +1499,119 @@ mod tests {
         assert_eq!(ma.queue_depth, mb.queue_depth);
         assert_eq!((ma.submitted, ma.finished), (mb.submitted, mb.finished));
         assert_eq!((ma.cache_hits, ma.fetch_bytes), (mb.cache_hits, mb.fetch_bytes));
+    }
+
+    /// The fetch-cost memo keys on the implementation, not just the block
+    /// count: flipping `cfg.fetch` on a live engine must re-measure, and
+    /// flipping back must replay the original memo entry.
+    #[test]
+    fn fetch_cost_memo_keys_on_impl() {
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaBaseline);
+        cfg.gpu_blocks = 1 << 18;
+        let mut eng = VirtualEngine::new(cfg);
+        let base = eng.fetch_cost(64);
+        eng.cfg.fetch = FetchImpl::DmaB2b;
+        let b2b = eng.fetch_cost(64);
+        assert!(
+            base.host_ns > 10 * b2b.host_ns,
+            "stale memo: baseline {} vs b2b {} host ns",
+            base.host_ns,
+            b2b.host_ns
+        );
+        // Both entries coexist and replay exactly.
+        assert_eq!(eng.fetch_cost(64).host_ns, b2b.host_ns);
+        eng.cfg.fetch = FetchImpl::DmaBaseline;
+        assert_eq!(eng.fetch_cost(64).host_ns, base.host_ns);
+    }
+
+    fn disagg_cfg(schedule_blocking: bool) -> ServeConfig {
+        use crate::coordinator::config::DisaggSpec;
+        let mut spec = DisaggSpec::new(1, 1);
+        if schedule_blocking {
+            spec = spec.blocking();
+        }
+        let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b).with_disagg(spec);
+        cfg.gpu_blocks = 1 << 18;
+        cfg.hit_rate = 0.0; // every request takes the prefill+migrate path
+        cfg
+    }
+
+    /// Disaggregated routing: misses prefill on the prefill lane and
+    /// migrate their whole KV to the decode pool; a 1-node decode pool
+    /// pays no cross-node collective per step.
+    #[test]
+    fn disagg_routes_prefill_and_migrates() {
+        let mut eng = VirtualEngine::new(disagg_cfg(false));
+        for i in 0..8 {
+            eng.submit(Request::new(i, 4096, 8, 0), false);
+        }
+        let m = eng.run_to_completion().clone();
+        assert_eq!(m.finished, 8);
+        assert_eq!(m.cache_misses, 8);
+        assert_eq!(m.migrations, 8);
+        let layout = BlockLayout::new(&QWEN25_0_5B, 16);
+        assert_eq!(
+            m.migrated_bytes,
+            8 * layout.blocks_for(4096) * layout.block_bytes
+        );
+        assert!(m.migration_ns > 0);
+        assert!(m.migration_nic_busy_ns > 0);
+        assert_eq!(m.comm_ns, 0, "1-node decode pool has no NIC collective");
+        // Colocated runs never touch the migration path.
+        let colo = run_small(FetchImpl::DmaB2b, 8, 0.0);
+        assert_eq!((colo.migrations, colo.migrated_bytes), (0, 0));
+    }
+
+    /// The serving-level form of the acceptance bound: with everything
+    /// else identical, the layer-pipelined migration schedule yields a
+    /// TTFT no worse than the blocking bulk transfer — and strictly
+    /// better once the prompt is big enough to stream in many chunks.
+    #[test]
+    fn disagg_pipelined_ttft_beats_blocking() {
+        let ttft = |blocking: bool| {
+            let mut eng = VirtualEngine::new(disagg_cfg(blocking));
+            eng.submit(Request::new(0, 4096, 8, 0), false);
+            let m = eng.run_to_completion().clone();
+            assert_eq!(m.finished, 1);
+            assert_eq!(m.migrations, 1);
+            m.ttft_ns[0]
+        };
+        let blocking = ttft(true);
+        let pipelined = ttft(false);
+        assert!(
+            pipelined < blocking,
+            "pipelined {pipelined} !< blocking {blocking}"
+        );
+        // Small prompts degenerate to a single chunk: never worse.
+        let ttft_small = |blocking: bool| {
+            let mut eng = VirtualEngine::new(disagg_cfg(blocking));
+            eng.submit(Request::new(0, 32, 8, 0), false);
+            eng.run_to_completion().ttft_ns[0]
+        };
+        assert!(ttft_small(false) <= ttft_small(true));
+    }
+
+    /// Multiple prefill lanes parallelize prompt processing: a 2:1 split
+    /// drains a prefill-heavy burst no slower than 1:1 (same decode pool).
+    #[test]
+    fn disagg_prefill_lanes_parallelize() {
+        use crate::coordinator::config::DisaggSpec;
+        let run = |p: usize| {
+            let mut cfg = ServeConfig::new(&QWEN25_0_5B, FetchImpl::DmaB2b)
+                .with_disagg(DisaggSpec::new(p, 1));
+            cfg.gpu_blocks = 1 << 18;
+            cfg.hit_rate = 0.0;
+            let mut eng = VirtualEngine::new(cfg);
+            for i in 0..8 {
+                eng.submit(Request::new(i, 4096, 8, 0), false);
+            }
+            eng.run_to_completion().clone()
+        };
+        let one = run(1);
+        let two = run(2);
+        assert_eq!(one.finished, 8);
+        assert_eq!(two.finished, 8);
+        assert!(two.wall_ns <= one.wall_ns, "{} > {}", two.wall_ns, one.wall_ns);
     }
 
     #[test]

@@ -187,6 +187,17 @@ pub struct ServeMetrics {
     pub preemptions: u64,
     /// Nodes drained from the serving world by the degradation policy.
     pub drained_nodes: u64,
+    /// Cross-node KV migrations (disaggregated prefill→decode handoffs);
+    /// 0 on colocated deployments.
+    pub migrations: u64,
+    /// KV bytes moved across the NIC by migrations.
+    pub migrated_bytes: u64,
+    /// Total migration latency charged on request critical paths (NIC
+    /// port wait + save/stream/fetch pipeline).
+    pub migration_ns: u64,
+    /// NIC port busy time consumed by migrations (occupancy, not
+    /// end-to-end latency — the exclusive-track span time).
+    pub migration_nic_busy_ns: u64,
 }
 
 impl ServeMetrics {
@@ -310,6 +321,15 @@ impl ServeMetrics {
             s.push_str(&format!(
                 ", faults: {} retries {} timeouts, shed {}, preempted {}, drained {}",
                 self.retries, self.timeouts, self.shed, self.preemptions, self.drained_nodes
+            ));
+        }
+        if self.migrations > 0 {
+            s.push_str(&format!(
+                ", migrations {} ({:.1} MiB, {:.1}ms total, nic busy {:.1}ms)",
+                self.migrations,
+                self.migrated_bytes as f64 / (1024.0 * 1024.0),
+                self.migration_ns as f64 / 1e6,
+                self.migration_nic_busy_ns as f64 / 1e6
             ));
         }
         s
@@ -470,6 +490,23 @@ mod tests {
         assert!((c.ttft_pct_ms(50.0) - 50.0).abs() / 50.0 <= 0.01);
         assert_eq!(m.ttft_p99_ms(), 99.0);
         assert_eq!(m.ttft_ns.len(), 100);
+    }
+
+    #[test]
+    fn summary_reports_migrations_only_when_disaggregated() {
+        let quiet = ServeMetrics::default();
+        assert!(!quiet.summary().contains("migrations"));
+        let m = ServeMetrics {
+            migrations: 4,
+            migrated_bytes: 8 * 1024 * 1024,
+            migration_ns: 3_000_000,
+            migration_nic_busy_ns: 1_500_000,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("migrations 4"));
+        assert!(s.contains("8.0 MiB"));
+        assert!(s.contains("nic busy 1.5ms"));
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //! breakdowns, SLO attainment, goodput and a queue-depth timeline in
 //! [`metrics::ServeMetrics`].
 //!
+//! Disaggregated deployments ([`ServeConfig::disagg`], a
+//! [`config::DisaggSpec`] of P prefill + D decode nodes) route prefill to
+//! a dedicated node pool and charge each prefill→decode KV handoff as a
+//! cross-node migration over the DMA/NIC path
+//! ([`crate::kvcache::migrate`]) — layer-pipelined by default, so decode
+//! starts as soon as the first KV chunk lands.
+//!
 //! Fault injection ([`ServeConfig::faults`] over
 //! [`crate::cluster::faults`]) degrades the fleet the engine runs on;
 //! [`config::DegradePolicy`] picks the reaction — re-select collectives
@@ -44,7 +51,7 @@ pub mod server;
 pub mod workload;
 
 pub use comm::{CollectiveComm, CommCost};
-pub use config::{DegradePolicy, ServeConfig};
+pub use config::{DegradePolicy, DisaggSpec, ServeConfig};
 pub use engine::VirtualEngine;
 pub use metrics::{ClassStats, ServeMetrics, SloTarget};
 pub use request::{Request, RequestState};

@@ -1,0 +1,250 @@
+//! Disaggregated prefill/decode serving sweep: TTFT and throughput for
+//! colocated serving vs disaggregation with blocking or layer-pipelined
+//! KV migration, across model size × P:D ratio × workload shape.
+//!
+//! Each [`DisaggCell`] is one (model, P:D, workload) combination; a cell
+//! measures three serving runs over the same request burst:
+//!
+//! - `colocated` — all P+D nodes in one tensor-parallel pool, prefill and
+//!   decode share GPUs and pay the per-step all-reduce.
+//! - `blocking` — P prefill + D decode nodes; each prefill's KV crosses
+//!   the NIC as one bulk transfer before decode can start.
+//! - `layer_pipelined` — same split, but KV streams in layer-granular
+//!   chunks ([`crate::kvcache::migrate`]); decode starts when layer 0
+//!   lands.
+//!
+//! `benches/disagg.rs` asserts the acceptance bound on these points
+//! (pipelined never slower than blocking, beats colocated TTFT on a
+//! prefill-heavy cell) and the CLI `serve --disagg` renders them.
+
+use crate::coordinator::config::DisaggSpec;
+use crate::coordinator::{Request, ServeConfig, ServeMetrics, VirtualEngine};
+use crate::kvcache::fetch::FetchImpl;
+use crate::models::zoo::{LLAMA31_8B, QWEN25_0_5B};
+use crate::models::ModelConfig;
+
+/// One sweep cell: a deployment shape driven by a fixed request burst.
+#[derive(Debug, Clone)]
+pub struct DisaggCell {
+    pub model: &'static ModelConfig,
+    pub prefill_nodes: usize,
+    pub decode_nodes: usize,
+    /// Workload label (`prefill_heavy` / `decode_heavy`).
+    pub workload: &'static str,
+    pub prompt_tokens: u64,
+    pub decode_tokens: u64,
+    pub requests: u64,
+}
+
+/// One measured serving run within a cell.
+#[derive(Debug, Clone)]
+pub struct DisaggPoint {
+    pub model: &'static str,
+    pub mode: String,
+    pub prefill_nodes: usize,
+    pub decode_nodes: usize,
+    pub workload: &'static str,
+    pub ttft_mean_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub tps: f64,
+    pub migrations: u64,
+    pub migrated_mib: f64,
+    pub wall_s: f64,
+}
+
+/// The default sweep: small + large model × 1:1 and 3:1 splits ×
+/// prefill-heavy (long prompts, short generations) and decode-heavy
+/// (short prompts, long generations) bursts.
+pub fn default_cells() -> Vec<DisaggCell> {
+    let mut cells = Vec::new();
+    for model in [&QWEN25_0_5B, &LLAMA31_8B] {
+        for (p, d) in [(1usize, 1usize), (3, 1)] {
+            cells.push(DisaggCell {
+                model,
+                prefill_nodes: p,
+                decode_nodes: d,
+                workload: "prefill_heavy",
+                prompt_tokens: 4096,
+                decode_tokens: 8,
+                requests: 16,
+            });
+            cells.push(DisaggCell {
+                model,
+                prefill_nodes: p,
+                decode_nodes: d,
+                workload: "decode_heavy",
+                prompt_tokens: 512,
+                decode_tokens: 128,
+                requests: 16,
+            });
+        }
+    }
+    cells
+}
+
+fn base_cfg(cell: &DisaggCell) -> ServeConfig {
+    let mut cfg = ServeConfig::new(cell.model, FetchImpl::DmaB2b);
+    cfg.gpu_blocks = 1 << 18;
+    // Cold caches: every request takes the prefill path, so disagg cells
+    // migrate every KV cache and colocated cells prefill in place.
+    cfg.hit_rate = 0.0;
+    cfg
+}
+
+fn drive(cfg: ServeConfig, cell: &DisaggCell) -> ServeMetrics {
+    let mut eng = VirtualEngine::new(cfg);
+    for i in 0..cell.requests {
+        eng.submit(
+            Request::new(i, cell.prompt_tokens, cell.decode_tokens, 0),
+            false,
+        );
+    }
+    eng.run_to_completion().clone()
+}
+
+fn point(cell: &DisaggCell, mode: &str, m: &ServeMetrics) -> DisaggPoint {
+    DisaggPoint {
+        model: cell.model.name,
+        mode: mode.to_string(),
+        prefill_nodes: cell.prefill_nodes,
+        decode_nodes: cell.decode_nodes,
+        workload: cell.workload,
+        ttft_mean_ms: m.ttft_mean_ms(),
+        ttft_p95_ms: m.ttft_p95_ms(),
+        tps: m.tps(),
+        migrations: m.migrations,
+        migrated_mib: m.migrated_bytes as f64 / (1024.0 * 1024.0),
+        wall_s: m.wall_ns as f64 / 1e9,
+    }
+}
+
+/// Measure one cell's three serving runs (colocated, blocking migration,
+/// layer-pipelined migration) over the identical request burst.
+pub fn measure_cell(cell: &DisaggCell) -> Vec<DisaggPoint> {
+    let total = cell.prefill_nodes + cell.decode_nodes;
+    let colo = drive(base_cfg(cell).with_nodes(total), cell);
+    let spec = DisaggSpec::new(cell.prefill_nodes, cell.decode_nodes);
+    let blocking = drive(base_cfg(cell).with_disagg(spec.blocking()), cell);
+    let pipelined = drive(base_cfg(cell).with_disagg(spec), cell);
+    vec![
+        point(cell, "colocated", &colo),
+        point(cell, "blocking", &blocking),
+        point(cell, "layer_pipelined", &pipelined),
+    ]
+}
+
+/// Measure every cell (cells are independent virtual-time runs; this is
+/// the serial loop — the bench parallelizes at the cell level if needed).
+pub fn sweep(cells: &[DisaggCell]) -> Vec<DisaggPoint> {
+    cells.iter().flat_map(|c| measure_cell(c)).collect()
+}
+
+/// Render the sweep table.
+pub fn render(points: &[DisaggPoint]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "model",
+        "p:d",
+        "workload",
+        "mode",
+        "ttft_mean_ms",
+        "ttft_p95_ms",
+        "tok_s",
+        "migrations",
+        "migrated_MiB",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.model.to_string(),
+            format!("{}:{}", p.prefill_nodes, p.decode_nodes),
+            p.workload.to_string(),
+            p.mode.clone(),
+            format!("{:.1}", p.ttft_mean_ms),
+            format!("{:.1}", p.ttft_p95_ms),
+            format!("{:.0}", p.tps),
+            p.migrations.to_string(),
+            format!("{:.1}", p.migrated_mib),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV of the sweep (one row per point).
+pub fn to_csv(points: &[DisaggPoint]) -> crate::util::csv::Csv {
+    let mut c = crate::util::csv::Csv::new(vec![
+        "model",
+        "prefill_nodes",
+        "decode_nodes",
+        "workload",
+        "mode",
+        "ttft_mean_ms",
+        "ttft_p95_ms",
+        "tok_s",
+        "migrations",
+        "migrated_mib",
+        "wall_s",
+    ]);
+    for p in points {
+        c.row(vec![
+            p.model.to_string(),
+            p.prefill_nodes.to_string(),
+            p.decode_nodes.to_string(),
+            p.workload.to_string(),
+            p.mode.clone(),
+            format!("{:.3}", p.ttft_mean_ms),
+            format!("{:.3}", p.ttft_p95_ms),
+            format!("{:.2}", p.tps),
+            p.migrations.to_string(),
+            format!("{:.2}", p.migrated_mib),
+            format!("{:.3}", p.wall_s),
+        ]);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell() -> DisaggCell {
+        DisaggCell {
+            model: &QWEN25_0_5B,
+            prefill_nodes: 1,
+            decode_nodes: 1,
+            workload: "prefill_heavy",
+            prompt_tokens: 4096,
+            decode_tokens: 8,
+            requests: 8,
+        }
+    }
+
+    #[test]
+    fn cell_measures_three_modes() {
+        let pts = measure_cell(&cell());
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].mode, "colocated");
+        assert_eq!(pts[0].migrations, 0);
+        for p in &pts[1..] {
+            assert_eq!(p.migrations, 8);
+            assert!(p.migrated_mib > 0.0);
+        }
+        // The acceptance ordering on one prefill-heavy cell.
+        assert!(pts[2].ttft_mean_ms <= pts[1].ttft_mean_ms);
+    }
+
+    #[test]
+    fn render_and_csv_cover_every_point() {
+        let pts = measure_cell(&cell());
+        let table = render(&pts);
+        assert!(table.contains("layer_pipelined") && table.contains("colocated"));
+        let csv = to_csv(&pts).render();
+        assert_eq!(csv.lines().count(), 4); // header + 3 modes
+    }
+
+    #[test]
+    fn default_cells_cover_the_grid() {
+        let cells = default_cells();
+        assert_eq!(cells.len(), 8); // 2 models × 2 ratios × 2 workloads
+        assert!(cells.iter().any(|c| c.prefill_nodes == 3));
+        assert!(cells.iter().any(|c| c.workload == "decode_heavy"));
+    }
+}

@@ -6,6 +6,7 @@ pub mod breakdown;
 pub mod cluster;
 pub mod cluster_breakdown;
 pub mod collectives;
+pub mod disagg;
 pub mod faults;
 pub mod power;
 pub mod serving;

@@ -1,10 +1,17 @@
 //! Fig. 15: total GPU power of the best DMA collective vs CU-based RCCL
 //! for all-gather across sizes, via the component power model fed by DES
-//! activity (DMA side) and the RCCL activity model (CU side).
+//! activity (DMA side) and the RCCL activity model (CU side) — plus the
+//! cluster extension: per-byte NIC power for cross-node KV migration
+//! ([`migration_power`]), so disaggregated serving's energy cost shows up
+//! in the power tables, not just the latency sweeps.
 
+use crate::cluster::topology::NicModel;
 use crate::collectives::{select_variant, CollectiveKind, CollectiveRunner, RunOptions};
+use crate::kvcache::fetch::FetchImpl;
+use crate::kvcache::{BlockLayout, MigrateSchedule, Migrator};
+use crate::models::zoo::{LLAMA31_8B, QWEN25_0_5B};
 use crate::rccl::RcclModel;
-use crate::sim::power::{PowerModel, PowerSample};
+use crate::sim::power::{Activity, PowerModel, PowerSample};
 use crate::sim::SimConfig;
 use crate::util::bytes::{fmt_size, size_sweep, GB, KB};
 
@@ -113,6 +120,95 @@ pub fn to_csv(rows: &[PowerRow]) -> crate::util::csv::Csv {
     csv
 }
 
+/// One cluster-power row: average power while a KV migration drains,
+/// including the NIC watts the migration puts on the wire.
+#[derive(Debug, Clone)]
+pub struct MigrationPowerRow {
+    pub model: &'static str,
+    pub schedule: MigrateSchedule,
+    /// KV bytes migrated.
+    pub bytes: u64,
+    /// Migration makespan (ns).
+    pub total_ns: u64,
+    pub sample: PowerSample,
+}
+
+impl MigrationPowerRow {
+    /// Fraction of total power burned by the NIC.
+    pub fn nic_share(&self) -> f64 {
+        self.sample.nic_w / self.sample.total()
+    }
+}
+
+/// Cluster power table: both migration schedules for a small and a large
+/// model at a fixed prompt footprint (`n_blocks` KV blocks). The DMA legs
+/// charge engine/PCIe/HBM activity; the NIC leg charges per-byte NIC
+/// power ([`PowerModel::p_nic_per_gbps`]).
+pub fn migration_power(n_blocks: u64) -> Vec<MigrationPowerRow> {
+    let pm = PowerModel::default();
+    let nic = NicModel::default();
+    let mut mig = Migrator::new();
+    let mut rows = Vec::new();
+    for model in [&QWEN25_0_5B, &LLAMA31_8B] {
+        let layout = BlockLayout::new(model, 16);
+        for schedule in [MigrateSchedule::Blocking, MigrateSchedule::LayerPipelined] {
+            let out = mig.cost(
+                &layout,
+                model.layers,
+                FetchImpl::DmaB2b,
+                &nic,
+                n_blocks,
+                schedule,
+            );
+            // Per migrated byte: one D2H + one H2D PCIe crossing, a GPU
+            // HBM read on the prefill node and a write on the decode
+            // node, and exactly one NIC crossing.
+            let a = Activity {
+                duration_ns: out.total_ns as f64,
+                engine_busy_ns: (out.save_ns + out.fetch_ns) as f64,
+                engines_used: 1,
+                cu_busy_ns: 0.0,
+                hbm_bytes: 2.0 * out.bytes as f64,
+                link_bytes: 2.0 * out.bytes as f64,
+                nic_bytes: out.bytes as f64,
+            };
+            rows.push(MigrationPowerRow {
+                model: model.name,
+                schedule,
+                bytes: out.bytes,
+                total_ns: out.total_ns,
+                sample: pm.evaluate(&a),
+            });
+        }
+    }
+    rows
+}
+
+/// Render the cluster migration power table.
+pub fn render_migration(rows: &[MigrationPowerRow]) -> String {
+    let mut t = crate::util::table::Table::new(vec![
+        "model",
+        "schedule",
+        "kv_bytes",
+        "mig_ms",
+        "total_W",
+        "nic_W",
+        "nic_share%",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.model.to_string(),
+            r.schedule.name().to_string(),
+            fmt_size(r.bytes),
+            format!("{:.2}", r.total_ns as f64 / 1e6),
+            format!("{:.0}", r.sample.total()),
+            format!("{:.1}", r.sample.nic_w),
+            format!("{:.1}", r.nic_share() * 100.0),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +234,23 @@ mod tests {
         let small = &fig15(Some(vec![32 * KB]))[0];
         let large = &fig15(Some(vec![256 * MB]))[0];
         assert!(small.saving() < large.saving());
+    }
+
+    #[test]
+    fn migration_power_surfaces_nic_watts() {
+        let rows = migration_power(256);
+        assert_eq!(rows.len(), 4); // 2 models × 2 schedules
+        for r in &rows {
+            assert!(r.sample.nic_w > 0.0, "{} {:?}: no NIC watts", r.model, r.schedule);
+            assert!(r.nic_share() > 0.0 && r.nic_share() < 1.0);
+        }
+        // Same bytes either schedule; the streamed schedule finishes no
+        // later, so its sustained NIC draw is at least as high.
+        assert_eq!(rows[0].bytes, rows[1].bytes);
+        assert!(rows[1].total_ns <= rows[0].total_ns);
+        assert!(rows[1].sample.nic_w >= rows[0].sample.nic_w);
+        let table = render_migration(&rows);
+        assert!(table.contains("nic_W"));
+        assert!(table.contains("layer_pipelined"));
     }
 }

@@ -12,13 +12,18 @@
 //! - [`fetch`]: the three KV-fetch implementations the paper compares —
 //!   per-copy DMA (`hipMemcpyAsync` baseline), batched-b2b DMA (the
 //!   contribution), and a CU gather kernel.
+//! - [`migrate`]: cross-node KV migration for disaggregated prefill/decode
+//!   serving — DMA save/fetch legs fused with the cluster NIC link, with a
+//!   layer-pipelined streaming schedule vs a blocking bulk transfer.
 
 pub mod allocator;
 pub mod cpu_store;
 pub mod fetch;
 pub mod layout;
+pub mod migrate;
 pub mod save;
 
 pub use allocator::BlockAllocator;
 pub use cpu_store::CpuStore;
 pub use layout::{BlockLayout, DEFAULT_BLOCK_TOKENS};
+pub use migrate::{MigrateOutcome, MigrateSchedule, MigrateSpec, Migrator};

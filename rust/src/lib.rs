@@ -30,7 +30,14 @@
 //!   (`benches/overlap.rs`).
 //! - [`rccl`] — calibrated CU-based collective baseline (RCCL stand-in).
 //! - [`models`] — LLM architecture zoo + MI300X roofline timing model.
-//! - [`kvcache`] — paged KV cache, CPU offload tier, fetch engines.
+//! - [`kvcache`] — paged KV cache, CPU offload tier, fetch engines, and
+//!   cross-node migration ([`kvcache::migrate`]): prefill-side DMA b2b
+//!   save, one scatter-gather RDMA post per chunk over the cluster NIC
+//!   model, decode-side DMA b2b fetch — chunked at layer granularity
+//!   ([`kvcache::MigrateSchedule::LayerPipelined`]) so the decode node's
+//!   first chunk lands (`first_ready_ns`) long before the full cache
+//!   does; byte-identical to the single-node save/fetch reference
+//!   (`tests/prop_migrate.rs`).
 //! - [`coordinator`] — vLLM-like serving stack (router, batcher, scheduler);
 //!   multi-node deployments route collective sizing through the cluster
 //!   selector (`coordinator::comm`) and charge the critical path only the
@@ -62,6 +69,16 @@
 //!   best-effort arrivals, preempt for SLO'd work (`dma-latte faults`,
 //!   `benches/faults.rs`, `BENCH_PR8.json`). An empty plan is
 //!   bit-identical to the healthy path (`tests/prop_faults.rs`).
+//!   Disaggregated prefill/decode serving splits the fleet into node
+//!   pools (`ServeConfig::with_disagg`, `dma-latte serve --disagg P:D`):
+//!   prefill lanes run the compute-heavy phase, KV caches migrate to the
+//!   decode pool over the [`kvcache::migrate`] DMA/NIC path (charged on
+//!   PCIe + NIC tracks with obs spans, memoized per `(schedule,
+//!   n_blocks)`), and the decode pool sizes its own TP collectives —
+//!   TTFT/throughput vs colocated serving swept in
+//!   [`figures::disagg`] (`benches/disagg.rs`, `BENCH_PR10.json`), NIC
+//!   wattage of the migration in the cluster power figure
+//!   (`figures::power`).
 //! - [`obs`] — observability: cross-layer tracing threading one span
 //!   hierarchy from serving requests through engine steps, cluster
 //!   collectives and per-phase legs down to the simulator's DMA phases;

@@ -9,20 +9,25 @@
 //!                     # hierarchical scaling (overlapped = chunk-granular
 //!                     # fused all-reduce; auto lets the selector pick)
 //! dma-latte breakdown                              # Fig. 7
-//! dma-latte power                                  # Fig. 15
+//! dma-latte power                                  # Fig. 15 + cluster
+//!                                                  # KV-migration NIC watts
 //! dma-latte ttft      [--prefill 4096]             # Fig. 16
 //! dma-latte throughput [--requests 200] [--hit 1.0]# Fig. 17
 //! dma-latte serve     [--workload poisson|bursty|trace] [--rate R|R1,R2,..]
 //!                     [--requests 512] [--nodes 1] [--seed 7]
 //!                     [--tenants default|name:w:prompt:output[:ttft[:tpot]],..]
 //!                     [--faults SPEC] [--degrade aware|blind]
-//!                     [--no-overlap] [--out results/]
+//!                     [--no-overlap] [--disagg P:D] [--out results/]
 //!                     # trace-driven serving: sweep offered load (points
 //!                     # run in parallel across host cores, results
 //!                     # order-independent), report per-class TTFT/TPOT
 //!                     # percentiles + SLO attainment; --faults degrades
 //!                     # the fleet (preset name or
-//!                     # nic=N:F,flap=P,engines=K,xgmi=F,straggler=N:F,window=S)
+//!                     # nic=N:F,flap=P,engines=K,xgmi=F,straggler=N:F,window=S);
+//!                     # --disagg P:D splits the fleet into P prefill +
+//!                     # D decode nodes with layer-pipelined KV migration
+//!                     # and prints the colocated/blocking/pipelined
+//!                     # comparison sweep first
 //! dma-latte faults    [--nodes 2] [--requests 256] [--seed 7] [--out results/]
 //!                     # canned fault scenarios: degraded-vs-healthy SLO
 //!                     # attainment, aware vs blind policy, healthy-replay check
@@ -158,6 +163,23 @@ fn cmd_figures(args: &Args) {
     });
     print!("{}", power::render(&pw));
     power::to_csv(&pw).write(format!("{out}/fig15_power.csv")).unwrap();
+
+    println!("\n# Cluster power — KV migration over the NIC");
+    print!("{}", power::render_migration(&power::migration_power(256)));
+
+    println!("\n# Disaggregated serving — colocated vs migration schedules");
+    let dg = dma_latte::figures::disagg::sweep(&if quick {
+        dma_latte::figures::disagg::default_cells()
+            .into_iter()
+            .take(2)
+            .collect::<Vec<_>>()
+    } else {
+        dma_latte::figures::disagg::default_cells()
+    });
+    print!("{}", dma_latte::figures::disagg::render(&dg));
+    dma_latte::figures::disagg::to_csv(&dg)
+        .write(format!("{out}/disagg.csv"))
+        .unwrap();
 
     println!("\n# Fig 16 — TTFT");
     let f16 = if quick {
@@ -375,6 +397,42 @@ fn cmd_serve(args: &Args) {
             std::process::exit(2);
         }
     }
+    if let Some(spec) = args.opt("disagg") {
+        use dma_latte::figures::disagg as figd;
+        let d = match dma_latte::coordinator::DisaggSpec::parse(spec) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bad --disagg: {e}");
+                std::process::exit(2);
+            }
+        };
+        // The split sizes the world itself: P prefill + D decode nodes
+        // (--nodes is superseded).
+        cfg = cfg.with_disagg(d);
+        println!(
+            "# disaggregated {}:{} — colocated vs blocking vs layer-pipelined migration",
+            d.prefill_nodes, d.decode_nodes
+        );
+        let cell = |workload, prompt_tokens, decode_tokens| figd::DisaggCell {
+            model,
+            prefill_nodes: d.prefill_nodes,
+            decode_nodes: d.decode_nodes,
+            workload,
+            prompt_tokens,
+            decode_tokens,
+            requests: 16,
+        };
+        let pts = figd::sweep(&[
+            cell("prefill_heavy", 4096, 8),
+            cell("decode_heavy", 512, 128),
+        ]);
+        print!("{}", figd::render(&pts));
+        let out = args.get("out", "results");
+        std::fs::create_dir_all(&out).expect("mkdir results");
+        let path = format!("{out}/disagg.csv");
+        figd::to_csv(&pts).write(&path).expect("write disagg.csv");
+        println!("csv: {path}\n");
+    }
 
     let parse_rate = |tok: &str| -> f64 {
         match tok.trim().parse::<f64>() {
@@ -483,7 +541,11 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("figures") => cmd_figures(&args),
         Some("breakdown") => print!("{}", breakdown::render(&breakdown::fig7())),
-        Some("power") => print!("{}", power::render(&power::fig15(None))),
+        Some("power") => {
+            print!("{}", power::render(&power::fig15(None)));
+            println!("\n# cluster power — KV migration over the NIC (256 blocks)");
+            print!("{}", power::render_migration(&power::migration_power(256)));
+        }
         Some("ttft") => cmd_ttft(&args),
         Some("throughput") => cmd_throughput(&args),
         Some("serve") => cmd_serve(&args),

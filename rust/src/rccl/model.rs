@@ -85,6 +85,7 @@ impl RcclModel {
             cu_busy_ns: dur * self.cu_util(size),
             hbm_bytes: wire * 2.25,
             link_bytes: wire,
+            nic_bytes: 0.0,
         }
     }
 }

@@ -205,6 +205,7 @@ impl Sim {
             cu_busy_ns: 0.0,
             hbm_bytes: self.memory.total_traffic() as f64,
             link_bytes: self.link_bytes as f64,
+            nic_bytes: 0.0,
         }
     }
 

@@ -22,6 +22,9 @@ pub struct Activity {
     pub hbm_bytes: f64,
     /// Bytes moved over links.
     pub link_bytes: f64,
+    /// Bytes moved over the cross-node NIC (0 for intra-node collectives;
+    /// charged by disaggregated KV migration, `kvcache::migrate`).
+    pub nic_bytes: f64,
 }
 
 /// Per-component power constants (watts), MI300X-class magnitudes.
@@ -39,6 +42,11 @@ pub struct PowerModel {
     pub p_link_per_gbps: f64,
     /// HBM power per GB/s of sustained traffic.
     pub p_hbm_per_gbps: f64,
+    /// NIC (serdes + DMA over PCIe to the adapter) power per GB/s of
+    /// sustained cross-node traffic. RDMA NICs burn noticeably more energy
+    /// per byte than on-package links — ~0.45 W per GB/s keeps a saturated
+    /// 400 Gb/s port in the ~20 W envelope of current adapters.
+    pub p_nic_per_gbps: f64,
 }
 
 impl Default for PowerModel {
@@ -50,6 +58,7 @@ impl Default for PowerModel {
             p_iod_per_engine: 1.6,
             p_link_per_gbps: 0.11,
             p_hbm_per_gbps: 0.16,
+            p_nic_per_gbps: 0.45,
         }
     }
 }
@@ -61,12 +70,15 @@ pub struct PowerSample {
     pub iod_w: f64,
     pub hbm_w: f64,
     pub idle_w: f64,
+    /// NIC power from cross-node traffic; 0 unless `Activity::nic_bytes`
+    /// was charged.
+    pub nic_w: f64,
 }
 
 impl PowerSample {
     /// Total average power.
     pub fn total(&self) -> f64 {
-        self.xcd_w + self.iod_w + self.hbm_w + self.idle_w
+        self.xcd_w + self.iod_w + self.hbm_w + self.idle_w + self.nic_w
     }
 }
 
@@ -78,6 +90,7 @@ impl PowerModel {
         // GB/s of sustained traffic over the window.
         let hbm_gbps = a.hbm_bytes / a.duration_ns; // bytes/ns == GB/s
         let link_gbps = a.link_bytes / a.duration_ns;
+        let nic_gbps = a.nic_bytes / a.duration_ns;
 
         let cu_util = (a.cu_busy_ns / a.duration_ns).min(1.0);
         let dma_util = if a.engines_used > 0 {
@@ -102,6 +115,7 @@ impl PowerModel {
             iod_w,
             hbm_w,
             idle_w: self.p_idle,
+            nic_w: nic_gbps * self.p_nic_per_gbps,
         }
     }
 }
@@ -144,6 +158,26 @@ mod tests {
             s_dma.xcd_w
         );
         assert!(s_dma.total() < s_cu.total());
+    }
+
+    #[test]
+    fn nic_traffic_is_charged_per_byte() {
+        let m = PowerModel::default();
+        // No NIC traffic → nic_w exactly 0, totals unchanged vs pre-NIC model.
+        let quiet = m.evaluate(&window(1e6));
+        assert_eq!(quiet.nic_w, 0.0);
+        assert!((quiet.total() - m.p_idle).abs() < 1e-9);
+        // 50 GB/s sustained (saturated 400 Gb/s port) lands in the ~20 W
+        // adapter envelope and scales linearly with bytes.
+        let mut mig = window(1e6);
+        mig.nic_bytes = 50.0 * 1e6; // 50 bytes/ns over the window
+        let s = m.evaluate(&mig);
+        assert!((s.nic_w - 50.0 * m.p_nic_per_gbps).abs() < 1e-9);
+        assert!(s.nic_w > 15.0 && s.nic_w < 30.0, "nic_w={}", s.nic_w);
+        let mut half = window(1e6);
+        half.nic_bytes = 25.0 * 1e6;
+        assert!((m.evaluate(&half).nic_w * 2.0 - s.nic_w).abs() < 1e-9);
+        assert!((s.total() - quiet.total() - s.nic_w).abs() < 1e-9);
     }
 
     #[test]

@@ -263,6 +263,63 @@ fn trace_driven_serving_replays_bit_identically() {
     assert_eq!(first.queue_peak, second.queue_peak);
 }
 
+/// Disaggregated serving replays bit-identically across collective-cache
+/// churn: the migration memo, the per-lane prefill/NIC frontiers and the
+/// decode-pool comm sizing are all deterministic functions of the config
+/// and workload, with no state leaking in from interleaved cluster
+/// episodes.
+#[test]
+fn disagg_serving_replays_bit_identically() {
+    use dma_latte::coordinator::workload::{default_tenants, drive, ArrivalProcess, WorkloadSpec};
+    use dma_latte::coordinator::DisaggSpec;
+    use dma_latte::figures::serving_load::serve_config;
+    use dma_latte::models::zoo::QWEN25_0_5B;
+
+    let mut cfg = serve_config(&QWEN25_0_5B, 1, true).with_disagg(DisaggSpec::new(2, 1));
+    cfg.hit_rate = 0.0; // every request migrates its KV across the NIC
+    let spec = WorkloadSpec {
+        process: ArrivalProcess::Poisson { rate_rps: 400.0 },
+        classes: default_tenants(),
+        requests: 64,
+        seed: 33,
+    };
+    let first = drive(&cfg, &spec);
+    assert_eq!(first.finished, 64);
+    assert_eq!(first.migrations, first.cache_misses);
+    assert!(first.migrated_bytes > 0);
+
+    // Churn the cross-episode collective caches with other shapes.
+    let choice = ClusterChoice {
+        intra: Variant::new(Strategy::Pcpy, true),
+        inter: InterSchedule::Overlapped,
+    };
+    run_hier_ar_full(
+        choice,
+        choice,
+        &ClusterTopology::mi300x(4),
+        256 * KB,
+        &HierRunOptions::default(),
+    );
+
+    let second = drive(&cfg, &spec);
+    assert_eq!(first.wall_ns, second.wall_ns, "disagg wall clock");
+    assert_eq!(first.ttft_ns, second.ttft_ns, "ttft distribution");
+    assert_eq!(first.tpot_ns, second.tpot_ns, "tpot distribution");
+    assert_eq!(first.requests, second.requests, "per-request spans");
+    assert_eq!(first.migrations, second.migrations, "migration count");
+    assert_eq!(first.migrated_bytes, second.migrated_bytes, "migrated bytes");
+    assert_eq!(first.migration_ns, second.migration_ns, "migration time");
+    assert_eq!(
+        first.migration_nic_busy_ns, second.migration_nic_busy_ns,
+        "NIC busy time"
+    );
+    assert_eq!(first.comm_ns, second.comm_ns, "decode-pool comm");
+    assert_eq!(first.gpu_busy_ns, second.gpu_busy_ns);
+    assert_eq!(first.per_class, second.per_class, "per-class counters");
+    assert_eq!(first.queue_depth, second.queue_depth, "queue timeline");
+    assert_eq!(first.queue_peak, second.queue_peak);
+}
+
 /// The lazy arrival stream (`submit_workload_stream`, the path `drive`
 /// uses since PR 9) and the historical materialized path
 /// (`generate()` + `submit_workload`) produce bit-identical serving
